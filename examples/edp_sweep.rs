@@ -1,0 +1,103 @@
+//! Chip-configuration EDP sweep: how energy-efficiency and throughput
+//! trade against precision, core count and sensing scheme.  Extends the
+//! `neurram edp` CLI with a voltage-vs-current-mode comparison and a
+//! technology-scaling projection.
+//!
+//!     cargo run --release --example edp_sweep
+
+use neurram::core_sim::current_mode::{CurrentModeConfig, CurrentModeCore};
+use neurram::core_sim::{CimCore, MvmDirection, NeuronConfig};
+use neurram::device::DeviceParams;
+use neurram::energy::{scale_edp, EnergyParams, TechNode};
+use neurram::util::bench::{section, table};
+use neurram::util::rng::Rng;
+
+fn programmed_core(seed: u64) -> CimCore {
+    let mut rng = Rng::new(seed);
+    let mut core = CimCore::new(0, DeviceParams::default());
+    core.power_on();
+    let (rows, cols) = (128usize, 256usize);
+    let mut gp = vec![1.0f32; rows * cols];
+    let mut gn = vec![1.0f32; rows * cols];
+    for i in 0..rows * cols {
+        let w = rng.normal() as f32;
+        if w > 0.0 {
+            gp[i] = (40.0 * w).clamp(1.0, 40.0);
+        } else {
+            gn[i] = (-40.0 * w).clamp(1.0, 40.0);
+        }
+    }
+    core.load_ideal(&gp, &gn, rows, cols);
+    core
+}
+
+fn main() {
+    let mut rng = Rng::new(7);
+
+    section("voltage-mode sweep over bit precisions (single core)");
+    let mut rows = Vec::new();
+    for (ib, ob) in [(1u32, 1u32), (2, 4), (4, 6), (4, 8), (6, 8)] {
+        let mut core = programmed_core(1);
+        let cfg = NeuronConfig { input_bits: ib, output_bits: ob,
+                                 ..Default::default() };
+        let m = cfg.in_mag_max();
+        for k in 0..8 {
+            let x: Vec<i32> =
+                (0..128).map(|r| ((r as i32 + k) % (2 * m + 1)) - m).collect();
+            core.mvm(&x, &cfg, MvmDirection::Forward, 0.0, &mut rng);
+        }
+        let c = core.cost(&EnergyParams::default());
+        rows.push(vec![
+            format!("{ib}b/{ob}b"),
+            format!("{:.1}", c.femtojoule_per_op()),
+            format!("{:.1}", c.tops_per_watt()),
+            format!("{:.2}", c.latency_ns / 8.0 / 1000.0),
+            format!("{:.3e}", c.edp()),
+        ]);
+    }
+    table(&["in/out", "fJ/op", "TOPS/W", "us/MVM", "EDP"], &rows);
+
+    section("voltage-mode vs current-mode (256x256, 4b/8b)");
+    let mut vm = programmed_core(2);
+    let cfg = NeuronConfig::default();
+    let x: Vec<i32> = (0..128).map(|r| ((r % 15) as i32) - 7).collect();
+    for _ in 0..8 {
+        vm.mvm(&x, &cfg, MvmDirection::Forward, 0.0, &mut rng);
+    }
+    let vc = vm.cost(&EnergyParams::default());
+
+    let (gp, gn) = vm.read_conductances();
+    let mut cm = CurrentModeCore::new(&gp, &gn, 128, 256,
+                                      CurrentModeConfig::default());
+    for _ in 0..8 {
+        cm.mvm(&x);
+    }
+    let cc = cm.cost();
+    table(
+        &["scheme", "fJ/op", "TOPS/W", "EDP", "EDP ratio"],
+        &[
+            vec!["voltage-mode (NeuRRAM)".into(),
+                 format!("{:.1}", vc.femtojoule_per_op()),
+                 format!("{:.1}", vc.tops_per_watt()),
+                 format!("{:.3e}", vc.edp()), "1.0x".into()],
+            vec!["current-mode (conventional)".into(),
+                 format!("{:.1}", cc.femtojoule_per_op()),
+                 format!("{:.1}", cc.tops_per_watt()),
+                 format!("{:.3e}", cc.edp()),
+                 format!("{:.1}x", cc.edp() / vc.edp())],
+        ],
+    );
+
+    section("technology scaling projection (paper Methods)");
+    let mut rows = Vec::new();
+    for node in [TechNode::N130, TechNode::N65, TechNode::N28, TechNode::N7] {
+        rows.push(vec![
+            format!("{node:?}"),
+            format!("{:.1}x", node.energy_factor()),
+            format!("{:.1}x", node.latency_factor()),
+            format!("{:.0}x", node.edp_factor()),
+            format!("{:.3e}", scale_edp(vc.edp(), node)),
+        ]);
+    }
+    table(&["node", "energy/", "latency/", "EDP/", "projected EDP"], &rows);
+}

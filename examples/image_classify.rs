@@ -1,0 +1,109 @@
+//! End-to-end driver (DESIGN.md E2 / Fig. 1e): full-system image
+//! classification on the 48-core chip simulator.
+//!
+//! Exercises every layer of the stack on a real small workload:
+//!   * the python build path trained the CNN with noise-resilient
+//!     training and exported `artifacts/mnist_weights.npz`
+//!     (`make artifacts` runs it; or
+//!     `cd python && python -m compile.train.train_models --model mnist`);
+//!   * weights are compiled to differential conductances, mapped onto the
+//!     multi-core chip (duplicating hot layers), and programmed through
+//!     write-verify with conductance relaxation;
+//!   * model-driven calibration picks the requantization shifts;
+//!   * batched inference runs on the chip; accuracy, latency and energy
+//!     are reported with a confusion matrix.
+//!
+//!     cargo run --release --example image_classify -- [weights.npz] [n]
+
+use neurram::calib::calibrate::calibrate_cnn_shifts;
+use neurram::coordinator::mapping::MappingStrategy;
+use neurram::coordinator::NeuRramChip;
+use neurram::energy::EnergyParams;
+use neurram::io::{datasets, metrics, npz};
+use neurram::models::executor::run_cnn;
+use neurram::models::loader::{compile_from_npz, compile_random, intensities};
+use neurram::models::{mnist_cnn7, quant};
+use neurram::util::bench::section;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let weights_path = args
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "artifacts/mnist_weights.npz".to_string());
+    let n_test: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);
+    let seed = 17u64;
+
+    section("1. compile weights -> conductances");
+    let graph = mnist_cnn7(8);
+    let matrices = match npz::load_npz(&weights_path) {
+        Ok(w) => {
+            println!("loaded trained weights from {weights_path}");
+            compile_from_npz(&graph, &w, None).expect("compile")
+        }
+        Err(e) => {
+            println!("({weights_path}: {e}; using random weights)");
+            compile_random(&graph, seed)
+        }
+    };
+    println!("{} layers, {} parameters", graph.layers.len(), graph.n_params());
+
+    section("2. map + program the 48-core chip (write-verify)");
+    let mut chip = NeuRramChip::new(seed);
+    let stats = chip
+        .program_model(matrices, &intensities(&graph),
+                       MappingStrategy::Balanced, true)
+        .expect("mapping");
+    chip.gate_unused();
+    let pulses: u64 = stats.iter().map(|s| s.total_pulses).sum();
+    let success: f64 = stats.iter().map(|s| s.success_rate()).sum::<f64>()
+        / stats.len().max(1) as f64;
+    println!(
+        "{} cores used ({} powered), {:.2}% cells converged, {} pulses",
+        chip.plan.cores_used,
+        chip.powered_cores(),
+        success * 100.0,
+        pulses
+    );
+    println!("replicas: {:?}", chip.plan.replicas);
+
+    section("3. model-driven calibration");
+    let (probe_imgs, _) = datasets::digits28(6, seed + 1, 0.15);
+    let shifts = calibrate_cnn_shifts(&mut chip, &graph, &probe_imgs);
+    println!("shifts: {shifts:?}");
+
+    section("4. chip inference");
+    chip.reset_energy();
+    let (imgs, labels) = datasets::digits28(n_test, seed + 2, 0.15);
+    let in_bits = graph.layers[0].input_bits - 1;
+    let t0 = std::time::Instant::now();
+    let mut logits = Vec::new();
+    for img in &imgs {
+        let q: Vec<i32> = img
+            .iter()
+            .map(|&p| quant::quantize_unit_unsigned(p, in_bits))
+            .collect();
+        logits.push(run_cnn(&mut chip, &graph, &q, &shifts));
+    }
+    let wall = t0.elapsed();
+    let acc = metrics::accuracy(&logits, &labels);
+    let cost = chip.cost(&EnergyParams::default());
+    println!("chip accuracy     : {:.2}% ({} samples)", acc * 100.0, n_test);
+    println!(
+        "simulated energy  : {:.2} uJ ({:.1} fJ/op, {:.1} TOPS/W)",
+        cost.energy_pj / 1e6,
+        cost.femtojoule_per_op(),
+        cost.tops_per_watt()
+    );
+    println!(
+        "simulated latency : {:.2} ms chip-time, {:.1?} wall",
+        cost.latency_ns / 1e6,
+        wall
+    );
+
+    section("5. confusion matrix (rows = truth)");
+    let cm = metrics::confusion(&logits, &labels, 10);
+    for (i, row) in cm.iter().enumerate() {
+        println!("  {i}: {row:?}");
+    }
+}

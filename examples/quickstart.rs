@@ -1,0 +1,59 @@
+//! Quickstart: program a small weight matrix onto one CIM core through
+//! write-verify, run a voltage-mode MVM in both dataflow directions, and
+//! read the energy bill.
+//!
+//!     cargo run --release --example quickstart
+
+use neurram::core_sim::{CimCore, MvmDirection, NeuronConfig};
+use neurram::device::{DeviceParams, WriteVerifyConfig};
+use neurram::energy::EnergyParams;
+use neurram::models::encode_differential;
+use neurram::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(42);
+
+    // 1. a small weight matrix in [-1, 1]
+    let (rows, cols) = (16, 12);
+    let w: Vec<f32> = (0..rows * cols)
+        .map(|i| ((i * 37 % 200) as f32 / 100.0) - 1.0)
+        .collect();
+    let w_max = w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+
+    // 2. differential conductance encoding (paper ED Fig. 3a)
+    let (g_pos, g_neg) = encode_differential(&w, 40.0, 1.0, w_max);
+
+    // 3. program one core via incremental-pulse write-verify
+    let mut core = CimCore::new(0, DeviceParams::default());
+    core.power_on();
+    let stats = core.program(&g_pos, &g_neg, rows, cols,
+                             WriteVerifyConfig::default(), &mut rng);
+    println!(
+        "programmed {}x{} weights: {:.1}% converged, {:.1} pulses/cell",
+        rows, cols,
+        100.0 * stats.success_rate(),
+        stats.mean_pulses()
+    );
+
+    // 4. forward MVM (BL -> SL): 4-bit inputs, 8-bit outputs
+    let cfg = NeuronConfig::default();
+    let x: Vec<i32> = (0..rows).map(|i| (i as i32 % 15) - 7).collect();
+    let y = core.mvm(&x, &cfg, MvmDirection::Forward, 0.0, &mut rng);
+    println!("forward MVM out  : {y:?}");
+
+    // 5. backward MVM through the same array (TNSA transposability)
+    let xb: Vec<i32> = (0..cols).map(|i| (i as i32 % 5) - 2).collect();
+    let yb = core.mvm(&xb, &cfg, MvmDirection::Backward, 0.0, &mut rng);
+    println!("backward MVM out : {yb:?}");
+
+    // 6. energy accounting
+    let cost = core.cost(&EnergyParams::default());
+    println!(
+        "energy: {:.1} pJ over {} MACs -> {:.1} fJ/op, {:.1} TOPS/W, EDP {:.1} pJ*us",
+        cost.energy_pj,
+        cost.macs,
+        cost.femtojoule_per_op(),
+        cost.tops_per_watt(),
+        cost.edp() / 1000.0
+    );
+}

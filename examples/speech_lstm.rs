@@ -1,0 +1,109 @@
+//! Voice-command recognition on the chip simulator: the paper's 4-cell
+//! LSTM (Table 1, "Recurrent + Forward" dataflow).
+//!
+//! The recurrent MVMs (input-to-hidden and hidden-to-hidden gate
+//! matrices) run on the chip; the element-wise gate math runs digitally
+//! (the paper puts it on the FPGA).  Weights come from
+//! `artifacts/lstm_weights.npz` when present.
+//!
+//!     cargo run --release --example speech_lstm -- [weights.npz] [n]
+
+use neurram::coordinator::mapping::MappingStrategy;
+use neurram::coordinator::NeuRramChip;
+use neurram::core_sim::NeuronConfig;
+use neurram::energy::EnergyParams;
+use neurram::io::{datasets, metrics, npz};
+use neurram::models::loader::{compile_from_npz, compile_random, intensities};
+use neurram::models::speech_lstm;
+use neurram::util::bench::section;
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let weights_path = args
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "artifacts/lstm_weights.npz".to_string());
+    let n_test: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(40);
+    let (hidden, n_cells, t_steps, in_dim) = (64usize, 4usize, 50usize, 40usize);
+    let seed = 23u64;
+
+    section("1. load + map the 4-cell LSTM");
+    let graph = speech_lstm(hidden, n_cells);
+    let matrices = match npz::load_npz(&weights_path) {
+        Ok(w) => {
+            println!("loaded trained weights from {weights_path}");
+            compile_from_npz(&graph, &w, None).expect("compile")
+        }
+        Err(e) => {
+            println!("({weights_path}: {e}; using random weights)");
+            compile_random(&graph, seed)
+        }
+    };
+    let mut chip = NeuRramChip::new(seed);
+    chip.program_model(matrices, &intensities(&graph),
+                       MappingStrategy::Packed, false)
+        .expect("mapping");
+    chip.gate_unused();
+    println!("{} gate matrices on {} cores", graph.layers.len(),
+             chip.plan.cores_used);
+
+    section("2. recurrent inference");
+    chip.reset_energy();
+    let (xs, labels) = datasets::mfcc_cmds(n_test, seed + 1, 0.35);
+    let cfg = NeuronConfig { input_bits: 4, adc_lsb_frac: 1.0 / 128.0,
+                             ..Default::default() };
+    let mut logits_all = Vec::new();
+    for series in &xs {
+        let mut logits = vec![0.0f64; 12];
+        for c in 0..n_cells {
+            let mut h = vec![0.0f64; hidden];
+            let mut cstate = vec![0.0f64; hidden];
+            for t in 0..t_steps {
+                // 4-bit signed quantization of inputs and hidden state
+                let xt: Vec<i32> = (0..in_dim)
+                    .map(|d| (series[t * in_dim + d] as f64 * 2.0)
+                        .round()
+                        .clamp(-7.0, 7.0) as i32)
+                    .collect();
+                let hq: Vec<i32> = h
+                    .iter()
+                    .map(|&v| (v * 7.0).round().clamp(-7.0, 7.0) as i32)
+                    .collect();
+                let gx = chip.mvm_layer(&format!("cell{c}.wx"), &xt, &cfg, 0);
+                let gh = chip.mvm_layer(&format!("cell{c}.wh"), &hq, &cfg, 0);
+                for j in 0..hidden {
+                    let i_g = sigmoid(gx[j] + gh[j]);
+                    let f_g = sigmoid(gx[hidden + j] + gh[hidden + j]);
+                    let g_g = (gx[2 * hidden + j] + gh[2 * hidden + j]).tanh();
+                    let o_g = sigmoid(gx[3 * hidden + j] + gh[3 * hidden + j]);
+                    cstate[j] = f_g * cstate[j] + i_g * g_g;
+                    h[j] = o_g * cstate[j].tanh();
+                }
+            }
+            let hq: Vec<i32> = h
+                .iter()
+                .map(|&v| (v * 7.0).round().clamp(-7.0, 7.0) as i32)
+                .collect();
+            let out = chip.mvm_layer(&format!("cell{c}.wo"), &hq, &cfg, 0);
+            for (l, o) in logits.iter_mut().zip(&out) {
+                *l += o;
+            }
+        }
+        logits_all.push(logits);
+    }
+    let acc = metrics::accuracy(&logits_all, &labels);
+    println!("chip accuracy: {:.2}% on {} recordings", acc * 100.0, n_test);
+
+    let cost = chip.cost(&EnergyParams::default());
+    println!(
+        "energy {:.2} uJ; {:.1} fJ/op; chip-time {:.2} ms for {} MVM steps",
+        cost.energy_pj / 1e6,
+        cost.femtojoule_per_op(),
+        cost.latency_ns / 1e6,
+        n_test * n_cells * t_steps * 2
+    );
+}

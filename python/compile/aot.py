@@ -1,0 +1,337 @@
+"""AOT compiler: lower the L2 chip-mode graphs to HLO text artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+HLO text, compiles it on the PJRT CPU client and executes it on the
+request path -- python never runs at inference time.
+
+Interchange notes (see /opt/xla-example/README.md):
+  * HLO *text*, not serialized HloModuleProto (jax >= 0.5 emits 64-bit
+    instruction ids that xla_extension 0.5.1 rejects; the text parser
+    reassigns ids).
+  * lowered with return_tuple=True; rust unwraps with ``to_tuple1()``.
+  * weights / golden vectors travel as .npz (the xla crate reads npz).
+
+Emitted artifacts:
+  cim_mvm_<ib>b<ob>b[_<act>]_r<R>c<C>b<B>.hlo.txt   single-core CIM MVM
+  mnist_cnn7_b<B>.hlo.txt                           full CNN chip forward
+  lstm_step_b<B>.hlo.txt                            one LSTM cell time-step
+  rbm_gibbs_b<B>.hlo.txt                            one RBM Gibbs cycle
+  golden.npz                                        parity test vectors
+  manifest.json                                     parameter order/shapes
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import model as M
+from .cimcfg import CimConfig, device_constants
+from .kernels import ref
+from .kernels.mvm import cim_mvm_pallas
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_and_write(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return text
+
+
+def spec_of(x):
+    return jax.ShapeDtypeStruct(np.shape(x), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Artifact builders
+# --------------------------------------------------------------------------
+
+def build_mvm_artifacts(out_dir, manifest, golden):
+    """Single-core CIM MVM executables over the chip's precision range."""
+    batch, rows, cols = 32, 128, 256
+    variants = [
+        (2, 8, "none"), (4, 8, "none"), (6, 8, "none"),
+        (4, 8, "relu"), (4, 4, "none"), (2, 1, "stochastic"),
+    ]
+    rng = np.random.default_rng(42)
+    for ib, ob, act in variants:
+        cfg = CimConfig(rows=rows, cols=cols, input_bits=ib, output_bits=ob,
+                        activation=act)
+        name = f"cim_mvm_{ib}b{ob}b_{act}_r{rows}c{cols}b{batch}"
+
+        if act == "stochastic":
+            def fn(x, gp, gn, noise, cfg=cfg):
+                return (cim_mvm_pallas(x, gp, gn, cfg, noise=noise),)
+            args = [spec_of(np.zeros((batch, rows))),
+                    spec_of(np.zeros((rows, cols))),
+                    spec_of(np.zeros((rows, cols))),
+                    spec_of(np.zeros((batch, cols)))]
+            params = [["x", [batch, rows]], ["g_pos", [rows, cols]],
+                      ["g_neg", [rows, cols]], ["noise", [batch, cols]]]
+        else:
+            def fn(x, gp, gn, cfg=cfg):
+                return (cim_mvm_pallas(x, gp, gn, cfg),)
+            args = [spec_of(np.zeros((batch, rows))),
+                    spec_of(np.zeros((rows, cols))),
+                    spec_of(np.zeros((rows, cols)))]
+            params = [["x", [batch, rows]], ["g_pos", [rows, cols]],
+                      ["g_neg", [rows, cols]]]
+
+        lower_and_write(fn, args, os.path.join(out_dir, name + ".hlo.txt"))
+        manifest["artifacts"][name] = {
+            "kind": "cim_mvm", "params": params,
+            "outputs": [["y", [batch, cols]]],
+            "cim_config": cfg.to_dict(),
+        }
+
+        # golden vectors for the 4b8b none variant (rust parity test)
+        if (ib, ob, act) == (4, 8, "none"):
+            w = rng.normal(size=(rows, cols)).astype(np.float32)
+            gp, gn = ref.encode_differential(w, cfg.g_max_us, cfg.g_min_us)
+            x = rng.integers(-7, 8, size=(batch, rows)).astype(np.float32)
+            y = np.asarray(ref.cim_mvm_ref(x, gp, gn, cfg))
+            golden["mvm_x"] = x
+            golden["mvm_g_pos"] = np.asarray(gp)
+            golden["mvm_g_neg"] = np.asarray(gn)
+            golden["mvm_y"] = y
+            manifest["golden"]["cim_mvm"] = {
+                "artifact": name,
+                "inputs": ["mvm_x", "mvm_g_pos", "mvm_g_neg"],
+                "output": "mvm_y",
+                "lsb_tolerance": 1,
+            }
+
+
+def build_mnist_artifact(out_dir, manifest, golden, batch=16, width=8):
+    """Full MNIST CNN chip-mode forward with runtime conductances."""
+    mdl = M.mnist_cnn7(width=width)
+    n_layers = len(mdl.specs)
+    names = [s.name for s in mdl.specs]
+
+    def fn(x, *rest):
+        gs = rest[:2 * n_layers]
+        w_maxs = rest[2 * n_layers]
+        shifts_v = rest[2 * n_layers + 1]
+        chip, shifts = {}, {}
+        for i, s in enumerate(mdl.specs):
+            chip[s.name] = {"g_pos": gs[2 * i], "g_neg": gs[2 * i + 1],
+                            "w_max": w_maxs[i], "n_bias_rows": 1}
+            shifts[s.name] = shifts_v[i]
+        return (mdl.chip_forward(x, chip, shifts, use_pallas=True),)
+
+    params = [["x", [batch, 28, 28, 1]]]
+    args = [spec_of(np.zeros((batch, 28, 28, 1)))]
+    for s in mdl.specs:
+        r = s.in_features + 1      # +1 forced bias row
+        for g in ("g_pos", "g_neg"):
+            params.append([f"{s.name}.{g}", [r, s.out_features]])
+            args.append(spec_of(np.zeros((r, s.out_features))))
+    params.append(["w_maxs", [n_layers]])
+    args.append(spec_of(np.zeros(n_layers)))
+    params.append(["shifts", [n_layers]])
+    args.append(spec_of(np.zeros(n_layers)))
+
+    name = f"mnist_cnn7_b{batch}"
+    lower_and_write(fn, args, os.path.join(out_dir, name + ".hlo.txt"))
+    manifest["artifacts"][name] = {
+        "kind": "cnn_forward", "model": "mnist_cnn7",
+        "params": params, "outputs": [["logits", [batch, 10]]],
+        "layers": names,
+        "layer_specs": [
+            {"name": s.name, "kind": s.kind, "in_features": s.in_features,
+             "out_features": s.out_features, "input_bits": s.input_bits,
+             "activation": s.activation, "pool": s.pool,
+             "in_channels": s.in_channels, "kh": s.kh, "kw": s.kw}
+            for s in mdl.specs],
+    }
+
+    # Golden: random-init model, quantized random digits.
+    params_f = mdl.init_params(3)
+    chip = mdl.map_to_chip(params_f, force_bias_rows=1)
+    imgs, _ = D.digits28(batch, seed=5)
+    x = D.quantize_unsigned(imgs, 4)
+    shifts = {s.name: 3.0 for s in mdl.specs}
+    logits = mdl.chip_forward(x, chip, shifts, use_pallas=False)
+    golden["mnist_x"] = np.asarray(x, np.float32)
+    for s in mdl.specs:
+        golden[f"mnist_{s.name}_g_pos"] = chip[s.name]["g_pos"]
+        golden[f"mnist_{s.name}_g_neg"] = chip[s.name]["g_neg"]
+    golden["mnist_w_maxs"] = np.array(
+        [chip[s.name]["w_max"] for s in mdl.specs], np.float32)
+    golden["mnist_shifts"] = np.array(
+        [shifts[s.name] for s in mdl.specs], np.float32)
+    golden["mnist_logits"] = np.asarray(logits, np.float32)
+    manifest["golden"]["mnist_cnn7"] = {
+        "artifact": name,
+        "inputs": ["mnist_x"] +
+                  sum([[f"mnist_{s.name}_g_pos", f"mnist_{s.name}_g_neg"]
+                       for s in mdl.specs], []) +
+                  ["mnist_w_maxs", "mnist_shifts"],
+        "output": "mnist_logits",
+        "rel_tolerance": 0.05,
+    }
+
+
+def build_lstm_artifact(out_dir, manifest, golden, batch=8, hidden=64,
+                        input_dim=40):
+    """One LSTM cell time-step; rust loops over time and cells."""
+    mdl = M.speech_lstm(hidden=hidden, n_cells=1)
+    rx = input_dim + 1          # + bias row
+    rh = hidden
+
+    def fn(x_t, h, c, gpx, gnx, gph, gnh, wmx, wmh):
+        cell = {
+            "wx": {"g_pos": gpx, "g_neg": gnx, "w_max": wmx,
+                   "n_bias_rows": 1},
+            "wh": {"g_pos": gph, "g_neg": gnh, "w_max": wmh,
+                   "n_bias_rows": 0},
+        }
+        h2, c2 = mdl._cell_step(cell, x_t, h, c, use_pallas=True)
+        return (h2, c2)
+
+    args = [spec_of(np.zeros((batch, input_dim))),
+            spec_of(np.zeros((batch, hidden))),
+            spec_of(np.zeros((batch, hidden))),
+            spec_of(np.zeros((rx, 4 * hidden))),
+            spec_of(np.zeros((rx, 4 * hidden))),
+            spec_of(np.zeros((rh, 4 * hidden))),
+            spec_of(np.zeros((rh, 4 * hidden))),
+            spec_of(np.zeros(())), spec_of(np.zeros(()))]
+    name = f"lstm_step_b{batch}"
+    lower_and_write(fn, args, os.path.join(out_dir, name + ".hlo.txt"))
+    manifest["artifacts"][name] = {
+        "kind": "lstm_step",
+        "params": [["x_t", [batch, input_dim]], ["h", [batch, hidden]],
+                   ["c", [batch, hidden]],
+                   ["wx.g_pos", [rx, 4 * hidden]],
+                   ["wx.g_neg", [rx, 4 * hidden]],
+                   ["wh.g_pos", [rh, 4 * hidden]],
+                   ["wh.g_neg", [rh, 4 * hidden]],
+                   ["wx.w_max", []], ["wh.w_max", []]],
+        "outputs": [["h_next", [batch, hidden]],
+                    ["c_next", [batch, hidden]]],
+        "hidden": hidden, "input_dim": input_dim,
+    }
+
+    # Golden
+    ps = mdl.init_params(11)
+    chip = mdl.map_to_chip(ps)
+    cell = chip[0]
+    # force single bias row shape for wx
+    w_aug, _ = M.augment_with_bias(ps[0]["wx"]["w"], ps[0]["wx"]["b"], 7,
+                                   force_rows=1)
+    gp, gn, wm = M.layer_conductances(w_aug, mdl.g_max_us)
+    cell["wx"] = {"g_pos": gp, "g_neg": gn, "w_max": wm, "n_bias_rows": 1}
+    rng = np.random.default_rng(12)
+    x_t = rng.integers(-7, 8, (batch, input_dim)).astype(np.float32)
+    h = rng.integers(-7, 8, (batch, hidden)).astype(np.float32)
+    c = rng.normal(size=(batch, hidden)).astype(np.float32)
+    h2, c2 = mdl._cell_step(cell, x_t, h, c, use_pallas=False)
+    golden.update({
+        "lstm_x_t": x_t, "lstm_h": h, "lstm_c": c,
+        "lstm_wx_g_pos": cell["wx"]["g_pos"],
+        "lstm_wx_g_neg": cell["wx"]["g_neg"],
+        "lstm_wh_g_pos": cell["wh"]["g_pos"],
+        "lstm_wh_g_neg": cell["wh"]["g_neg"],
+        "lstm_wx_w_max": np.float32(cell["wx"]["w_max"]),
+        "lstm_wh_w_max": np.float32(cell["wh"]["w_max"]),
+        "lstm_h_next": np.asarray(h2), "lstm_c_next": np.asarray(c2),
+    })
+    manifest["golden"]["lstm_step"] = {
+        "artifact": name,
+        "inputs": ["lstm_x_t", "lstm_h", "lstm_c", "lstm_wx_g_pos",
+                   "lstm_wx_g_neg", "lstm_wh_g_pos", "lstm_wh_g_neg",
+                   "lstm_wx_w_max", "lstm_wh_w_max"],
+        "outputs": ["lstm_h_next", "lstm_c_next"],
+        "rel_tolerance": 0.02,
+    }
+
+
+def build_rbm_artifact(out_dir, manifest, golden, batch=16):
+    """One RBM Gibbs cycle (v -> h -> v), bidirectional MVM."""
+    rbm = M.RbmModel()
+    nv, nh = rbm.n_visible, rbm.n_hidden
+
+    def fn(v, gp, gn, a, b, u1, u2):
+        spec_f = M.CimLayerSpec(name="f", kind="dense", in_features=nv,
+                                out_features=nh, input_bits=2,
+                                activation="none", g_max_us=rbm.g_max_us)
+        spec_b = M.CimLayerSpec(name="b", kind="dense", in_features=nh,
+                                out_features=nv, input_bits=2,
+                                activation="none", g_max_us=rbm.g_max_us)
+        w_max = jnp.float32(1.0)
+        act_h = M.cim_linear(v, gp, gn, spec_f, w_max, 0, use_pallas=True)
+        p_h = jax.nn.sigmoid(8.0 * (act_h + b))
+        h = (u1 < p_h).astype(jnp.float32)
+        act_v = M.cim_linear(h, gp.T, gn.T, spec_b, w_max, 0,
+                             use_pallas=True)
+        p_v = jax.nn.sigmoid(8.0 * (act_v + a))
+        v2 = (u2 < p_v).astype(jnp.float32)
+        return (v2, h)
+
+    args = [spec_of(np.zeros((batch, nv))), spec_of(np.zeros((nv, nh))),
+            spec_of(np.zeros((nv, nh))), spec_of(np.zeros(nv)),
+            spec_of(np.zeros(nh)), spec_of(np.zeros((batch, nh))),
+            spec_of(np.zeros((batch, nv)))]
+    name = f"rbm_gibbs_b{batch}"
+    lower_and_write(fn, args, os.path.join(out_dir, name + ".hlo.txt"))
+    manifest["artifacts"][name] = {
+        "kind": "rbm_gibbs",
+        "params": [["v", [batch, nv]], ["g_pos", [nv, nh]],
+                   ["g_neg", [nv, nh]], ["a", [nv]], ["b", [nh]],
+                   ["u1", [batch, nh]], ["u2", [batch, nv]]],
+        "outputs": [["v_next", [batch, nv]], ["h", [batch, nh]]],
+        "n_visible": nv, "n_hidden": nh,
+    }
+
+
+# --------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-models", action="store_true",
+                    help="only emit the single-core MVM artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "device_constants": device_constants(),
+        "artifacts": {},
+        "golden": {},
+    }
+    golden = {}
+
+    print("[aot] building CIM MVM artifacts...")
+    build_mvm_artifacts(args.out_dir, manifest, golden)
+    if not args.skip_models:
+        print("[aot] building mnist_cnn7 artifact...")
+        build_mnist_artifact(args.out_dir, manifest, golden)
+        print("[aot] building lstm_step artifact...")
+        build_lstm_artifact(args.out_dir, manifest, golden)
+        print("[aot] building rbm_gibbs artifact...")
+        build_rbm_artifact(args.out_dir, manifest, golden)
+
+    np.savez(os.path.join(args.out_dir, "golden.npz"), **golden)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['artifacts'])} artifacts to "
+          f"{args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

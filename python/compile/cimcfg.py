@@ -1,0 +1,89 @@
+"""Shared compute-in-memory configuration for the NeuRRAM simulator.
+
+Single source of truth for the device / circuit constants the paper
+specifies (Methods).  The rust side mirrors these in
+``rust/src/energy/params.rs`` and ``rust/src/device/rram.rs``; the
+integration tests cross-check a JSON dump of this config against the rust
+constants (see ``aot.py`` which embeds it in the artifact manifest).
+"""
+
+from dataclasses import dataclass, asdict, field
+
+
+# --- RRAM device constants (paper Methods, "RRAM write-verify programming") ---
+G_MIN_US = 1.0          # minimum conductance, micro-siemens
+G_MAX_CNN_US = 40.0     # g_max used for CNNs
+G_MAX_RNN_US = 30.0     # g_max used for LSTMs and RBMs
+RELAX_SIGMA_PEAK_US = 3.87   # peak conductance-relaxation sigma (at ~12 uS)
+RELAX_SIGMA_POST3_US = 2.0   # sigma after 3 iterative programming rounds
+WRITE_ACCEPT_US = 1.0        # write-verify acceptance range (+/- 1 uS)
+
+# --- Voltage-mode MVM constants ---
+V_READ = 0.5            # read pulse amplitude (V), Methods "scaling" section
+V_REF = 1.0             # virtual reference level; only deltas matter here
+
+# --- ADC / neuron constants ---
+N_MAX_DECREMENT = 128   # max charge-decrement steps => <= 8-bit signed output
+# Piecewise-linear tanh/sigmoid compression break points (paper Methods):
+# counter increments every 1 step until 35, every 2 until 40, every 3 until
+# 43, every 4 afterwards.
+TANH_PWL_BREAKS = (35, 40, 43)
+
+
+@dataclass(frozen=True)
+class CimConfig:
+    """Configuration of a single CIM-core matrix-vector multiplication.
+
+    rows/cols are *logical weight* dimensions: the physical array holds
+    2*rows wires because every weight is a differential pair of RRAM cells
+    on adjacent rows of the same column (paper Extended Data Fig. 3a).
+    """
+
+    rows: int = 128               # logical weight rows  (<= 128 per core)
+    cols: int = 256               # output columns       (<= 256 per core)
+    input_bits: int = 4           # 1..6  (signed; 1 => binary {0,1} special)
+    output_bits: int = 8          # 1..8  (signed)
+    g_max_us: float = G_MAX_CNN_US
+    g_min_us: float = G_MIN_US
+    v_read: float = V_READ
+    # ADC LSB as a fraction of v_read. v_decr = adc_lsb_frac * v_read.
+    adc_lsb_frac: float = 1.0 / 64.0
+    activation: str = "none"      # none | relu | tanh | sigmoid | stochastic
+    # First-order driver IR-drop coefficient: effective read voltage is
+    # v_read / (1 + ir_alpha * sum_g_col / (2*rows*g_max)); 0 disables.
+    ir_alpha: float = 0.0
+
+    @property
+    def v_decr(self) -> float:
+        return self.adc_lsb_frac * self.v_read
+
+    @property
+    def out_mag_max(self) -> int:
+        return min(2 ** (self.output_bits - 1) - 1, N_MAX_DECREMENT)
+
+    @property
+    def in_mag_max(self) -> int:
+        return 2 ** (self.input_bits - 1) - 1 if self.input_bits > 1 else 1
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["v_decr"] = self.v_decr
+        d["out_mag_max"] = self.out_mag_max
+        d["in_mag_max"] = self.in_mag_max
+        return d
+
+
+def device_constants() -> dict:
+    """Device-level constants embedded in the artifact manifest so the rust
+    side can assert it was built against the same physics."""
+    return {
+        "g_min_us": G_MIN_US,
+        "g_max_cnn_us": G_MAX_CNN_US,
+        "g_max_rnn_us": G_MAX_RNN_US,
+        "relax_sigma_peak_us": RELAX_SIGMA_PEAK_US,
+        "relax_sigma_post3_us": RELAX_SIGMA_POST3_US,
+        "write_accept_us": WRITE_ACCEPT_US,
+        "v_read": V_READ,
+        "n_max_decrement": N_MAX_DECREMENT,
+        "tanh_pwl_breaks": list(TANH_PWL_BREAKS),
+    }

@@ -1,0 +1,164 @@
+"""Dataset substrates.
+
+This environment has no network access, so the paper's three public
+benchmarks are substituted by procedural datasets with matching tensor
+shapes and class structure (DESIGN.md §6).  Real data is used
+automatically when present under ``data/`` (IDX or .npz), keeping every
+downstream code path identical.
+
+  * digits28   -- 28x28x1 grayscale digits (MNIST substitute): a 5x7
+                  stroke font rendered with random shift / thickness /
+                  pixel noise / elastic-ish jitter.
+  * textures32 -- 32x32x3 10-class textures (CIFAR-10 substitute):
+                  parametric generators (stripes, checks, blobs, rings,
+                  gradients, ...) with random phase/frequency/color.
+  * mfcc_cmds  -- 50x40 MFCC-like series, 12 classes (Google speech
+                  commands substitute): class-specific time-frequency
+                  trajectories (chirps/harmonics) + noise.
+
+Mirrored in rust by ``rust/src/io/datasets.rs`` (same generators, same
+class definitions) so both sides of the stack agree on the workload.
+"""
+
+import os
+
+import numpy as np
+
+# 5x7 bitmap font for digits 0-9 (rows top->bottom, '#' = on).
+_FONT = {
+    0: ["#####", "#...#", "#...#", "#...#", "#...#", "#...#", "#####"],
+    1: ["..#..", ".##..", "..#..", "..#..", "..#..", "..#..", "#####"],
+    2: ["#####", "....#", "....#", "#####", "#....", "#....", "#####"],
+    3: ["#####", "....#", "....#", "#####", "....#", "....#", "#####"],
+    4: ["#...#", "#...#", "#...#", "#####", "....#", "....#", "....#"],
+    5: ["#####", "#....", "#....", "#####", "....#", "....#", "#####"],
+    6: ["#####", "#....", "#....", "#####", "#...#", "#...#", "#####"],
+    7: ["#####", "....#", "...#.", "..#..", ".#...", ".#...", ".#..."],
+    8: ["#####", "#...#", "#...#", "#####", "#...#", "#...#", "#####"],
+    9: ["#####", "#...#", "#...#", "#####", "....#", "....#", "#####"],
+}
+
+
+def _glyph(d: int) -> np.ndarray:
+    return np.array([[c == "#" for c in row] for row in _FONT[d]], np.float32)
+
+
+def digits28(n: int, seed: int = 0, noise: float = 0.15):
+    """MNIST-substitute: n images [n,28,28,1] in [0,1] + labels [n]."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n)
+    imgs = np.zeros((n, 28, 28, 1), np.float32)
+    for i, d in enumerate(labels):
+        g = _glyph(int(d))
+        sy = rng.integers(2, 4)   # vertical stroke scale
+        sx = rng.integers(2, 4)
+        up = np.kron(g, np.ones((sy, sx), np.float32))   # <=21 x <=15
+        h, w = up.shape
+        # random thickness: one dilation pass with prob 1/2
+        if rng.random() < 0.5:
+            pad = np.pad(up, 1)
+            up = np.maximum(up, np.maximum(
+                np.maximum(pad[:-2, 1:-1], pad[2:, 1:-1]),
+                np.maximum(pad[1:-1, :-2], pad[1:-1, 2:])))
+        oy = rng.integers(0, 28 - h + 1)
+        ox = rng.integers(0, 28 - w + 1)
+        img = np.zeros((28, 28), np.float32)
+        img[oy:oy + h, ox:ox + w] = up
+        img += rng.normal(0, noise, img.shape).astype(np.float32)
+        imgs[i, :, :, 0] = np.clip(img, 0.0, 1.0)
+    return imgs, labels.astype(np.int32)
+
+
+def _texture(cls: int, rng) -> np.ndarray:
+    """One 32x32x3 image for texture class 0..9."""
+    yy, xx = np.mgrid[0:32, 0:32].astype(np.float32) / 32.0
+    f = rng.uniform(2.0, 4.0)
+    ph = rng.uniform(0, 2 * np.pi)
+    base = {
+        0: np.sin(2 * np.pi * f * xx + ph),                        # v-stripes
+        1: np.sin(2 * np.pi * f * yy + ph),                        # h-stripes
+        2: np.sin(2 * np.pi * f * (xx + yy) + ph),                 # diagonal
+        3: np.sign(np.sin(2 * np.pi * f * xx + ph)
+                   * np.sin(2 * np.pi * f * yy + ph)),             # checker
+        4: np.sin(2 * np.pi * f * np.sqrt((xx - 0.5) ** 2
+                                          + (yy - 0.5) ** 2) * 2), # rings
+        5: xx * 2 - 1,                                             # x-gradient
+        6: yy * 2 - 1,                                             # y-gradient
+        7: np.sin(2 * np.pi * f * xx * yy * 4 + ph),               # hyperbolic
+        8: np.cos(2 * np.pi * f * xx + ph) * np.cos(np.pi * f * yy),  # grid
+        9: np.sin(2 * np.pi * (f * xx + f * 0.5 * xx * xx) + ph),  # chirp
+    }[cls]
+    img = np.zeros((32, 32, 3), np.float32)
+    hue = rng.uniform(0.3, 1.0, size=3)
+    for ch in range(3):
+        img[:, :, ch] = 0.5 + 0.5 * base * hue[ch]
+    return img
+
+
+def textures32(n: int, seed: int = 0, noise: float = 0.08):
+    """CIFAR-10-substitute: n images [n,32,32,3] in [0,1] + labels [n]."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n)
+    imgs = np.zeros((n, 32, 32, 3), np.float32)
+    for i, c in enumerate(labels):
+        img = _texture(int(c), rng)
+        img += rng.normal(0, noise, img.shape).astype(np.float32)
+        imgs[i] = np.clip(img, 0.0, 1.0)
+    return imgs, labels.astype(np.int32)
+
+
+def mfcc_cmds(n: int, seed: int = 0, t: int = 50, d: int = 40,
+              n_classes: int = 12, noise: float = 0.35):
+    """Speech-command substitute: [n, t, d] MFCC-like series + labels.
+
+    Each class is a distinct time-frequency trajectory: a band whose
+    centre sweeps with class-specific slope/curvature plus a class
+    harmonic, roughly what MFCC energy of short spoken words looks like.
+    """
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, n_classes, size=n)
+    xs = np.zeros((n, t, d), np.float32)
+    tt = np.linspace(0, 1, t)[:, None]
+    dd = np.arange(d)[None, :].astype(np.float32)
+    for i, c in enumerate(labels):
+        c = int(c)
+        slope = (c % 4 - 1.5) * 12.0
+        curve = (c // 4 - 1.0) * 10.0
+        centre = d / 2 + slope * (tt - 0.5) + curve * (tt - 0.5) ** 2 * 4
+        width = 2.5 + (c % 3)
+        band = np.exp(-((dd - centre) ** 2) / (2 * width ** 2))
+        harm = 0.5 * np.exp(-((dd - (centre + d / 4) % d) ** 2)
+                            / (2 * width ** 2))
+        amp = np.sin(np.pi * tt.squeeze()) ** 0.5   # onset/offset envelope
+        x = (band + harm) * amp[:, None]
+        x += rng.normal(0, noise, x.shape) * 0.3
+        xs[i] = x.astype(np.float32)
+    # normalize to zero-mean unit-ish range like real MFCCs
+    xs = (xs - xs.mean()) / (xs.std() + 1e-6)
+    return xs, labels.astype(np.int32)
+
+
+def quantize_unsigned(x, bits: int):
+    """[0,1] floats -> unsigned ``bits`` integers (chip input format)."""
+    m = 2 ** bits - 1
+    return np.clip(np.round(np.asarray(x) * m), 0, m).astype(np.float32)
+
+
+def quantize_signed(x, bits: int, clip_sigma: float = 2.5):
+    """Zero-mean floats -> signed ``bits`` integers via sigma clipping."""
+    m = 2 ** (bits - 1) - 1
+    s = clip_sigma * np.std(x) + 1e-6
+    return np.clip(np.round(np.asarray(x) / s * m), -m, m).astype(np.float32)
+
+
+def load_or_generate(name: str, n: int, seed: int = 0, data_dir="../data"):
+    """Prefer real data when present; otherwise procedural substitute."""
+    path = os.path.join(data_dir, f"{name}.npz")
+    if os.path.exists(path):
+        z = np.load(path)
+        return z["x"][:n], z["y"][:n]
+    return {
+        "digits28": digits28,
+        "textures32": textures32,
+        "mfcc_cmds": mfcc_cmds,
+    }[name](n, seed=seed)

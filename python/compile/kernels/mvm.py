@@ -1,0 +1,158 @@
+"""Pallas kernel for the NeuRRAM voltage-mode CIM matrix-vector multiply.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's analog
+array is weight-stationary -- the conductance matrix never moves, inputs
+stream in bit-serially, and the ADC is a per-output epilogue.  The Pallas
+expression of that schedule:
+
+  * BlockSpec keeps a [R, bc] tile of each conductance matrix resident
+    (the VMEM-resident "crossbar"),
+  * the bit-serial input phase is an unrolled loop over magnitude
+    bit-planes, each contributing a {-1,0,+1}-valued matmul weighted by
+    its 2^k sampling-cycle count (an MXU-friendly GEMM per plane),
+  * the charge-decrement ADC + activation folding is an element-wise
+    epilogue on the settled voltages.
+
+The kernel is lowered with ``interpret=True``: on this CPU-PJRT image a
+real TPU lowering would emit a Mosaic custom-call the CPU client cannot
+execute.  Numerics are identical either way; TPU efficiency estimates are
+in DESIGN.md §8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..cimcfg import CimConfig, TANH_PWL_BREAKS
+
+
+def _adc_epilogue(v, cfg: CimConfig, noise):
+    """Charge-decrement ADC written with element-wise jnp ops.
+
+    Must stay in exact lock-step with ``ref.adc_quantize`` -- pytest
+    asserts bit-exact equality between the two.
+    """
+    if noise is not None:
+        v = v + noise
+    if cfg.activation == "stochastic":
+        return (v > 0.0).astype(jnp.float32)
+
+    sign = jnp.sign(v)
+    k = jnp.floor(jnp.abs(v) / cfg.v_decr)
+    k = jnp.minimum(k, float(cfg.out_mag_max))
+
+    if cfg.activation == "relu":
+        return jnp.where(sign > 0, k, 0.0)
+    if cfg.activation in ("tanh", "sigmoid"):
+        b1, b2, b3 = TANH_PWL_BREAKS
+        k1 = float(b1)
+        k2 = k1 + 2.0 * (b2 - b1)
+        k3 = k2 + 3.0 * (b3 - b2)
+        c = jnp.where(
+            k <= k1, k,
+            jnp.where(
+                k <= k2, b1 + jnp.floor((k - k1) / 2.0),
+                jnp.where(
+                    k <= k3, b2 + jnp.floor((k - k2) / 3.0),
+                    b3 + jnp.floor((k - k3) / 4.0),
+                ),
+            ),
+        )
+        c = jnp.minimum(c, float(cfg.out_mag_max))
+        t = sign * c
+        if cfg.activation == "sigmoid":
+            return jnp.floor((t + cfg.out_mag_max) / 2.0)
+        return t
+    return sign * k
+
+
+def _mvm_kernel(x_ref, gp_ref, gn_ref, o_ref, *, cfg: CimConfig,
+                noise_ref=None):
+    """One (batch-tile, column-tile) cell of the CIM MVM grid."""
+    x = x_ref[...]                      # [bb, R] signed ints as f32
+    gp = gp_ref[...]                    # [R, bc] uS
+    gn = gn_ref[...]
+    g_diff = gp - gn
+    den = jnp.sum(gp + gn, axis=0)      # [bc] -- voltage-mode normalizer
+
+    # ---- bit-serial input phase ------------------------------------------
+    # n-bit signed input => n-1 pulse phases. The phase for magnitude bit k
+    # is a ternary {-1,0,+1} drive integrated for 2^k sampling cycles; the
+    # weighted sum of the per-plane settled voltages reconstructs the full
+    # integer MVM (the analog system is linear in the drive voltage).
+    sign = jnp.sign(x)
+    mag = jnp.abs(x)
+    n_planes = max(cfg.input_bits - 1, 1)
+    acc = jnp.zeros((x.shape[0], gp.shape[1]), jnp.float32)
+    for k in range(n_planes - 1, -1, -1):
+        plane = jnp.mod(jnp.floor(mag / float(2 ** k)), 2.0) * sign
+        acc = acc + float(2 ** k) * jnp.dot(
+            plane, g_diff, preferred_element_type=jnp.float32)
+
+    # ---- settling + normalization ----------------------------------------
+    v = cfg.v_read * acc / den
+    if cfg.ir_alpha > 0.0:
+        full = 2.0 * gp.shape[0] * cfg.g_max_us
+        v = v / (1.0 + cfg.ir_alpha * den / full)
+
+    # ---- ADC / activation epilogue ---------------------------------------
+    noise = noise_ref[...] if noise_ref is not None else None
+    o_ref[...] = _adc_epilogue(v, cfg, noise)
+
+
+def _pick_block(n: int, pref: int) -> int:
+    """Largest divisor of n not exceeding pref (keeps the grid exact)."""
+    b = min(n, pref)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def cim_mvm_pallas(x, g_pos, g_neg, cfg: CimConfig, noise=None):
+    """Voltage-mode CIM MVM on one core's conductance pair.
+
+    x      : [B, R] signed integers (float32 storage), |x| <= in_mag_max
+    g_pos  : [R, C] positive-branch conductances, uS
+    g_neg  : [R, C] negative-branch conductances, uS
+    noise  : optional [B, C] analog-domain noise (LFSR injection or
+             read-noise), added before ADC conversion
+    returns: [B, C] signed integer neuron outputs (float32 storage)
+    """
+    x = jnp.asarray(x, jnp.float32)
+    g_pos = jnp.asarray(g_pos, jnp.float32)
+    g_neg = jnp.asarray(g_neg, jnp.float32)
+    b, r = x.shape
+    _, c = g_pos.shape
+
+    bb = _pick_block(b, 128)
+    bc = _pick_block(c, 256)
+    grid = (b // bb, c // bc)
+
+    in_specs = [
+        pl.BlockSpec((bb, r), lambda i, j: (i, 0)),
+        pl.BlockSpec((r, bc), lambda i, j: (0, j)),
+        pl.BlockSpec((r, bc), lambda i, j: (0, j)),
+    ]
+    args = [x, g_pos, g_neg]
+    if noise is not None:
+        in_specs.append(pl.BlockSpec((bb, bc), lambda i, j: (i, j)))
+        args.append(jnp.asarray(noise, jnp.float32))
+        kern = functools.partial(_kernel_with_noise, cfg=cfg)
+    else:
+        kern = functools.partial(_mvm_kernel, cfg=cfg)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bb, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=True,
+    )(*args)
+
+
+def _kernel_with_noise(x_ref, gp_ref, gn_ref, n_ref, o_ref, *, cfg):
+    _mvm_kernel(x_ref, gp_ref, gn_ref, o_ref, cfg=cfg, noise_ref=n_ref)

@@ -1,0 +1,186 @@
+"""Pure-jnp oracle for the NeuRRAM voltage-mode CIM MVM.
+
+This is the *correctness contract* shared by three implementations:
+
+  1. the Pallas kernel in ``mvm.py`` (asserted equal by pytest),
+  2. the rust cycle-level core simulator (asserted equal via golden
+     vectors exported by ``aot.py`` into the artifact manifest),
+  3. the HLO artifacts executed by the rust PJRT runtime.
+
+Physics being modelled (paper Fig. 2h + Methods):
+
+  * every logical weight w is a differential pair of conductances on two
+    adjacent rows of the same column:
+        g+ = max(g_max * w / w_max, g_min)
+        g- = max(-g_max * w / w_max, g_min)
+  * during the input phase the two wires of a pair are driven to
+    +/- x_i * V_read around V_ref, so the settled open-circuit voltage on
+    output column j is the conductance-weighted average
+        dV_j = V_read * sum_i x_i (g+_ij - g-_ij) / sum_i (g+_ij + g-_ij)
+    -- the denominator is the paper's "automatic dynamic-range
+    normalization" (Fig. 2i).
+  * the neuron integrates dV over bit-serial input pulses (n-bit signed
+    input => n-1 pulse phases with 2^k sampling cycles each), then
+    converts by charge decrement: magnitude = number of V_decr steps
+    until the comparator flips, with early stop at the configured
+    maximum (N_max = 128 => at most 8-bit signed outputs).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..cimcfg import CimConfig, TANH_PWL_BREAKS
+
+
+# --------------------------------------------------------------------------
+# Weight -> differential conductance encoding
+# --------------------------------------------------------------------------
+
+def encode_differential(w, g_max_us: float, g_min_us: float, w_max=None):
+    """Map real weights [R, C] to differential conductance pair (g+, g-).
+
+    Matches paper Methods: g+ = max(g_max*W/w_max, g_min),
+    g- = max(-g_max*W/w_max, g_min).  Returns conductances in micro-siemens.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    if w_max is None:
+        w_max = jnp.maximum(jnp.max(jnp.abs(w)), 1e-9)
+    scaled = g_max_us * w / w_max
+    g_pos = jnp.maximum(scaled, g_min_us)
+    g_neg = jnp.maximum(-scaled, g_min_us)
+    return g_pos, g_neg
+
+
+def decode_differential(g_pos, g_neg, g_max_us: float, w_max: float = 1.0):
+    """Inverse of :func:`encode_differential` (up to the g_min clamp)."""
+    return (g_pos - g_neg) * (w_max / g_max_us)
+
+
+# --------------------------------------------------------------------------
+# Analog settling
+# --------------------------------------------------------------------------
+
+def settle_voltage(x, g_pos, g_neg, cfg: CimConfig):
+    """Settled output-line voltage deviation from V_ref, for integer inputs.
+
+    x: [B, R] signed integers (as float32), |x| <= cfg.in_mag_max
+    g_pos, g_neg: [R, C] conductances in uS
+    returns dV: [B, C] volts
+    """
+    x = jnp.asarray(x, jnp.float32)
+    num = x @ (g_pos - g_neg)                      # [B, C], uS-weighted
+    den = jnp.sum(g_pos + g_neg, axis=0)           # [C]
+    v = cfg.v_read * num / den
+    if cfg.ir_alpha > 0.0:
+        # First-order driver/array IR drop: columns with larger total
+        # conductance pull more current through the shared drivers and see a
+        # reduced effective read voltage (paper non-idealities (i)-(iii)).
+        full = 2.0 * g_pos.shape[0] * cfg.g_max_us
+        v = v / (1.0 + cfg.ir_alpha * den / full)
+    return v
+
+
+# --------------------------------------------------------------------------
+# Charge-decrement ADC + activation folding
+# --------------------------------------------------------------------------
+
+def _pwl_compress(k, mag_max):
+    """Piecewise-linear tanh compression of the decrement counter.
+
+    Counter increments every step until 35, every 2 steps until 40, every 3
+    until 43, every 4 afterwards (paper Methods).  k is the raw (linear)
+    step count; returns the compressed counter value.
+    """
+    b1, b2, b3 = TANH_PWL_BREAKS          # 35, 40, 43
+    k1 = float(b1)                        # raw steps to reach counter b1
+    k2 = k1 + 2.0 * (b2 - b1)             # every 2 steps
+    k3 = k2 + 3.0 * (b3 - b2)             # every 3 steps
+    c = jnp.where(
+        k <= k1, k,
+        jnp.where(
+            k <= k2, b1 + jnp.floor((k - k1) / 2.0),
+            jnp.where(
+                k <= k3, b2 + jnp.floor((k - k2) / 3.0),
+                b3 + jnp.floor((k - k3) / 4.0),
+            ),
+        ),
+    )
+    return jnp.minimum(c, float(mag_max))
+
+
+def adc_quantize(v, cfg: CimConfig, noise=None):
+    """Convert analog voltages to signed integer neuron outputs.
+
+    Models the sign-bit comparison followed by charge-decrement magnitude
+    counting: magnitude = floor(|v| / v_decr) clipped to out_mag_max
+    (the comparator flips on the step whose cumulative decrement first
+    exceeds |v|; the counter holds the number of completed steps).
+
+    Activation folding (paper Methods):
+      * relu       -- negative sign-bit skips decrements entirely => 0
+      * tanh       -- counter increments follow the PWL schedule
+      * sigmoid    -- tanh output renormalized to [0, mag_max]
+      * stochastic -- LFSR noise added before the sign comparison; binary out
+    """
+    if noise is not None:
+        v = v + noise
+    if cfg.activation == "stochastic":
+        return (v > 0.0).astype(jnp.float32)
+
+    sign = jnp.sign(v)
+    k = jnp.floor(jnp.abs(v) / cfg.v_decr)
+    k = jnp.minimum(k, float(cfg.out_mag_max))
+
+    if cfg.activation == "relu":
+        return jnp.where(sign > 0, k, 0.0)
+    if cfg.activation in ("tanh", "sigmoid"):
+        c = _pwl_compress(k, cfg.out_mag_max)
+        t = sign * c
+        if cfg.activation == "sigmoid":
+            # (tanh + mag_max) / 2, kept integral.
+            return jnp.floor((t + cfg.out_mag_max) / 2.0)
+        return t
+    return sign * k
+
+
+# --------------------------------------------------------------------------
+# Full reference MVM
+# --------------------------------------------------------------------------
+
+def cim_mvm_ref(x, g_pos, g_neg, cfg: CimConfig, noise=None):
+    """Reference voltage-mode CIM MVM: x [B,R] ints -> y [B,C] ints."""
+    v = settle_voltage(x, g_pos, g_neg, cfg)
+    return adc_quantize(v, cfg, noise=noise)
+
+
+def mvm_scale(g_pos, g_neg, cfg: CimConfig, w_max: float):
+    """Digital post-scale that undoes the analog normalization.
+
+    y_int * mvm_scale ~= x @ w in real units: the voltage normalization
+    divides by sum(g+ + g-) per column and the ADC divides by v_decr, so the
+    inverse factor is  den * v_decr * w_max / (v_read * g_max).
+    This is the paper's "pre-compute the normalization factor from the
+    weight matrix and multiply it back after the ADC".
+    """
+    den = jnp.sum(g_pos + g_neg, axis=0)
+    return den * cfg.v_decr * w_max / (cfg.v_read * cfg.g_max_us)
+
+
+# --------------------------------------------------------------------------
+# Bit-plane helpers (shared with the Pallas kernel's bit-serial schedule)
+# --------------------------------------------------------------------------
+
+def bit_planes(x, n_bits: int):
+    """Decompose signed integers into magnitude bit-planes, MSB first.
+
+    Mirrors the chip's input scheme: n-bit signed input => n-1 pulse phases;
+    the phase carrying magnitude bit k is integrated 2^k cycles.
+    Returns [n-1, B, R] float32 planes with values in {-1, 0, +1}.
+    """
+    x = np.asarray(x)
+    sign = np.sign(x)
+    mag = np.abs(x).astype(np.int64)
+    planes = []
+    for k in range(max(n_bits - 2, 0), -1, -1):
+        planes.append(((mag >> k) & 1) * sign)
+    return np.stack(planes, axis=0).astype(np.float32)

@@ -1,0 +1,592 @@
+"""L2: JAX model layer built on the L1 CIM-MVM kernel.
+
+Two forward modes share one parameter pytree:
+
+  * ``chip`` mode -- the integer pipeline the NeuRRAM chip executes:
+    activations are small signed/unsigned integers, every matmul runs
+    through the voltage-mode CIM kernel (differential conductances,
+    per-core-segment normalization + ADC), partial sums from row-split
+    segments are de-normalized and accumulated digitally, and layer
+    outputs are re-quantized by a per-layer power-of-two shift (the
+    quantity model-driven calibration tunes).
+  * ``train`` mode -- float forward with weight-noise injection and
+    straight-through fake-quantization, used by
+    ``train/noise_train.py`` (the paper's noise-resilient training).
+
+The chip-mode graphs are what ``aot.py`` lowers to HLO; conductances are
+runtime *parameters* so the rust coordinator can feed the actually
+programmed (relaxed, noisy) device state into the same executable.
+"""
+
+import functools
+from dataclasses import dataclass, field, replace
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cimcfg import CimConfig, G_MAX_CNN_US, G_MAX_RNN_US, G_MIN_US
+from .kernels import ref
+from .kernels.mvm import cim_mvm_pallas
+
+MAX_ROWS_PER_CORE = 128   # differential pairs per 256-row physical array
+MAX_COLS_PER_CORE = 256
+
+
+# ==========================================================================
+# Layer spec
+# ==========================================================================
+
+@dataclass(frozen=True)
+class CimLayerSpec:
+    """Static description of one CIM-mapped layer (conv or dense)."""
+    name: str
+    kind: str                 # "conv" | "dense"
+    in_features: int          # flattened H*W*I for conv
+    out_features: int
+    input_bits: int = 4      # activation precision entering this layer
+    output_bits: int = 8     # ADC precision
+    activation: str = "relu"  # folded neuron activation
+    g_max_us: float = G_MAX_CNN_US
+    # conv-only geometry
+    kh: int = 3
+    kw: int = 3
+    stride: int = 1
+    padding: str = "SAME"
+    in_channels: int = 0
+    out_channels: int = 0
+    pool: int = 1             # max-pool factor applied after the layer
+
+    def mvm_cfg(self, rows: int, ir_alpha: float = 0.0) -> CimConfig:
+        return CimConfig(
+            rows=rows, cols=self.out_features,
+            input_bits=self.input_bits, output_bits=self.output_bits,
+            g_max_us=self.g_max_us, g_min_us=G_MIN_US,
+            activation=self.activation, ir_alpha=ir_alpha,
+        )
+
+
+def row_segments(n_rows: int, max_rows: int = MAX_ROWS_PER_CORE):
+    """Split a conductance matrix's rows into per-core segments.
+
+    Mirrors rust ``coordinator::mapping``: equal-ish chunks, each at most
+    ``max_rows`` differential pairs.
+    """
+    n_seg = max(1, -(-n_rows // max_rows))
+    base = n_rows // n_seg
+    rem = n_rows % n_seg
+    sizes = [base + (1 if i < rem else 0) for i in range(n_seg)]
+    out, start = [], 0
+    for s in sizes:
+        out.append((start, start + s))
+        start += s
+    return out
+
+
+# ==========================================================================
+# Parameters <-> conductances
+# ==========================================================================
+
+def bias_rows_needed(b, w_max: float, in_mag: int) -> int:
+    """Paper: if the bias range is B times the weight range, spread the
+    bias over B rows driven at full-scale input."""
+    if b is None:
+        return 0
+    mx = float(np.max(np.abs(np.asarray(b))))
+    return max(1, int(np.ceil(mx / (w_max * max(in_mag, 1)) - 1e-9)))
+
+
+def augment_with_bias(w, b, in_mag: int, force_rows=None):
+    """Append bias rows to a weight matrix.
+
+    Returns (w_aug [R+nb, C], n_bias_rows).  During MVM the bias rows are
+    driven at the full-scale input value ``in_mag``.  ``force_rows`` pins
+    the row count (AOT graphs need static shapes); the per-row bias weight
+    is then clipped to the weight range, losing any overflow -- calibrated
+    models keep biases well inside range.
+    """
+    w = np.asarray(w, np.float32)
+    if b is None and force_rows is None:
+        return w, 0
+    if b is None:
+        b = np.zeros(w.shape[1], np.float32)
+    w_max = float(np.max(np.abs(w)))
+    nb = force_rows if force_rows is not None else \
+        bias_rows_needed(b, w_max, in_mag)
+    per_row = np.asarray(b, np.float32) / (nb * max(in_mag, 1))
+    if force_rows is not None:
+        per_row = np.clip(per_row, -w_max, w_max)
+    rows = np.tile(per_row[None, :], (nb, 1))
+    return np.concatenate([w, rows], axis=0), nb
+
+
+def layer_conductances(w_aug, g_max_us: float):
+    """Encode an augmented weight matrix into (g+, g-, w_max)."""
+    w_max = float(np.max(np.abs(w_aug)))
+    gp, gn = ref.encode_differential(w_aug, g_max_us, G_MIN_US, w_max=w_max)
+    return np.asarray(gp), np.asarray(gn), w_max
+
+
+# ==========================================================================
+# Chip-mode linear op (segmented CIM MVM + digital accumulation)
+# ==========================================================================
+
+def cim_linear(x_int, g_pos, g_neg, spec: CimLayerSpec, w_max: float,
+               n_bias_rows: int, *, use_pallas: bool = True,
+               ir_alpha: float = 0.0, noise=None):
+    """Integer activations -> float pre-activation values.
+
+    x_int : [B, R] signed ints (float32 storage); bias rows are appended
+            internally at full drive.
+    g_pos/g_neg : [R + nb, C] conductance pair.
+    Returns float32 [B, C]: de-normalized, accumulated partial sums, i.e.
+    approximately x_int @ w_aug-ish in weight units * in-scale.
+    """
+    b = x_int.shape[0]
+    r_total = g_pos.shape[0]
+    in_mag = 2 ** (spec.input_bits - 1) - 1 if spec.input_bits > 1 else 1
+    if n_bias_rows > 0:
+        ones = jnp.full((b, n_bias_rows), float(in_mag), jnp.float32)
+        x_int = jnp.concatenate([x_int, ones], axis=1)
+
+    # The neuron's folded nonlinearity must act on the *total* accumulated
+    # value; per-segment ADC runs linear ("none") and the activation is
+    # applied digitally after accumulation when a layer spans segments.
+    segs = row_segments(r_total)
+    mvm_act = spec.activation if len(segs) == 1 else "none"
+
+    acc = jnp.zeros((b, g_pos.shape[1]), jnp.float32)
+    for (lo, hi) in segs:
+        cfg = CimConfig(
+            rows=hi - lo, cols=spec.out_features,
+            input_bits=spec.input_bits, output_bits=spec.output_bits,
+            g_max_us=spec.g_max_us, activation=mvm_act, ir_alpha=ir_alpha,
+        )
+        gp_s, gn_s = g_pos[lo:hi], g_neg[lo:hi]
+        xs = x_int[:, lo:hi]
+        fn = cim_mvm_pallas if use_pallas else ref.cim_mvm_ref
+        y = fn(xs, gp_s, gn_s, cfg, noise=noise)
+        scale = ref.mvm_scale(gp_s, gn_s, cfg, w_max)
+        acc = acc + y * scale
+    if mvm_act == "none" and spec.activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    return acc
+
+
+def requantize(y, shift: float, bits: int, signed: bool):
+    """Digital re-quantization between layers: divide by 2^shift, floor,
+    clip to the next layer's input range."""
+    q = jnp.floor(y / (2.0 ** shift))
+    if signed:
+        m = 2 ** (bits - 1) - 1
+        return jnp.clip(q, -m, m)
+    return jnp.clip(q, 0, 2 ** bits - 1)
+
+
+# ==========================================================================
+# Convolution via im2col (the chip's flattening, Fig. 4c)
+# ==========================================================================
+
+def im2col(x, kh: int, kw: int, stride: int, padding: str):
+    """x [B, H, W, C] -> patches [B, Ho, Wo, kh*kw*C].
+
+    Patch element order is (kh, kw, C) flattened C-fastest, matching the
+    rust-side conductance row order (models/conductance.rs).
+    """
+    patches = jax.lax.conv_general_dilated_patches(
+        jnp.moveaxis(x, 3, 1),                 # NCHW
+        (kh, kw), (stride, stride), padding,
+    )                                          # [B, C*kh*kw, Ho, Wo]
+    b, ckk, ho, wo = patches.shape
+    c = x.shape[3]
+    patches = patches.reshape(b, c, kh * kw, ho, wo)
+    patches = jnp.moveaxis(patches, (3, 4), (1, 2))   # [B, Ho, Wo, C, khkw]
+    patches = jnp.swapaxes(patches, 3, 4)             # [B, Ho, Wo, khkw, C]
+    return patches.reshape(b, ho, wo, kh * kw * c)
+
+
+def maxpool2(x, k: int):
+    if k <= 1:
+        return x
+    b, h, w, c = x.shape
+    x = x[:, : h // k * k, : w // k * k, :]
+    x = x.reshape(b, h // k, k, w // k, k, c)
+    return jnp.max(x, axis=(2, 4))
+
+
+# ==========================================================================
+# Model definitions
+# ==========================================================================
+
+@dataclass
+class CnnModel:
+    """A CIM-mapped CNN: a stack of conv layers + one dense head."""
+    name: str
+    input_hw: int
+    input_ch: int
+    specs: Sequence[CimLayerSpec]
+    n_classes: int
+
+    def init_params(self, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        params = {}
+        for s in self.specs:
+            fan_in = s.in_features
+            std = float(np.sqrt(2.0 / fan_in))
+            params[s.name] = {
+                "w": rng.normal(0, std, size=(s.in_features, s.out_features)
+                                ).astype(np.float32),
+                "b": np.zeros((s.out_features,), np.float32),
+            }
+        return params
+
+    # -------------------- chip-mode forward --------------------
+    def chip_forward(self, x_img, chip_params, shifts, *, use_pallas=True,
+                     ir_alpha=0.0):
+        """x_img: [B, H, W, C] integer activations (already input-quantized).
+        chip_params[name] = dict(g_pos, g_neg, w_max, n_bias_rows).
+        shifts[name] = requantization shift (calibrated).
+        Returns logits [B, n_classes] (float, de-normalized)."""
+        x = jnp.asarray(x_img, jnp.float32)
+        for i, s in enumerate(self.specs):
+            p = chip_params[s.name]
+            last = i == len(self.specs) - 1
+            next_bits = self.specs[i + 1].input_bits if not last else 0
+            if s.kind == "conv":
+                cols = im2col(x, s.kh, s.kw, s.stride, s.padding)
+                b, ho, wo, r = cols.shape
+                y = cim_linear(cols.reshape(b * ho * wo, r), p["g_pos"],
+                               p["g_neg"], s, p["w_max"], p["n_bias_rows"],
+                               use_pallas=use_pallas, ir_alpha=ir_alpha)
+                y = y.reshape(b, ho, wo, s.out_features)
+                y = maxpool2(y, s.pool)
+                # unsigned activations live in the positive half of the
+                # next layer's signed input range: clip at 2^(n-1)-1
+                x = requantize(y, shifts[s.name], next_bits - 1,
+                               signed=False)
+            else:
+                b = x.shape[0]
+                y = cim_linear(x.reshape(b, -1), p["g_pos"], p["g_neg"], s,
+                               p["w_max"], p["n_bias_rows"],
+                               use_pallas=use_pallas, ir_alpha=ir_alpha)
+                if last:
+                    return y
+                x = requantize(y, shifts[s.name], next_bits - 1,
+                               signed=False)
+        return x
+
+    # -------------------- train-mode forward --------------------
+    def train_forward(self, x_img, params, *, noise_frac=0.0, rng=None,
+                      act_bits=3):
+        """Float forward with weight-noise injection + STE activation
+        fake-quant (PACT-style clipping at a fixed learned-ish alpha)."""
+        x = jnp.asarray(x_img, jnp.float32)
+        for i, s in enumerate(self.specs):
+            w = params[s.name]["w"]
+            bta = params[s.name]["b"]
+            if noise_frac > 0.0 and rng is not None:
+                rng, sub = jax.random.split(rng)
+                w_max = jnp.max(jnp.abs(w))
+                w = w + jax.random.normal(sub, w.shape) * (noise_frac * w_max)
+            last = i == len(self.specs) - 1
+            if s.kind == "conv":
+                cols = im2col(x, s.kh, s.kw, s.stride, s.padding)
+                y = cols @ w.reshape(s.in_features, s.out_features) + bta
+                y = maxpool2(jnp.maximum(y, 0.0), s.pool)
+                x = fake_quant_unsigned(y, act_bits)
+            else:
+                b = x.shape[0]
+                y = x.reshape(b, -1) @ w + bta
+                if last:
+                    return y
+                x = fake_quant_unsigned(jnp.maximum(y, 0.0), act_bits)
+        return x
+
+    def map_to_chip(self, params, force_bias_rows=None):
+        """Float params -> conductance dicts (ideal, pre-programming)."""
+        chip = {}
+        for s in self.specs:
+            in_mag = 2 ** (s.input_bits - 1) - 1 if s.input_bits > 1 else 1
+            w_aug, nb = augment_with_bias(params[s.name]["w"],
+                                          params[s.name]["b"], in_mag,
+                                          force_rows=force_bias_rows)
+            gp, gn, w_max = layer_conductances(w_aug, s.g_max_us)
+            chip[s.name] = {"g_pos": gp, "g_neg": gn, "w_max": w_max,
+                            "n_bias_rows": nb}
+        return chip
+
+
+def fake_quant_unsigned(y, bits: int):
+    """STE fake-quantization to unsigned ``bits``.
+
+    The clip range tracks the batch's 99.5th-percentile activation
+    (stop-gradient), mirroring the chip's model-driven calibration where
+    the requantization shift is chosen so the measured activation
+    distribution fills the next layer's input range."""
+    # mean + 3 sigma ~ p99.7 of the positive tail (percentile ops don't
+    # lower cleanly on this jax/jaxlib build)
+    alpha = jax.lax.stop_gradient(
+        jnp.maximum(jnp.mean(y) + 3.0 * jnp.std(y), 1e-3))
+    q = jnp.clip(y, 0.0, alpha)
+    scale = alpha / (2 ** bits - 1)
+    qq = jnp.round(q / scale) * scale
+    return q + jax.lax.stop_gradient(qq - q)
+
+
+# --------------------------------------------------------------------------
+# Built-in model zoo (paper Table 1, CPU-budget-scaled: see DESIGN.md §6)
+# --------------------------------------------------------------------------
+
+def mnist_cnn7(width: int = 8) -> CnnModel:
+    """7-layer CNN for 28x28 digits: 6 conv + 1 dense (paper MNIST model)."""
+    w1, w2, w3 = width, 2 * width, 4 * width
+    chans = [(1, w1), (w1, w1), (w1, w2), (w2, w2), (w2, w3), (w3, w3)]
+    pools = [1, 2, 1, 2, 1, 2]
+    specs = []
+    for i, ((ci, co), p) in enumerate(zip(chans, pools)):
+        # paper: "3-b unsigned" activations ([0,7]) and a "4-b unsigned"
+        # input image ([0,15]); the chip's bit-serial input scheme is
+        # signed (n-1 magnitude planes), so an n-b-unsigned activation
+        # occupies the positive half of an (n+1)-bit signed input.
+        specs.append(CimLayerSpec(
+            name=f"conv{i + 1}", kind="conv",
+            in_features=9 * ci, out_features=co,
+            input_bits=4 if i else 5, activation="relu",
+            in_channels=ci, out_channels=co, pool=p,
+        ))
+    specs.append(CimLayerSpec(
+        name="fc", kind="dense",
+        in_features=3 * 3 * w3,       # 28 -> 14 -> 7 -> 3 after three pools
+        out_features=10, input_bits=4, activation="none",
+    ))
+    return CnnModel("mnist_cnn7", 28, 1, specs, 10)
+
+
+def cifar_resnet(width: int = 8, blocks_per_stage: int = 3) -> CnnModel:
+    """ResNet-20-shaped CNN for 32x32x3: 1 input conv + 3 stages x
+    blocks_per_stage x 2 convs + dense head = 20 weight layers at the
+    default. Skip connections are folded away -- the chip executes it as a
+    plain conv stack (see DESIGN.md §6 on the CPU-budget variant)."""
+    specs = [CimLayerSpec(
+        name="conv_in", kind="conv", in_features=27, out_features=width,
+        input_bits=5, activation="relu", in_channels=3, out_channels=width)]
+    idx = 1
+    cur = width
+    for stage in range(3):
+        out = width * (2 ** stage)
+        for blk in range(blocks_per_stage):
+            for half in range(2):
+                # downsample (pool) on the first conv of stages 1 and 2
+                pool = 2 if (stage > 0 and blk == 0 and half == 0) else 1
+                specs.append(CimLayerSpec(
+                    name=f"conv{idx}", kind="conv",
+                    in_features=9 * cur, out_features=out,
+                    input_bits=4, activation="relu",
+                    in_channels=cur, out_channels=out, pool=pool))
+                cur = out
+                idx += 1
+    final_hw = 32 // 4  # two pooled downsamples
+    specs.append(CimLayerSpec(
+        name="fc", kind="dense", in_features=final_hw * final_hw * cur,
+        out_features=10, input_bits=4, activation="none"))
+    return CnnModel("cifar_resnet", 32, 3, specs, 10)
+
+
+# --------------------------------------------------------------------------
+# LSTM (paper: 4 parallel cells, Google speech commands)
+# --------------------------------------------------------------------------
+
+@dataclass
+class LstmModel:
+    name: str
+    n_cells: int = 4
+    input_dim: int = 40
+    hidden: int = 64
+    n_classes: int = 12
+    time_steps: int = 50
+    input_bits: int = 4
+    g_max_us: float = G_MAX_RNN_US
+
+    def spec_x(self):
+        return CimLayerSpec(
+            name="wx", kind="dense", in_features=self.input_dim,
+            out_features=4 * self.hidden, input_bits=self.input_bits,
+            activation="none", g_max_us=self.g_max_us)
+
+    def spec_h(self):
+        return CimLayerSpec(
+            name="wh", kind="dense", in_features=self.hidden,
+            out_features=4 * self.hidden, input_bits=self.input_bits,
+            activation="none", g_max_us=self.g_max_us)
+
+    def spec_out(self):
+        return CimLayerSpec(
+            name="wo", kind="dense", in_features=self.hidden,
+            out_features=self.n_classes, input_bits=self.input_bits,
+            activation="none", g_max_us=self.g_max_us)
+
+    def init_params(self, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        ps = []
+        for c in range(self.n_cells):
+            sx = np.sqrt(1.0 / self.input_dim)
+            sh = np.sqrt(1.0 / self.hidden)
+            ps.append({
+                "wx": {"w": rng.normal(0, sx, (self.input_dim, 4 * self.hidden)).astype(np.float32),
+                       "b": np.zeros(4 * self.hidden, np.float32)},
+                "wh": {"w": rng.normal(0, sh, (self.hidden, 4 * self.hidden)).astype(np.float32),
+                       "b": None},
+                "wo": {"w": rng.normal(0, sh, (self.hidden, self.n_classes)).astype(np.float32),
+                       "b": np.zeros(self.n_classes, np.float32)},
+            })
+        return ps
+
+    def map_to_chip(self, params):
+        chip = []
+        for c in range(self.n_cells):
+            cell = {}
+            for key, spec in (("wx", self.spec_x()), ("wh", self.spec_h()),
+                              ("wo", self.spec_out())):
+                in_mag = 2 ** (spec.input_bits - 1) - 1
+                w_aug, nb = augment_with_bias(params[c][key]["w"],
+                                              params[c][key]["b"], in_mag)
+                gp, gn, w_max = layer_conductances(w_aug, spec.g_max_us)
+                cell[key] = {"g_pos": gp, "g_neg": gn, "w_max": w_max,
+                             "n_bias_rows": nb}
+            chip.append(cell)
+        return chip
+
+    def _cell_step(self, cell_chip, x_t, h, c, *, use_pallas):
+        """One LSTM time step in chip mode: two CIM MVMs + digital gates."""
+        gx = cim_linear(x_t, cell_chip["wx"]["g_pos"], cell_chip["wx"]["g_neg"],
+                        self.spec_x(), cell_chip["wx"]["w_max"],
+                        cell_chip["wx"]["n_bias_rows"], use_pallas=use_pallas)
+        gh = cim_linear(h, cell_chip["wh"]["g_pos"], cell_chip["wh"]["g_neg"],
+                        self.spec_h(), cell_chip["wh"]["w_max"],
+                        cell_chip["wh"]["n_bias_rows"], use_pallas=use_pallas)
+        gates = gx + gh
+        hs = self.hidden
+        i = jax.nn.sigmoid(gates[:, 0:hs])
+        f = jax.nn.sigmoid(gates[:, hs:2 * hs])
+        g = jnp.tanh(gates[:, 2 * hs:3 * hs])
+        o = jax.nn.sigmoid(gates[:, 3 * hs:4 * hs])
+        c_new = f * c + i * g
+        h_new = o * jnp.tanh(c_new)
+        return h_new, c_new
+
+    def chip_forward(self, x_seq, chip_params, *, use_pallas=True):
+        """x_seq: [B, T, input_dim] integer MFCC features (4-bit signed).
+        Returns logits [B, n_classes] = sum over the parallel cells."""
+        bsz = x_seq.shape[0]
+        m = 2 ** (self.input_bits - 1) - 1
+        logits = jnp.zeros((bsz, self.n_classes), jnp.float32)
+        for cchip in chip_params:
+            h = jnp.zeros((bsz, self.hidden), jnp.float32)
+            c = jnp.zeros((bsz, self.hidden), jnp.float32)
+            for t in range(self.time_steps):
+                hq = jnp.clip(jnp.round(h * m), -m, m)   # 4-bit hidden state
+                h, c = self._cell_step(cchip, x_seq[:, t, :], hq, c,
+                                       use_pallas=use_pallas)
+            hq = jnp.clip(jnp.round(h * m), -m, m)
+            y = cim_linear(hq, cchip["wo"]["g_pos"], cchip["wo"]["g_neg"],
+                           self.spec_out(), cchip["wo"]["w_max"],
+                           cchip["wo"]["n_bias_rows"], use_pallas=use_pallas)
+            logits = logits + y
+        return logits
+
+    def train_forward(self, x_seq, params, *, noise_frac=0.0, rng=None):
+        """Float forward with weight-noise injection (training oracle)."""
+        bsz = x_seq.shape[0]
+        logits = jnp.zeros((bsz, self.n_classes), jnp.float32)
+        for cp in params:
+            wx, bx = cp["wx"]["w"], cp["wx"]["b"]
+            wh = cp["wh"]["w"]
+            wo, bo = cp["wo"]["w"], cp["wo"]["b"]
+            if noise_frac > 0.0 and rng is not None:
+                rng, k1, k2, k3 = jax.random.split(rng, 4)
+                wx = wx + jax.random.normal(k1, wx.shape) * noise_frac * jnp.max(jnp.abs(wx))
+                wh = wh + jax.random.normal(k2, wh.shape) * noise_frac * jnp.max(jnp.abs(wh))
+                wo = wo + jax.random.normal(k3, wo.shape) * noise_frac * jnp.max(jnp.abs(wo))
+            h = jnp.zeros((bsz, self.hidden), jnp.float32)
+            c = jnp.zeros((bsz, self.hidden), jnp.float32)
+            hs = self.hidden
+            for t in range(self.time_steps):
+                gates = x_seq[:, t, :] @ wx + bx + h @ wh
+                i = jax.nn.sigmoid(gates[:, 0:hs])
+                f = jax.nn.sigmoid(gates[:, hs:2 * hs])
+                g = jnp.tanh(gates[:, 2 * hs:3 * hs])
+                o = jax.nn.sigmoid(gates[:, 3 * hs:4 * hs])
+                c = f * c + i * g
+                h = o * jnp.tanh(c)
+            logits = logits + h @ wo + bo
+        return logits
+
+
+def speech_lstm(hidden: int = 64, n_cells: int = 4) -> LstmModel:
+    return LstmModel("speech_lstm", n_cells=n_cells, hidden=hidden)
+
+
+# --------------------------------------------------------------------------
+# RBM (paper: 794 visible x 120 hidden, Gibbs sampling image recovery)
+# --------------------------------------------------------------------------
+
+@dataclass
+class RbmModel:
+    name: str = "image_rbm"
+    n_visible: int = 794      # 784 pixels + 10 one-hot labels
+    n_hidden: int = 120
+    g_max_us: float = G_MAX_RNN_US
+
+    def init_params(self, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        return {
+            "w": rng.normal(0, 0.05, (self.n_visible, self.n_hidden)).astype(np.float32),
+            "a": np.zeros(self.n_visible, np.float32),   # visible bias
+            "b": np.zeros(self.n_hidden, np.float32),    # hidden bias
+        }
+
+    def map_to_chip(self, params):
+        gp, gn, w_max = layer_conductances(params["w"], self.g_max_us)
+        return {"g_pos": gp, "g_neg": gn, "w_max": w_max,
+                "a": np.asarray(params["a"]), "b": np.asarray(params["b"])}
+
+    def gibbs_step(self, v, chip, key, *, use_pallas=True, beta=8.0):
+        """One v->h->v Gibbs cycle using bidirectional MVM (TNSA forward +
+        backward pass on the same conductance array).
+
+        The stochastic neuron samples with LFSR noise: on-chip the noise is
+        injected into the integrator; here the logistic sampling is done by
+        comparing the sigmoid argument against logistic noise.
+        """
+        spec_f = CimLayerSpec(name="rbm_f", kind="dense",
+                              in_features=self.n_visible,
+                              out_features=self.n_hidden, input_bits=2,
+                              activation="none", g_max_us=self.g_max_us)
+        spec_b = CimLayerSpec(name="rbm_b", kind="dense",
+                              in_features=self.n_hidden,
+                              out_features=self.n_visible, input_bits=2,
+                              activation="none", g_max_us=self.g_max_us)
+        k1, k2 = jax.random.split(key)
+        # forward: SL->BL direction
+        act_h = cim_linear(v, chip["g_pos"], chip["g_neg"], spec_f,
+                           chip["w_max"], 0, use_pallas=use_pallas)
+        p_h = jax.nn.sigmoid(beta * (act_h + chip["b"]))
+        h = (jax.random.uniform(k1, p_h.shape) < p_h).astype(jnp.float32)
+        # backward: BL->SL direction, transposed conductances
+        act_v = cim_linear(h, chip["g_pos"].T, chip["g_neg"].T, spec_b,
+                           chip["w_max"], 0, use_pallas=use_pallas)
+        p_v = jax.nn.sigmoid(beta * (act_v + chip["a"]))
+        v_new = (jax.random.uniform(k2, p_v.shape) < p_v).astype(jnp.float32)
+        return v_new, h
+
+    def recover(self, v0, known_mask, chip, key, n_cycles: int = 10,
+                *, use_pallas=True):
+        """Paper's image-recovery procedure: Gibbs cycles, resetting the
+        uncorrupted (known) pixels after each cycle."""
+        v = v0
+        for _ in range(n_cycles):
+            key, sub = jax.random.split(key)
+            v, _ = self.gibbs_step(v, chip, sub, use_pallas=use_pallas)
+            v = jnp.where(known_mask > 0, v0, v)
+        return v

@@ -1,0 +1,178 @@
+"""Chip-in-the-loop progressive fine-tuning (paper Fig. 3d/3f, ED Fig. 7a).
+
+Weights are programmed onto the (simulated) chip one layer at a time.
+After programming layer n, the *measured* outputs of layers 1..n on the
+training set become the inputs used to fine-tune the still-in-software
+layers n+1..N.  Non-linear hardware errors (IR drop, ADC clipping,
+relaxation) of programmed layers are thereby compensated by the remaining
+layers' universal-approximation capacity -- no weight reprogramming.
+
+Test-set data is never used for training or checkpoint selection.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import model as M
+from . import noise_train as NT
+
+
+def chip_layer_forward(mdl, spec_idx, chip_layer, shifts, x, *, ir_alpha):
+    """Measured (chip-mode) execution of one layer on integer inputs."""
+    s = mdl.specs[spec_idx]
+    last = spec_idx == len(mdl.specs) - 1
+    next_bits = mdl.specs[spec_idx + 1].input_bits if not last else 4
+    p = chip_layer
+    if s.kind == "conv":
+        cols = M.im2col(x, s.kh, s.kw, s.stride, s.padding)
+        b, ho, wo, r = cols.shape
+        y = M.cim_linear(cols.reshape(b * ho * wo, r), p["g_pos"], p["g_neg"],
+                         s, p["w_max"], p["n_bias_rows"], use_pallas=False,
+                         ir_alpha=ir_alpha)
+        y = y.reshape(b, ho, wo, s.out_features)
+        y = M.maxpool2(y, s.pool)
+        return M.requantize(y, shifts[s.name], next_bits - 1, signed=False)
+    y = M.cim_linear(x.reshape(x.shape[0], -1), p["g_pos"], p["g_neg"], s,
+                     p["w_max"], p["n_bias_rows"], use_pallas=False,
+                     ir_alpha=ir_alpha)
+    if last:
+        return y
+    return M.requantize(y, shifts[s.name], next_bits - 1, signed=False)
+
+
+def float_suffix(mdl, params, feats, from_idx, *, noise_frac=0.0, rng=None,
+                 act_bits=3):
+    """Software forward of layers from_idx..N on chip-measured features.
+
+    Chip features are integers in [0, 2^bits-1]; rescale to the float
+    model's activation range (PACT alpha = 6.0) so representations line up.
+    """
+    x = jnp.asarray(feats, jnp.float32)
+    if from_idx < len(mdl.specs):
+        bits = mdl.specs[from_idx].input_bits
+        x = x * (6.0 / (2 ** (bits - 1) - 1))
+    for i in range(from_idx, len(mdl.specs)):
+        s = mdl.specs[i]
+        w = params[s.name]["w"]
+        bta = params[s.name]["b"]
+        if noise_frac > 0.0 and rng is not None:
+            rng, sub = jax.random.split(rng)
+            w = w + jax.random.normal(sub, w.shape) * \
+                (noise_frac * jnp.max(jnp.abs(w)))
+        last = i == len(mdl.specs) - 1
+        if s.kind == "conv":
+            cols = M.im2col(x, s.kh, s.kw, s.stride, s.padding)
+            y = cols @ w.reshape(s.in_features, s.out_features) + bta
+            y = M.maxpool2(jnp.maximum(y, 0.0), s.pool)
+            x = M.fake_quant_unsigned(y, act_bits)
+        else:
+            y = x.reshape(x.shape[0], -1) @ w + bta
+            if last:
+                return y
+            x = M.fake_quant_unsigned(jnp.maximum(y, 0.0), act_bits)
+    return x
+
+
+def hybrid_accuracy(mdl, params, chip_params, shifts, programmed_upto,
+                    x_int, y, *, ir_alpha, batch=64):
+    """Accuracy with layers < programmed_upto measured on chip and the
+    rest in software (Fig. 3f evaluation protocol)."""
+    correct = 0
+    for i in range(0, x_int.shape[0], batch):
+        feats = jnp.asarray(x_int[i:i + batch], jnp.float32)
+        for li in range(programmed_upto):
+            feats = chip_layer_forward(mdl, li, chip_params[mdl.specs[li].name],
+                                       shifts, feats, ir_alpha=ir_alpha)
+        logits = float_suffix(mdl, params, feats, programmed_upto) \
+            if programmed_upto < len(mdl.specs) else feats
+        correct += int(jnp.sum(jnp.argmax(logits, 1) == y[i:i + batch]))
+    return correct / x_int.shape[0]
+
+
+def finetune_suffix(mdl, params, feats, labels, from_idx, *, epochs=3,
+                    batch=32, lr=1e-4, noise_frac=0.1, seed=0):
+    """Fine-tune layers from_idx..N on chip-measured features."""
+    key = jax.random.PRNGKey(seed)
+    opt = NT.adam_init(params)
+    n = feats.shape[0]
+    feats = jnp.asarray(feats)
+    labels = jnp.asarray(labels)
+
+    def loss_fn(p, xb, yb, k):
+        logits = float_suffix(mdl, p, xb, from_idx, noise_frac=noise_frac,
+                              rng=k)
+        return NT.cross_entropy(logits, yb)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        for s in range(max(1, n // batch)):
+            idx = perm[s * batch:(s + 1) * batch]
+            key, sub = jax.random.split(key)
+            _, grads = grad_fn(params, feats[idx], labels[idx], sub)
+            # freeze programmed layers: zero their grads
+            for li in range(from_idx):
+                name = mdl.specs[li].name
+                grads[name] = jax.tree_util.tree_map(
+                    lambda g: jnp.zeros_like(g) if g is not None else None,
+                    grads[name])
+            params, opt = NT.adam_step(params, grads, opt, lr=lr)
+    return params
+
+
+def progressive_finetune(mdl, params0, x_train, y_train, x_test, y_test, *,
+                         relax_sigma=2.0, ir_alpha=0.3, epochs=2, lr=1e-4,
+                         noise_frac=0.1, seed=0, log=print):
+    """Full Fig. 3f experiment.
+
+    Returns (acc_with_ft, acc_without_ft): test accuracy after each layer
+    is programmed, with and without fine-tuning the remaining layers.
+    """
+    n_layers = len(mdl.specs)
+    m_in = 2 ** (mdl.specs[0].input_bits) - 1
+
+    # Two parameter tracks evolve: fine-tuned vs frozen baseline.
+    params_ft = jax.tree_util.tree_map(
+        lambda p: jnp.array(p) if p is not None else None, params0)
+    params_fz = params_ft
+
+    def program(params, seed_off):
+        chip = mdl.map_to_chip(
+            jax.tree_util.tree_map(
+                lambda p: np.asarray(p) if p is not None else None, params))
+        chip = NT.apply_relaxation(chip, sigma_us=relax_sigma,
+                                   seed=seed + seed_off)
+        return chip
+
+    acc_ft, acc_fz = [], []
+    chip_ft = {}
+    chip_fz = program(params_fz, 0)
+    shifts_fz = NT.calibrate_shifts(mdl, chip_fz, x_train[:64])
+    feats = jnp.asarray(x_train, jnp.float32)
+
+    for li in range(n_layers):
+        name = mdl.specs[li].name
+        # Program layer li using the *current* fine-tuned weights.
+        chip_li = program(params_ft, 100 + li)[name]
+        chip_ft[name] = chip_li
+        shifts_ft = NT.calibrate_shifts(mdl, {**chip_fz, **chip_ft},
+                                        x_train[:64])
+        # Measure training-set features through the newly programmed layer.
+        feats = chip_layer_forward(mdl, li, chip_li, shifts_ft, feats,
+                                   ir_alpha=ir_alpha)
+        # Fine-tune the remaining software layers on measured features.
+        if li + 1 < n_layers:
+            params_ft = finetune_suffix(mdl, params_ft, feats, y_train,
+                                        li + 1, epochs=epochs, lr=lr,
+                                        noise_frac=noise_frac, seed=seed + li)
+        a_ft = hybrid_accuracy(mdl, params_ft, chip_ft, shifts_ft, li + 1,
+                               x_test, y_test, ir_alpha=ir_alpha)
+        a_fz = hybrid_accuracy(mdl, params_fz, chip_fz, shifts_fz, li + 1,
+                               x_test, y_test, ir_alpha=ir_alpha)
+        acc_ft.append(a_ft)
+        acc_fz.append(a_fz)
+        log(f"  layer {li + 1}/{n_layers} ({name}): "
+            f"finetuned {a_ft:.4f} vs frozen {a_fz:.4f}")
+    return acc_ft, acc_fz

@@ -1,0 +1,77 @@
+"""Run the chip-in-the-loop progressive fine-tuning experiment (Fig. 3f)
+and write the accuracy trajectories to artifacts/cil_results.json for the
+rust bench `fig3f_cil` to tabulate.
+
+    python -m compile.train.cil_run [--train N] [--test N] [--epochs E]
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from .. import data as D
+from .. import model as M
+from . import cil
+from . import noise_train as NT
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--train", type=int, default=600)
+    ap.add_argument("--test", type=int, default=300)
+    ap.add_argument("--epochs", type=int, default=2,
+                    help="fine-tune epochs per programmed layer")
+    ap.add_argument("--base-epochs", type=int, default=8)
+    ap.add_argument("--noise", type=float, default=0.15)
+    ap.add_argument("--ir-alpha", type=float, default=0.6)
+    ap.add_argument("--relax-sigma", type=float, default=3.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts/cil_results.json")
+    args = ap.parse_args()
+
+    mdl = M.mnist_cnn7(width=8)
+    x, y = D.load_or_generate("digits28", args.train, seed=args.seed)
+    xt, yt = D.load_or_generate("digits28", args.test, seed=args.seed + 1)
+    print(f"[cil] training baseline on {args.train} digits...")
+    params, _ = NT.train_classifier(mdl, x, y, noise_frac=args.noise,
+                                    epochs=args.base_epochs, lr=3e-3,
+                                    seed=args.seed, log_every=2)
+    base_acc = NT.eval_float(mdl, params, xt, yt)
+    print(f"[cil] software float accuracy: {base_acc:.4f}")
+
+    in_bits = mdl.specs[0].input_bits - 1
+    xq = D.quantize_unsigned(x, in_bits)
+    xtq = D.quantize_unsigned(xt, in_bits)
+
+    print(f"[cil] progressive fine-tuning (ir_alpha={args.ir_alpha}, "
+          f"relax={args.relax_sigma} uS)...")
+    acc_ft, acc_fz = cil.progressive_finetune(
+        mdl, params, xq, np.asarray(y), xtq, np.asarray(yt),
+        relax_sigma=args.relax_sigma, ir_alpha=args.ir_alpha,
+        epochs=args.epochs, noise_frac=args.noise, seed=args.seed)
+
+    result = {
+        "model": mdl.name,
+        "layers": [s.name for s in mdl.specs],
+        "software_float_acc": base_acc,
+        "acc_with_finetune": acc_ft,
+        "acc_without_finetune": acc_fz,
+        "final_gain": acc_ft[-1] - acc_fz[-1],
+        "params": {
+            "train": args.train, "test": args.test,
+            "ft_epochs": args.epochs, "noise": args.noise,
+            "ir_alpha": args.ir_alpha, "relax_sigma": args.relax_sigma,
+        },
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"[cil] final: with-ft {acc_ft[-1]:.4f} vs frozen {acc_fz[-1]:.4f} "
+          f"(gain {result['final_gain'] * 100:+.2f}%)")
+    print(f"[cil] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,256 @@
+"""Noise-resilient NN training (paper Fig. 3c, Extended Data Fig. 6).
+
+Instead of training with quantized weights, train with high-precision
+floats while injecting noise whose distribution matches RRAM conductance
+relaxation (Gaussian with sigma ~= 10% of each layer's w_max).  Training
+at a *higher* noise than inference improves resilience (ED Fig. 6a-b);
+RBMs do best at the highest injection level (ED Fig. 6c).
+
+Everything here is build-time only.  Hand-rolled Adam -- optax is not in
+this image.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import model as M
+
+
+# --------------------------------------------------------------------------
+# Hand-rolled Adam over nested dict/list pytrees
+# --------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                               state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda x: x / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda x: x / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr * mm / (jnp.sqrt(vv) + eps),
+        params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+# --------------------------------------------------------------------------
+# Classifier training (CNN / LSTM) with weight-noise injection
+# --------------------------------------------------------------------------
+
+def _to_jnp(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.asarray(p) if p is not None else None, params)
+
+
+def train_classifier(mdl, x, y, *, noise_frac=0.1, epochs=4, batch=32,
+                     lr=1e-3, seed=0, log_every=0, warmup_frac=0.4):
+    """Train ``mdl`` (CnnModel or LstmModel) with noise-injected forward
+    passes.  Noise injection is warmed up: the first ``warmup_frac`` of
+    epochs train clean so the network first finds a solution, then noise
+    hardens it (at CPU-budget model scale, 10-15% weight noise from step
+    zero swamps the early gradient signal).  Returns (params, history)."""
+    params = _to_jnp(mdl.init_params(seed))
+    opt = adam_init(params)
+    key = jax.random.PRNGKey(seed)
+    n = x.shape[0]
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+
+    def loss_fn(p, xb, yb, k, nf):
+        logits = mdl.train_forward(xb, p, noise_frac=nf, rng=k)
+        return cross_entropy(logits, yb)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn),
+                      static_argnames=("nf",))
+    history = []
+    steps_per_epoch = max(1, n // batch)
+    rng = np.random.default_rng(seed)
+    warmup = int(epochs * warmup_frac)
+    for ep in range(epochs):
+        nf = 0.0 if ep < warmup else noise_frac
+        perm = rng.permutation(n)
+        ep_loss = 0.0
+        for s in range(steps_per_epoch):
+            idx = perm[s * batch:(s + 1) * batch]
+            key, sub = jax.random.split(key)
+            loss, grads = grad_fn(params, x[idx], y[idx], sub, nf)
+            params, opt = adam_step(params, grads, opt, lr=lr)
+            ep_loss += float(loss)
+        history.append(ep_loss / steps_per_epoch)
+        if log_every and (ep % log_every == 0):
+            print(f"  epoch {ep}: loss {history[-1]:.4f} (noise {nf})")
+    return params, history
+
+
+def eval_float(mdl, params, x, y, batch=64):
+    """Noise-free float accuracy (the paper's software baseline)."""
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        logits = mdl.train_forward(jnp.asarray(x[i:i + batch]), params)
+        correct += int(jnp.sum(jnp.argmax(logits, 1) == y[i:i + batch]))
+    return correct / x.shape[0]
+
+
+def eval_noisy(mdl, params, x, y, noise_frac, seed=0, batch=64):
+    """Accuracy with inference-time weight noise (ED Fig. 6 x-axis)."""
+    key = jax.random.PRNGKey(seed + 999)
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        key, sub = jax.random.split(key)
+        logits = mdl.train_forward(jnp.asarray(x[i:i + batch]), params,
+                                   noise_frac=noise_frac, rng=sub)
+        correct += int(jnp.sum(jnp.argmax(logits, 1) == y[i:i + batch]))
+    return correct / x.shape[0]
+
+
+# --------------------------------------------------------------------------
+# Model-driven calibration (paper Fig. 3b): choose per-layer requant shifts
+# --------------------------------------------------------------------------
+
+def calibrate_shifts(mdl, chip_params, x_sample, pctile=99.0):
+    """Run training-set data through the chip-mode network layer by layer
+    and pick each layer's requantization shift so the given percentile of
+    the pre-activation lands at the top of the next layer's input range.
+
+    This is the paper's "model-driven chip calibration": using data that
+    matches the test-time distribution is essential (ED Fig. 5).
+    """
+    shifts = {}
+    x = jnp.asarray(x_sample, jnp.float32)
+    for i, s in enumerate(mdl.specs):
+        p = chip_params[s.name]
+        last = i == len(mdl.specs) - 1
+        next_bits = mdl.specs[i + 1].input_bits if not last else 4
+        if s.kind == "conv":
+            cols = M.im2col(x, s.kh, s.kw, s.stride, s.padding)
+            b, ho, wo, r = cols.shape
+            y = M.cim_linear(cols.reshape(b * ho * wo, r), p["g_pos"],
+                             p["g_neg"], s, p["w_max"], p["n_bias_rows"],
+                             use_pallas=False)
+            y = y.reshape(b, ho, wo, s.out_features)
+            y = M.maxpool2(y, s.pool)
+        else:
+            y = M.cim_linear(x.reshape(x.shape[0], -1), p["g_pos"],
+                             p["g_neg"], s, p["w_max"], p["n_bias_rows"],
+                             use_pallas=False)
+            if last:
+                shifts[s.name] = 0.0
+                break
+        top = float(np.percentile(np.asarray(jnp.maximum(y, 0.0)), pctile))
+        q_max = 2 ** (next_bits - 1) - 1   # unsigned act in signed range
+        shift = max(0.0, float(np.ceil(np.log2(max(top, 1e-6) / q_max))))
+        shifts[s.name] = shift
+        x = M.requantize(y, shift, next_bits - 1, signed=False)
+    return shifts
+
+
+def eval_chip(mdl, chip_params, shifts, x, y, batch=32, ir_alpha=0.0,
+              use_pallas=False):
+    """Chip-mode (integer pipeline) accuracy."""
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        logits = mdl.chip_forward(jnp.asarray(x[i:i + batch]), chip_params,
+                                  shifts, use_pallas=use_pallas,
+                                  ir_alpha=ir_alpha)
+        correct += int(jnp.sum(jnp.argmax(logits, 1) == y[i:i + batch]))
+    return correct / x.shape[0]
+
+
+# --------------------------------------------------------------------------
+# Programming noise (device relaxation) applied to chip params
+# --------------------------------------------------------------------------
+
+def apply_relaxation(chip_params, sigma_us=2.0, seed=0, g_min=1.0,
+                     g_max=41.0):
+    """Gaussian conductance relaxation on every programmed cell (paper ED
+    Fig. 3d; sigma ~2 uS after 3 write-verify iterations).  Mirrors
+    rust/src/device/rram.rs::relax()."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    items = chip_params.items() if isinstance(chip_params, dict) else \
+        enumerate(chip_params)
+    for k, p in items:
+        if isinstance(p, dict) and "g_pos" in p:
+            q = dict(p)
+            for g in ("g_pos", "g_neg"):
+                noisy = np.asarray(p[g]) + rng.normal(0, sigma_us,
+                                                      np.shape(p[g]))
+                q[g] = np.clip(noisy, g_min, g_max).astype(np.float32)
+            out[k] = q
+        elif isinstance(p, dict):
+            out[k] = apply_relaxation(p, sigma_us, seed + 1, g_min, g_max)
+        else:
+            out[k] = p
+    if isinstance(chip_params, list):
+        return [out[i] for i in range(len(out))]
+    return out
+
+
+# --------------------------------------------------------------------------
+# RBM training: contrastive divergence (CD-1)
+# --------------------------------------------------------------------------
+
+def train_rbm(rbm, v_data, *, epochs=12, batch=32, lr=0.05, seed=0,
+              noise_frac=0.0, log_every=0):
+    """CD-1 with optional weight-noise injection on the positive phase
+    (ED Fig. 6c: RBMs benefit from high injection levels)."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    p = rbm.init_params(seed)
+    w = jnp.asarray(p["w"])
+    a = jnp.asarray(p["a"])
+    b = jnp.asarray(p["b"])
+    n = v_data.shape[0]
+    v_data = jnp.asarray(v_data, jnp.float32)
+
+    @jax.jit
+    def cd1(w, a, b, v0, k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        ph0 = jax.nn.sigmoid(v0 @ w + b)
+        h0 = (jax.random.uniform(k1, ph0.shape) < ph0).astype(jnp.float32)
+        pv1 = jax.nn.sigmoid(h0 @ w.T + a)
+        v1 = (jax.random.uniform(k2, pv1.shape) < pv1).astype(jnp.float32)
+        ph1 = jax.nn.sigmoid(v1 @ w + b)
+        bsz = v0.shape[0]
+        dw = (v0.T @ ph0 - v1.T @ ph1) / bsz
+        da = jnp.mean(v0 - v1, axis=0)
+        db = jnp.mean(ph0 - ph1, axis=0)
+        return dw, da, db
+
+    history = []
+    for ep in range(epochs):
+        perm = rng.permutation(n)
+        err = 0.0
+        for s in range(max(1, n // batch)):
+            idx = perm[s * batch:(s + 1) * batch]
+            key, sub, nz = jax.random.split(key, 3)
+            w_eff = w
+            if noise_frac > 0.0:
+                w_eff = w + jax.random.normal(nz, w.shape) * \
+                    (noise_frac * jnp.max(jnp.abs(w)))
+            dw, da, db = cd1(w_eff, a, b, v_data[idx], sub)
+            w = w + lr * dw
+            a = a + lr * da
+            b = b + lr * db
+        # epoch reconstruction error on a slice
+        ph = jax.nn.sigmoid(v_data[:256] @ w + b)
+        pv = jax.nn.sigmoid(ph @ w.T + a)
+        err = float(jnp.mean((pv - v_data[:256]) ** 2))
+        history.append(err)
+        if log_every and ep % log_every == 0:
+            print(f"  rbm epoch {ep}: recon mse {err:.4f}")
+    return {"w": np.asarray(w), "a": np.asarray(a), "b": np.asarray(b)}, \
+        history

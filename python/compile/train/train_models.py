@@ -1,0 +1,158 @@
+"""Build-time model training + weight export.
+
+Trains the paper's four models (CPU-budget-scaled) with noise-resilient
+training and exports npz weight files the rust coordinator loads:
+
+    python -m compile.train.train_models --model mnist --out ../artifacts
+
+npz layout (matches rust models/loader.rs): `<layer>.w` [in, out],
+`<layer>.b` [out]; LSTM cells prefixed `cell<i>.`; RBM keys `rbm.w`,
+`rbm.a`, `rbm.b`.
+"""
+
+import argparse
+import os
+
+import numpy as np
+
+from .. import data as D
+from .. import model as M
+from . import noise_train as NT
+
+
+def export_npz(path, tensors):
+    np.savez(path, **{k: np.asarray(v, np.float32) for k, v in tensors.items()})
+    print(f"  wrote {path} ({len(tensors)} arrays)")
+
+
+def train_mnist(out_dir, *, n_train=3000, epochs=10, noise_frac=0.1,
+                width=8, seed=0):
+    mdl = M.mnist_cnn7(width=width)
+    x, y = D.load_or_generate("digits28", n_train, seed=seed)
+    print(f"[mnist] training {mdl.name} on {n_train} digits...")
+    params, hist = NT.train_classifier(mdl, x, y, noise_frac=noise_frac,
+                                       epochs=epochs, lr=3e-3, seed=seed,
+                                       log_every=1)
+    xt, yt = D.load_or_generate("digits28", 500, seed=seed + 1)
+    acc = NT.eval_float(mdl, params, xt, yt)
+    print(f"[mnist] float accuracy: {acc:.4f}; final loss {hist[-1]:.4f}")
+    tensors = {}
+    for s in mdl.specs:
+        tensors[f"{s.name}.w"] = params[s.name]["w"]
+        tensors[f"{s.name}.b"] = params[s.name]["b"]
+    export_npz(os.path.join(out_dir, "mnist_weights.npz"), tensors)
+    return acc
+
+
+def train_lstm(out_dir, *, n_train=1200, epochs=6, noise_frac=0.1,
+               hidden=64, n_cells=4, seed=0):
+    mdl = M.speech_lstm(hidden=hidden, n_cells=n_cells)
+    x, y = D.load_or_generate("mfcc_cmds", n_train, seed=seed)
+    xq = D.quantize_signed(x, 4) / 7.0  # train on the quantized grid
+    print(f"[lstm] training {n_cells}-cell LSTM on {n_train} series...")
+    params, hist = NT.train_classifier(mdl, xq, y, noise_frac=noise_frac,
+                                       epochs=epochs, lr=3e-3, seed=seed,
+                                       log_every=1)
+    xt, yt = D.load_or_generate("mfcc_cmds", 400, seed=seed + 1)
+    acc = NT.eval_float(mdl, params, D.quantize_signed(xt, 4) / 7.0, yt)
+    print(f"[lstm] float accuracy: {acc:.4f}")
+    tensors = {}
+    for c in range(n_cells):
+        tensors[f"cell{c}.wx.w"] = params[c]["wx"]["w"]
+        tensors[f"cell{c}.wx.b"] = params[c]["wx"]["b"]
+        tensors[f"cell{c}.wh.w"] = params[c]["wh"]["w"]
+        tensors[f"cell{c}.wo.w"] = params[c]["wo"]["w"]
+        tensors[f"cell{c}.wo.b"] = params[c]["wo"]["b"]
+    export_npz(os.path.join(out_dir, "lstm_weights.npz"), tensors)
+    return acc
+
+
+def train_rbm(out_dir, *, n_train=2000, epochs=15, noise_frac=0.25, seed=0):
+    rbm = M.RbmModel()
+    imgs, labels = D.load_or_generate("digits28", n_train, seed=seed)
+    v = (imgs.reshape(n_train, 784) > 0.5).astype(np.float32)
+    onehot = np.eye(10, dtype=np.float32)[labels]
+    v = np.concatenate([v, onehot], axis=1)  # 794 visible units
+    print(f"[rbm] CD-1 training on {n_train} binarized digits...")
+    params, hist = NT.train_rbm(rbm, v, epochs=epochs,
+                                noise_frac=noise_frac, seed=seed, log_every=3)
+    print(f"[rbm] final recon mse: {hist[-1]:.4f}")
+    export_npz(os.path.join(out_dir, "rbm_weights.npz"),
+               {"rbm.w": params["w"], "rbm.a": params["a"],
+                "rbm.b": params["b"]})
+    return hist[-1]
+
+
+def train_cifar(out_dir, *, n_train=1500, epochs=8, noise_frac=0.1,
+                width=8, blocks=1, seed=0):
+    mdl = M.cifar_resnet(width=width, blocks_per_stage=blocks)
+    x, y = D.load_or_generate("textures32", n_train, seed=seed)
+    print(f"[cifar] training {len(mdl.specs)}-layer resnet on {n_train} "
+          f"textures...")
+    params, hist = NT.train_classifier(mdl, x, y, noise_frac=noise_frac,
+                                       epochs=epochs, seed=seed, log_every=1)
+    xt, yt = D.load_or_generate("textures32", 400, seed=seed + 1)
+    acc = NT.eval_float(mdl, params, xt, yt)
+    print(f"[cifar] float accuracy: {acc:.4f}")
+    tensors = {}
+    for s in mdl.specs:
+        tensors[f"{s.name}.w"] = params[s.name]["w"]
+        tensors[f"{s.name}.b"] = params[s.name]["b"]
+    export_npz(os.path.join(out_dir, "cifar_weights.npz"), tensors)
+    return acc
+
+
+def train_mnist_noise_sweep(out_dir, *, n_train=2000, epochs=8,
+                            levels=(0.0, 0.1, 0.2, 0.3), seed=0):
+    """ED Fig. 6 models: one export per training-noise level.
+
+    Writes mnist_weights_n{00,10,20,30}.npz plus mnist_weights_nonoise.npz
+    (alias of the 0.0 level, used by the Fig. 3e ablation bench)."""
+    mdl = M.mnist_cnn7(width=8)
+    x, y = D.load_or_generate("digits28", n_train, seed=seed)
+    xt, yt = D.load_or_generate("digits28", 400, seed=seed + 1)
+    for nf in levels:
+        print(f"[sweep] training at noise {nf:.2f}...")
+        params, _ = NT.train_classifier(mdl, x, y, noise_frac=nf,
+                                        epochs=epochs, lr=3e-3, seed=seed)
+        acc = NT.eval_float(mdl, params, xt, yt)
+        print(f"[sweep] noise {nf:.2f}: float acc {acc:.4f}")
+        tensors = {}
+        for s in mdl.specs:
+            tensors[f"{s.name}.w"] = params[s.name]["w"]
+            tensors[f"{s.name}.b"] = params[s.name]["b"]
+        tag = f"n{int(round(nf * 100)):02d}"
+        export_npz(os.path.join(out_dir, f"mnist_weights_{tag}.npz"), tensors)
+        if nf == 0.0:
+            export_npz(os.path.join(out_dir, "mnist_weights_nonoise.npz"),
+                       tensors)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="mnist",
+                    choices=["mnist", "lstm", "rbm", "cifar", "all",
+                             "noise-sweep"])
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=0, help="0 = default")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    kw = {"seed": args.seed}
+    if args.epochs:
+        kw["epochs"] = args.epochs
+    if args.model in ("mnist", "all"):
+        train_mnist(args.out, **kw)
+    if args.model in ("lstm", "all"):
+        train_lstm(args.out, **kw)
+    if args.model in ("rbm", "all"):
+        train_rbm(args.out, **kw)
+    if args.model in ("cifar", "all"):
+        train_cifar(args.out, **kw)
+    if args.model == "noise-sweep":
+        train_mnist_noise_sweep(args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Dataset substrate tests (mirrored by rust io/datasets.rs tests)."""
+
+import numpy as np
+
+from compile import data as D
+
+
+def test_digits_shapes_and_range():
+    x, y = D.digits28(30, seed=1)
+    assert x.shape == (30, 28, 28, 1)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert set(np.unique(y)).issubset(set(range(10)))
+    # images carry ink
+    assert x.sum(axis=(1, 2, 3)).min() > 5.0
+
+
+def test_digits_class_coverage_and_determinism():
+    x1, y1 = D.digits28(200, seed=2)
+    x2, y2 = D.digits28(200, seed=2)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert len(np.unique(y1)) == 10
+
+
+def test_textures_classes_distinct():
+    x, y = D.textures32(40, seed=3, noise=0.0)
+    assert x.shape == (40, 32, 32, 3)
+    # mean image per class differs
+    means = {}
+    for c in np.unique(y):
+        means[c] = x[y == c].mean(axis=0)
+    classes = sorted(means)
+    if len(classes) >= 2:
+        d = np.abs(means[classes[0]] - means[classes[1]]).sum()
+        assert d > 1.0
+
+
+def test_mfcc_shapes_and_normalization():
+    x, y = D.mfcc_cmds(50, seed=4)
+    assert x.shape == (50, 50, 40)
+    assert abs(float(x.mean())) < 0.05
+    assert abs(float(x.std()) - 1.0) < 0.05
+    assert set(np.unique(y)).issubset(set(range(12)))
+
+
+def test_quantizers():
+    x = np.array([0.0, 0.5, 1.0], np.float32)
+    q = D.quantize_unsigned(x, 3)
+    assert q.tolist() == [0.0, 4.0, 7.0]
+    z = np.random.default_rng(0).normal(size=1000).astype(np.float32)
+    qs = D.quantize_signed(z, 4)
+    assert qs.max() <= 7 and qs.min() >= -7
+    assert len(np.unique(qs)) > 5
+
+
+def test_load_or_generate_fallback(tmp_path):
+    x, y = D.load_or_generate("digits28", 10, seed=5,
+                              data_dir=str(tmp_path))
+    assert x.shape[0] == 10
+    # with a file present, the file wins
+    np.savez(tmp_path / "digits28.npz",
+             x=np.zeros((4, 28, 28, 1), np.float32),
+             y=np.arange(4))
+    x2, y2 = D.load_or_generate("digits28", 3, seed=5,
+                                data_dir=str(tmp_path))
+    assert x2.shape == (3, 28, 28, 1)
+    assert x2.sum() == 0.0

@@ -1,0 +1,206 @@
+"""L1 correctness: Pallas CIM-MVM kernel vs the pure-jnp oracle.
+
+The Pallas kernel must be *bit-exact* against ``ref.py`` across shapes,
+bit-precisions and activation functions -- it is the same arithmetic
+expressed as the chip's weight-stationary bit-serial schedule.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.cimcfg import CimConfig
+from compile.kernels import mvm, ref
+
+RNG = np.random.default_rng(1234)
+
+
+def make_case(rows, cols, batch, input_bits, w_seed=0):
+    rng = np.random.default_rng(w_seed)
+    w = rng.normal(size=(rows, cols)).astype(np.float32)
+    cfg0 = CimConfig(rows=rows, cols=cols, input_bits=input_bits)
+    m = cfg0.in_mag_max
+    x = rng.integers(-m, m + 1, size=(batch, rows)).astype(np.float32)
+    return w, x
+
+
+def run_both(w, x, cfg, noise=None):
+    g_pos, g_neg = ref.encode_differential(w, cfg.g_max_us, cfg.g_min_us)
+    a = np.asarray(ref.cim_mvm_ref(x, g_pos, g_neg, cfg, noise=noise))
+    b = np.asarray(mvm.cim_mvm_pallas(x, g_pos, g_neg, cfg, noise=noise))
+    return a, b
+
+
+def assert_quantized_match(a, b, max_mismatch_frac=0.02):
+    """Kernel vs oracle contract: identical up to floor-boundary ties.
+
+    The kernel accumulates the MVM bit-plane by bit-plane (the chip's
+    schedule) while the oracle does one matmul; f32 non-associativity can
+    land the settled voltage on the other side of an ADC step boundary.
+    Outputs must agree within 1 quantum and be exactly equal almost
+    everywhere.
+    """
+    assert np.all(np.abs(a - b) <= 1.0 + 1e-6), np.max(np.abs(a - b))
+    if a.size >= 32:
+        assert np.mean(a != b) <= max_mismatch_frac
+
+
+# --------------------------------------------------------------------------
+# Exhaustive-ish fixed cases
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("input_bits", [1, 2, 3, 4, 5, 6])
+@pytest.mark.parametrize("output_bits", [1, 2, 4, 8])
+def test_bit_precision_grid(input_bits, output_bits):
+    """Paper: 1-6 bit inputs x 1-8 bit outputs all supported."""
+    w, x = make_case(32, 16, 8, input_bits, w_seed=input_bits)
+    cfg = CimConfig(rows=32, cols=16, input_bits=input_bits,
+                    output_bits=output_bits)
+    a, b = run_both(w, x, cfg)
+    assert_quantized_match(a, b)
+    assert np.max(np.abs(a)) <= cfg.out_mag_max
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "tanh", "sigmoid"])
+def test_activations(act):
+    w, x = make_case(24, 12, 6, 4)
+    cfg = CimConfig(rows=24, cols=12, input_bits=4, output_bits=8,
+                    activation=act, adc_lsb_frac=1 / 256)
+    a, b = run_both(w, x, cfg)
+    assert_quantized_match(a, b)
+    if act == "relu":
+        assert np.min(a) >= 0.0
+    if act == "sigmoid":
+        assert np.min(a) >= 0.0 and np.max(a) <= cfg.out_mag_max
+
+
+def test_stochastic_binary_outputs():
+    w, x = make_case(16, 16, 4, 2)
+    cfg = CimConfig(rows=16, cols=16, input_bits=2, output_bits=1,
+                    activation="stochastic")
+    noise = RNG.normal(scale=0.01, size=(4, 16)).astype(np.float32)
+    a, b = run_both(w, x, cfg, noise=noise)
+    assert_quantized_match(a, b)
+    assert set(np.unique(a)).issubset({0.0, 1.0})
+
+
+def test_ir_drop_reduces_magnitude():
+    """Non-ideality (i)-(iii): IR drop shrinks the settled voltage."""
+    w, x = make_case(64, 8, 4, 4)
+    base = CimConfig(rows=64, cols=8, input_bits=4, ir_alpha=0.0)
+    ir = CimConfig(rows=64, cols=8, input_bits=4, ir_alpha=0.5)
+    g_pos, g_neg = ref.encode_differential(w, base.g_max_us, base.g_min_us)
+    v0 = np.abs(np.asarray(ref.settle_voltage(x, g_pos, g_neg, base)))
+    v1 = np.abs(np.asarray(ref.settle_voltage(x, g_pos, g_neg, ir)))
+    assert np.all(v1 <= v0 + 1e-9)
+    # pallas path agrees under IR drop too
+    a, b = run_both(w, x, ir)
+    assert_quantized_match(a, b)
+
+
+def test_voltage_mode_normalization():
+    """Fig 2i: scaling all weights by a constant leaves outputs unchanged
+    (the conductance-weighted average cancels the scale)."""
+    w, x = make_case(32, 8, 4, 4)
+    cfg = CimConfig(rows=32, cols=8, input_bits=4)
+    g_pos, g_neg = ref.encode_differential(w, cfg.g_max_us, cfg.g_min_us)
+    v1 = np.asarray(ref.settle_voltage(x, g_pos, g_neg, cfg))
+    v2 = np.asarray(ref.settle_voltage(x, 0.5 * g_pos, 0.5 * g_neg, cfg))
+    np.testing.assert_allclose(v1, v2, rtol=1e-6)
+
+
+def test_mvm_scale_recovers_linear_product():
+    """y_int * mvm_scale approximates x @ w (paper's digital de-normalization)."""
+    rows, cols = 64, 16
+    rng = np.random.default_rng(7)
+    w = rng.normal(size=(rows, cols)).astype(np.float32)
+    x = rng.integers(-7, 8, size=(16, rows)).astype(np.float32)
+    cfg = CimConfig(rows=rows, cols=cols, input_bits=4, output_bits=8,
+                    adc_lsb_frac=1 / 64)
+    w_max = float(np.max(np.abs(w)))
+    g_pos, g_neg = ref.encode_differential(w, cfg.g_max_us, cfg.g_min_us)
+    y = np.asarray(ref.cim_mvm_ref(x, g_pos, g_neg, cfg))
+    scale = np.asarray(ref.mvm_scale(g_pos, g_neg, cfg, w_max))
+    approx = y * scale
+    exact = x @ w
+    # Error bounded by ADC LSB (~= scale, in weight units) + g_min clamp.
+    mask = np.abs(y) < cfg.out_mag_max        # unclipped outputs only
+    err = np.abs(approx - exact)[mask]
+    ref_mag = np.maximum(np.abs(exact)[mask], 1.0)
+    # Median output is ADC-accurate; aggregate error (ADC floor bias +
+    # g_min clamp zeroing weights below w_max/40) stays ~10% of signal.
+    assert np.median(err / ref_mag) < 0.15
+    assert np.mean(err) / np.mean(np.abs(exact)) < 0.15
+
+
+def test_bit_plane_reconstruction():
+    x = RNG.integers(-31, 32, size=(5, 9)).astype(np.float32)
+    planes = ref.bit_planes(x, 6)
+    assert planes.shape == (5, 5, 9)
+    weights = 2.0 ** np.arange(4, -1, -1)
+    recon = np.einsum("p,pbr->br", weights, planes)
+    np.testing.assert_array_equal(recon, x)
+
+
+# --------------------------------------------------------------------------
+# Hypothesis sweeps: shapes / bits / seeds
+# --------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(1, 48),
+    cols=st.integers(1, 48),
+    batch=st.integers(1, 8),
+    input_bits=st.integers(1, 6),
+    output_bits=st.integers(1, 8),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(rows, cols, batch, input_bits,
+                                       output_bits, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(rows, cols)).astype(np.float32)
+    cfg = CimConfig(rows=rows, cols=cols, input_bits=input_bits,
+                    output_bits=output_bits)
+    m = cfg.in_mag_max
+    x = rng.integers(-m, m + 1, size=(batch, rows)).astype(np.float32)
+    a, b = run_both(w, x, cfg)
+    assert_quantized_match(a, b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    act=st.sampled_from(["none", "relu", "tanh", "sigmoid"]),
+    lsb=st.sampled_from([1 / 32, 1 / 64, 1 / 128, 1 / 256]),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_kernel_activation_hypothesis(act, lsb, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(20, 10)).astype(np.float32)
+    cfg = CimConfig(rows=20, cols=10, input_bits=4, output_bits=8,
+                    activation=act, adc_lsb_frac=lsb)
+    x = rng.integers(-7, 8, size=(3, 20)).astype(np.float32)
+    a, b = run_both(w, x, cfg)
+    assert_quantized_match(a, b)
+
+
+# --------------------------------------------------------------------------
+# ADC invariants
+# --------------------------------------------------------------------------
+
+def test_adc_monotone_in_voltage():
+    cfg = CimConfig()
+    v = np.linspace(-0.2, 0.2, 801).astype(np.float32)
+    y = np.asarray(ref.adc_quantize(v, cfg))
+    assert np.all(np.diff(y) >= 0.0)
+
+
+def test_adc_zero_is_zero():
+    cfg = CimConfig()
+    assert float(np.asarray(ref.adc_quantize(np.zeros(4, np.float32), cfg))[0]) == 0.0
+
+
+def test_encode_differential_polarity():
+    w = np.array([[1.0, -1.0, 0.0]], np.float32)
+    gp, gn = ref.encode_differential(w, 40.0, 1.0, w_max=1.0)
+    np.testing.assert_allclose(np.asarray(gp), [[40.0, 1.0, 1.0]])
+    np.testing.assert_allclose(np.asarray(gn), [[1.0, 40.0, 1.0]])

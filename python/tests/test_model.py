@@ -1,0 +1,134 @@
+"""L2 model-layer tests: shapes, quantization pipeline, mapping helpers."""
+
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+from compile.cimcfg import CimConfig
+
+
+def test_mnist_graph_shapes():
+    mdl = M.mnist_cnn7(8)
+    assert len(mdl.specs) == 7
+    assert mdl.specs[0].in_features == 9
+    assert mdl.specs[0].input_bits == 5       # 4-b unsigned input image
+    assert mdl.specs[1].input_bits == 4       # 3-b unsigned activations
+    assert mdl.specs[-1].in_features == 3 * 3 * 32
+
+
+def test_cifar_graph_is_resnet_shaped():
+    mdl = M.cifar_resnet(8, 3)
+    assert len(mdl.specs) == 20
+    assert mdl.specs[-1].out_features == 10
+
+
+def test_row_segments_cover():
+    for n in [1, 100, 128, 129, 300, 794]:
+        segs = M.row_segments(n)
+        assert segs[0][0] == 0
+        assert segs[-1][1] == n
+        for (a, b), (c, _) in zip(segs, segs[1:]):
+            assert b == c
+        assert all(b - a <= 128 for a, b in segs)
+
+
+def test_bias_rows_scaling():
+    # bias B times the weight range needs B rows (paper Methods)
+    w = np.ones((4, 2), np.float32)
+    b = np.array([14.0, -14.0], np.float32)
+    aug, nb = M.augment_with_bias(w, b, in_mag=7)
+    assert nb == 2
+    assert aug.shape == (6, 2)
+    # driven at in_mag the bias rows reconstruct b
+    contrib = aug[4:, :].sum(axis=0) * 7
+    np.testing.assert_allclose(contrib, b, rtol=1e-6)
+
+
+def test_cim_linear_matches_dense_product():
+    rng = np.random.default_rng(0)
+    spec = M.CimLayerSpec(name="l", kind="dense", in_features=32,
+                          out_features=8, input_bits=4, activation="none")
+    w = rng.normal(size=(32, 8)).astype(np.float32)
+    b = rng.normal(size=8).astype(np.float32) * 0.1
+    aug, nb = M.augment_with_bias(w, b, 7)
+    gp, gn, w_max = M.layer_conductances(aug, spec.g_max_us)
+    x = rng.integers(-3, 4, size=(4, 32)).astype(np.float32)
+    y = np.asarray(M.cim_linear(x, gp, gn, spec, w_max, nb,
+                                use_pallas=False))
+    want = x @ w + 7 * np.tile(b / 7, (4, 1))  # bias rows at full drive
+    mask = np.abs(y) > 0
+    err = np.abs(y - want)
+    assert np.median(err) < 0.35 * np.median(np.abs(want)) + 0.5
+    assert mask.any()
+
+
+def test_requantize_halfrange():
+    y = np.array([0.0, 3.9, 8.0, 100.0, -5.0])
+    q = np.asarray(M.requantize(y, shift=0.0, bits=3, signed=False))
+    assert q.tolist() == [0.0, 3.0, 7.0, 7.0, 0.0]
+
+
+def test_im2col_matches_manual():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(1, 5, 5, 2)).astype(np.float32)
+    cols = np.asarray(M.im2col(x, 3, 3, 1, "SAME"))
+    assert cols.shape == (1, 5, 5, 18)
+    # centre pixel of patch (2,2) = x[2,2,:] at kernel position (1,1)
+    patch = cols[0, 2, 2].reshape(9, 2)
+    np.testing.assert_allclose(patch[4], x[0, 2, 2])
+    # corner patch zero-padded
+    patch = cols[0, 0, 0].reshape(9, 2)
+    np.testing.assert_allclose(patch[0], 0.0)
+
+
+def test_chip_forward_runs_and_is_deterministic():
+    mdl = M.mnist_cnn7(4)
+    params = mdl.init_params(0)
+    chip = mdl.map_to_chip(params)
+    shifts = {s.name: 1.0 for s in mdl.specs}
+    x, _ = D.digits28(2, seed=3)
+    xq = D.quantize_unsigned(x, 4)
+    a = np.asarray(mdl.chip_forward(xq, chip, shifts, use_pallas=False))
+    b = np.asarray(mdl.chip_forward(xq, chip, shifts, use_pallas=False))
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (2, 10)
+
+
+def test_lstm_chip_forward_shapes():
+    mdl = M.speech_lstm(hidden=16, n_cells=2)
+    mdl_small = M.LstmModel("t", n_cells=2, hidden=16, time_steps=5)
+    params = mdl_small.init_params(0)
+    chip = mdl_small.map_to_chip(params)
+    x = np.zeros((3, 5, 40), np.float32)
+    x[:, :, 10] = 3.0
+    logits = np.asarray(mdl_small.chip_forward(x, chip, use_pallas=False))
+    assert logits.shape == (3, 12)
+
+
+def test_rbm_recover_resets_known_pixels():
+    import jax
+    rbm = M.RbmModel()
+    params = rbm.init_params(0)
+    chip = rbm.map_to_chip(params)
+    v0 = np.zeros((2, 794), np.float32)
+    v0[:, :50] = 1.0
+    known = np.ones((2, 794), np.float32)
+    known[:, 100:200] = 0.0
+    out = np.asarray(rbm.recover(v0, known, chip, jax.random.PRNGKey(0),
+                                 n_cycles=2, use_pallas=False))
+    # known pixels unchanged
+    np.testing.assert_array_equal(out[:, :50], v0[:, :50])
+    assert set(np.unique(out)).issubset({0.0, 1.0})
+
+
+def test_fake_quant_range_tracks_batch():
+    import jax.numpy as jnp
+    body = np.linspace(0.0, 2.0, 200, dtype=np.float32)
+    y = jnp.asarray(np.concatenate([body, [100.0]]))
+    q = np.asarray(M.fake_quant_unsigned(y, 3))
+    assert q.min() >= 0.0
+    # the lone outlier is clipped toward the batch's mean+3sigma alpha
+    assert q[-1] < 50.0
+    # in-range values survive quantization roughly unchanged
+    assert abs(float(q[100]) - float(body[100])) < 1.5

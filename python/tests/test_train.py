@@ -1,0 +1,108 @@
+"""Training-path tests: noise-resilient training, calibration, CIL
+machinery (small scale -- correctness of the plumbing, not accuracy)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as D
+from compile import model as M
+from compile.train import cil
+from compile.train import noise_train as NT
+
+
+def small_model():
+    return M.mnist_cnn7(width=4)
+
+
+def test_adam_descends_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = NT.adam_init(params)
+    for _ in range(300):
+        grads = {"w": 2.0 * params["w"]}
+        params, opt = NT.adam_step(params, grads, opt, lr=0.05)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_training_reduces_loss():
+    mdl = small_model()
+    x, y = D.digits28(120, seed=0)
+    params, hist = NT.train_classifier(mdl, x, y, noise_frac=0.0, epochs=3,
+                                       lr=3e-3, seed=0)
+    assert hist[-1] < hist[0]
+
+
+def test_noise_injection_changes_forward():
+    mdl = small_model()
+    params = NT._to_jnp(mdl.init_params(0))
+    x, _ = D.digits28(2, seed=1)
+    clean = mdl.train_forward(jnp.asarray(x), params)
+    noisy = mdl.train_forward(jnp.asarray(x), params, noise_frac=0.2,
+                              rng=jax.random.PRNGKey(0))
+    assert not np.allclose(np.asarray(clean), np.asarray(noisy))
+
+
+def test_calibrate_shifts_keep_activations_in_range():
+    mdl = small_model()
+    params = mdl.init_params(0)
+    chip = mdl.map_to_chip(params)
+    x, _ = D.digits28(4, seed=2)
+    xq = D.quantize_unsigned(x, 4)
+    shifts = NT.calibrate_shifts(mdl, chip, xq)
+    assert set(shifts) == {s.name for s in mdl.specs}
+    assert all(v >= 0 for v in shifts.values())
+
+
+def test_apply_relaxation_clips_and_perturbs():
+    chip = {"l": {"g_pos": np.full((4, 4), 20.0, np.float32),
+                  "g_neg": np.full((4, 4), 1.0, np.float32),
+                  "w_max": 1.0, "n_bias_rows": 0}}
+    out = NT.apply_relaxation(chip, sigma_us=2.0, seed=1)
+    assert not np.allclose(out["l"]["g_pos"], chip["l"]["g_pos"])
+    assert out["l"]["g_pos"].min() >= 1.0
+    assert out["l"]["g_pos"].max() <= 41.0
+
+
+def test_rbm_cd1_improves_reconstruction():
+    rbm = M.RbmModel(n_visible=794, n_hidden=32)
+    imgs, labels = D.digits28(300, seed=3)
+    v = (imgs.reshape(300, 784) > 0.5).astype(np.float32)
+    v = np.concatenate([v, np.eye(10, dtype=np.float32)[labels]], axis=1)
+    _, hist = NT.train_rbm(rbm, v, epochs=4, seed=0)
+    assert hist[-1] < hist[0]
+
+
+def test_cil_hybrid_accuracy_machinery():
+    mdl = small_model()
+    x, y = D.digits28(40, seed=4)
+    params, _ = NT.train_classifier(mdl, x, y, noise_frac=0.0, epochs=2,
+                                    lr=3e-3, seed=0)
+    xq = D.quantize_unsigned(x, 4)
+    chip = mdl.map_to_chip(
+        jax.tree_util.tree_map(
+            lambda p: np.asarray(p) if p is not None else None, params))
+    shifts = NT.calibrate_shifts(mdl, chip, xq[:8])
+    acc0 = cil.hybrid_accuracy(mdl, params, chip, shifts, 0,
+                               xq, np.asarray(y), ir_alpha=0.0)
+    acc_all = cil.hybrid_accuracy(mdl, params, chip, shifts, len(mdl.specs),
+                                  xq, np.asarray(y), ir_alpha=0.0)
+    assert 0.0 <= acc0 <= 1.0
+    assert 0.0 <= acc_all <= 1.0
+
+
+def test_finetune_suffix_freezes_programmed_layers():
+    mdl = small_model()
+    x, y = D.digits28(24, seed=5)
+    params, _ = NT.train_classifier(mdl, x, y, noise_frac=0.0, epochs=1,
+                                    lr=3e-3, seed=0)
+    # synthetic conv1-output features (what the chip would measure):
+    # integer activations in the 3-b unsigned range, conv1 channel count
+    rng = np.random.default_rng(0)
+    feats = rng.integers(0, 8, size=(24, 28, 28, 4)).astype(np.float32)
+    before = np.asarray(params["conv1"]["w"]).copy()
+    tuned = cil.finetune_suffix(mdl, params, jnp.asarray(feats),
+                                jnp.asarray(y), 1, epochs=1, lr=1e-3,
+                                noise_frac=0.0, seed=0)
+    np.testing.assert_array_equal(before, np.asarray(tuned["conv1"]["w"]))
+    assert not np.allclose(np.asarray(params["fc"]["w"]),
+                           np.asarray(tuned["fc"]["w"]))

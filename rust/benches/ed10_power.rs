@@ -1,0 +1,141 @@
+//! Extended Data Fig. 10: power / throughput measurements.
+//!
+//! (a) energy/op vs input bits (binary == ternary; then rising),
+//! (b) energy per ADC conversion vs output bits (~2x per bit),
+//! (c) input-stage power breakdown (WL switching dominant),
+//! (d) peak GOPS vs precision, (e) TOPS/W vs precision.
+
+use neurram::core_sim::{CimCore, MvmDirection, NeuronConfig};
+use neurram::device::DeviceParams;
+use neurram::energy::{EnergyModel, EnergyParams};
+use neurram::util::bench::{section, table};
+use neurram::util::rng::Rng;
+
+fn gaussian_core(seed: u64) -> CimCore {
+    let mut rng = Rng::new(seed);
+    let mut core = CimCore::new(0, DeviceParams::default());
+    core.power_on();
+    let (rows, cols) = (128usize, 256usize);
+    let mut gp = vec![1.0f32; rows * cols];
+    let mut gn = vec![1.0f32; rows * cols];
+    for i in 0..rows * cols {
+        let w = rng.normal() as f32;
+        if w > 0.0 {
+            gp[i] = (40.0 * w).clamp(1.0, 40.0);
+        } else {
+            gn[i] = (-40.0 * w).clamp(1.0, 40.0);
+        }
+    }
+    core.load_ideal(&gp, &gn, rows, cols);
+    core
+}
+
+fn main() {
+    let p = EnergyParams::default();
+
+    section("ED Fig. 10a -- input-stage energy per op vs input bits");
+    let mut rows = Vec::new();
+    for ib in 1..=6u32 {
+        let mut core = gaussian_core(1);
+        let mut rng = Rng::new(2);
+        let cfg = NeuronConfig { input_bits: ib, output_bits: 2,
+                                 ..Default::default() };
+        let m = cfg.in_mag_max();
+        for _ in 0..16 {
+            let x: Vec<i32> =
+                (0..128).map(|_| rng.below((2 * m + 1) as usize) as i32 - m).collect();
+            core.mvm(&x, &cfg, MvmDirection::Forward, 0.0, &mut rng);
+        }
+        // input-stage components only
+        let b = core.energy.breakdown(&p);
+        let input_pj = b.wl_pj + b.input_wires_pj + b.sampling_pj + b.digital_pj;
+        let ops = core.energy.counters.macs as f64 * 2.0;
+        rows.push(vec![
+            format!("{ib}"),
+            format!("{:.2}", input_pj * 1e3 / ops),
+        ]);
+    }
+    table(&["input bits", "input-stage fJ/op"], &rows);
+    println!("[paper: 1-bit == 2-bit (each wire drives 1 of 3 levels), \
+              then growing]");
+
+    section("ED Fig. 10b -- energy per ADC conversion vs output bits");
+    let mut rows = Vec::new();
+    let mut prev = 0.0;
+    for ob in 1..=8u32 {
+        let mut core = gaussian_core(3);
+        let mut rng = Rng::new(4);
+        let cfg = NeuronConfig { input_bits: 4, output_bits: ob,
+                                 adc_lsb_frac: 1.0 / (1 << ob.min(7)) as f64,
+                                 ..Default::default() };
+        for _ in 0..8 {
+            let x: Vec<i32> = (0..128).map(|_| rng.below(15) as i32 - 7).collect();
+            core.mvm(&x, &cfg, MvmDirection::Forward, 0.0, &mut rng);
+        }
+        let b = core.energy.breakdown(&p);
+        let convs = 8.0 * 256.0;
+        let e = b.neuron_adc_pj / convs;
+        let growth = if prev > 0.0 { e / prev } else { 0.0 };
+        prev = e;
+        rows.push(vec![
+            format!("{ob}"),
+            format!("{e:.4}"),
+            if growth > 0.0 { format!("{growth:.2}x") } else { "-".into() },
+        ]);
+    }
+    table(&["output bits", "pJ/conversion", "growth"], &rows);
+    println!("[paper: roughly doubles per added bit (charge-decrement \
+              steps double)]");
+
+    section("ED Fig. 10c -- input-stage power breakdown (4b in)");
+    let mut core = gaussian_core(5);
+    let mut rng = Rng::new(6);
+    let cfg = NeuronConfig::default();
+    for _ in 0..16 {
+        let x: Vec<i32> = (0..128).map(|_| rng.below(15) as i32 - 7).collect();
+        core.mvm(&x, &cfg, MvmDirection::Forward, 0.0, &mut rng);
+    }
+    let b = core.energy.breakdown(&p);
+    let input_total = b.wl_pj + b.input_wires_pj + b.sampling_pj + b.digital_pj;
+    table(
+        &["component", "pJ", "share"],
+        &[
+            vec!["WL switching".into(), format!("{:.1}", b.wl_pj),
+                 format!("{:.1}%", 100.0 * b.wl_pj / input_total)],
+            vec!["input wire drive".into(), format!("{:.1}", b.input_wires_pj),
+                 format!("{:.1}%", 100.0 * b.input_wires_pj / input_total)],
+            vec!["neuron sampling".into(), format!("{:.1}", b.sampling_pj),
+                 format!("{:.1}%", 100.0 * b.sampling_pj / input_total)],
+            vec!["digital control".into(), format!("{:.1}", b.digital_pj),
+                 format!("{:.1}%", 100.0 * b.digital_pj / input_total)],
+        ],
+    );
+    assert!(b.wl_pj > 0.5 * (b.input_wires_pj + b.sampling_pj + b.digital_pj),
+            "WL switching should dominate (thick-oxide I/O selectors)");
+
+    section("ED Fig. 10d/e -- peak throughput and TOPS/W vs precision");
+    let mut rows = Vec::new();
+    for (ib, ob) in [(1u32, 3u32), (2, 4), (3, 5), (4, 6), (5, 7), (6, 8)] {
+        let mut core = gaussian_core(7);
+        let mut rng = Rng::new(8);
+        let cfg = NeuronConfig { input_bits: ib, output_bits: ob,
+                                 ..Default::default() };
+        let m = cfg.in_mag_max();
+        for _ in 0..8 {
+            let x: Vec<i32> =
+                (0..128).map(|_| rng.below((2 * m + 1) as usize) as i32 - m).collect();
+            core.mvm(&x, &cfg, MvmDirection::Forward, 0.0, &mut rng);
+        }
+        let c = core.cost(&p);
+        rows.push(vec![
+            format!("{ib}b/{ob}b"),
+            format!("{:.2}", c.gops()),
+            format!("{:.2}", c.gops() * 48.0), // 48-core chip
+            format!("{:.1}", c.tops_per_watt()),
+        ]);
+    }
+    table(&["precision (in/out)", "GOPS/core", "GOPS/chip", "TOPS/W"], &rows);
+
+    // keep the model exercised under both pricing sets
+    let _ = EnergyModel::default().cost(&EnergyParams::current_mode());
+}

@@ -1,0 +1,149 @@
+//! Fig. 1d: EDP-efficiency and performance vs prior RRAM-CIM hardware.
+//!
+//! The paper's benchmark workload: MVM with a 1024x1024 weight matrix
+//! (2 ops per MAC).  We measure the simulated NeuRRAM chip across bit
+//! precisions, a conventional current-mode macro simulated under the
+//! same energy framework, and tabulate the published numbers of the
+//! prior chips the paper compares against.  Absolute numbers are
+//! simulator-level; the *shape* -- who wins and by roughly what factor --
+//! is the reproduction target (paper: 5-8x EDP, 20-61x peak throughput).
+
+use neurram::core_sim::current_mode::{CurrentModeConfig, CurrentModeCore};
+use neurram::core_sim::NeuronConfig;
+use neurram::coordinator::mapping::MappingStrategy;
+use neurram::coordinator::NeuRramChip;
+use neurram::energy::{EnergyParams, MvmCost};
+use neurram::models::ConductanceMatrix;
+use neurram::util::bench::{section, table};
+use neurram::util::rng::Rng;
+
+fn neurram_point(in_bits: u32, out_bits: u32, mvms: usize) -> MvmCost {
+    let mut rng = Rng::new(7);
+    let (rows, cols) = (1024usize, 1024usize);
+    let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+    let m = ConductanceMatrix::compile("w", &w, None, rows, cols, 7, 40.0,
+                                       1.0, None);
+    let mut chip = NeuRramChip::with_cores(48, 8);
+    chip.program_model(vec![m], &[1.0], MappingStrategy::Simple, false)
+        .unwrap();
+    let cfg = NeuronConfig { input_bits: in_bits, output_bits: out_bits,
+                             ..Default::default() };
+    let in_mag = cfg.in_mag_max();
+    for i in 0..mvms {
+        let x: Vec<i32> = (0..rows)
+            .map(|r| ((r + i) as i32 % (2 * in_mag + 1)) - in_mag)
+            .collect();
+        chip.mvm_layer("w", &x, &cfg, 0);
+    }
+    // segments run on parallel cores: wall latency = max core busy time
+    let per_core_max = chip
+        .cores
+        .iter()
+        .map(|c| c.energy.counters.busy_ns)
+        .fold(0.0f64, f64::max);
+    let mut cost = chip.cost(&EnergyParams::default());
+    cost.latency_ns = per_core_max;
+    cost
+}
+
+fn current_mode_point(in_bits: u32, out_bits: u32, mvms: usize,
+                      rows_per_cycle: usize) -> MvmCost {
+    let mut rng = Rng::new(9);
+    let (rows, cols) = (1024usize, 1024usize);
+    let mut gp = vec![1.0f32; rows * cols];
+    let mut gn = vec![1.0f32; rows * cols];
+    for i in 0..rows * cols {
+        let w = rng.normal() as f32;
+        if w > 0.0 {
+            gp[i] = (40.0 * w).clamp(1.0, 40.0);
+        } else {
+            gn[i] = (-40.0 * w).clamp(1.0, 40.0);
+        }
+    }
+    let mut cm = CurrentModeCore::new(&gp, &gn, rows, cols, CurrentModeConfig {
+        rows_per_cycle,
+        input_bits: in_bits,
+        output_bits: out_bits,
+        ..Default::default()
+    });
+    let in_mag = (1i32 << (in_bits.max(2) - 1)) - 1;
+    for i in 0..mvms {
+        let x: Vec<i32> = (0..rows)
+            .map(|r| ((r + i) as i32 % (2 * in_mag + 1)) - in_mag)
+            .collect();
+        cm.mvm(&x);
+    }
+    cm.cost()
+}
+
+fn main() {
+    let mvms = 2;
+    section("Fig. 1d -- NeuRRAM (simulated) across precisions, 1024x1024 MVM");
+    let mut rows = Vec::new();
+    let mut nr_4b8b: Option<MvmCost> = None;
+    for (ib, ob) in [(1u32, 3u32), (2, 4), (4, 6), (4, 8), (6, 8)] {
+        let c = neurram_point(ib, ob, mvms);
+        if (ib, ob) == (4, 8) {
+            nr_4b8b = Some(c);
+        }
+        rows.push(vec![
+            format!("{ib}b in / {ob}b out"),
+            format!("{:.1}", c.femtojoule_per_op()),
+            format!("{:.1}", c.tops_per_watt()),
+            format!("{:.1}", c.gops()),
+            format!("{:.3e}", c.edp()),
+        ]);
+    }
+    table(&["precision", "fJ/op", "TOPS/W", "peak GOPS", "EDP (pJ*ns)"],
+          &rows);
+
+    section("conventional current-mode macro (simulated, same framework)");
+    let mut rows = Vec::new();
+    let mut cm_ref: Option<MvmCost> = None;
+    for rpc in [9usize, 16, 32] {
+        let c = current_mode_point(4, 8, mvms, rpc);
+        if rpc == 32 {
+            cm_ref = Some(c);
+        }
+        rows.push(vec![
+            format!("{rpc} rows/cycle"),
+            format!("{:.1}", c.femtojoule_per_op()),
+            format!("{:.1}", c.tops_per_watt()),
+            format!("{:.1}", c.gops()),
+            format!("{:.3e}", c.edp()),
+        ]);
+    }
+    table(&["row parallelism", "fJ/op", "TOPS/W", "GOPS", "EDP"], &rows);
+
+    let nr = nr_4b8b.unwrap();
+    let cm = cm_ref.unwrap();
+    println!(
+        "\nEDP ratio (best current-mode / NeuRRAM voltage-mode, 4b/8b): \
+         {:.1}x   [paper: 5-8x vs best prior art]",
+        cm.edp() / nr.edp()
+    );
+    println!(
+        "peak-throughput ratio: {:.1}x   [paper: 20-61x]",
+        nr.gops() / cm.gops()
+    );
+
+    section("published prior art (numbers from the cited papers)");
+    table(
+        &["chip", "node", "TOPS/W (published)", "note"],
+        &[
+            vec!["Mochida 2018 (ref 19)".into(), "40nm".into(), "66.5".into(),
+                 "4Mb ReRAM, binary".into()],
+            vec!["Xue ISSCC'19 (ref 21)".into(), "55nm".into(), "53.2".into(),
+                 "1Mb, 3b in".into()],
+            vec!["Liu ISSCC'20 (ref 26)".into(), "130nm".into(), "78.4".into(),
+                 "fully parallel analog".into()],
+            vec!["Xue ISSCC'20 (ref 24)".into(), "22nm".into(), "121-28".into(),
+                 "2Mb, 1-4b".into()],
+            vec!["Xue Nat.Elec'21 (ref 27)".into(), "22nm".into(),
+                 "45.7 (4b/4b)".into(), "throughput baseline".into()],
+            vec!["NeuRRAM (this sim)".into(), "130nm".into(),
+                 format!("{:.1} (4b/8b)", nr.tops_per_watt()),
+                 "voltage-mode, 48 cores".into()],
+        ],
+    );
+}

@@ -1,0 +1,64 @@
+//! Fig. 3f / ED Fig. 7a: chip-in-the-loop progressive fine-tuning.
+//!
+//! The fine-tuning loop itself is a *training* procedure and lives on the
+//! python build path (`python -m compile.train.cil_run`, which measures
+//! layer outputs on the chip model and fine-tunes the remaining software
+//! layers).  This bench tabulates its results
+//! (artifacts/cil_results.json) the way the paper plots Fig. 3f, and
+//! asserts the headline shape: fine-tuning recovers accuracy that
+//! layer-by-layer programming loses (paper: +1.99% cumulative on
+//! CIFAR-10).
+
+use neurram::util::bench::{section, table};
+use neurram::util::json::Json;
+
+fn main() {
+    let path = "artifacts/cil_results.json";
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!("fig3f_cil: {path} not found.");
+            println!("run: cd python && python -m compile.train.cil_run");
+            return;
+        }
+    };
+    let j = Json::parse(&text).expect("valid cil_results.json");
+    let layers: Vec<String> = j["layers"]
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_str().unwrap().to_string())
+        .collect();
+    let with_ft: Vec<f64> = j["acc_with_finetune"]
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    let without: Vec<f64> = j["acc_without_finetune"]
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    let sw = j["software_float_acc"].as_f64().unwrap();
+
+    section("Fig. 3f -- test accuracy as layers are progressively programmed");
+    println!("software float baseline: {:.2}%\n", 100.0 * sw);
+    let mut rows = Vec::new();
+    for (i, name) in layers.iter().enumerate() {
+        rows.push(vec![
+            format!("{} ({}/{})", name, i + 1, layers.len()),
+            format!("{:.2}%", 100.0 * without[i]),
+            format!("{:.2}%", 100.0 * with_ft[i]),
+            format!("{:+.2}%", 100.0 * (with_ft[i] - without[i])),
+        ]);
+    }
+    table(&["layer programmed", "frozen", "fine-tuned", "recovery"], &rows);
+
+    let gain = with_ft.last().unwrap() - without.last().unwrap();
+    println!(
+        "\ncumulative fine-tuning gain: {:+.2}%  [paper: +1.99% on CIFAR-10]",
+        100.0 * gain
+    );
+}

@@ -1,0 +1,109 @@
+//! Hot-path micro-benchmarks: the profiling harness behind the
+//! EXPERIMENTS.md §Perf iteration log.
+//!
+//! Covers every layer of the stack:
+//!   L3 crossbar settle (the MVM inner loop), neuron ADC conversion,
+//!   full-core MVM, chip-level layer MVM with partial sums, write-verify
+//!   programming, and the PJRT runtime executing the L1/L2 artifact.
+
+use neurram::coordinator::mapping::MappingStrategy;
+use neurram::coordinator::NeuRramChip;
+use neurram::core_sim::{neuron, CimCore, Crossbar, MvmDirection, NeuronConfig};
+use neurram::device::DeviceParams;
+use neurram::io::npz::Tensor;
+use neurram::models::ConductanceMatrix;
+use neurram::runtime::Runtime;
+use neurram::util::bench::{bench, black_box, section};
+use neurram::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(99);
+
+    section("L3: crossbar settle (128x256, dense int inputs)");
+    let (rows, cols) = (128usize, 256usize);
+    let mut gp = vec![1.0f32; rows * cols];
+    let mut gn = vec![1.0f32; rows * cols];
+    for i in 0..rows * cols {
+        let w = rng.normal() as f32;
+        if w > 0.0 {
+            gp[i] = (40.0 * w).clamp(1.0, 40.0);
+        } else {
+            gn[i] = (-40.0 * w).clamp(1.0, 40.0);
+        }
+    }
+    let xb = Crossbar::from_conductances(&gp, &gn, rows, cols, 40.0, 0.5);
+    let x: Vec<i32> = (0..rows).map(|_| rng.below(15) as i32 - 7).collect();
+    let mut dv = vec![0.0f32; cols];
+    bench("crossbar::settle_int 128x256", 300, || {
+        xb.settle_int(black_box(&x), &mut dv);
+        black_box(&dv);
+    });
+    let plane: Vec<i8> = x.iter().map(|&v| v.signum() as i8).collect();
+    bench("crossbar::settle_plane 128x256", 300, || {
+        xb.settle_plane(black_box(&plane), &mut dv);
+        black_box(&dv);
+    });
+
+    section("L3: neuron ADC conversion (256 conversions)");
+    let cfg = NeuronConfig::default();
+    bench("neuron::convert x256 (8-bit)", 200, || {
+        for j in 0..256 {
+            black_box(neuron::convert(dv[j % cols] as f64, &cfg, 0.0));
+        }
+    });
+
+    section("L3: full core MVM (bit-serial + ADC + energy)");
+    let mut core = CimCore::new(0, DeviceParams::default());
+    core.power_on();
+    core.load_ideal(&gp, &gn, rows, cols);
+    bench("CimCore::mvm 128x256 4b/8b", 400, || {
+        black_box(core.mvm(black_box(&x), &cfg, MvmDirection::Forward, 0.0,
+                           &mut rng));
+    });
+
+    section("L3: chip-level split-layer MVM (1024x1024 over 32 cores)");
+    let big_rows = 1024usize;
+    let w: Vec<f32> = (0..big_rows * 1024).map(|_| rng.normal() as f32).collect();
+    let m = ConductanceMatrix::compile("w", &w, None, big_rows, 1024, 7, 40.0,
+                                       1.0, None);
+    let mut chip = NeuRramChip::with_cores(48, 5);
+    chip.program_model(vec![m], &[1.0], MappingStrategy::Simple, false)
+        .unwrap();
+    let xbig: Vec<i32> = (0..big_rows).map(|_| rng.below(15) as i32 - 7).collect();
+    bench("NeuRramChip::mvm_layer 1024x1024", 600, || {
+        black_box(chip.mvm_layer("w", black_box(&xbig), &cfg, 0));
+    });
+
+    section("device: write-verify programming (64x64 array)");
+    bench("write-verify 64x64", 800, || {
+        let mut rng2 = Rng::new(7);
+        let mut array = neurram::device::RramArray::new(
+            64, 64, DeviceParams::default());
+        let targets: Vec<f32> =
+            (0..4096).map(|i| 1.0 + (i % 40) as f32).collect();
+        let wv = neurram::device::WriteVerify::new(Default::default());
+        black_box(wv.program_array(&mut array, &targets, &mut rng2));
+    });
+
+    section("runtime: PJRT artifact execution (pallas-lowered CIM MVM)");
+    match Runtime::new("artifacts") {
+        Ok(mut rt) => {
+            let name = "cim_mvm_4b8b_none_r128c256b32";
+            let xs = Tensor { shape: vec![32, 128],
+                              data: (0..32 * 128)
+                                  .map(|i| ((i % 15) as f32) - 7.0)
+                                  .collect() };
+            let gpt = Tensor { shape: vec![128, 256], data: gp.clone() };
+            let gnt = Tensor { shape: vec![128, 256], data: gn.clone() };
+            // warm compile
+            let _ = rt.execute(name, &[xs.clone(), gpt.clone(), gnt.clone()]);
+            bench("PJRT cim_mvm b32 (4b/8b)", 1500, || {
+                black_box(
+                    rt.execute(name, &[xs.clone(), gpt.clone(), gnt.clone()])
+                        .unwrap(),
+                );
+            });
+        }
+        Err(e) => println!("(skipping PJRT bench: {e})"),
+    }
+}

@@ -1,0 +1,66 @@
+//! Methods "Projection of NeuRRAM energy-efficiency with technology
+//! scaling": the 130 nm -> 7 nm component-level projection table and the
+//! resulting ~760x EDP improvement.
+
+use neurram::core_sim::{CimCore, MvmDirection, NeuronConfig};
+use neurram::device::DeviceParams;
+use neurram::energy::scaling::seven_nm_detail;
+use neurram::energy::{scale_edp, EnergyParams, TechNode};
+use neurram::util::bench::{section, table};
+use neurram::util::rng::Rng;
+
+fn main() {
+    section("component scaling factors 130nm -> 7nm (paper Methods)");
+    let d = seven_nm_detail();
+    table(
+        &["component", "divide by", "source"],
+        &[
+            vec!["WL switching energy".into(), format!("{:.1}", d.wl_energy_div),
+                 "1.3V->0.8V (2.6x) * pitch 340->40nm (8.5x)".into()],
+            vec!["peripheral energy".into(), format!("{:.1}", d.peripheral_div),
+                 "VDD 1.8V -> 0.8V".into()],
+            vec!["MVM pulse/charge energy".into(), format!("{:.1}", d.mvm_energy_div),
+                 "V_read 0.5->0.25V (4x) * parasitics (8.5x)".into()],
+            vec!["latency".into(), format!("{:.1}", d.latency_div),
+                 "integrating neuron -> flash ADC (2.1us -> 22ns)".into()],
+        ],
+    );
+
+    section("measured 130nm EDP -> projected nodes");
+    // measure a representative 4b/8b 256-wide MVM workload
+    let mut rng = Rng::new(4);
+    let mut core = CimCore::new(0, DeviceParams::default());
+    core.power_on();
+    let (rows, cols) = (128usize, 256usize);
+    let mut gp = vec![1.0f32; rows * cols];
+    let mut gn = vec![1.0f32; rows * cols];
+    for i in 0..rows * cols {
+        let w = rng.normal() as f32;
+        if w > 0.0 { gp[i] = (40.0 * w).clamp(1.0, 40.0); }
+        else { gn[i] = (-40.0 * w).clamp(1.0, 40.0); }
+    }
+    core.load_ideal(&gp, &gn, rows, cols);
+    let cfg = NeuronConfig::default();
+    for _ in 0..8 {
+        let x: Vec<i32> = (0..rows).map(|_| rng.below(15) as i32 - 7).collect();
+        core.mvm(&x, &cfg, MvmDirection::Forward, 0.0, &mut rng);
+    }
+    let c = core.cost(&EnergyParams::default());
+
+    let mut rows_t = Vec::new();
+    for node in [TechNode::N130, TechNode::N65, TechNode::N28, TechNode::N7] {
+        rows_t.push(vec![
+            format!("{node:?}"),
+            format!("{:.1}", node.energy_factor()),
+            format!("{:.1}", node.latency_factor()),
+            format!("{:.0}", node.edp_factor()),
+            format!("{:.3e}", scale_edp(c.edp(), node)),
+        ]);
+    }
+    table(&["node", "energy /", "latency /", "EDP /", "projected EDP (pJ*ns)"],
+          &rows_t);
+
+    let f = TechNode::N7.edp_factor();
+    println!("\noverall 7nm EDP improvement: {f:.0}x  [paper: ~760x]");
+    assert!((700.0..820.0).contains(&f));
+}

@@ -1,0 +1,43 @@
+//! Table 1: summary of the AI applications and models demonstrated on
+//! the (simulated) chip, plus their mapping footprint.
+
+use neurram::coordinator::mapping::{plan, MappingStrategy};
+use neurram::models::loader::{compile_random, intensities};
+use neurram::models::{cifar_resnet, mnist_cnn7, rbm_image, speech_lstm};
+use neurram::util::bench::{section, table};
+use neurram::NUM_CORES;
+
+fn main() {
+    section("Table 1 -- demonstrated models (CPU-budget-scaled, DESIGN.md §6)");
+    let models = [
+        (mnist_cnn7(8), "digits28 (MNIST-sub)", "3-b unsigned (1st 4-b)"),
+        (cifar_resnet(8, 1), "textures32 (CIFAR-sub)", "3-b unsigned (1st 4-b)"),
+        (speech_lstm(64, 4), "mfcc_cmds (GSC-sub)", "4-b signed"),
+        (rbm_image(), "digits28 binarized", "visible 1-b, hidden 1-b"),
+    ];
+    let mut rows = Vec::new();
+    for (graph, dataset, precision) in &models {
+        let matrices = compile_random(graph, 1);
+        let p = plan(&matrices, &intensities(graph), MappingStrategy::Packed,
+                     NUM_CORES)
+            .expect("fits on chip");
+        rows.push(vec![
+            graph.name.clone(),
+            dataset.to_string(),
+            format!("{} layers", graph.layers.len()),
+            graph.dataflow.to_string(),
+            precision.to_string(),
+            format!("{}", graph.n_params()),
+            format!("{}/{}", p.cores_used, NUM_CORES),
+        ]);
+    }
+    table(
+        &["model", "dataset", "architecture", "dataflow", "activation",
+          "#params", "cores"],
+        &rows,
+    );
+    println!(
+        "\n[paper Table 1: ResNet-20 274K params / 7-layer CNN 23K / \
+         4-cell LSTM 281K / RBM 96K; all mapped on one 48-core chip]"
+    );
+}

@@ -1,0 +1,222 @@
+//! Model-driven chip calibration.
+//!
+//! Two knobs, per the paper:
+//!  1. operating-condition search -- per layer, run *training-set* data
+//!     through the programmed layer and pick the requantization shift so
+//!     the output distribution fills the next layer's input range
+//!     (ED Fig. 5 shows why the calibration data must match the test-time
+//!     distribution: uniform-random probes give a very different output
+//!     distribution);
+//!  2. ADC offset measurement -- drive each neuron directly in
+//!     neuron-testing mode and record the code at zero input, to be
+//!     subtracted during inference (non-ideality (vii)).
+
+use crate::coordinator::NeuRramChip;
+use crate::core_sim::NeuronConfig;
+use crate::models::quant::calibrate_shift;
+use crate::util::stats::percentile;
+
+#[derive(Clone, Debug, Default)]
+pub struct CalibReport {
+    pub layer: String,
+    pub shift: f64,
+    pub p99: f64,
+    pub samples: usize,
+}
+
+/// Calibrate one layer's requantization shift from measured outputs on a
+/// set of probe inputs (which should come from training data).
+pub fn calibrate_layer_shift(
+    chip: &mut NeuRramChip,
+    layer: &str,
+    probes: &[Vec<i32>],
+    cfg: &NeuronConfig,
+    next_bits: u32,
+) -> CalibReport {
+    let mut vals = Vec::new();
+    for x in probes {
+        let y = chip.mvm_layer(layer, x, cfg, 0);
+        for v in y {
+            vals.push(v.max(0.0));
+        }
+    }
+    let p99 = percentile(&vals, 99.0);
+    CalibReport {
+        layer: layer.to_string(),
+        shift: calibrate_shift(p99, next_bits),
+        p99,
+        samples: vals.len(),
+    }
+}
+
+/// Measure per-neuron ADC offsets in neuron-testing mode: the digital
+/// code at zero analog input, expressed in volts to subtract.
+pub fn measure_adc_offsets(chip: &NeuRramChip, core: usize,
+                           cfg: &NeuronConfig) -> Vec<f64> {
+    let c = &chip.cores[core];
+    // In the simulator offsets live in NeuronConfig::offset_v; measuring
+    // them through the test mode returns the quantized view of that
+    // offset, mirroring the on-chip procedure.
+    let n = crate::CORE_COLS;
+    (0..n)
+        .map(|_| {
+            let code = c.neuron_test(0.0, cfg);
+            code as f64 * cfg.v_decr()
+        })
+        .collect()
+}
+
+/// Progressive whole-CNN shift calibration on probe images: runs the
+/// network layer by layer with the shifts found so far and applies the
+/// percentile rule at each step (the rust mirror of
+/// `noise_train.calibrate_shifts`).
+pub fn calibrate_cnn_shifts(
+    chip: &mut NeuRramChip,
+    graph: &crate::models::ModelGraph,
+    probe_imgs: &[Vec<f32>],
+) -> Vec<f64> {
+    use crate::models::quant;
+    let mut shifts = vec![0.0f64; graph.layers.len()];
+    let in_bits = graph.layers[0].input_bits - 1;
+    for li in 0..graph.layers.len().saturating_sub(1) {
+        let layer = &graph.layers[li];
+        let next_bits = graph.layers[li + 1].input_bits;
+        let mut probes: Vec<Vec<i32>> = Vec::new();
+        for img in probe_imgs {
+            let q: Vec<i32> = img
+                .iter()
+                .map(|&p| quant::quantize_unit_unsigned(p, in_bits))
+                .collect();
+            let patches = forward_collect_patches(chip, graph, &q, &shifts, li);
+            // sample patches dispersed across the feature map -- corner
+            // patches are mostly padding and would skew the percentile
+            let stride = (patches.len() / 24).max(1);
+            probes.extend(patches.into_iter().step_by(stride));
+        }
+        let cfg = NeuronConfig {
+            input_bits: layer.input_bits,
+            output_bits: layer.output_bits,
+            ..Default::default()
+        };
+        let rep = calibrate_layer_shift(chip, &layer.name, &probes, &cfg,
+                                        next_bits - 1);
+        shifts[li] = rep.shift;
+    }
+    shifts
+}
+
+/// Run conv layers [0, upto) and return the im2col patches entering layer
+/// `upto` (calibration probe collection).
+pub fn forward_collect_patches(
+    chip: &mut NeuRramChip,
+    graph: &crate::models::ModelGraph,
+    img_q: &[i32],
+    shifts: &[f64],
+    upto: usize,
+) -> Vec<Vec<i32>> {
+    use crate::models::executor::{extract_patch, FeatureMap};
+    use crate::models::{quant, LayerKind};
+    let mut fm = FeatureMap {
+        h: graph.input_hw,
+        w: graph.input_hw,
+        c: graph.input_ch,
+        data: img_q.to_vec(),
+    };
+    for li in 0..upto {
+        let layer = &graph.layers[li];
+        if layer.kind != LayerKind::Conv {
+            break;
+        }
+        let cfg = NeuronConfig {
+            input_bits: layer.input_bits,
+            output_bits: layer.output_bits,
+            ..Default::default()
+        };
+        let next_bits = graph.layers[li + 1].input_bits;
+        let oc = layer.out_features;
+        let mut vals = vec![0.0f64; fm.h * fm.w * oc];
+        for y in 0..fm.h {
+            for x in 0..fm.w {
+                let patch = extract_patch(&fm, y, x, layer.kh, layer.kw);
+                let out = chip.mvm_layer(&layer.name, &patch, &cfg, 0);
+                for (ch, v) in out.iter().enumerate() {
+                    vals[(y * fm.w + x) * oc + ch] = v.max(0.0);
+                }
+            }
+        }
+        let k = layer.pool.max(1);
+        let (nh, nw) = (fm.h / k, fm.w / k);
+        let mut next = FeatureMap::new(nh, nw, oc);
+        for y in 0..nh {
+            for x in 0..nw {
+                for ch in 0..oc {
+                    let mut m = f64::MIN;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            m = m.max(
+                                vals[((y * k + dy) * fm.w + x * k + dx) * oc
+                                    + ch],
+                            );
+                        }
+                    }
+                    next.data[(y * nw + x) * oc + ch] =
+                        quant::requantize_unsigned(m, shifts[li],
+                                                   next_bits - 1);
+                }
+            }
+        }
+        fm = next;
+    }
+    let layer = &graph.layers[upto];
+    if layer.kind == crate::models::LayerKind::Conv {
+        use crate::models::executor::extract_patch;
+        let mut patches = Vec::new();
+        for y in 0..fm.h {
+            for x in 0..fm.w {
+                patches.push(extract_patch(&fm, y, x, layer.kh, layer.kw));
+            }
+        }
+        patches
+    } else {
+        vec![fm.data]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::mapping::MappingStrategy;
+    use crate::models::ConductanceMatrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn shift_fills_next_range() {
+        let mut rng = Rng::new(21);
+        let w: Vec<f32> = (0..64 * 16).map(|_| rng.normal() as f32).collect();
+        let m = ConductanceMatrix::compile("l", &w, None, 64, 16, 7, 40.0,
+                                           1.0, None);
+        let mut chip = NeuRramChip::with_cores(2, 22);
+        chip.program_model(vec![m], &[1.0], MappingStrategy::Simple, false)
+            .unwrap();
+        let probes: Vec<Vec<i32>> = (0..16)
+            .map(|_| (0..64).map(|_| rng.below(8) as i32).collect())
+            .collect();
+        let cfg = NeuronConfig::default();
+        let rep = calibrate_layer_shift(&mut chip, "l", &probes, &cfg, 3);
+        assert!(rep.p99 > 0.0);
+        // requantized p99 must land inside [0, 7]
+        let q = rep.p99 / 2f64.powf(rep.shift);
+        assert!(q <= 7.0 + 1e-9, "q = {q}");
+    }
+
+    #[test]
+    fn offsets_zero_for_ideal_neurons() {
+        let chip = NeuRramChip::with_cores(1, 23);
+        let cfg = NeuronConfig::default();
+        let offs = measure_adc_offsets(&chip, 0, &cfg);
+        assert!(offs.iter().all(|&o| o == 0.0));
+        let cfg_off = NeuronConfig { offset_v: 0.02, ..Default::default() };
+        let offs = measure_adc_offsets(&chip, 0, &cfg_off);
+        assert!(offs.iter().all(|&o| o > 0.0));
+    }
+}

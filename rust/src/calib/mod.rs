@@ -1,0 +1,5 @@
+//! Model-driven chip calibration (paper Fig. 3b, Extended Data Fig. 5).
+
+pub mod calibrate;
+
+pub use calibrate::{calibrate_layer_shift, measure_adc_offsets, CalibReport};

@@ -1,0 +1,75 @@
+//! `neurram edp`: Fig. 1d-style energy/latency sweep on the simulator.
+//!
+//! Measures the cost of a 1024x1024 MVM workload (the paper's benchmark:
+//! the matrix is split over cores executing in parallel) across input and
+//! output bit precisions, and prints EDP / TOPS/W / GOPS.
+
+use anyhow::Result;
+use neurram::coordinator::mapping::MappingStrategy;
+use neurram::coordinator::NeuRramChip;
+use neurram::core_sim::NeuronConfig;
+use neurram::energy::{EnergyParams, MvmCost};
+use neurram::models::ConductanceMatrix;
+use neurram::util::bench::table;
+use neurram::util::cli::Args;
+use neurram::util::rng::Rng;
+
+/// Run the 1024x1024 workload at a precision point; returns the cost.
+pub fn edp_point(in_bits: u32, out_bits: u32, mvms: usize, seed: u64) -> MvmCost {
+    let mut rng = Rng::new(seed);
+    let rows = 1024usize;
+    let cols = 1024usize;
+    let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+    let m = ConductanceMatrix::compile("w", &w, None, rows, cols, 7, 40.0,
+                                       1.0, None);
+    // 8 row segments x 4 col segments = 32 cores in parallel
+    let mut chip = NeuRramChip::with_cores(48, seed + 1);
+    chip.program_model(vec![m], &[1.0], MappingStrategy::Simple, false)
+        .unwrap();
+
+    let cfg = NeuronConfig {
+        input_bits: in_bits,
+        output_bits: out_bits,
+        ..Default::default()
+    };
+    let in_mag = cfg.in_mag_max();
+    for i in 0..mvms {
+        let x: Vec<i32> = (0..rows)
+            .map(|r| ((r as i32 + i as i32) % (2 * in_mag + 1)) - in_mag)
+            .collect();
+        chip.mvm_layer("w", &x, &cfg, 0);
+    }
+    // parallel-core latency: segments of one MVM run concurrently, so the
+    // wall-clock latency is the max per-core busy time, not the sum
+    let per_core_max = chip
+        .cores
+        .iter()
+        .map(|c| c.energy.counters.busy_ns)
+        .fold(0.0f64, f64::max);
+    let mut cost = chip.cost(&EnergyParams::default());
+    cost.latency_ns = per_core_max;
+    cost
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let mvms = args.usize_or("mvms", 4);
+    println!("Fig. 1d sweep: 1024x1024 MVM x{mvms}, voltage-mode, 48 cores\n");
+    let mut rows = Vec::new();
+    for (ib, ob) in [(1u32, 3u32), (2, 4), (4, 6), (6, 8)] {
+        let c = edp_point(ib, ob, mvms, 7);
+        rows.push(vec![
+            format!("{ib}b/{ob}b"),
+            format!("{:.1}", c.energy_pj / 1000.0),
+            format!("{:.2}", c.latency_ns / 1000.0),
+            format!("{:.3e}", c.edp()),
+            format!("{:.1}", c.tops_per_watt()),
+            format!("{:.1}", c.gops()),
+        ]);
+    }
+    table(
+        &["in/out bits", "energy (nJ)", "latency (us)", "EDP (pJ*ns)",
+          "TOPS/W", "GOPS"],
+        &rows,
+    );
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! `neurram infer-mnist`: end-to-end CNN inference on the chip simulator.
+//!
+//! Loads trained weights from an npz export (or random-init if absent),
+//! compiles them to conductances, maps + programs the 48 cores
+//! (optionally through write-verify), calibrates requantization shifts on
+//! training data, and reports accuracy + the energy bill.
+
+use anyhow::Result;
+use neurram::calib::calibrate::calibrate_cnn_shifts;
+use neurram::coordinator::mapping::MappingStrategy;
+use neurram::coordinator::NeuRramChip;
+use neurram::energy::EnergyParams;
+use neurram::io::{datasets, metrics, npz};
+use neurram::models::executor::run_cnn;
+use neurram::models::loader::{compile_from_npz, compile_random, intensities};
+use neurram::models::{mnist_cnn7, quant};
+use neurram::util::cli::Args;
+use neurram::util::config::ChipConfig;
+
+pub fn run_mnist(args: &Args) -> Result<()> {
+    let n_test = args.usize_or("samples", 50);
+    let width = args.usize_or("width", 8);
+    let seed = args.u64_or("seed", 5);
+    let write_verify = args.flag("write-verify");
+
+    let graph = mnist_cnn7(width);
+    let matrices = match args.get("weights") {
+        Some(path) => {
+            let w = npz::load_npz(path)?;
+            compile_from_npz(&graph, &w, None).map_err(anyhow::Error::msg)?
+        }
+        None => {
+            println!("(no --weights given: random-init weights; accuracy ~ chance)");
+            compile_random(&graph, seed)
+        }
+    };
+
+    let mut chip = match args.get("config") {
+        Some(path) => {
+            let cfg = ChipConfig::from_file(path)?;
+            println!("chip config: {}", cfg.to_json().to_string_pretty());
+            cfg.build_chip()
+        }
+        None => NeuRramChip::new(seed + 1),
+    };
+    let stats = chip
+        .program_model(matrices, &intensities(&graph),
+                       MappingStrategy::Balanced, write_verify)
+        .map_err(anyhow::Error::msg)?;
+    chip.gate_unused();
+    println!(
+        "mapped {} layers onto {} cores ({} powered); replicas: {:?}",
+        graph.layers.len(),
+        chip.plan.cores_used,
+        chip.powered_cores(),
+        chip.plan.replicas
+    );
+    if write_verify {
+        let total: u64 = stats.iter().map(|s| s.total_pulses).sum();
+        println!("write-verify: {} pulses total", total);
+    }
+
+    // ---- calibration on training-like data ----
+    let (train_imgs, _) = datasets::digits28(8, seed + 2, 0.15);
+    let shifts = calibrate_cnn_shifts(&mut chip, &graph, &train_imgs);
+    println!("calibrated shifts: {shifts:?}");
+
+    // ---- inference ----
+    chip.reset_energy();
+    let (imgs, labels) = datasets::digits28(n_test, seed + 3, 0.15);
+    let in_bits = graph.layers[0].input_bits - 1;
+    let mut logits = Vec::new();
+    for img in &imgs {
+        let q: Vec<i32> = img
+            .iter()
+            .map(|&p| quant::quantize_unit_unsigned(p, in_bits))
+            .collect();
+        logits.push(run_cnn(&mut chip, &graph, &q, &shifts));
+    }
+    let acc = metrics::accuracy(&logits, &labels);
+    println!("accuracy: {:.2}% on {} samples", acc * 100.0, n_test);
+
+    let cost = chip.cost(&EnergyParams::default());
+    println!(
+        "energy: {:.2} uJ total, {:.1} fJ/op, {:.1} TOPS/W equivalent",
+        cost.energy_pj / 1e6,
+        cost.femtojoule_per_op(),
+        cost.tops_per_watt()
+    );
+    Ok(())
+}

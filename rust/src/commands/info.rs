@@ -1,0 +1,34 @@
+//! `neurram info`: chip configuration + artifact inventory.
+
+use anyhow::Result;
+use neurram::runtime::Manifest;
+use neurram::util::cli::Args;
+use neurram::{CORELET_DIM, CORE_COLS, CORE_ROWS, CORE_WEIGHT_ROWS, NUM_CORES};
+
+pub fn run(args: &Args) -> Result<()> {
+    println!("NeuRRAM-Sim chip configuration");
+    println!("  cores                : {NUM_CORES}");
+    println!("  array per core       : {CORE_ROWS} x {CORE_COLS} 1T1R");
+    println!("  weight rows per core : {CORE_WEIGHT_ROWS} differential pairs");
+    println!("  TNSA corelets        : {CORELET_DIM} x {CORELET_DIM} (1 neuron each)");
+    println!("  input precision      : 1-6 bit signed (bit-serial)");
+    println!("  output precision     : 1-8 bit signed (charge decrement)");
+    println!("  activations          : none | relu | tanh | sigmoid | stochastic");
+
+    let dir = args.get_or("artifacts", "artifacts");
+    match Manifest::load(dir) {
+        Ok(m) => {
+            println!("\nartifacts in {dir}:");
+            for (name, a) in &m.artifacts {
+                println!("  {:<40} kind={:<12} params={}", name, a.kind,
+                         a.params.len());
+            }
+            println!("  golden specs: {}", m.golden.len());
+        }
+        Err(e) => {
+            println!("\n(no artifact manifest at {dir}: {e})");
+            println!("run `make artifacts` first for the PJRT runtime path");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! `neurram runtime-check`: load every PJRT artifact, execute the golden
+//! vectors, verify outputs.  The deployment smoke test.
+
+use anyhow::{anyhow, Result};
+use neurram::io::npz;
+use neurram::runtime::Runtime;
+use neurram::util::cli::Args;
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let mut rt = Runtime::new(dir)?;
+    println!("PJRT platform ready; {} artifacts in manifest",
+             rt.manifest.artifacts.len());
+
+    let golden = npz::load_npz(format!("{dir}/golden.npz"))?;
+    let specs: Vec<_> = rt.manifest.golden.values().cloned().collect();
+    let mut failures = 0;
+    for spec in &specs {
+        let inputs: Vec<npz::Tensor> = spec
+            .inputs
+            .iter()
+            .map(|k| {
+                golden
+                    .get(k)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("golden.npz missing {k}"))
+            })
+            .collect::<Result<_>>()?;
+        let outs = rt.execute(&spec.artifact, &inputs)?;
+        for (oi, want_key) in spec.outputs.iter().enumerate() {
+            let want = &golden[want_key];
+            let got = &outs[oi];
+            let (ok, max_err) = compare(got, want, spec.lsb_tolerance,
+                                        spec.rel_tolerance);
+            println!(
+                "{:<28} output {want_key:<16} max_err={max_err:.4} [{}]",
+                spec.artifact,
+                if ok { "OK" } else { "FAIL" }
+            );
+            if !ok {
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        return Err(anyhow!("{failures} golden check(s) failed"));
+    }
+    println!("all golden checks passed");
+    Ok(())
+}
+
+pub fn compare(
+    got: &npz::Tensor,
+    want: &npz::Tensor,
+    lsb_tol: Option<f64>,
+    rel_tol: Option<f64>,
+) -> (bool, f64) {
+    let mut max_err = 0.0f64;
+    let mut max_rel = 0.0f64;
+    for (&g, &w) in got.data.iter().zip(&want.data) {
+        let e = (g as f64 - w as f64).abs();
+        max_err = max_err.max(e);
+        let denom = (w as f64).abs().max(1.0);
+        max_rel = max_rel.max(e / denom);
+    }
+    let ok = match (lsb_tol, rel_tol) {
+        (Some(l), _) => max_err <= l + 1e-9,
+        (None, Some(r)) => max_rel <= r,
+        (None, None) => max_err <= 1e-5,
+    };
+    (ok, max_err)
+}

@@ -1,0 +1,48 @@
+//! `neurram writeverify`: programming statistics (ED Fig. 3d-f).
+
+use anyhow::Result;
+use neurram::device::{DeviceParams, RramArray, WriteVerify, WriteVerifyConfig};
+use neurram::util::cli::Args;
+use neurram::util::rng::Rng;
+use neurram::util::stats::{histogram, mean, sparkline, std_dev};
+
+pub fn run(args: &Args) -> Result<()> {
+    let cells = args.usize_or("cells", 4096);
+    let iters = args.usize_or("iterations", 3) as u32;
+    let seed = args.u64_or("seed", 7);
+    let side = (cells as f64).sqrt().ceil() as usize;
+
+    let mut rng = Rng::new(seed);
+    let params = DeviceParams::default();
+    let mut array = RramArray::new(side, side, params.clone());
+    let targets: Vec<f32> = (0..side * side)
+        .map(|i| 1.0 + 39.0 * ((i * 37 % 1000) as f32 / 1000.0))
+        .collect();
+
+    let wv = WriteVerify::new(WriteVerifyConfig { iterations: iters,
+                                                  ..Default::default() });
+    let stats = wv.program_array(&mut array, &targets, &mut rng);
+
+    println!("write-verify programming of {} cells ({} iterations):", side * side, iters);
+    println!("  success rate      : {:.2}%", 100.0 * stats.success_rate());
+    println!("  mean pulses/cell  : {:.2} (paper: ~8.5)", stats.mean_pulses());
+    let pulses: Vec<f64> = stats.pulse_counts.iter().map(|&p| p as f64).collect();
+    println!("  pulse count p50/p99: {:.0}/{:.0}",
+             neurram::util::stats::percentile(&pulses, 50.0),
+             neurram::util::stats::percentile(&pulses, 99.0));
+    let h = histogram(&pulses, 0.0, 40.0, 20);
+    println!("  pulse distribution : {}", sparkline(&h));
+
+    let devs: Vec<f64> = array
+        .g_us
+        .iter()
+        .zip(&targets)
+        .map(|(&g, &t)| (g - t) as f64)
+        .collect();
+    println!("  post-relaxation residual: mean {:+.3} uS, sigma {:.3} uS \
+              (paper: ~2 uS after 3 iterations)",
+             mean(&devs), std_dev(&devs));
+    let h = histogram(&devs, -8.0, 8.0, 24);
+    println!("  residual distribution  : {}", sparkline(&h));
+    Ok(())
+}

@@ -1,0 +1,348 @@
+//! Weight-mapping strategies onto the 48 CIM cores (paper Fig. 2a and
+//! Methods "Weight mapping strategy").
+//!
+//! Cases implemented:
+//!   1. one matrix -> one core;
+//!   2. duplication of high-intensity matrices for data parallelism;
+//!   3. diagonal merge of small matrices into one core (parallel access);
+//!   4. horizontal merge (shared rows, sequential access);
+//!   5. vertical split of tall matrices across cores (parallel partials);
+//!   6. vertical split of wide matrices to reduce IR drop.
+//!
+//! Priorities (Methods): fit everything on-chip first (no reprogramming
+//! during inference), then balance compute intensity, then respect the
+//! IR-drop split rule for wide matrices.
+
+use crate::models::ConductanceMatrix;
+use crate::{CORE_COLS, CORE_WEIGHT_ROWS};
+#[cfg(test)]
+use crate::NUM_CORES;
+
+/// A row-range segment of a layer's conductance matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Segment {
+    pub layer: String,
+    /// Row range [lo, hi) of the logical (bias-augmented) matrix.
+    pub row_lo: usize,
+    pub row_hi: usize,
+    /// Column range [lo, hi).
+    pub col_lo: usize,
+    pub col_hi: usize,
+}
+
+impl Segment {
+    pub fn rows(&self) -> usize {
+        self.row_hi - self.row_lo
+    }
+    pub fn cols(&self) -> usize {
+        self.col_hi - self.col_lo
+    }
+}
+
+/// Where one segment (or one of its replicas) lives.
+#[derive(Clone, Debug)]
+pub struct SegmentPlacement {
+    pub segment: Segment,
+    pub core: usize,
+    /// Row/col offset inside the core (merged matrices share a core).
+    pub core_row_off: usize,
+    pub core_col_off: usize,
+    /// Replica index (0 = primary; >0 = duplicated for data parallelism).
+    pub replica: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MappingStrategy {
+    /// Cases 1/5 only: split to fit, one segment per core.
+    Simple,
+    /// + duplication of high-intensity layers into spare cores (case 2).
+    Balanced,
+    /// + merging small matrices to fit big models (cases 3/4).
+    Packed,
+}
+
+/// The complete placement of a model onto the chip.
+#[derive(Clone, Debug, Default)]
+pub struct MappingPlan {
+    pub placements: Vec<SegmentPlacement>,
+    pub cores_used: usize,
+    /// layer -> replica count
+    pub replicas: Vec<(String, usize)>,
+}
+
+impl MappingPlan {
+    pub fn placements_of(&self, layer: &str) -> Vec<&SegmentPlacement> {
+        self.placements
+            .iter()
+            .filter(|p| p.segment.layer == layer)
+            .collect()
+    }
+
+    pub fn replica_count(&self, layer: &str) -> usize {
+        self.replicas
+            .iter()
+            .find(|(l, _)| l == layer)
+            .map(|(_, n)| *n)
+            .unwrap_or(1)
+    }
+}
+
+/// Split a matrix into row segments of at most CORE_WEIGHT_ROWS and
+/// column segments of at most CORE_COLS (equal-ish chunks; mirrors
+/// python `row_segments`).
+pub fn split_matrix(layer: &str, rows: usize, cols: usize) -> Vec<Segment> {
+    let seg_ranges = |n: usize, max: usize| -> Vec<(usize, usize)> {
+        let k = n.div_ceil(max).max(1);
+        let base = n / k;
+        let rem = n % k;
+        let mut out = Vec::new();
+        let mut start = 0;
+        for i in 0..k {
+            let sz = base + usize::from(i < rem);
+            out.push((start, start + sz));
+            start += sz;
+        }
+        out
+    };
+    let mut segs = Vec::new();
+    for (rl, rh) in seg_ranges(rows, CORE_WEIGHT_ROWS) {
+        for (cl, ch) in seg_ranges(cols, CORE_COLS) {
+            segs.push(Segment {
+                layer: layer.to_string(),
+                row_lo: rl,
+                row_hi: rh,
+                col_lo: cl,
+                col_hi: ch,
+            });
+        }
+    }
+    segs
+}
+
+/// Build a mapping plan for a set of compiled matrices.
+///
+/// `intensity[i]` mirrors each layer's compute intensity; spare cores are
+/// filled with replicas of the highest-intensity layers (case 2).
+pub fn plan(
+    matrices: &[ConductanceMatrix],
+    intensity: &[f64],
+    strategy: MappingStrategy,
+    num_cores: usize,
+) -> Result<MappingPlan, String> {
+    assert_eq!(matrices.len(), intensity.len());
+    // 1) split everything
+    let mut all_segs: Vec<(usize, Segment)> = Vec::new();
+    for (i, m) in matrices.iter().enumerate() {
+        for s in split_matrix(&m.layer, m.rows, m.cols) {
+            all_segs.push((i, s));
+        }
+    }
+
+    let mut placements: Vec<SegmentPlacement> = Vec::new();
+    let mut core_free: Vec<(usize, usize)> = vec![(CORE_WEIGHT_ROWS, CORE_COLS); num_cores];
+    let mut next_core = 0usize;
+
+    if all_segs.len() <= num_cores || strategy != MappingStrategy::Packed {
+        if all_segs.len() > num_cores {
+            return Err(format!(
+                "{} segments exceed {} cores; use MappingStrategy::Packed",
+                all_segs.len(),
+                num_cores
+            ));
+        }
+        for (_, s) in &all_segs {
+            placements.push(SegmentPlacement {
+                segment: s.clone(),
+                core: next_core,
+                core_row_off: 0,
+                core_col_off: 0,
+                replica: 0,
+            });
+            core_free[next_core] = (0, 0);
+            next_core += 1;
+        }
+    } else {
+        // Packed: sort big-first, first-fit with row-then-col packing
+        // (diagonal/horizontal merge approximation).
+        let mut order: Vec<usize> = (0..all_segs.len()).collect();
+        order.sort_by_key(|&i| {
+            std::cmp::Reverse(all_segs[i].1.rows() * all_segs[i].1.cols())
+        });
+        // per-core packing state: list of (row_off used, col cursor)
+        let mut core_cursor: Vec<(usize, usize)> = vec![(0, 0); num_cores];
+        for &i in &order {
+            let (_, s) = &all_segs[i];
+            let mut placed = false;
+            for core in 0..num_cores {
+                let (row_used, col_used) = core_cursor[core];
+                // try placing beside existing content (shared rows --
+                // horizontal merge, case 4)
+                if row_used.max(s.rows()) <= CORE_WEIGHT_ROWS
+                    && col_used + s.cols() <= CORE_COLS
+                {
+                    placements.push(SegmentPlacement {
+                        segment: s.clone(),
+                        core,
+                        core_row_off: 0,
+                        core_col_off: col_used,
+                        replica: 0,
+                    });
+                    core_cursor[core] =
+                        (row_used.max(s.rows()), col_used + s.cols());
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                return Err("model does not fit on chip".into());
+            }
+        }
+        next_core = core_cursor.iter().filter(|&&(r, _)| r > 0).count();
+        core_free = core_cursor
+            .iter()
+            .map(|&(r, c)| (CORE_WEIGHT_ROWS - r, CORE_COLS - c))
+            .collect();
+    }
+
+    // 2) duplication into spare cores (case 2), highest intensity first
+    let mut replicas: Vec<(String, usize)> =
+        matrices.iter().map(|m| (m.layer.clone(), 1)).collect();
+    if strategy != MappingStrategy::Simple {
+        let mut spare: Vec<usize> = (0..num_cores)
+            .filter(|&c| core_free[c] == (CORE_WEIGHT_ROWS, CORE_COLS))
+            .collect();
+        let mut by_intensity: Vec<usize> = (0..matrices.len()).collect();
+        by_intensity.sort_by(|&a, &b| {
+            intensity[b].partial_cmp(&intensity[a]).unwrap()
+        });
+        'outer: for &li in by_intensity.iter().cycle() {
+            if spare.is_empty() || intensity[li] <= 1.0 {
+                break;
+            }
+            let m = &matrices[li];
+            let segs = split_matrix(&m.layer, m.rows, m.cols);
+            if segs.len() > spare.len() {
+                // try the next layer; if none fit, stop
+                let any_fit = by_intensity.iter().any(|&lj| {
+                    intensity[lj] > 1.0
+                        && split_matrix(&matrices[lj].layer, matrices[lj].rows,
+                                        matrices[lj].cols)
+                            .len()
+                            <= spare.len()
+                });
+                if !any_fit {
+                    break 'outer;
+                }
+                continue;
+            }
+            let rep = replicas[li].1;
+            for s in segs {
+                let core = spare.pop().unwrap();
+                placements.push(SegmentPlacement {
+                    segment: s,
+                    core,
+                    core_row_off: 0,
+                    core_col_off: 0,
+                    replica: rep,
+                });
+            }
+            replicas[li].1 += 1;
+            // guard against infinite cycling once everything is saturated
+            if replicas[li].1 > 8 {
+                break;
+            }
+        }
+    }
+
+    let cores_used: usize = {
+        let mut used: Vec<bool> = vec![false; num_cores];
+        for p in &placements {
+            used[p.core] = true;
+        }
+        used.iter().filter(|&&u| u).count()
+    };
+    let _ = next_core;
+    Ok(MappingPlan { placements, cores_used, replicas })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ConductanceMatrix;
+
+    fn matrix(name: &str, rows: usize, cols: usize) -> ConductanceMatrix {
+        let w = vec![0.1f32; rows * cols];
+        ConductanceMatrix::compile(name, &w, None, rows, cols, 7, 40.0, 1.0,
+                                   None)
+    }
+
+    #[test]
+    fn split_exact_cover() {
+        // every (row, col) of the matrix is covered exactly once
+        for (r, c) in [(100, 200), (300, 600), (128, 256), (129, 257)] {
+            let segs = split_matrix("l", r, c);
+            let mut cover = vec![0u8; r * c];
+            for s in &segs {
+                assert!(s.rows() <= CORE_WEIGHT_ROWS);
+                assert!(s.cols() <= CORE_COLS);
+                for i in s.row_lo..s.row_hi {
+                    for j in s.col_lo..s.col_hi {
+                        cover[i * c + j] += 1;
+                    }
+                }
+            }
+            assert!(cover.iter().all(|&n| n == 1), "shape {r}x{c}");
+        }
+    }
+
+    #[test]
+    fn case1_single_core_fit() {
+        let m = [matrix("a", 64, 128)];
+        let p = plan(&m, &[1.0], MappingStrategy::Simple, NUM_CORES).unwrap();
+        assert_eq!(p.placements.len(), 1);
+        assert_eq!(p.cores_used, 1);
+    }
+
+    #[test]
+    fn case5_vertical_split_parallel() {
+        let m = [matrix("tall", 300, 100)];
+        let p = plan(&m, &[1.0], MappingStrategy::Simple, NUM_CORES).unwrap();
+        assert_eq!(p.placements.len(), 3); // 300 rows -> 3 segments
+        let cores: Vec<usize> = p.placements.iter().map(|q| q.core).collect();
+        let mut dedup = cores.clone();
+        dedup.dedup();
+        assert_eq!(cores.len(), dedup.len(), "segments on distinct cores");
+    }
+
+    #[test]
+    fn case2_duplication_uses_spare_cores() {
+        let ms = [matrix("hot", 64, 64), matrix("cold", 64, 64)];
+        let p = plan(&ms, &[4.0, 1.0], MappingStrategy::Balanced, 8).unwrap();
+        assert!(p.replica_count("hot") > 1, "hot layer should replicate");
+        assert_eq!(p.replica_count("cold"), 1);
+    }
+
+    #[test]
+    fn packed_merges_small_matrices() {
+        // 6 small matrices on 3 cores requires merging
+        let ms: Vec<ConductanceMatrix> =
+            (0..6).map(|i| matrix(&format!("m{i}"), 32, 64)).collect();
+        let p = plan(&ms, &vec![1.0; 6], MappingStrategy::Packed, 3).unwrap();
+        assert!(p.cores_used <= 3);
+        assert_eq!(p.placements.len(), 6);
+        // merged placements have distinct column offsets on a shared core
+        let mut per_core: std::collections::BTreeMap<usize, Vec<usize>> =
+            Default::default();
+        for q in &p.placements {
+            per_core.entry(q.core).or_default().push(q.core_col_off);
+        }
+        assert!(per_core.values().any(|offs| offs.len() > 1));
+    }
+
+    #[test]
+    fn overflow_errors() {
+        let ms: Vec<ConductanceMatrix> =
+            (0..4).map(|i| matrix(&format!("m{i}"), 128, 256)).collect();
+        assert!(plan(&ms, &vec![1.0; 4], MappingStrategy::Packed, 2).is_err());
+    }
+}

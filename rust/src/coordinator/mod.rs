@@ -1,0 +1,11 @@
+//! The 48-core chip coordinator: weight-mapping strategies (paper
+//! Fig. 2a cases 1-6), the multi-core scheduler, and the chip-level
+//! inference driver with power gating and energy aggregation.
+
+pub mod chip;
+pub mod mapping;
+pub mod scheduler;
+
+pub use chip::NeuRramChip;
+pub use mapping::{MappingPlan, MappingStrategy, Segment, SegmentPlacement};
+pub use scheduler::Scheduler;

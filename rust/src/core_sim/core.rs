@@ -1,0 +1,456 @@
+//! One CIM core: 256x256 1T1R RRAM array + 256 voltage-mode neurons in
+//! the TNSA, with the three operating modes of the paper (weight
+//! programming, neuron testing, MVM) and full energy/latency accounting.
+//!
+//! Weights occupy differential row pairs: a core stores a logical matrix
+//! of up to 128 (pair) rows x 256 columns.  MVMs run bit-serially:
+//! `input_phases` ternary pulse trains, `2^k` sample/integrate cycles per
+//! plane, then the per-neuron charge-decrement conversion with global
+//! early stop.
+
+use super::crossbar::{Crossbar, CrossbarNonIdealities};
+use super::neuron::{convert, Activation, NeuronConfig};
+use super::tnsa::{Dataflow, Tnsa};
+use crate::device::{DeviceParams, RramArray, WriteVerify, WriteVerifyConfig};
+use crate::energy::{EnergyCounters, EnergyModel, EnergyParams, MvmCost};
+use crate::util::lfsr::LfsrChains;
+use crate::util::rng::Rng;
+use crate::{CORE_COLS, CORE_ROWS, CORE_WEIGHT_ROWS};
+
+/// MVM direction through the TNSA (paper Fig. 2e).
+pub type MvmDirection = Dataflow;
+
+/// Aggregate per-core statistics.
+#[derive(Clone, Debug, Default)]
+pub struct CoreStats {
+    pub mvms: u64,
+    pub programming_pulses: u64,
+    pub energy: EnergyCounters,
+}
+
+/// One compute-in-memory core.
+pub struct CimCore {
+    pub id: usize,
+    /// Physical 256x256 array (row 2r = g+, row 2r+1 = g- of pair r).
+    pub array: RramArray,
+    /// Logical rows (pairs) and columns in use by the mapped matrix.
+    pub used_rows: usize,
+    pub used_cols: usize,
+    /// Cached forward crossbar (rebuilt after programming).
+    xbar_fwd: Option<Crossbar>,
+    /// Cached backward (transposed) crossbar.
+    xbar_bwd: Option<Crossbar>,
+    pub nonideal: CrossbarNonIdealities,
+    pub lfsr: LfsrChains,
+    pub energy: EnergyModel,
+    pub stats: CoreStats,
+    /// Power gating (paper: idle cores are clock/power gated; RRAM state
+    /// is non-volatile and survives).
+    pub powered_on: bool,
+    pub g_max_us: f64,
+    pub v_read: f64,
+}
+
+impl CimCore {
+    pub fn new(id: usize, device: DeviceParams) -> Self {
+        let g_max = device.g_max_us;
+        CimCore {
+            id,
+            array: RramArray::new(CORE_ROWS, CORE_COLS, device),
+            used_rows: 0,
+            used_cols: 0,
+            xbar_fwd: None,
+            xbar_bwd: None,
+            nonideal: CrossbarNonIdealities::default(),
+            lfsr: LfsrChains::new(CORE_COLS, 0x1357 ^ id as u16),
+            energy: EnergyModel::default(),
+            stats: CoreStats::default(),
+            powered_on: false,
+            g_max_us: g_max,
+            v_read: 0.5,
+        }
+    }
+
+    pub fn power_on(&mut self) {
+        self.powered_on = true;
+    }
+
+    pub fn power_off(&mut self) {
+        self.powered_on = false; // RRAM weights retained (non-volatile)
+    }
+
+    // ------------------------------------------------------------------
+    // Weight-programming mode
+    // ------------------------------------------------------------------
+
+    /// Program a logical weight matrix [rows x cols] of target
+    /// *differential conductances* (g+, g-) via write-verify; models
+    /// relaxation.  Returns programming statistics.
+    pub fn program(
+        &mut self,
+        g_pos_us: &[f32],
+        g_neg_us: &[f32],
+        rows: usize,
+        cols: usize,
+        wv_cfg: WriteVerifyConfig,
+        rng: &mut Rng,
+    ) -> crate::device::ProgramStats {
+        assert!(rows <= CORE_WEIGHT_ROWS, "rows {rows} > 128 pairs");
+        assert!(cols <= CORE_COLS, "cols {cols} > 256");
+        assert_eq!(g_pos_us.len(), rows * cols);
+
+        // interleave pairs into the physical array target map
+        let g_min = self.array.params.g_min_us as f32;
+        let mut targets = vec![g_min; CORE_ROWS * CORE_COLS];
+        for r in 0..rows {
+            for c in 0..cols {
+                targets[(2 * r) * CORE_COLS + c] = g_pos_us[r * cols + c];
+                targets[(2 * r + 1) * CORE_COLS + c] = g_neg_us[r * cols + c];
+            }
+        }
+        let wv = WriteVerify::new(wv_cfg);
+        let stats = wv.program_array(&mut self.array, &targets, rng);
+        self.stats.programming_pulses += stats.total_pulses;
+        self.used_rows = rows;
+        self.used_cols = cols;
+        self.rebuild_crossbars();
+        stats
+    }
+
+    /// Load ideal conductances directly (bypasses write-verify; used for
+    /// noise-free baselines and fast experiments).
+    pub fn load_ideal(
+        &mut self,
+        g_pos_us: &[f32],
+        g_neg_us: &[f32],
+        rows: usize,
+        cols: usize,
+    ) {
+        assert!(rows <= CORE_WEIGHT_ROWS && cols <= CORE_COLS);
+        let g_min = self.array.params.g_min_us as f32;
+        self.array.g_us.fill(g_min);
+        for r in 0..rows {
+            for c in 0..cols {
+                self.array.g_us[(2 * r) * CORE_COLS + c] = g_pos_us[r * cols + c];
+                self.array.g_us[(2 * r + 1) * CORE_COLS + c] =
+                    g_neg_us[r * cols + c];
+            }
+        }
+        self.used_rows = rows;
+        self.used_cols = cols;
+        self.rebuild_crossbars();
+    }
+
+    /// Extract the programmed (relaxed) differential conductances.
+    pub fn read_conductances(&self) -> (Vec<f32>, Vec<f32>) {
+        let (r, c) = (self.used_rows, self.used_cols);
+        let mut gp = vec![0.0f32; r * c];
+        let mut gn = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                gp[i * c + j] = self.array.g_us[(2 * i) * CORE_COLS + j];
+                gn[i * c + j] = self.array.g_us[(2 * i + 1) * CORE_COLS + j];
+            }
+        }
+        (gp, gn)
+    }
+
+    fn rebuild_crossbars(&mut self) {
+        let (gp, gn) = self.read_conductances();
+        let mut fwd = Crossbar::from_conductances(
+            &gp, &gn, self.used_rows, self.used_cols, self.g_max_us,
+            self.v_read,
+        );
+        fwd.nonideal = self.nonideal.clone();
+        self.xbar_bwd = Some(fwd.transposed(&gp, &gn, self.g_max_us));
+        self.xbar_fwd = Some(fwd);
+    }
+
+    /// Re-apply non-ideality settings to the cached crossbars.
+    pub fn set_nonidealities(&mut self, n: CrossbarNonIdealities) {
+        self.nonideal = n;
+        if self.xbar_fwd.is_some() {
+            self.rebuild_crossbars();
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // MVM mode
+    // ------------------------------------------------------------------
+
+    /// Per-column de-normalization factors: den_j * v_decr * w_max /
+    /// (v_read * g_max) -- multiply digital outputs by this to recover
+    /// x @ w in weight units.
+    pub fn mvm_scales(&self, cfg: &NeuronConfig, w_max: f64, dir: MvmDirection) -> Vec<f64> {
+        let xb = self.xbar(dir);
+        xb.denominators()
+            .iter()
+            .map(|&den| {
+                den as f64 * cfg.v_decr() * w_max / (self.v_read * self.g_max_us)
+            })
+            .collect()
+    }
+
+    fn xbar(&self, dir: MvmDirection) -> &Crossbar {
+        match dir {
+            Dataflow::Forward => self.xbar_fwd.as_ref().expect("not programmed"),
+            Dataflow::Backward | Dataflow::Recurrent => {
+                self.xbar_bwd.as_ref().expect("not programmed")
+            }
+        }
+    }
+
+    /// Execute one MVM: integer inputs -> integer neuron outputs, with
+    /// cycle-level energy accounting.
+    ///
+    /// `x` length must match the direction's input width (used_rows
+    /// forward, used_cols backward).  Stochastic activation draws LFSR
+    /// noise per output (amplitude `stoch_amp_v`).
+    pub fn mvm(
+        &mut self,
+        x: &[i32],
+        cfg: &NeuronConfig,
+        dir: MvmDirection,
+        stoch_amp_v: f64,
+        rng: &mut Rng,
+    ) -> Vec<i32> {
+        assert!(self.powered_on, "core {} is power-gated", self.id);
+        let (in_w, out_w) = match dir {
+            Dataflow::Forward => (self.used_rows, self.used_cols),
+            _ => (self.used_cols, self.used_rows),
+        };
+        assert_eq!(x.len(), in_w, "input width mismatch");
+        let in_mag = cfg.in_mag_max();
+        debug_assert!(x.iter().all(|&v| v.abs() <= in_mag));
+
+        // ---- input phase: bit-serial planes ----
+        // The analog system is linear, so the integrated voltage equals
+        // the full-integer settle; we compute it in one pass and charge
+        // the energy/latency of the bit-serial schedule.
+        let mut dv = vec![0.0f32; out_w];
+        {
+            let xb = self.xbar(dir);
+            xb.settle_int(x, &mut dv);
+        }
+        let phases = cfg.input_phases() as u64;
+        let sample_cycles = cfg.sample_cycles() as u64;
+        let active_wires = x.iter().filter(|&&v| v != 0).count() as u64;
+
+        // coupling noise (non-ideality vi): one draw per output, scaled by
+        // simultaneously switching wire fraction; skip the per-output
+        // draws entirely when the mechanism is disabled (hot path)
+        let active_frac = active_wires as f64 / in_w.max(1) as f64;
+        let coupling_on = self.nonideal.coupling_sigma_v > 0.0;
+        let noise: Vec<f64> = if coupling_on {
+            let xb = self.xbar(dir);
+            (0..out_w).map(|_| xb.coupling_noise(active_frac, rng)).collect()
+        } else {
+            Vec::new()
+        };
+
+        // ---- output phase: per-neuron conversion ----
+        self.lfsr.step();
+        let mut out = vec![0i32; out_w];
+        let mut max_steps = 0u32;
+        let mut total_cmp = 0u64;
+        let mut total_dec = 0u64;
+        for j in 0..out_w {
+            let nz = if cfg.activation == Activation::Stochastic {
+                self.lfsr.noise(j % CORE_COLS, stoch_amp_v as f32) as f64
+            } else if coupling_on {
+                noise[j]
+            } else {
+                0.0
+            };
+            let (y, cyc) = convert(dv[j] as f64, cfg, nz);
+            out[j] = y;
+            total_cmp += cyc.comparisons as u64;
+            total_dec += cyc.decrement_steps as u64;
+            max_steps = max_steps.max(cyc.decrement_steps);
+        }
+
+        // ---- energy + latency accounting ----
+        let c = &mut self.energy.counters;
+        // all WLs within the input vector length toggle each phase
+        c.wl_toggles += in_w as u64 * phases;
+        c.input_wire_phases += active_wires * phases;
+        c.sample_cycles += out_w as u64 * sample_cycles;
+        c.comparisons += total_cmp;
+        c.decrement_steps += total_dec;
+        c.ctrl_phases += phases;
+        c.reg_writes += out_w as u64;
+        c.macs += (in_w * out_w) as u64;
+        let p = EnergyParams::default();
+        // latency: settle per phase + sampling + ADC (early stop: the
+        // conversion runs until the LAST neuron flips) + readout
+        c.busy_ns += phases as f64 * p.t_settle_ns
+            + sample_cycles as f64 * p.t_sample_ns
+            + (1 + max_steps) as f64 * p.t_adc_step_ns
+            + p.t_readout_ns;
+
+        self.stats.mvms += 1;
+        out
+    }
+
+    /// Cost of the accumulated workload under the given pricing.
+    pub fn cost(&self, p: &EnergyParams) -> MvmCost {
+        self.energy.cost(p)
+    }
+
+    /// Neuron-testing mode: drive the neuron directly from the BL/SL
+    /// driver, bypassing the array (used for ADC offset calibration).
+    pub fn neuron_test(&self, v_in: f64, cfg: &NeuronConfig) -> i32 {
+        convert(v_in, cfg, 0.0).0
+    }
+}
+
+/// TNSA view shared by the cores (topology is identical on every core).
+pub fn tnsa() -> Tnsa {
+    Tnsa::default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn programmed_core(rows: usize, cols: usize, seed: u64) -> (CimCore, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mut core = CimCore::new(0, DeviceParams::default());
+        core.power_on();
+        let n = rows * cols;
+        let mut gp = vec![0.0f32; n];
+        let mut gn = vec![0.0f32; n];
+        for i in 0..n {
+            let w = rng.normal() as f32;
+            gp[i] = if w > 0.0 { (40.0 * w).min(40.0).max(1.0) } else { 1.0 };
+            gn[i] = if w < 0.0 { (-40.0 * w).min(40.0).max(1.0) } else { 1.0 };
+        }
+        core.load_ideal(&gp, &gn, rows, cols);
+        (core, gp, gn)
+    }
+
+    #[test]
+    fn mvm_matches_reference_formula() {
+        let (mut core, gp, gn) = programmed_core(16, 8, 42);
+        let mut rng = Rng::new(1);
+        let cfg = NeuronConfig::default();
+        let x: Vec<i32> = (0..16).map(|i| (i % 15) as i32 - 7).collect();
+        let y = core.mvm(&x, &cfg, Dataflow::Forward, 0.0, &mut rng);
+        // reference: floor(|v|/v_decr) with v = vr * num/den
+        for j in 0..8 {
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for r in 0..16 {
+                num += x[r] as f64 * (gp[r * 8 + j] - gn[r * 8 + j]) as f64;
+                den += (gp[r * 8 + j] + gn[r * 8 + j]) as f64;
+            }
+            let v = 0.5 * num / den;
+            let mag = (v.abs() / cfg.v_decr()).floor().min(127.0) as i32;
+            let want = if v > 0.0 { mag } else { -mag };
+            assert_eq!(y[j], want, "col {j}");
+        }
+    }
+
+    #[test]
+    fn backward_direction_transposes() {
+        let (mut core, gp, gn) = programmed_core(8, 12, 43);
+        let mut rng = Rng::new(2);
+        let cfg = NeuronConfig::default();
+        let x: Vec<i32> = (0..12).map(|i| (i % 5) as i32 - 2).collect();
+        let y = core.mvm(&x, &cfg, Dataflow::Backward, 0.0, &mut rng);
+        assert_eq!(y.len(), 8);
+        // spot check output 0 against the transposed formula
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for c in 0..12 {
+            num += x[c] as f64 * (gp[c] as f64 - gn[c] as f64); // row 0
+            den += (gp[c] + gn[c]) as f64;
+        }
+        let v = 0.5 * num / den;
+        let mag = (v.abs() / cfg.v_decr()).floor().min(127.0) as i32;
+        let want = if v > 0.0 { mag } else if v < 0.0 { -mag } else { 0 };
+        assert_eq!(y[0], want);
+    }
+
+    #[test]
+    fn energy_accumulates_per_mvm() {
+        let (mut core, _, _) = programmed_core(16, 8, 44);
+        let mut rng = Rng::new(3);
+        let cfg = NeuronConfig::default();
+        let x = vec![1i32; 16];
+        core.mvm(&x, &cfg, Dataflow::Forward, 0.0, &mut rng);
+        let e1 = core.energy.counters;
+        core.mvm(&x, &cfg, Dataflow::Forward, 0.0, &mut rng);
+        let e2 = core.energy.counters;
+        assert_eq!(e2.wl_toggles, 2 * e1.wl_toggles);
+        assert!(e2.busy_ns > e1.busy_ns);
+        assert_eq!(e2.macs, 2 * 16 * 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "power-gated")]
+    fn power_gated_core_rejects_mvm() {
+        let (mut core, _, _) = programmed_core(4, 4, 45);
+        core.power_off();
+        let mut rng = Rng::new(4);
+        core.mvm(&[1, 0, 0, 1], &NeuronConfig::default(), Dataflow::Forward,
+                 0.0, &mut rng);
+    }
+
+    #[test]
+    fn write_verify_program_then_mvm() {
+        let mut rng = Rng::new(46);
+        let mut core = CimCore::new(1, DeviceParams::default());
+        core.power_on();
+        let rows = 8;
+        let cols = 16;
+        let mut gp = vec![1.0f32; rows * cols];
+        let mut gn = vec![1.0f32; rows * cols];
+        for i in 0..rows * cols {
+            if i % 3 == 0 {
+                gp[i] = 20.0;
+            } else if i % 3 == 1 {
+                gn[i] = 20.0;
+            }
+        }
+        let stats = core.program(&gp, &gn, rows, cols,
+                                 WriteVerifyConfig::default(), &mut rng);
+        assert!(stats.success_rate() > 0.95);
+        let x = vec![3i32; rows];
+        let y = core.mvm(&x, &NeuronConfig::default(), Dataflow::Forward,
+                         0.0, &mut rng);
+        assert_eq!(y.len(), cols);
+        // programmed (noisy) MVM correlates with ideal-weight MVM
+        let mut ideal = CimCore::new(2, DeviceParams::default());
+        ideal.power_on();
+        ideal.load_ideal(&gp, &gn, rows, cols);
+        let y2 = ideal.mvm(&x, &NeuronConfig::default(), Dataflow::Forward,
+                           0.0, &mut rng);
+        let dot: i64 = y.iter().zip(&y2).map(|(&a, &b)| a as i64 * b as i64).sum();
+        assert!(dot > 0, "programmed vs ideal outputs anti-correlated");
+    }
+
+    #[test]
+    fn stochastic_mode_uses_lfsr() {
+        let (mut core, _, _) = programmed_core(16, 16, 47);
+        let mut rng = Rng::new(5);
+        let cfg = NeuronConfig {
+            activation: Activation::Stochastic,
+            input_bits: 2,
+            output_bits: 1,
+            ..Default::default()
+        };
+        let x = vec![0i32; 16]; // zero input -> pure noise decides
+        let mut flips = 0;
+        let mut last = -1i32;
+        for _ in 0..64 {
+            let y = core.mvm(&x, &cfg, Dataflow::Forward, 0.2, &mut rng);
+            assert!(y.iter().all(|&v| v == 0 || v == 1));
+            if y[0] != last {
+                flips += 1;
+                last = y[0];
+            }
+        }
+        assert!(flips > 4, "LFSR noise should toggle outputs");
+    }
+}

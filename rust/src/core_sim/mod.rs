@@ -1,0 +1,15 @@
+//! One CIM core: the Transposable Neurosynaptic Array (TNSA), the
+//! voltage-mode neuron circuit, the analog crossbar settling model, and a
+//! conventional current-mode sensing baseline for comparisons.
+
+pub mod core;
+pub mod crossbar;
+pub mod current_mode;
+pub mod neuron;
+pub mod periphery;
+pub mod tnsa;
+
+pub use core::{CimCore, CoreStats, MvmDirection};
+pub use crossbar::{Crossbar, CrossbarNonIdealities};
+pub use neuron::{Activation, AdcCycles, NeuronConfig};
+pub use tnsa::Tnsa;

@@ -1,0 +1,262 @@
+//! The voltage-mode neuron circuit (paper Fig. 2h, Extended Data Fig. 4).
+//!
+//! A single amplifier is re-configured through four phases:
+//! sample -> integrate -> compare (sign bit) -> charge-decrement
+//! (magnitude bits).  This module is the cycle-level model: it produces
+//! both the digital output and the cycle counts the energy model charges.
+//!
+//! The arithmetic contract matches ``python/compile/kernels/ref.py``
+//! exactly: magnitude = floor(|v| / v_decr) clipped to out_mag_max, with
+//! ReLU / tanh / sigmoid / stochastic variants folded into conversion.
+
+pub const N_MAX_DECREMENT: u32 = 128;
+/// PWL tanh compression break points (counter values), paper Methods.
+pub const TANH_BREAKS: (u32, u32, u32) = (35, 40, 43);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+    Tanh,
+    Sigmoid,
+    /// Probabilistic sampling: LFSR noise is injected pre-comparison and
+    /// only the sign bit is produced (binary output).
+    Stochastic,
+}
+
+impl Activation {
+    pub fn parse(s: &str) -> Option<Activation> {
+        Some(match s {
+            "none" => Activation::None,
+            "relu" => Activation::Relu,
+            "tanh" => Activation::Tanh,
+            "sigmoid" => Activation::Sigmoid,
+            "stochastic" => Activation::Stochastic,
+            _ => return None,
+        })
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct NeuronConfig {
+    pub input_bits: u32,   // 1..6
+    pub output_bits: u32,  // 1..8
+    pub v_read: f64,
+    /// ADC LSB as a fraction of v_read (v_decr = frac * v_read).
+    pub adc_lsb_frac: f64,
+    pub activation: Activation,
+    /// ADC offset (cancelled by calibration; non-ideality (vii)).
+    pub offset_v: f64,
+}
+
+impl Default for NeuronConfig {
+    fn default() -> Self {
+        NeuronConfig {
+            input_bits: 4,
+            output_bits: 8,
+            v_read: 0.5,
+            adc_lsb_frac: 1.0 / 64.0,
+            activation: Activation::None,
+            offset_v: 0.0,
+        }
+    }
+}
+
+impl NeuronConfig {
+    pub fn v_decr(&self) -> f64 {
+        self.adc_lsb_frac * self.v_read
+    }
+
+    pub fn out_mag_max(&self) -> u32 {
+        ((1u32 << (self.output_bits - 1)) - 1).min(N_MAX_DECREMENT)
+    }
+
+    pub fn in_mag_max(&self) -> i32 {
+        if self.input_bits <= 1 {
+            1
+        } else {
+            (1 << (self.input_bits - 1)) - 1
+        }
+    }
+
+    /// Input phases (pulse trains) for n-bit signed inputs: n-1, min 1.
+    pub fn input_phases(&self) -> u32 {
+        self.input_bits.saturating_sub(1).max(1)
+    }
+
+    /// Total sample+integrate cycles: 2^(n-1) - 1, min 1.
+    pub fn sample_cycles(&self) -> u32 {
+        ((1u32 << self.input_phases()) - 1).max(1)
+    }
+}
+
+/// Cycle counts of one analog-to-digital conversion (energy accounting).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdcCycles {
+    pub comparisons: u32,
+    pub decrement_steps: u32,
+}
+
+/// PWL compression of the decrement counter (tanh/sigmoid schedule).
+pub fn pwl_compress(k: u32, mag_max: u32) -> u32 {
+    let (b1, b2, b3) = TANH_BREAKS;
+    let k1 = b1;
+    let k2 = k1 + 2 * (b2 - b1);
+    let k3 = k2 + 3 * (b3 - b2);
+    let c = if k <= k1 {
+        k
+    } else if k <= k2 {
+        b1 + (k - k1) / 2
+    } else if k <= k3 {
+        b2 + (k - k2) / 3
+    } else {
+        b3 + (k - k3) / 4
+    };
+    c.min(mag_max)
+}
+
+/// Convert one settled+integrated voltage to a digital output.
+///
+/// `noise_v` is analog-domain noise added before the sign comparison
+/// (LFSR injection for stochastic mode, or read noise).
+/// Returns (digital output, cycle counts).
+pub fn convert(v: f64, cfg: &NeuronConfig, noise_v: f64) -> (i32, AdcCycles) {
+    let v = v + noise_v + cfg.offset_v;
+    let mut cyc = AdcCycles { comparisons: 1, decrement_steps: 0 };
+
+    if cfg.activation == Activation::Stochastic {
+        // sign comparison only; binary output in {0, 1}
+        return ((v > 0.0) as i32, cyc);
+    }
+
+    let sign = if v > 0.0 {
+        1
+    } else if v < 0.0 {
+        -1
+    } else {
+        0
+    };
+
+    if cfg.activation == Activation::Relu && sign <= 0 {
+        // negative sign-bit skips the decrement phase entirely (energy win)
+        return (0, cyc);
+    }
+    if sign == 0 {
+        return (0, cyc);
+    }
+
+    // charge decrement: the comparator flips on the step whose cumulative
+    // decrement first exceeds |v|; closed form of the step count (hot
+    // path -- identical cycle counts to the literal state machine)
+    let mag_max = cfg.out_mag_max();
+    let v_decr = cfg.v_decr();
+    let steps = ((v.abs() / v_decr) as u32).min(mag_max);
+    cyc.decrement_steps += steps;
+    cyc.comparisons += steps;
+
+    let out = match cfg.activation {
+        Activation::None | Activation::Relu => sign * steps as i32,
+        Activation::Tanh => sign * pwl_compress(steps, mag_max) as i32,
+        Activation::Sigmoid => {
+            let t = sign * pwl_compress(steps, mag_max) as i32;
+            (t + mag_max as i32).div_euclid(2)
+        }
+        Activation::Stochastic => unreachable!(),
+    };
+    (out, cyc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(act: Activation) -> NeuronConfig {
+        NeuronConfig { activation: act, ..Default::default() }
+    }
+
+    #[test]
+    fn quantization_matches_floor_contract() {
+        let c = cfg(Activation::None);
+        let lsb = c.v_decr();
+        for (v, want) in [
+            (0.0, 0),
+            (lsb * 0.99, 0),
+            (lsb * 1.01, 1),
+            (-lsb * 2.5, -2),
+            (lsb * 500.0, 127), // clipped at out_mag_max
+        ] {
+            let (y, _) = convert(v, &c, 0.0);
+            assert_eq!(y, want, "v={v}");
+        }
+    }
+
+    #[test]
+    fn relu_skips_negative() {
+        let c = cfg(Activation::Relu);
+        let (y, cyc) = convert(-0.3, &c, 0.0);
+        assert_eq!(y, 0);
+        assert_eq!(cyc.decrement_steps, 0); // energy saved
+        let (y, _) = convert(0.3, &c, 0.0);
+        assert!(y > 0);
+    }
+
+    #[test]
+    fn early_stop_bounds_cycles() {
+        let c = cfg(Activation::None);
+        let (_, cyc) = convert(0.004, &c, 0.0); // small voltage
+        assert!(cyc.decrement_steps <= 1);
+        let (_, cyc) = convert(10.0, &c, 0.0); // huge voltage clips
+        assert_eq!(cyc.decrement_steps, c.out_mag_max());
+    }
+
+    #[test]
+    fn pwl_schedule() {
+        assert_eq!(pwl_compress(10, 127), 10);
+        assert_eq!(pwl_compress(35, 127), 35);
+        assert_eq!(pwl_compress(37, 127), 36); // every 2 steps
+        assert_eq!(pwl_compress(45, 127), 40);
+        assert_eq!(pwl_compress(48, 127), 41); // every 3 steps
+        assert_eq!(pwl_compress(54, 127), 43);
+        assert_eq!(pwl_compress(58, 127), 44); // every 4 steps
+    }
+
+    #[test]
+    fn sigmoid_in_range() {
+        let c = NeuronConfig {
+            activation: Activation::Sigmoid,
+            ..Default::default()
+        };
+        for v in [-1.0, -0.01, 0.0, 0.01, 1.0] {
+            let (y, _) = convert(v, &c, 0.0);
+            assert!((0..=c.out_mag_max() as i32).contains(&y), "v={v} y={y}");
+        }
+    }
+
+    #[test]
+    fn stochastic_is_binary_and_noise_sensitive() {
+        let c = cfg(Activation::Stochastic);
+        assert_eq!(convert(0.01, &c, 0.0).0, 1);
+        assert_eq!(convert(0.01, &c, -0.02).0, 0);
+        assert_eq!(convert(-0.5, &c, 0.0).0, 0);
+    }
+
+    #[test]
+    fn bit_serial_cycle_counts() {
+        let c = NeuronConfig { input_bits: 4, ..Default::default() };
+        assert_eq!(c.input_phases(), 3);
+        assert_eq!(c.sample_cycles(), 7); // 2^(4-1) - 1
+        let c1 = NeuronConfig { input_bits: 1, ..Default::default() };
+        assert_eq!(c1.input_phases(), 1);
+        assert_eq!(c1.sample_cycles(), 1);
+    }
+
+    #[test]
+    fn offset_cancellation() {
+        let mut c = cfg(Activation::None);
+        c.offset_v = 0.01;
+        let (y_off, _) = convert(0.05, &c, 0.0);
+        c.offset_v = 0.0;
+        let (y_ref, _) = convert(0.05, &c, 0.0);
+        assert!(y_off != y_ref); // offset visibly shifts the code
+    }
+}

@@ -1,0 +1,255 @@
+//! Peripheral driver circuits and operating modes (paper Extended Data
+//! Fig. 1): the WL/BL/SL register files, the pass-gate drivers that put
+//! one of the rail voltages on each wire, the delay-line pulse
+//! generator, and the three core operating modes (weight programming,
+//! neuron testing, MVM).
+//!
+//! The analog consequences are modelled in `crossbar.rs`/`neuron.rs`;
+//! this module models the *digital control view*: which voltage each
+//! driver selects for a given register state and mode, which is what the
+//! controller block sequences.
+
+use crate::CORE_ROWS;
+
+/// Rail voltages available to the pass-gate drivers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Rail {
+    Gnd,
+    VRef,
+    VRefPlusRead,
+    VRefMinusRead,
+    VSet(f64),
+    VReset(f64),
+    VRead,
+    Float,
+}
+
+impl Rail {
+    /// Driver output voltage given the chip bias settings.
+    pub fn volts(&self, v_ref: f64, v_read: f64) -> f64 {
+        match self {
+            Rail::Gnd => 0.0,
+            Rail::VRef => v_ref,
+            Rail::VRefPlusRead => v_ref + v_read,
+            Rail::VRefMinusRead => v_ref - v_read,
+            Rail::VSet(v) | Rail::VReset(v) => *v,
+            Rail::VRead => v_read,
+            Rail::Float => f64::NAN, // high-impedance
+        }
+    }
+}
+
+/// Core operating modes (ED Fig. 1a-c).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OperatingMode {
+    /// Random-access read/write of individual cells.
+    WeightProgramming,
+    /// Neurons driven directly from the drivers, WLs at GND.
+    NeuronTesting,
+    /// Matrix-vector multiplication.
+    Mvm,
+}
+
+/// Per-wire 2-bit input register state during MVM: the paper drives each
+/// wire to one of three levels through a one-hot decoded pass gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriveState {
+    Zero,     // V_ref
+    Plus,     // V_ref + V_read
+    Minus,    // V_ref - V_read
+}
+
+impl DriveState {
+    pub fn from_input(x: i32) -> DriveState {
+        match x.signum() {
+            1 => DriveState::Plus,
+            -1 => DriveState::Minus,
+            _ => DriveState::Zero,
+        }
+    }
+
+    pub fn rail(&self) -> Rail {
+        match self {
+            DriveState::Zero => Rail::VRef,
+            DriveState::Plus => Rail::VRefPlusRead,
+            DriveState::Minus => Rail::VRefMinusRead,
+        }
+    }
+}
+
+/// Register file along one edge of the array (BL, SL or WL registers).
+/// Writable from the external interface (SPI / random access) and from
+/// the neurons (result readout).
+#[derive(Clone, Debug)]
+pub struct RegisterFile {
+    pub bits: Vec<u8>,
+}
+
+impl RegisterFile {
+    pub fn new(n: usize) -> Self {
+        RegisterFile { bits: vec![0; n] }
+    }
+
+    /// Random-access single-bit write via the row/column decoder
+    /// (weight-programming mode: select exactly one line).
+    pub fn select_one(&mut self, idx: usize) {
+        self.bits.fill(0);
+        self.bits[idx] = 1;
+    }
+
+    /// Neuron writes its digital output back through its switch.
+    pub fn write_from_neuron(&mut self, idx: usize, value: u8) {
+        self.bits[idx] = value;
+    }
+
+    /// SPI-style bulk load.
+    pub fn load(&mut self, values: &[u8]) {
+        assert_eq!(values.len(), self.bits.len());
+        self.bits.copy_from_slice(values);
+    }
+}
+
+/// Delay-line based pulse generator: tunable width 1-10 ns (paper).
+#[derive(Clone, Copy, Debug)]
+pub struct PulseGenerator {
+    pub width_ns: f64,
+}
+
+impl PulseGenerator {
+    pub fn new(width_ns: f64) -> Self {
+        assert!((1.0..=10.0).contains(&width_ns),
+                "pulse width out of the delay line's 1-10 ns range");
+        PulseGenerator { width_ns }
+    }
+}
+
+/// The WL/BL/SL driver logic: maps (mode, register state) -> rail per
+/// wire, mirroring the ED Fig. 1 tables.
+pub struct Periphery {
+    pub mode: OperatingMode,
+    pub wl_regs: RegisterFile,
+    pub bl_regs: RegisterFile,
+    pub sl_regs: RegisterFile,
+    pub pulse: PulseGenerator,
+}
+
+impl Periphery {
+    pub fn new() -> Self {
+        Periphery {
+            mode: OperatingMode::Mvm,
+            wl_regs: RegisterFile::new(CORE_ROWS),
+            bl_regs: RegisterFile::new(CORE_ROWS),
+            sl_regs: RegisterFile::new(crate::CORE_COLS),
+            pulse: PulseGenerator::new(10.0),
+        }
+    }
+
+    /// WL driver rail for wordline `i`.
+    pub fn wl_rail(&self, i: usize, input_len: usize) -> Rail {
+        match self.mode {
+            OperatingMode::WeightProgramming => {
+                if self.wl_regs.bits[i] != 0 {
+                    Rail::VRead // selected row's gate opened
+                } else {
+                    Rail::Gnd
+                }
+            }
+            OperatingMode::NeuronTesting => Rail::Gnd, // array bypassed
+            OperatingMode::Mvm => {
+                // activate WLs within the input vector length
+                if i < input_len {
+                    Rail::VRead
+                } else {
+                    Rail::Gnd
+                }
+            }
+        }
+    }
+
+    /// BL driver rail for bitline `i` during MVM given its register.
+    pub fn bl_rail_mvm(&self, x: i32) -> Rail {
+        DriveState::from_input(x).rail()
+    }
+
+    /// Programming rails for the selected cell.
+    pub fn program_rails(&self, set: bool, amplitude: f64) -> (Rail, Rail) {
+        if set {
+            (Rail::VSet(amplitude), Rail::Gnd) // BL high, SL grounded
+        } else {
+            (Rail::Gnd, Rail::VReset(amplitude)) // reversed polarity
+        }
+    }
+}
+
+impl Default for Periphery {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drive_states_map_to_differential_rails() {
+        assert_eq!(DriveState::from_input(3), DriveState::Plus);
+        assert_eq!(DriveState::from_input(-1), DriveState::Minus);
+        assert_eq!(DriveState::from_input(0), DriveState::Zero);
+        let v = DriveState::Plus.rail().volts(1.0, 0.5);
+        assert!((v - 1.5).abs() < 1e-12);
+        let v = DriveState::Minus.rail().volts(1.0, 0.5);
+        assert!((v - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weight_programming_selects_single_cell() {
+        let mut p = Periphery::new();
+        p.mode = OperatingMode::WeightProgramming;
+        p.wl_regs.select_one(17);
+        assert_eq!(p.wl_rail(17, 0), Rail::VRead);
+        assert_eq!(p.wl_rail(16, 0), Rail::Gnd);
+        assert_eq!(p.wl_regs.bits.iter().filter(|&&b| b != 0).count(), 1);
+    }
+
+    #[test]
+    fn neuron_testing_grounds_all_wls() {
+        let mut p = Periphery::new();
+        p.mode = OperatingMode::NeuronTesting;
+        for i in 0..CORE_ROWS {
+            assert_eq!(p.wl_rail(i, CORE_ROWS), Rail::Gnd);
+        }
+    }
+
+    #[test]
+    fn mvm_activates_input_length_wls() {
+        let p = Periphery::new();
+        assert_eq!(p.wl_rail(10, 64), Rail::VRead);
+        assert_eq!(p.wl_rail(64, 64), Rail::Gnd);
+    }
+
+    #[test]
+    fn programming_polarity() {
+        let p = Periphery::new();
+        let (bl, sl) = p.program_rails(true, 1.3);
+        assert_eq!(bl, Rail::VSet(1.3));
+        assert_eq!(sl, Rail::Gnd);
+        let (bl, sl) = p.program_rails(false, 1.6);
+        assert_eq!(bl, Rail::Gnd);
+        assert_eq!(sl, Rail::VReset(1.6));
+    }
+
+    #[test]
+    #[should_panic(expected = "1-10 ns")]
+    fn pulse_generator_range_enforced() {
+        PulseGenerator::new(20.0);
+    }
+
+    #[test]
+    fn register_roundtrip() {
+        let mut r = RegisterFile::new(8);
+        r.load(&[1, 0, 1, 0, 1, 0, 1, 0]);
+        r.write_from_neuron(1, 1);
+        assert_eq!(r.bits, vec![1, 1, 1, 0, 1, 0, 1, 0]);
+    }
+}

@@ -1,0 +1,140 @@
+//! Transposable Neurosynaptic Array topology (paper Fig. 2c/d).
+//!
+//! The 256x256 array is tiled into 16x16 corelets; corelet (i, j) holds
+//! 16x16 RRAM cells and ONE neuron, which connects to BL (16 i + j) and
+//! SL (16 j + i) through a pair of switches.  Every BL and every SL thus
+//! reaches exactly one neuron without duplicating converters at both
+//! array ends -- the property that makes the array transposable.
+
+use crate::CORELET_DIM;
+
+/// Dataflow directions the TNSA supports (paper Fig. 2e).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dataflow {
+    /// BL-driven inputs, SL-sensed outputs.
+    Forward,
+    /// SL-driven inputs, BL-sensed outputs (transposed weights).
+    Backward,
+    /// Inputs enter via SL switch, outputs return to BL registers:
+    /// output feeds back as next-step input on the same array.
+    Recurrent,
+}
+
+/// Static switch-fabric topology of one TNSA.
+#[derive(Clone, Debug)]
+pub struct Tnsa {
+    pub dim: usize, // corelet grid dimension (16)
+}
+
+impl Default for Tnsa {
+    fn default() -> Self {
+        Tnsa { dim: CORELET_DIM }
+    }
+}
+
+impl Tnsa {
+    /// Number of neurons = dim^2 (one per corelet).
+    pub fn neurons(&self) -> usize {
+        self.dim * self.dim
+    }
+
+    /// BL wire served by the neuron of corelet (i, j): 16 i + j.
+    pub fn bl_of_corelet(&self, i: usize, j: usize) -> usize {
+        self.dim * i + j
+    }
+
+    /// SL wire served by the neuron of corelet (i, j): 16 j + i.
+    pub fn sl_of_corelet(&self, i: usize, j: usize) -> usize {
+        self.dim * j + i
+    }
+
+    /// Which corelet's neuron senses a given BL.
+    pub fn corelet_of_bl(&self, bl: usize) -> (usize, usize) {
+        (bl / self.dim, bl % self.dim)
+    }
+
+    /// Which corelet's neuron senses a given SL.
+    pub fn corelet_of_sl(&self, sl: usize) -> (usize, usize) {
+        (sl % self.dim, sl / self.dim)
+    }
+
+    /// Neuron index (row-major corelet id) that serves output wire `w`
+    /// under the given dataflow direction.
+    pub fn neuron_for_output(&self, w: usize, flow: Dataflow) -> usize {
+        let (i, j) = match flow {
+            Dataflow::Forward => self.corelet_of_sl(w),
+            Dataflow::Backward | Dataflow::Recurrent => self.corelet_of_bl(w),
+        };
+        i * self.dim + j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_bl_has_unique_neuron() {
+        let t = Tnsa::default();
+        let n = t.dim * t.dim;
+        let mut seen = vec![false; n];
+        for bl in 0..n {
+            let (i, j) = t.corelet_of_bl(bl);
+            assert_eq!(t.bl_of_corelet(i, j), bl);
+            let idx = i * t.dim + j;
+            assert!(!seen[idx], "corelet reused for BL {bl}");
+            seen[idx] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn every_sl_has_unique_neuron() {
+        let t = Tnsa::default();
+        let n = t.dim * t.dim;
+        let mut seen = vec![false; n];
+        for sl in 0..n {
+            let (i, j) = t.corelet_of_sl(sl);
+            assert_eq!(t.sl_of_corelet(i, j), sl);
+            let idx = i * t.dim + j;
+            assert!(!seen[idx], "corelet reused for SL {sl}");
+            seen[idx] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn corelet_serves_its_own_row_and_column_block() {
+        // The neuron of corelet (i,j) serves BL 16i+j (a wire crossing
+        // corelet row i) and SL 16j+i (a wire crossing corelet column j):
+        // both wires physically pass through corelet (i,j).
+        let t = Tnsa::default();
+        for i in 0..t.dim {
+            for j in 0..t.dim {
+                let bl = t.bl_of_corelet(i, j);
+                let sl = t.sl_of_corelet(i, j);
+                assert_eq!(bl / t.dim, i); // BL lies in corelet-row i
+                assert_eq!(sl / t.dim, j); // SL lies in corelet-col j
+            }
+        }
+    }
+
+    #[test]
+    fn output_routing_by_direction() {
+        let t = Tnsa::default();
+        // forward: output wire = SL; backward: output wire = BL
+        assert_eq!(t.neuron_for_output(0, Dataflow::Forward), 0);
+        let w = 17;
+        let nf = t.neuron_for_output(w, Dataflow::Forward);
+        let nb = t.neuron_for_output(w, Dataflow::Backward);
+        // SL 17 -> corelet (1,1) -> neuron 17; BL 17 -> corelet (1,1)
+        assert_eq!(nf, 17);
+        assert_eq!(nb, 17);
+        // a non-symmetric wire maps to different neurons per direction
+        let w = 18;
+        assert_ne!(
+            t.neuron_for_output(w, Dataflow::Forward),
+            t.neuron_for_output(w, Dataflow::Backward)
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! RRAM device substrate: cell physics (programming response, conductance
+//! relaxation, read noise) and the incremental-pulse write-verify
+//! programmer (paper Methods + Extended Data Fig. 3).
+
+pub mod rram;
+pub mod write_verify;
+
+pub use rram::{DeviceParams, RramArray, RramCell};
+pub use write_verify::{ProgramStats, WriteVerify, WriteVerifyConfig};

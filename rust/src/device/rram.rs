@@ -1,0 +1,284 @@
+//! HfOx RRAM cell model in a 1T1R configuration.
+//!
+//! Modelled physics, each calibrated to the number the paper reports:
+//!
+//! * conductance range: g_min = 1 uS .. g_max = 40 uS (30 uS for
+//!   LSTM/RBM mappings);
+//! * SET/RESET pulse response: a voltage-threshold switching model --
+//!   conductance moves toward the opposite rail by an amount that grows
+//!   with overdrive (V - V_th) and carries cycle-to-cycle lognormal-ish
+//!   variability (mean ~8.5 pulses per write-verify convergence, ED
+//!   Fig. 3f);
+//! * conductance relaxation: Gaussian drift immediately after
+//!   programming, state-dependent sigma peaking at ~3.87 uS near 12 uS
+//!   and small near g_min (ED Fig. 3d); iterative programming narrows the
+//!   post-relaxation distribution to sigma ~2 uS (a 29% reduction);
+//! * read noise: small zero-mean Gaussian on every read.
+
+use crate::util::rng::Rng;
+
+/// Device-level constants. Mirrors `python/compile/cimcfg.py`; the
+/// integration test cross-checks against the artifact manifest.
+#[derive(Clone, Debug)]
+pub struct DeviceParams {
+    pub g_min_us: f64,
+    pub g_max_us: f64,
+    /// Hard physical bounds (a cell can overshoot the logical range).
+    pub g_floor_us: f64,
+    pub g_ceil_us: f64,
+    /// SET threshold voltage (V) and response gain (uS per V overdrive).
+    pub set_vth: f64,
+    pub set_gain: f64,
+    /// RESET threshold voltage (V) and response gain.
+    pub reset_vth: f64,
+    pub reset_gain: f64,
+    /// Cycle-to-cycle variability of the pulse response (fraction).
+    pub pulse_sigma: f64,
+    /// Peak relaxation sigma (uS) and the conductance where it peaks.
+    pub relax_sigma_peak_us: f64,
+    pub relax_peak_g_us: f64,
+    /// Relaxation sigma shape width (uS).
+    pub relax_width_us: f64,
+    /// Read noise sigma (uS).
+    pub read_sigma_us: f64,
+}
+
+impl Default for DeviceParams {
+    fn default() -> Self {
+        DeviceParams {
+            g_min_us: 1.0,
+            g_max_us: 40.0,
+            g_floor_us: 0.05,
+            g_ceil_us: 45.0,
+            set_vth: 0.9,
+            set_gain: 9.0,
+            reset_vth: 1.1,
+            reset_gain: 9.0,
+            pulse_sigma: 0.65,
+            relax_sigma_peak_us: 3.87,
+            relax_peak_g_us: 12.0,
+            relax_width_us: 14.0,
+            read_sigma_us: 0.15,
+        }
+    }
+}
+
+impl DeviceParams {
+    /// Params for the 30 uS g_max used by LSTM / RBM mappings.
+    pub fn rnn() -> Self {
+        DeviceParams { g_max_us: 30.0, ..Default::default() }
+    }
+
+    /// State-dependent relaxation sigma (ED Fig. 3d): small near g_min,
+    /// peaking near 12 uS, slowly decaying toward g_max.
+    pub fn relax_sigma(&self, g_us: f64) -> f64 {
+        if g_us <= self.g_min_us + 0.25 {
+            // cells parked at g_min are in a deep low-conductance state
+            return 0.3;
+        }
+        let d = (g_us - self.relax_peak_g_us) / self.relax_width_us;
+        (self.relax_sigma_peak_us * (-d * d).exp()).max(0.35)
+    }
+}
+
+/// One RRAM cell: programmed conductance + drift state.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RramCell {
+    /// Conductance right after the last programming pulse (uS).
+    pub g_us: f64,
+}
+
+impl RramCell {
+    /// Apply a SET pulse (increases conductance). Returns the new value.
+    pub fn set_pulse(&mut self, v: f64, p: &DeviceParams, rng: &mut Rng) -> f64 {
+        if v > p.set_vth {
+            let drive = p.set_gain * (v - p.set_vth);
+            // saturating response: harder to push when already high
+            let headroom = ((p.g_ceil_us - self.g_us) / p.g_ceil_us).max(0.0);
+            let mut dg = drive * headroom * (1.0 + p.pulse_sigma * rng.normal());
+            if dg < 0.0 {
+                dg = 0.0;
+            }
+            self.g_us = (self.g_us + dg).clamp(p.g_floor_us, p.g_ceil_us);
+        }
+        self.g_us
+    }
+
+    /// Apply a RESET pulse (decreases conductance).
+    pub fn reset_pulse(&mut self, v: f64, p: &DeviceParams, rng: &mut Rng) -> f64 {
+        if v > p.reset_vth {
+            let drive = p.reset_gain * (v - p.reset_vth);
+            let headroom = (self.g_us / p.g_ceil_us).max(0.0);
+            let mut dg = drive * headroom * (1.0 + p.pulse_sigma * rng.normal());
+            if dg < 0.0 {
+                dg = 0.0;
+            }
+            self.g_us = (self.g_us - dg).clamp(p.g_floor_us, p.g_ceil_us);
+        }
+        self.g_us
+    }
+
+    /// Noisy read of the cell conductance.
+    pub fn read(&self, p: &DeviceParams, rng: &mut Rng) -> f64 {
+        (self.g_us + p.read_sigma_us * rng.normal()).max(0.0)
+    }
+
+    /// One-shot conductance relaxation after programming (the abrupt
+    /// <1 s drift). `iterations` models the iterative-programming
+    /// narrowing: sigma shrinks ~29% by the third round (ED Fig. 3e).
+    pub fn relax(&mut self, p: &DeviceParams, iterations: u32, rng: &mut Rng) {
+        let shrink = match iterations {
+            0 | 1 => 1.0,
+            2 => 0.82,
+            _ => 0.71, // 29% reduction at >= 3 iterations
+        };
+        let sigma = p.relax_sigma(self.g_us) * shrink;
+        self.g_us = (self.g_us + sigma * rng.normal())
+            .clamp(p.g_floor_us, p.g_ceil_us);
+    }
+}
+
+/// A dense array of RRAM cells (one CIM core holds a 256x256 array).
+#[derive(Clone, Debug)]
+pub struct RramArray {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major conductances (uS). f32 for the MVM hot path.
+    pub g_us: Vec<f32>,
+    pub params: DeviceParams,
+}
+
+impl RramArray {
+    pub fn new(rows: usize, cols: usize, params: DeviceParams) -> Self {
+        RramArray { rows, cols, g_us: vec![params.g_min_us as f32; rows * cols], params }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.g_us[r * self.cols + c] as f64
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, g: f64) {
+        self.g_us[r * self.cols + c] = g as f32;
+    }
+
+    /// Column sums of conductance (the voltage-mode normalizer); cached by
+    /// the crossbar model.
+    pub fn column_sums(&self) -> Vec<f32> {
+        let mut sums = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            let row = &self.g_us[r * self.cols..(r + 1) * self.cols];
+            for (s, g) in sums.iter_mut().zip(row) {
+                *s += g;
+            }
+        }
+        sums
+    }
+
+    /// Apply relaxation to every cell (after array programming).
+    pub fn relax_all(&mut self, iterations: u32, rng: &mut Rng) {
+        let p = self.params.clone();
+        for g in self.g_us.iter_mut() {
+            let mut cell = RramCell { g_us: *g as f64 };
+            cell.relax(&p, iterations, rng);
+            *g = cell.g_us as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_increases_reset_decreases() {
+        let p = DeviceParams::default();
+        let mut rng = Rng::new(1);
+        let mut c = RramCell { g_us: 10.0 };
+        let before = c.g_us;
+        c.set_pulse(1.5, &p, &mut rng);
+        assert!(c.g_us >= before);
+        let before = c.g_us;
+        c.reset_pulse(1.8, &p, &mut rng);
+        assert!(c.g_us <= before);
+    }
+
+    #[test]
+    fn below_threshold_no_change() {
+        let p = DeviceParams::default();
+        let mut rng = Rng::new(2);
+        let mut c = RramCell { g_us: 10.0 };
+        c.set_pulse(0.5, &p, &mut rng);
+        c.reset_pulse(0.5, &p, &mut rng);
+        assert_eq!(c.g_us, 10.0);
+    }
+
+    #[test]
+    fn bounds_respected() {
+        let p = DeviceParams::default();
+        let mut rng = Rng::new(3);
+        let mut c = RramCell { g_us: 44.0 };
+        for _ in 0..100 {
+            c.set_pulse(3.0, &p, &mut rng);
+        }
+        assert!(c.g_us <= p.g_ceil_us);
+        for _ in 0..200 {
+            c.reset_pulse(3.0, &p, &mut rng);
+        }
+        assert!(c.g_us >= p.g_floor_us);
+    }
+
+    #[test]
+    fn relax_sigma_profile() {
+        let p = DeviceParams::default();
+        // peak near 12 uS, close to the reported 3.87 uS
+        assert!((p.relax_sigma(12.0) - 3.87).abs() < 0.01);
+        // near g_min the distribution is tight
+        assert!(p.relax_sigma(1.0) < 0.5);
+        // at g_max clearly below the peak
+        assert!(p.relax_sigma(40.0) < p.relax_sigma(12.0));
+    }
+
+    #[test]
+    fn relaxation_statistics() {
+        // Programmed cells at mid conductance relax with sigma ~peak;
+        // 3 programming iterations shrink sigma by ~29%.
+        let p = DeviceParams::default();
+        let mut rng = Rng::new(4);
+        let spread = |iters: u32, rng: &mut Rng| {
+            let mut devs = Vec::new();
+            for _ in 0..4000 {
+                let mut c = RramCell { g_us: 12.0 };
+                c.relax(&p, iters, rng);
+                devs.push(c.g_us - 12.0);
+            }
+            crate::util::stats::std_dev(&devs)
+        };
+        let s1 = spread(1, &mut rng);
+        let s3 = spread(3, &mut rng);
+        assert!((s1 - 3.87).abs() < 0.3, "one-shot sigma {s1}");
+        assert!((s3 / s1 - 0.71).abs() < 0.08, "shrink ratio {}", s3 / s1);
+    }
+
+    #[test]
+    fn array_column_sums() {
+        let mut a = RramArray::new(4, 3, DeviceParams::default());
+        a.set(0, 0, 5.0);
+        a.set(2, 0, 2.0);
+        let sums = a.column_sums();
+        assert!((sums[0] - 9.0).abs() < 1e-5); // 5 + 2 + g_min(1.0) * 2
+        assert!((sums[1] - 4.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn read_noise_small() {
+        let p = DeviceParams::default();
+        let mut rng = Rng::new(5);
+        let c = RramCell { g_us: 20.0 };
+        let reads: Vec<f64> = (0..2000).map(|_| c.read(&p, &mut rng)).collect();
+        let m = crate::util::stats::mean(&reads);
+        assert!((m - 20.0).abs() < 0.05);
+        assert!(crate::util::stats::std_dev(&reads) < 0.3);
+    }
+}

@@ -1,0 +1,10 @@
+//! Energy / latency accounting (paper Extended Data Fig. 10) and the
+//! 130 nm -> 7 nm technology-scaling projection (paper Methods).
+
+pub mod model;
+pub mod params;
+pub mod scaling;
+
+pub use model::{EnergyBreakdown, EnergyCounters, EnergyModel, MvmCost};
+pub use params::EnergyParams;
+pub use scaling::{scale_edp, TechNode};

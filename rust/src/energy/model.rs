@@ -1,0 +1,194 @@
+//! Event-counter energy model: the core simulator increments counters as
+//! it executes; this module prices them (ED Fig. 10) and derives the
+//! figure-of-merit metrics (EDP, TOPS/W, peak GOPS).
+
+use super::params::EnergyParams;
+
+/// Raw event counters accumulated during simulation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyCounters {
+    pub wl_toggles: u64,
+    pub input_wire_phases: u64,
+    pub sample_cycles: u64,
+    pub comparisons: u64,
+    pub decrement_steps: u64,
+    pub ctrl_phases: u64,
+    pub reg_writes: u64,
+    /// Total busy time (ns) -- accumulated from the timing constants.
+    pub busy_ns: f64,
+    /// multiply-accumulate operations performed (1 MAC = 2 ops).
+    pub macs: u64,
+}
+
+impl EnergyCounters {
+    pub fn add(&mut self, o: &EnergyCounters) {
+        self.wl_toggles += o.wl_toggles;
+        self.input_wire_phases += o.input_wire_phases;
+        self.sample_cycles += o.sample_cycles;
+        self.comparisons += o.comparisons;
+        self.decrement_steps += o.decrement_steps;
+        self.ctrl_phases += o.ctrl_phases;
+        self.reg_writes += o.reg_writes;
+        self.busy_ns += o.busy_ns;
+        self.macs += o.macs;
+    }
+}
+
+/// Itemized energy (pJ), the paper's ED Fig. 10c breakdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyBreakdown {
+    pub wl_pj: f64,
+    pub input_wires_pj: f64,
+    pub sampling_pj: f64,
+    pub neuron_adc_pj: f64,
+    pub digital_pj: f64,
+    pub static_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.wl_pj
+            + self.input_wires_pj
+            + self.sampling_pj
+            + self.neuron_adc_pj
+            + self.digital_pj
+            + self.static_pj
+    }
+}
+
+/// Cost summary of an MVM workload.
+#[derive(Clone, Copy, Debug)]
+pub struct MvmCost {
+    pub energy_pj: f64,
+    pub latency_ns: f64,
+    pub macs: u64,
+}
+
+impl MvmCost {
+    /// 1 MAC = 2 ops (the convention used by the paper's comparisons).
+    pub fn ops(&self) -> u64 {
+        self.macs * 2
+    }
+
+    pub fn tops_per_watt(&self) -> f64 {
+        // ops / energy: (ops / pJ) = TOPS/W
+        self.ops() as f64 / self.energy_pj.max(1e-12)
+    }
+
+    pub fn femtojoule_per_op(&self) -> f64 {
+        self.energy_pj * 1e3 / self.ops().max(1) as f64
+    }
+
+    /// Energy-delay product in pJ * ns (relative comparisons only).
+    pub fn edp(&self) -> f64 {
+        self.energy_pj * self.latency_ns
+    }
+
+    /// Throughput in giga-ops/s assuming back-to-back issue.
+    pub fn gops(&self) -> f64 {
+        self.ops() as f64 / self.latency_ns.max(1e-9)
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EnergyModel {
+    pub counters: EnergyCounters,
+}
+
+impl EnergyModel {
+    pub fn breakdown(&self, p: &EnergyParams) -> EnergyBreakdown {
+        let c = &self.counters;
+        EnergyBreakdown {
+            wl_pj: c.wl_toggles as f64 * p.e_wl_toggle_pj,
+            input_wires_pj: c.input_wire_phases as f64 * p.e_input_wire_pj,
+            sampling_pj: c.sample_cycles as f64 * p.e_sample_pj,
+            neuron_adc_pj: c.comparisons as f64 * p.e_compare_pj
+                + c.decrement_steps as f64 * p.e_decrement_pj,
+            digital_pj: c.ctrl_phases as f64 * p.e_ctrl_phase_pj
+                + c.reg_writes as f64 * p.e_reg_write_pj,
+            static_pj: c.busy_ns * p.p_static_mw * 1e-3, // mW * ns = pJ
+        }
+    }
+
+    pub fn cost(&self, p: &EnergyParams) -> MvmCost {
+        MvmCost {
+            energy_pj: self.breakdown(p).total_pj(),
+            latency_ns: self.counters.busy_ns,
+            macs: self.counters.macs,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.counters = EnergyCounters::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_counters() -> EnergyCounters {
+        EnergyCounters {
+            wl_toggles: 256 * 3,
+            input_wire_phases: 256 * 3,
+            sample_cycles: 256 * 7,
+            comparisons: 256 * 9,
+            decrement_steps: 256 * 8,
+            ctrl_phases: 3,
+            reg_writes: 256,
+            busy_ns: 2100.0,
+            macs: 128 * 256,
+        }
+    }
+
+    #[test]
+    fn breakdown_adds_up() {
+        let m = EnergyModel { counters: sample_counters() };
+        let p = EnergyParams::default();
+        let b = m.breakdown(&p);
+        let manual = b.wl_pj + b.input_wires_pj + b.sampling_pj
+            + b.neuron_adc_pj + b.digital_pj + b.static_pj;
+        assert!((b.total_pj() - manual).abs() < 1e-9);
+        assert!(b.total_pj() > 0.0);
+    }
+
+    #[test]
+    fn counters_additive() {
+        let mut a = sample_counters();
+        let b = sample_counters();
+        a.add(&b);
+        assert_eq!(a.wl_toggles, 2 * 256 * 3);
+        assert!((a.busy_ns - 4200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_consistent() {
+        let m = EnergyModel { counters: sample_counters() };
+        let p = EnergyParams::default();
+        let c = m.cost(&p);
+        assert_eq!(c.ops(), 2 * 128 * 256);
+        assert!(c.tops_per_watt() > 0.0);
+        assert!((c.edp() - c.energy_pj * c.latency_ns).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_ballpark_tops_per_watt() {
+        // A full 256x256-wire, 4-bit-in MVM should land in the tens of
+        // TOPS/W at 130 nm (ED Fig. 10e ballpark).
+        let phases = 3u64;
+        let counters = EnergyCounters {
+            wl_toggles: 256 * phases,
+            input_wire_phases: 256 * phases,
+            sample_cycles: 256 * 7,
+            comparisons: 256 * 9,
+            decrement_steps: 256 * 8,
+            ctrl_phases: phases,
+            reg_writes: 256,
+            busy_ns: 2100.0,
+            macs: 128 * 256,
+        };
+        let m = EnergyModel { counters };
+        let t = m.cost(&EnergyParams::default()).tops_per_watt();
+        assert!((10.0..200.0).contains(&t), "TOPS/W {t}");
+    }
+}

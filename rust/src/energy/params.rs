@@ -1,0 +1,108 @@
+//! Energy / timing constants of the 130 nm NeuRRAM design, calibrated so
+//! the model reproduces the paper's measured numbers:
+//!
+//! * WL switching dominates the input-stage power (ED Fig. 10c): the
+//!   select transistors are thick-oxide I/O devices (W=1um, L=500nm) on a
+//!   1.3 V WL, adding ~pF to each WL -> ~1.7 pJ per WL toggle pair;
+//! * energy per ADC conversion grows ~2x per output bit (ED Fig. 10b) --
+//!   charge-decrement steps double per added bit;
+//! * a 256x256 MVM with 4-bit outputs takes ~2.1 us (paper Methods,
+//!   scaling section) -- the neuron amplifier settling limits each
+//!   decrement step;
+//! * binary (1-bit) and ternary (2-bit) inputs cost the same input-stage
+//!   energy (ED Fig. 10a): each wire drives one of three levels either way.
+
+#[derive(Clone, Debug)]
+pub struct EnergyParams {
+    // ---- energies (picojoules) ----
+    /// WL toggle (on+off) per wordline per input phase.
+    pub e_wl_toggle_pj: f64,
+    /// Driving one input wire (BL/SL pair) for one phase.
+    pub e_input_wire_pj: f64,
+    /// One sample+integrate cycle of one neuron.
+    pub e_sample_pj: f64,
+    /// One comparator decision of one neuron.
+    pub e_compare_pj: f64,
+    /// One charge-decrement step of one neuron.
+    pub e_decrement_pj: f64,
+    /// Digital control overhead per phase (controller + clocking).
+    pub e_ctrl_phase_pj: f64,
+    /// Register write per output word.
+    pub e_reg_write_pj: f64,
+
+    // ---- timings (nanoseconds) ----
+    /// Array settling time per input phase (WL on -> voltage settled).
+    pub t_settle_ns: f64,
+    /// One sample+integrate cycle.
+    pub t_sample_ns: f64,
+    /// One ADC comparison / charge-decrement step (amplifier-settling
+    /// limited; dominates latency).
+    pub t_adc_step_ns: f64,
+    /// Output register readout per MVM.
+    pub t_readout_ns: f64,
+
+    // ---- static ----
+    /// Per-core leakage + bias power when powered on (milliwatts).
+    pub p_static_mw: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        EnergyParams {
+            e_wl_toggle_pj: 1.7,
+            e_input_wire_pj: 0.055,
+            e_sample_pj: 0.022,
+            e_compare_pj: 0.016,
+            e_decrement_pj: 0.026,
+            e_ctrl_phase_pj: 24.0,
+            e_reg_write_pj: 0.012,
+            t_settle_ns: 50.0,
+            t_sample_ns: 25.0,
+            t_adc_step_ns: 240.0,
+            t_readout_ns: 100.0,
+            p_static_mw: 0.08,
+        }
+    }
+}
+
+impl EnergyParams {
+    /// Current-mode baseline (conventional sensing, Fig. 2g): the TIA
+    /// clamps the output while sinking the full array current, burning
+    /// static power during the whole conversion, and row-parallelism is
+    /// limited to keep the ADC dynamic range manageable.
+    pub fn current_mode() -> Self {
+        EnergyParams {
+            // TIA + larger ADC burn more per conversion step
+            e_compare_pj: 0.22,
+            e_decrement_pj: 0.30,
+            // array kept on during conversion: charged per phase
+            e_ctrl_phase_pj: 46.0,
+            e_input_wire_pj: 0.30,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wl_energy_dominates_input_stage() {
+        // ED Fig. 10c: WL switching is the largest input-stage component
+        // for a full 256-wire MVM.
+        let p = EnergyParams::default();
+        let wl = 256.0 * p.e_wl_toggle_pj;
+        let wires = 256.0 * p.e_input_wire_pj;
+        let sampling = 256.0 * p.e_sample_pj;
+        assert!(wl > wires + sampling + p.e_ctrl_phase_pj);
+    }
+
+    #[test]
+    fn current_mode_is_costlier() {
+        let v = EnergyParams::default();
+        let c = EnergyParams::current_mode();
+        assert!(c.e_compare_pj > v.e_compare_pj);
+        assert!(c.e_input_wire_pj > v.e_input_wire_pj);
+    }
+}

@@ -1,0 +1,270 @@
+//! Procedural dataset substrates mirroring `python/compile/data.py`
+//! (same generators and class structure; the two sides agree on the
+//! workload even though individual samples differ by RNG).
+
+use crate::util::rng::Rng;
+
+/// 5x7 bitmap font for digits 0-9 (same glyphs as the python side).
+const FONT: [[&str; 7]; 10] = [
+    ["#####", "#...#", "#...#", "#...#", "#...#", "#...#", "#####"],
+    ["..#..", ".##..", "..#..", "..#..", "..#..", "..#..", "#####"],
+    ["#####", "....#", "....#", "#####", "#....", "#....", "#####"],
+    ["#####", "....#", "....#", "#####", "....#", "....#", "#####"],
+    ["#...#", "#...#", "#...#", "#####", "....#", "....#", "....#"],
+    ["#####", "#....", "#....", "#####", "....#", "....#", "#####"],
+    ["#####", "#....", "#....", "#####", "#...#", "#...#", "#####"],
+    ["#####", "....#", "...#.", "..#..", ".#...", ".#...", ".#..."],
+    ["#####", "#...#", "#...#", "#####", "#...#", "#...#", "#####"],
+    ["#####", "#...#", "#...#", "#####", "....#", "....#", "#####"],
+];
+
+/// One 28x28 digit image in [0,1] (row-major) + its label.
+pub fn digit28(rng: &mut Rng, noise: f64) -> (Vec<f32>, usize) {
+    let label = rng.below(10);
+    let glyph = &FONT[label];
+    let sy = 2 + rng.below(2); // 2..3
+    let sx = 2 + rng.below(2);
+    let h = 7 * sy;
+    let w = 5 * sx;
+    let mut up = vec![0.0f32; h * w];
+    for (gy, row) in glyph.iter().enumerate() {
+        for (gx, ch) in row.bytes().enumerate() {
+            if ch == b'#' {
+                for dy in 0..sy {
+                    for dx in 0..sx {
+                        up[(gy * sy + dy) * w + gx * sx + dx] = 1.0;
+                    }
+                }
+            }
+        }
+    }
+    // optional dilation (random stroke thickness)
+    if rng.uniform() < 0.5 {
+        let orig = up.clone();
+        for y in 0..h {
+            for x in 0..w {
+                let mut v = orig[y * w + x];
+                if y > 0 {
+                    v = v.max(orig[(y - 1) * w + x]);
+                }
+                if y + 1 < h {
+                    v = v.max(orig[(y + 1) * w + x]);
+                }
+                if x > 0 {
+                    v = v.max(orig[y * w + x - 1]);
+                }
+                if x + 1 < w {
+                    v = v.max(orig[y * w + x + 1]);
+                }
+                up[y * w + x] = v;
+            }
+        }
+    }
+    let oy = rng.below(28 - h + 1);
+    let ox = rng.below(28 - w + 1);
+    let mut img = vec![0.0f32; 28 * 28];
+    for y in 0..h {
+        for x in 0..w {
+            img[(oy + y) * 28 + ox + x] = up[y * w + x];
+        }
+    }
+    for p in img.iter_mut() {
+        *p = (*p + (noise * rng.normal()) as f32).clamp(0.0, 1.0);
+    }
+    (img, label)
+}
+
+/// Batch of digits: (images [n][784], labels).
+pub fn digits28(n: usize, seed: u64, noise: f64) -> (Vec<Vec<f32>>, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let mut imgs = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (img, l) = digit28(&mut rng, noise);
+        imgs.push(img);
+        labels.push(l);
+    }
+    (imgs, labels)
+}
+
+/// One 32x32x3 texture image (class 0..9), channel-last flattened.
+pub fn texture32(rng: &mut Rng, class: usize, noise: f64) -> Vec<f32> {
+    let f = rng.uniform_in(2.0, 4.0);
+    let ph = rng.uniform_in(0.0, std::f64::consts::TAU);
+    let hue = [rng.uniform_in(0.3, 1.0), rng.uniform_in(0.3, 1.0),
+               rng.uniform_in(0.3, 1.0)];
+    let mut img = vec![0.0f32; 32 * 32 * 3];
+    for y in 0..32 {
+        for x in 0..32 {
+            let xx = x as f64 / 32.0;
+            let yy = y as f64 / 32.0;
+            let tau = std::f64::consts::TAU;
+            let base = match class {
+                0 => (tau * f * xx + ph).sin(),
+                1 => (tau * f * yy + ph).sin(),
+                2 => (tau * f * (xx + yy) + ph).sin(),
+                3 => ((tau * f * xx + ph).sin()
+                    * (tau * f * yy + ph).sin()).signum(),
+                4 => {
+                    let r = ((xx - 0.5).powi(2) + (yy - 0.5).powi(2)).sqrt();
+                    (tau * f * r * 2.0).sin()
+                }
+                5 => xx * 2.0 - 1.0,
+                6 => yy * 2.0 - 1.0,
+                7 => (tau * f * xx * yy * 4.0 + ph).sin(),
+                8 => (tau * f * xx + ph).cos()
+                    * (std::f64::consts::PI * f * yy).cos(),
+                _ => (tau * (f * xx + f * 0.5 * xx * xx) + ph).sin(),
+            };
+            for ch in 0..3 {
+                let v = 0.5 + 0.5 * base * hue[ch] + noise * rng.normal();
+                img[(y * 32 + x) * 3 + ch] = v.clamp(0.0, 1.0) as f32;
+            }
+        }
+    }
+    img
+}
+
+pub fn textures32(n: usize, seed: u64, noise: f64) -> (Vec<Vec<f32>>, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let mut imgs = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(10);
+        imgs.push(texture32(&mut rng, c, noise));
+        labels.push(c);
+    }
+    (imgs, labels)
+}
+
+/// One MFCC-like series [t=50][d=40], 12 classes.
+pub fn mfcc_series(rng: &mut Rng, class: usize, t: usize, d: usize,
+                   noise: f64) -> Vec<f32> {
+    let slope = (class % 4) as f64 - 1.5;
+    let curve = (class / 4) as f64 - 1.0;
+    let mut xs = vec![0.0f32; t * d];
+    for ti in 0..t {
+        let tt = ti as f64 / (t - 1).max(1) as f64;
+        let centre = d as f64 / 2.0
+            + 12.0 * slope * (tt - 0.5)
+            + 40.0 * curve * (tt - 0.5) * (tt - 0.5);
+        let width = 2.5 + (class % 3) as f64;
+        let amp = (std::f64::consts::PI * tt).sin().max(0.0).sqrt();
+        for di in 0..d {
+            let dd = di as f64;
+            let band = (-(dd - centre).powi(2) / (2.0 * width * width)).exp();
+            let hcentre = (centre + d as f64 / 4.0) % d as f64;
+            let harm =
+                0.5 * (-(dd - hcentre).powi(2) / (2.0 * width * width)).exp();
+            let v = (band + harm) * amp + 0.3 * noise * rng.normal();
+            xs[ti * d + di] = v as f32;
+        }
+    }
+    xs
+}
+
+pub fn mfcc_cmds(n: usize, seed: u64, noise: f64) -> (Vec<Vec<f32>>, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let mut xs = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(12);
+        xs.push(mfcc_series(&mut rng, c, 50, 40, noise));
+        labels.push(c);
+    }
+    // global normalization like the python side
+    let all: Vec<f64> = xs.iter().flatten().map(|&v| v as f64).collect();
+    let m = crate::util::stats::mean(&all);
+    let s = crate::util::stats::std_dev(&all).max(1e-6);
+    for x in xs.iter_mut() {
+        for v in x.iter_mut() {
+            *v = ((*v as f64 - m) / s) as f32;
+        }
+    }
+    (xs, labels)
+}
+
+/// Corrupt a binary image: flip `frac` of pixels (RBM recovery workload).
+pub fn corrupt_flip(img: &[f32], frac: f64, rng: &mut Rng) -> (Vec<f32>, Vec<bool>) {
+    let mut out = img.to_vec();
+    let mut known = vec![true; img.len()];
+    for i in 0..img.len() {
+        if rng.uniform() < frac {
+            out[i] = 1.0 - out[i];
+            known[i] = false;
+        }
+    }
+    (out, known)
+}
+
+/// Occlude the bottom `rows` rows of a 28x28 image.
+pub fn corrupt_occlude(img: &[f32], rows: usize) -> (Vec<f32>, Vec<bool>) {
+    let mut out = img.to_vec();
+    let mut known = vec![true; img.len()];
+    for y in 28 - rows..28 {
+        for x in 0..28 {
+            out[y * 28 + x] = 0.0;
+            known[y * 28 + x] = false;
+        }
+    }
+    (out, known)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_shape_and_range() {
+        let (imgs, labels) = digits28(20, 1, 0.15);
+        assert_eq!(imgs.len(), 20);
+        assert!(imgs.iter().all(|i| i.len() == 784));
+        assert!(imgs
+            .iter()
+            .all(|i| i.iter().all(|&p| (0.0..=1.0).contains(&p))));
+        assert!(labels.iter().all(|&l| l < 10));
+        // digits should have meaningful ink
+        let ink: f32 = imgs[0].iter().sum();
+        assert!(ink > 10.0);
+    }
+
+    #[test]
+    fn digits_all_classes_reachable() {
+        let (_, labels) = digits28(300, 2, 0.1);
+        let mut seen = [false; 10];
+        for &l in &labels {
+            seen[l] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn textures_distinct_between_classes() {
+        let mut rng = Rng::new(3);
+        let a = texture32(&mut rng, 0, 0.0);
+        let b = texture32(&mut rng, 1, 0.0);
+        let d: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(d > 50.0, "classes 0/1 look identical: {d}");
+    }
+
+    #[test]
+    fn mfcc_normalized() {
+        let (xs, _) = mfcc_cmds(30, 4, 0.35);
+        let all: Vec<f64> = xs.iter().flatten().map(|&v| v as f64).collect();
+        assert!(crate::util::stats::mean(&all).abs() < 0.05);
+        assert!((crate::util::stats::std_dev(&all) - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn corruption_masks() {
+        let img = vec![1.0f32; 784];
+        let mut rng = Rng::new(5);
+        let (flipped, known) = corrupt_flip(&img, 0.2, &mut rng);
+        let n_flipped = known.iter().filter(|&&k| !k).count();
+        assert!((100..220).contains(&n_flipped));
+        assert!(flipped.iter().filter(|&&v| v == 0.0).count() == n_flipped);
+        let (occ, known) = corrupt_occlude(&img, 9);
+        assert_eq!(known.iter().filter(|&&k| !k).count(), 9 * 28);
+        assert_eq!(occ.iter().filter(|&&v| v == 0.0).count(), 9 * 28);
+    }
+}

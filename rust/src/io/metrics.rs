@@ -1,0 +1,88 @@
+//! Evaluation metrics: classification accuracy, confusion counting, and
+//! the paper's L2 image-reconstruction error (RBM task).
+
+/// argmax helper.
+pub fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Top-1 accuracy from per-sample logits.
+pub fn accuracy(logits: &[Vec<f64>], labels: &[usize]) -> f64 {
+    assert_eq!(logits.len(), labels.len());
+    if logits.is_empty() {
+        return 0.0;
+    }
+    let correct = logits
+        .iter()
+        .zip(labels)
+        .filter(|(l, &y)| argmax(l) == y)
+        .count();
+    correct as f64 / labels.len() as f64
+}
+
+/// Confusion matrix [n_classes x n_classes], rows = truth.
+pub fn confusion(logits: &[Vec<f64>], labels: &[usize], n: usize) -> Vec<Vec<usize>> {
+    let mut m = vec![vec![0usize; n]; n];
+    for (l, &y) in logits.iter().zip(labels) {
+        m[y][argmax(l)] += 1;
+    }
+    m
+}
+
+/// Mean squared L2 error between two images.
+pub fn l2_error(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Paper Fig. 1e metric: fractional reduction in reconstruction error of
+/// the recovered image vs the corrupted input.
+pub fn error_reduction(original: &[f32], corrupted: &[f32], recovered: &[f32]) -> f64 {
+    let before = l2_error(original, corrupted);
+    let after = l2_error(original, recovered);
+    if before <= 0.0 {
+        return 0.0;
+    }
+    1.0 - after / before
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = vec![vec![0.1, 0.9], vec![0.8, 0.2], vec![0.3, 0.7]];
+        let labels = vec![1, 0, 0];
+        assert!((accuracy(&logits, &labels) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn confusion_rows_sum_to_class_counts() {
+        let logits = vec![vec![1.0, 0.0], vec![0.0, 1.0], vec![1.0, 0.0]];
+        let labels = vec![0, 0, 1];
+        let m = confusion(&logits, &labels, 2);
+        assert_eq!(m[0][0] + m[0][1], 2);
+        assert_eq!(m[1][0] + m[1][1], 1);
+    }
+
+    #[test]
+    fn error_reduction_bounds() {
+        let orig = vec![1.0f32, 0.0, 1.0, 0.0];
+        let corr = vec![0.0f32, 0.0, 0.0, 0.0];
+        // perfect recovery
+        assert!((error_reduction(&orig, &corr, &orig) - 1.0).abs() < 1e-12);
+        // no recovery
+        assert!(error_reduction(&orig, &corr, &corr).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,6 @@
+//! Datasets (procedural substitutes, DESIGN.md §6), metrics, and npz
+//! weight I/O.
+
+pub mod datasets;
+pub mod metrics;
+pub mod npz;

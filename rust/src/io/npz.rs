@@ -1,0 +1,184 @@
+//! npz / npy I/O built on the xla crate's Literal readers: the
+//! interchange format between the python build path (weights, golden
+//! vectors) and the rust runtime.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use xla::FromRawBytes;
+
+/// A named f32 tensor loaded from an npz archive.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Load every array of an .npz file into f32 tensors.
+pub fn load_npz<P: AsRef<Path>>(path: P) -> Result<BTreeMap<String, Tensor>> {
+    let path = path.as_ref();
+    let lits = xla::Literal::read_npz(path, &())
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut out = BTreeMap::new();
+    for (name, lit) in lits {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data: Vec<f32> = match shape.ty() {
+            xla::ElementType::F32 => lit.to_vec::<f32>()?,
+            xla::ElementType::F64 => lit
+                .convert(xla::ElementType::F32.primitive_type())?
+                .to_vec::<f32>()?,
+            xla::ElementType::S32 | xla::ElementType::S64 => lit
+                .convert(xla::ElementType::F32.primitive_type())?
+                .to_vec::<f32>()?,
+            t => return Err(anyhow!("{name}: unsupported dtype {t:?}")),
+        };
+        out.insert(name, Tensor { shape: dims, data });
+    }
+    Ok(out)
+}
+
+/// Serialize one f32 tensor as npy v1.0 bytes (little-endian C order).
+fn npy_bytes(t: &Tensor) -> Vec<u8> {
+    let shape = t
+        .shape
+        .iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join(", ");
+    let shape = if t.shape.len() == 1 {
+        format!("({shape},)")
+    } else {
+        format!("({shape})")
+    };
+    let mut header =
+        format!("{{'descr': '<f4', 'fortran_order': False, 'shape': {shape}, }}");
+    // pad so that magic(6) + ver(2) + len(2) + header is a multiple of 16
+    let unpadded = 10 + header.len() + 1;
+    header.push_str(&" ".repeat((16 - unpadded % 16) % 16));
+    header.push('\n');
+    let mut out = Vec::with_capacity(10 + header.len() + 4 * t.data.len());
+    out.extend_from_slice(b"\x93NUMPY\x01\x00");
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    for v in &t.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Write named f32 tensors to an .npz file (stored zip of .npy members).
+/// Hand-rolled writer: the xla crate's Literal-based writer rejects f32
+/// raw copies in this build, so we emit the npy bytes ourselves through
+/// the zip container format directly.
+pub fn save_npz<P: AsRef<Path>>(path: P, tensors: &[(String, Tensor)]) -> Result<()> {
+    use std::io::Write;
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = std::io::BufWriter::new(f);
+
+    struct Entry {
+        name: String,
+        crc: u32,
+        size: u32,
+        offset: u32,
+    }
+    let mut entries: Vec<Entry> = Vec::new();
+    let mut offset: u32 = 0;
+    for (name, t) in tensors {
+        let bytes = npy_bytes(t);
+        let crc = crc32(&bytes);
+        let fname = format!("{name}.npy");
+        // local file header (stored, no compression)
+        w.write_all(&0x04034b50u32.to_le_bytes())?;
+        w.write_all(&20u16.to_le_bytes())?; // version needed
+        w.write_all(&0u16.to_le_bytes())?; // flags
+        w.write_all(&0u16.to_le_bytes())?; // method: stored
+        w.write_all(&0u16.to_le_bytes())?; // mod time
+        w.write_all(&0u16.to_le_bytes())?; // mod date
+        w.write_all(&crc.to_le_bytes())?;
+        w.write_all(&(bytes.len() as u32).to_le_bytes())?; // compressed
+        w.write_all(&(bytes.len() as u32).to_le_bytes())?; // uncompressed
+        w.write_all(&(fname.len() as u16).to_le_bytes())?;
+        w.write_all(&0u16.to_le_bytes())?; // extra len
+        w.write_all(fname.as_bytes())?;
+        w.write_all(&bytes)?;
+        entries.push(Entry {
+            name: fname.clone(),
+            crc,
+            size: bytes.len() as u32,
+            offset,
+        });
+        offset += 30 + fname.len() as u32 + bytes.len() as u32;
+    }
+    // central directory
+    let cd_start = offset;
+    let mut cd_size = 0u32;
+    for e in &entries {
+        w.write_all(&0x02014b50u32.to_le_bytes())?;
+        w.write_all(&20u16.to_le_bytes())?; // version made by
+        w.write_all(&20u16.to_le_bytes())?; // version needed
+        w.write_all(&0u16.to_le_bytes())?; // flags
+        w.write_all(&0u16.to_le_bytes())?; // method
+        w.write_all(&0u16.to_le_bytes())?; // time
+        w.write_all(&0u16.to_le_bytes())?; // date
+        w.write_all(&e.crc.to_le_bytes())?;
+        w.write_all(&e.size.to_le_bytes())?;
+        w.write_all(&e.size.to_le_bytes())?;
+        w.write_all(&(e.name.len() as u16).to_le_bytes())?;
+        w.write_all(&0u16.to_le_bytes())?; // extra
+        w.write_all(&0u16.to_le_bytes())?; // comment
+        w.write_all(&0u16.to_le_bytes())?; // disk
+        w.write_all(&0u16.to_le_bytes())?; // internal attrs
+        w.write_all(&0u32.to_le_bytes())?; // external attrs
+        w.write_all(&e.offset.to_le_bytes())?;
+        w.write_all(e.name.as_bytes())?;
+        cd_size += 46 + e.name.len() as u32;
+    }
+    // end of central directory
+    w.write_all(&0x06054b50u32.to_le_bytes())?;
+    w.write_all(&0u16.to_le_bytes())?; // disk
+    w.write_all(&0u16.to_le_bytes())?; // cd disk
+    w.write_all(&(entries.len() as u16).to_le_bytes())?;
+    w.write_all(&(entries.len() as u16).to_le_bytes())?;
+    w.write_all(&cd_size.to_le_bytes())?;
+    w.write_all(&cd_start.to_le_bytes())?;
+    w.write_all(&0u16.to_le_bytes())?; // comment len
+    w.flush()?;
+    Ok(())
+}
+
+/// CRC-32 (IEEE 802.3), table-free bitwise variant -- cold path only.
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("neurram_npz_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.npz");
+        let t = Tensor { shape: vec![2, 3], data: vec![1., 2., 3., 4., 5., 6.] };
+        save_npz(&path, &[("a".to_string(), t.clone())]).unwrap();
+        let m = load_npz(&path).unwrap();
+        assert_eq!(m["a"].shape, vec![2, 3]);
+        assert_eq!(m["a"].data, t.data);
+    }
+}

@@ -1,0 +1,41 @@
+//! # NeuRRAM-Sim
+//!
+//! Full-stack reproduction of the NeuRRAM RRAM compute-in-memory chip
+//! (Wan et al., 2021): a behavioural + energy simulator of the 48-core
+//! chip, the hardware-algorithm co-optimization toolchain the paper
+//! describes, and a PJRT runtime that executes the AOT-lowered JAX/Pallas
+//! model graphs on the request path (python is build-time only).
+//!
+//! Module map (see DESIGN.md for the full system inventory):
+//!
+//! * [`util`]        -- PRNG/LFSR, JSON, CLI, stats, bench harness
+//! * [`device`]      -- RRAM cell physics + write-verify programming
+//! * [`core_sim`]    -- one CIM core: TNSA, voltage-mode neuron, crossbar
+//! * [`energy`]      -- energy/latency accounting, EDP, tech scaling
+//! * [`coordinator`] -- the 48-core chip: mapping, scheduling, dataflow
+//! * [`models`]      -- layer graphs, conductance compilation, model zoo
+//! * [`runtime`]     -- PJRT client: load + execute HLO artifacts
+//! * [`calib`]       -- model-driven chip calibration
+//! * [`io`]          -- datasets (synthetic substrates), metrics, npz I/O
+
+pub mod calib;
+pub mod coordinator;
+pub mod core_sim;
+pub mod device;
+pub mod energy;
+pub mod io;
+pub mod models;
+pub mod runtime;
+pub mod util;
+
+/// Physical array size of one CIM core (256x256 1T1R cells).
+pub const CORE_ROWS: usize = 256;
+/// Columns (source lines) of one CIM core.
+pub const CORE_COLS: usize = 256;
+/// Logical weight rows per core: weights are differential pairs on
+/// adjacent rows, so 128 pairs fill the 256 physical rows.
+pub const CORE_WEIGHT_ROWS: usize = CORE_ROWS / 2;
+/// Number of CIM cores on the chip.
+pub const NUM_CORES: usize = 48;
+/// Corelet grid dimension: the TNSA is 16x16 corelets of 16x16 RRAMs.
+pub const CORELET_DIM: usize = 16;

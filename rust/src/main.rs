@@ -1,0 +1,56 @@
+//! NeuRRAM-Sim CLI: the paper's "software toolchain" entry point.
+//!
+//! Subcommands:
+//!   info                chip + artifact summary
+//!   edp                 Fig. 1d-style EDP sweep over bit precisions
+//!   writeverify         ED Fig. 3 programming statistics
+//!   infer-mnist         end-to-end CNN inference on the chip simulator
+//!   runtime-check       load + execute PJRT artifacts against golden
+//!   calibrate-demo      model-driven calibration walk-through
+
+use neurram::util::cli::Args;
+
+mod commands {
+    pub mod edp;
+    pub mod infer;
+    pub mod info;
+    pub mod runtime_check;
+    pub mod writeverify;
+}
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("info") => commands::info::run(&args),
+        Some("edp") => commands::edp::run(&args),
+        Some("writeverify") => commands::writeverify::run(&args),
+        Some("infer-mnist") => commands::infer::run_mnist(&args),
+        Some("runtime-check") => commands::runtime_check::run(&args),
+        Some("config-dump") => {
+            let cfg = match args.get("config") {
+                Some(path) => neurram::util::config::ChipConfig::from_file(path),
+                None => Ok(neurram::util::config::ChipConfig::default()),
+            };
+            cfg.map(|c| println!("{}", c.to_json().to_string_pretty()))
+        }
+        _ => {
+            eprintln!(
+                "usage: neurram <info|edp|writeverify|infer-mnist|runtime-check> [--opts]\n\
+                 \n\
+                 info           chip configuration + artifact inventory\n\
+                 edp            EDP/TOPS-W sweep over input/output bits (Fig. 1d)\n\
+                 writeverify    write-verify programming statistics (ED Fig. 3)\n\
+                 infer-mnist    CNN inference on the 48-core chip simulator\n\
+                 runtime-check  PJRT artifact execution vs golden vectors\n\
+                 config-dump    print the effective chip configuration\n\
+                 \n\
+                 --config chip.json overrides device/write-verify/energy params"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,184 @@
+//! Built-in model zoo -- shape-identical to `python/compile/model.py` so
+//! npz weight exports load directly.  Table 1 of the paper.
+
+use super::graph::{LayerKind, LayerSpec, ModelGraph};
+use crate::core_sim::Activation;
+
+/// 7-layer CNN for 28x28 digits (paper MNIST model, width-scaled).
+pub fn mnist_cnn7(width: usize) -> ModelGraph {
+    let (w1, w2, w3) = (width, 2 * width, 4 * width);
+    let chans = [(1, w1), (w1, w1), (w1, w2), (w2, w2), (w2, w3), (w3, w3)];
+    let pools = [1, 2, 1, 2, 1, 2];
+    let mut layers = Vec::new();
+    for (i, (&(ci, co), &p)) in chans.iter().zip(pools.iter()).enumerate() {
+        let mut l = LayerSpec::conv(&format!("conv{}", i + 1), 3, 3, ci, co, p);
+        // paper "4-b/3-b unsigned" activations sit in the positive half
+        // of a 5-b/4-b signed chip input (bit-serial scheme is signed)
+        l.input_bits = if i == 0 { 5 } else { 4 };
+        // early layers see larger feature maps -> higher intensity
+        l.intensity = match i {
+            0 | 1 => 4.0,
+            2 | 3 => 2.0,
+            _ => 1.0,
+        };
+        layers.push(l);
+    }
+    let mut fc = LayerSpec::dense("fc", 3 * 3 * w3, 10);
+    fc.input_bits = 4;
+    layers.push(fc);
+    ModelGraph {
+        name: "mnist_cnn7".into(),
+        layers,
+        input_hw: 28,
+        input_ch: 1,
+        n_classes: 10,
+        dataflow: "Forward",
+    }
+}
+
+/// ResNet-20-shaped CNN for 32x32x3 (paper CIFAR-10 model, width-scaled).
+pub fn cifar_resnet(width: usize, blocks_per_stage: usize) -> ModelGraph {
+    let mut layers = Vec::new();
+    let mut l0 = LayerSpec::conv("conv_in", 3, 3, 3, width, 1);
+    l0.input_bits = 5;
+    l0.intensity = 4.0;
+    layers.push(l0);
+    let mut cur = width;
+    let mut idx = 1;
+    for stage in 0..3 {
+        let out = width * (1 << stage);
+        for blk in 0..blocks_per_stage {
+            for half in 0..2 {
+                let pool = if stage > 0 && blk == 0 && half == 0 { 2 } else { 1 };
+                let mut l = LayerSpec::conv(&format!("conv{idx}"), 3, 3, cur,
+                                            out, pool);
+                l.input_bits = 4;
+                l.intensity = match stage {
+                    0 => 4.0,
+                    1 => 2.0,
+                    _ => 1.0,
+                };
+                layers.push(l);
+                cur = out;
+                idx += 1;
+            }
+        }
+    }
+    let hw = 32 / 4;
+    let mut fc = LayerSpec::dense("fc", hw * hw * cur, 10);
+    fc.input_bits = 4;
+    layers.push(fc);
+    ModelGraph {
+        name: "cifar_resnet".into(),
+        layers,
+        input_hw: 32,
+        input_ch: 3,
+        n_classes: 10,
+        dataflow: "Forward",
+    }
+}
+
+/// 4-parallel-cell LSTM for speech commands (one cell's three matrices,
+/// repeated per cell by the coordinator).
+pub fn speech_lstm(hidden: usize, n_cells: usize) -> ModelGraph {
+    let input_dim = 40;
+    let mut layers = Vec::new();
+    for c in 0..n_cells {
+        let mut wx = LayerSpec::dense(&format!("cell{c}.wx"), input_dim,
+                                      4 * hidden);
+        wx.kind = LayerKind::LstmGate;
+        wx.g_max_us = 30.0;
+        wx.input_bits = 4;
+        let mut wh = LayerSpec::dense(&format!("cell{c}.wh"), hidden,
+                                      4 * hidden);
+        wh.kind = LayerKind::LstmGate;
+        wh.g_max_us = 30.0;
+        wh.input_bits = 4;
+        // recurrent matrices run every time step -> high intensity
+        wx.intensity = 3.0;
+        wh.intensity = 3.0;
+        let mut wo = LayerSpec::dense(&format!("cell{c}.wo"), hidden, 12);
+        wo.g_max_us = 30.0;
+        wo.input_bits = 4;
+        layers.push(wx);
+        layers.push(wh);
+        layers.push(wo);
+    }
+    ModelGraph {
+        name: "speech_lstm".into(),
+        layers,
+        input_hw: 50, // time steps
+        input_ch: input_dim,
+        n_classes: 12,
+        dataflow: "Recurrent + Forward",
+    }
+}
+
+/// Image-recovery RBM: 794 visible x 120 hidden (bidirectional).
+pub fn rbm_image() -> ModelGraph {
+    let mut w = LayerSpec::dense("rbm", 794, 120);
+    w.kind = LayerKind::Rbm;
+    w.g_max_us = 30.0;
+    w.input_bits = 2; // binary +/- drive
+    w.activation = Activation::Stochastic;
+    ModelGraph {
+        name: "image_rbm".into(),
+        layers: vec![w],
+        input_hw: 28,
+        input_ch: 1,
+        n_classes: 10,
+        dataflow: "Forward + Backward",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_shapes_match_python() {
+        let m = mnist_cnn7(8);
+        assert_eq!(m.layers.len(), 7);
+        assert_eq!(m.layers[0].in_features, 9);
+        assert_eq!(m.layers[0].out_features, 8);
+        assert_eq!(m.layers[5].in_features, 9 * 32);
+        assert_eq!(m.layers[6].in_features, 3 * 3 * 32);
+        assert_eq!(m.layers[6].out_features, 10);
+    }
+
+    #[test]
+    fn cifar_layer_count_is_resnet20_shaped() {
+        let m = cifar_resnet(8, 3);
+        // 1 input conv + 3 stages * 3 blocks * 2 convs + fc = 20 layers
+        assert_eq!(m.layers.len(), 20);
+        assert_eq!(m.layers.last().unwrap().out_features, 10);
+    }
+
+    #[test]
+    fn lstm_matrix_shapes() {
+        let m = speech_lstm(64, 4);
+        assert_eq!(m.layers.len(), 12);
+        assert_eq!(m.layers[0].in_features, 40);
+        assert_eq!(m.layers[0].out_features, 256);
+        assert_eq!(m.layers[1].in_features, 64);
+        assert_eq!(m.layers[2].out_features, 12);
+    }
+
+    #[test]
+    fn rbm_is_bidirectional_stochastic() {
+        let m = rbm_image();
+        assert_eq!(m.layers[0].in_features, 794);
+        assert_eq!(m.layers[0].activation, Activation::Stochastic);
+        assert_eq!(m.dataflow, "Forward + Backward");
+    }
+
+    #[test]
+    fn param_counts_paper_scale() {
+        // paper Table 1 scale: 23K (MNIST), 274K (ResNet-20) at full width
+        let mnist = mnist_cnn7(8);
+        assert!((15_000..40_000).contains(&mnist.n_params()),
+                "{}", mnist.n_params());
+        let cifar = cifar_resnet(16, 3);
+        assert!(cifar.n_params() > 100_000);
+    }
+}

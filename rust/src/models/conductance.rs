@@ -1,0 +1,186 @@
+//! Weight matrix -> differential conductance compilation (paper Methods +
+//! Extended Data Fig. 3a).  Mirrors `python/compile/kernels/ref.py`
+//! `encode_differential` and the bias-row augmentation of
+//! `python/compile/model.py`.
+
+/// g+ = max(g_max * w / w_max, g_min); g- = max(-g_max * w / w_max, g_min).
+pub fn encode_differential(
+    w: &[f32],
+    g_max_us: f64,
+    g_min_us: f64,
+    w_max: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let w_max = w_max.max(1e-9);
+    let mut gp = Vec::with_capacity(w.len());
+    let mut gn = Vec::with_capacity(w.len());
+    for &x in w {
+        let s = (g_max_us as f32) * x / w_max;
+        gp.push(s.max(g_min_us as f32));
+        gn.push((-s).max(g_min_us as f32));
+    }
+    (gp, gn)
+}
+
+/// A compiled conductance matrix (bias rows folded in), ready to map.
+#[derive(Clone, Debug)]
+pub struct ConductanceMatrix {
+    pub layer: String,
+    pub rows: usize, // logical rows incl. bias rows
+    pub cols: usize,
+    pub g_pos: Vec<f32>,
+    pub g_neg: Vec<f32>,
+    pub w_max: f32,
+    pub n_bias_rows: usize,
+    pub g_max_us: f64,
+}
+
+impl ConductanceMatrix {
+    /// Compile weights [in_features x out_features] (+ optional bias) into
+    /// the differential layout.  `in_mag` is the full-scale input the bias
+    /// rows are driven at; `force_bias_rows` pins the bias row count (the
+    /// AOT graphs use 1).
+    pub fn compile(
+        layer: &str,
+        w: &[f32],
+        bias: Option<&[f32]>,
+        in_features: usize,
+        out_features: usize,
+        in_mag: i32,
+        g_max_us: f64,
+        g_min_us: f64,
+        force_bias_rows: Option<usize>,
+    ) -> ConductanceMatrix {
+        assert_eq!(w.len(), in_features * out_features);
+        let w_max_w = w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let mut aug = w.to_vec();
+        let mut nb = 0usize;
+        if let Some(b) = bias {
+            assert_eq!(b.len(), out_features);
+            let b_max = b.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            nb = force_bias_rows.unwrap_or_else(|| {
+                // paper: bias range B times the weight range -> B rows
+                ((b_max / (w_max_w.max(1e-9) * in_mag.max(1) as f32))
+                    .ceil() as usize)
+                    .max(1)
+            });
+            let denom = (nb as f32) * in_mag.max(1) as f32;
+            for _ in 0..nb {
+                for &bv in b {
+                    let mut v = bv / denom;
+                    if force_bias_rows.is_some() {
+                        v = v.clamp(-w_max_w, w_max_w);
+                    }
+                    aug.push(v);
+                }
+            }
+        } else if let Some(f) = force_bias_rows {
+            nb = f;
+            aug.extend(std::iter::repeat(0.0f32).take(f * out_features));
+        }
+        let w_max = aug.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let (g_pos, g_neg) = encode_differential(&aug, g_max_us, g_min_us, w_max);
+        ConductanceMatrix {
+            layer: layer.to_string(),
+            rows: in_features + nb,
+            cols: out_features,
+            g_pos,
+            g_neg,
+            w_max,
+            n_bias_rows: nb,
+            g_max_us,
+        }
+    }
+
+    /// Slice rows [lo, hi) into a new matrix (vertical split for mapping).
+    pub fn row_slice(&self, lo: usize, hi: usize) -> ConductanceMatrix {
+        let c = self.cols;
+        ConductanceMatrix {
+            layer: format!("{}[{}..{}]", self.layer, lo, hi),
+            rows: hi - lo,
+            cols: c,
+            g_pos: self.g_pos[lo * c..hi * c].to_vec(),
+            g_neg: self.g_neg[lo * c..hi * c].to_vec(),
+            w_max: self.w_max,
+            n_bias_rows: 0,
+            g_max_us: self.g_max_us,
+        }
+    }
+
+    /// Slice columns [lo, hi) (horizontal split).
+    pub fn col_slice(&self, lo: usize, hi: usize) -> ConductanceMatrix {
+        let c = self.cols;
+        let w = hi - lo;
+        let mut gp = Vec::with_capacity(self.rows * w);
+        let mut gn = Vec::with_capacity(self.rows * w);
+        for r in 0..self.rows {
+            gp.extend_from_slice(&self.g_pos[r * c + lo..r * c + hi]);
+            gn.extend_from_slice(&self.g_neg[r * c + lo..r * c + hi]);
+        }
+        ConductanceMatrix {
+            layer: format!("{}[:,{}..{}]", self.layer, lo, hi),
+            rows: self.rows,
+            cols: w,
+            g_pos: gp,
+            g_neg: gn,
+            w_max: self.w_max,
+            n_bias_rows: self.n_bias_rows,
+            g_max_us: self.g_max_us,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn polarity_and_clamp() {
+        let (gp, gn) = encode_differential(&[1.0, -1.0, 0.0], 40.0, 1.0, 1.0);
+        assert_eq!(gp, vec![40.0, 1.0, 1.0]);
+        assert_eq!(gn, vec![1.0, 40.0, 1.0]);
+    }
+
+    #[test]
+    fn compile_with_bias_rows() {
+        // weights in [-1,1], bias up to 14 with in_mag 7 -> 2 bias rows
+        let w = vec![1.0f32, -0.5, 0.25, 0.75];
+        let b = vec![14.0f32, -7.0];
+        let m = ConductanceMatrix::compile("l", &w, Some(&b), 2, 2, 7, 40.0,
+                                           1.0, None);
+        assert_eq!(m.n_bias_rows, 2);
+        assert_eq!(m.rows, 4);
+        // bias contribution: nb rows * in_mag * per_row = b
+        let per_row0 = 14.0 / (2.0 * 7.0);
+        // find bias row weight via decode: g scaled by w_max
+        let idx = 2 * 2; // first bias row, col 0
+        let wd = (m.g_pos[idx] - m.g_neg[idx]) * m.w_max / 40.0;
+        assert!((wd - per_row0).abs() < 0.05); // g_min clamp skews decode by ~1/40
+    }
+
+    #[test]
+    fn forced_single_bias_row_clips() {
+        let w = vec![0.1f32; 4];
+        let b = vec![100.0f32, 0.0];
+        let m = ConductanceMatrix::compile("l", &w, Some(&b), 2, 2, 7, 40.0,
+                                           1.0, Some(1));
+        assert_eq!(m.n_bias_rows, 1);
+        assert_eq!(m.rows, 3);
+        // clipped to w_max of weights
+        let wd = (m.g_pos[4] - m.g_neg[4]) * m.w_max / 40.0;
+        assert!(wd <= 0.1 + 1e-5);
+    }
+
+    #[test]
+    fn slicing_preserves_cells() {
+        let w: Vec<f32> = (0..12).map(|i| i as f32 / 12.0 - 0.5).collect();
+        let m = ConductanceMatrix::compile("l", &w, None, 3, 4, 7, 40.0, 1.0,
+                                           None);
+        let top = m.row_slice(0, 2);
+        assert_eq!(top.rows, 2);
+        assert_eq!(top.g_pos[..8], m.g_pos[..8]);
+        let left = m.col_slice(0, 2);
+        assert_eq!(left.cols, 2);
+        assert_eq!(left.g_pos[0], m.g_pos[0]);
+        assert_eq!(left.g_pos[2], m.g_pos[4]);
+    }
+}

@@ -1,0 +1,212 @@
+//! Chip-level model execution: drives a `NeuRramChip` through whole-model
+//! inference (im2col convolutions, pooling, requantization between
+//! layers), mirroring the integer pipeline of
+//! `python/compile/model.py::chip_forward`.
+
+use super::graph::{LayerKind, ModelGraph};
+use super::quant::requantize_unsigned;
+use crate::coordinator::NeuRramChip;
+use crate::core_sim::{Activation, NeuronConfig};
+
+/// Feature map in channel-last layout [h][w][c], flattened.
+#[derive(Clone, Debug)]
+pub struct FeatureMap {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<i32>,
+}
+
+impl FeatureMap {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        FeatureMap { h, w, c, data: vec![0; h * w * c] }
+    }
+
+    #[inline]
+    pub fn get(&self, y: isize, x: isize, ch: usize) -> i32 {
+        if y < 0 || x < 0 || y as usize >= self.h || x as usize >= self.w {
+            return 0; // SAME zero padding
+        }
+        self.data[(y as usize * self.w + x as usize) * self.c + ch]
+    }
+}
+
+/// im2col patch extraction (kh x kw x c, channel-fastest) matching the
+/// python `im2col` ordering.
+pub fn extract_patch(fm: &FeatureMap, cy: usize, cx: usize, kh: usize,
+                     kw: usize) -> Vec<i32> {
+    let mut patch = Vec::with_capacity(kh * kw * fm.c);
+    let oy = cy as isize - (kh / 2) as isize;
+    let ox = cx as isize - (kw / 2) as isize;
+    for dy in 0..kh as isize {
+        for dx in 0..kw as isize {
+            for ch in 0..fm.c {
+                patch.push(fm.get(oy + dy, ox + dx, ch));
+            }
+        }
+    }
+    patch
+}
+
+/// 2x max-pool on a float map [h][w][c].
+fn maxpool2(vals: &[f64], h: usize, w: usize, c: usize, k: usize)
+            -> (Vec<f64>, usize, usize) {
+    if k <= 1 {
+        return (vals.to_vec(), h, w);
+    }
+    let nh = h / k;
+    let nw = w / k;
+    let mut out = vec![f64::MIN; nh * nw * c];
+    for y in 0..nh * k {
+        for x in 0..nw * k {
+            for ch in 0..c {
+                let v = vals[(y * w + x) * c + ch];
+                let o = ((y / k) * nw + x / k) * c + ch;
+                if v > out[o] {
+                    out[o] = v;
+                }
+            }
+        }
+    }
+    (out, nh, nw)
+}
+
+/// Execute a CNN graph on the chip for one image.
+///
+/// `img_q` is the input image quantized to the first layer's unsigned
+/// input range, channel-last.  `shifts[i]` is layer i's calibrated
+/// requantization shift.  Returns the logits (de-normalized floats).
+pub fn run_cnn(
+    chip: &mut NeuRramChip,
+    graph: &ModelGraph,
+    img_q: &[i32],
+    shifts: &[f64],
+) -> Vec<f64> {
+    assert_eq!(shifts.len(), graph.layers.len());
+    let mut fm = FeatureMap {
+        h: graph.input_hw,
+        w: graph.input_hw,
+        c: graph.input_ch,
+        data: img_q.to_vec(),
+    };
+
+    for (li, layer) in graph.layers.iter().enumerate() {
+        // MVMs always run linear ADC: a layer split over row segments
+        // accumulates de-normalized partials, so the nonlinearity must be
+        // applied digitally after accumulation (mirrors cim_linear, which
+        // only folds the activation when a layer fits a single segment).
+        let cfg = NeuronConfig {
+            input_bits: layer.input_bits,
+            output_bits: layer.output_bits,
+            activation: Activation::None,
+            // 1/64 LSB keeps the full +-1 V settled swing inside the
+            // 127-step decrement ceiling (finer LSBs clip first-layer
+            // voltages driven by 4-b-unsigned inputs)
+            ..Default::default()
+        };
+        let last = li == graph.layers.len() - 1;
+        let next_bits = if last { 0 } else { graph.layers[li + 1].input_bits };
+
+        match layer.kind {
+            LayerKind::Conv => {
+                let oc = layer.out_features;
+                let mut vals = vec![0.0f64; fm.h * fm.w * oc];
+                let n_rep = chip.plan.replica_count(&layer.name).max(1);
+                let mut item = 0usize;
+                for y in 0..fm.h {
+                    for x in 0..fm.w {
+                        let patch =
+                            extract_patch(&fm, y, x, layer.kh, layer.kw);
+                        let rep = item % n_rep;
+                        item += 1;
+                        let out =
+                            chip.mvm_layer(&layer.name, &patch, &cfg, rep);
+                        for (ch, v) in out.iter().enumerate() {
+                            vals[(y * fm.w + x) * oc + ch] = *v;
+                        }
+                    }
+                }
+                // activation is folded in the neuron when the layer fits a
+                // single segment; a split layer accumulates linear
+                // partials, so apply ReLU digitally here as chip_forward
+                // does (cim_linear applies relu post-accumulation).
+                if layer.activation == Activation::Relu {
+                    for v in vals.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+                let (pooled, nh, nw) =
+                    maxpool2(&vals, fm.h, fm.w, oc, layer.pool);
+                let mut next = FeatureMap::new(nh, nw, oc);
+                for (o, v) in next.data.iter_mut().zip(&pooled) {
+                    // unsigned activation in the positive half of the
+                    // next layer's signed range: clip at 2^(n-1)-1
+                    *o = requantize_unsigned(*v, shifts[li], next_bits - 1);
+                }
+                fm = next;
+            }
+            _ => {
+                // dense head
+                let x: Vec<i32> = fm.data.clone();
+                let out = chip.mvm_layer(&layer.name, &x, &cfg, 0);
+                if last {
+                    return out;
+                }
+                let mut next = FeatureMap::new(1, 1, layer.out_features);
+                for (o, v) in next.data.iter_mut().zip(&out) {
+                    *o = requantize_unsigned(*v, shifts[li], next_bits - 1);
+                }
+                fm = next;
+            }
+        }
+    }
+    fm.data.iter().map(|&v| v as f64).collect()
+}
+
+/// Split-layer aware ReLU note: `mvm_layer` accumulates de-normalized
+/// partial sums; when a layer spans multiple row segments the folded
+/// neuron activation must be linear and the nonlinearity applied after
+/// accumulation.  The chip model therefore always requests linear ADC
+/// and applies ReLU digitally (matching `cim_linear`'s contract).
+pub fn effective_mvm_activation(_layer: &super::graph::LayerSpec) -> Activation {
+    Activation::None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn patch_ordering_channel_fastest() {
+        let mut fm = FeatureMap::new(3, 3, 2);
+        for i in 0..fm.data.len() {
+            fm.data[i] = i as i32;
+        }
+        let p = extract_patch(&fm, 1, 1, 3, 3);
+        assert_eq!(p.len(), 18);
+        // first element = top-left pixel, channel 0 => index (0*3+0)*2+0
+        assert_eq!(p[0], 0);
+        assert_eq!(p[1], 1); // channel 1 next (channel-fastest)
+        assert_eq!(p[2], 2); // then x+1 pixel channel 0
+    }
+
+    #[test]
+    fn patch_zero_padding() {
+        let mut fm = FeatureMap::new(2, 2, 1);
+        fm.data = vec![1, 2, 3, 4];
+        let p = extract_patch(&fm, 0, 0, 3, 3);
+        // top-left corner: first row/col padded with zeros
+        assert_eq!(p[0], 0);
+        assert_eq!(p[4], 1); // centre
+    }
+
+    #[test]
+    fn maxpool_reduces() {
+        let vals = vec![1.0, 2.0, 3.0, 4.0]; // 2x2x1
+        let (out, h, w) = maxpool2(&vals, 2, 2, 1, 2);
+        assert_eq!((h, w), (1, 1));
+        assert_eq!(out, vec![4.0]);
+    }
+}

@@ -1,0 +1,138 @@
+//! Layer-graph IR: the minimal model description the coordinator needs to
+//! map weights onto cores and drive inference.
+
+use crate::core_sim::Activation;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Convolution executed as im2col + MVM (paper Fig. 4c flattening).
+    Conv,
+    /// Fully-connected.
+    Dense,
+    /// LSTM gate matrix (part of a recurrent cell).
+    LstmGate,
+    /// RBM weight matrix (bidirectional).
+    Rbm,
+}
+
+/// One CIM-mapped layer.  `in_features` counts logical weight rows before
+/// bias augmentation; conv layers use kh*kw*in_channels.
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub name: String,
+    pub kind: LayerKind,
+    pub in_features: usize,
+    pub out_features: usize,
+    pub input_bits: u32,
+    pub output_bits: u32,
+    pub activation: Activation,
+    pub g_max_us: f64,
+    // conv geometry
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub in_channels: usize,
+    pub out_channels: usize,
+    /// max-pool factor applied after the layer
+    pub pool: usize,
+    /// Relative compute intensity (MACs per weight); drives duplication.
+    pub intensity: f64,
+}
+
+impl LayerSpec {
+    pub fn dense(name: &str, inf: usize, outf: usize) -> LayerSpec {
+        LayerSpec {
+            name: name.to_string(),
+            kind: LayerKind::Dense,
+            in_features: inf,
+            out_features: outf,
+            input_bits: 4,
+            output_bits: 8,
+            activation: Activation::None,
+            g_max_us: 40.0,
+            kh: 0,
+            kw: 0,
+            stride: 1,
+            in_channels: 0,
+            out_channels: 0,
+            pool: 1,
+            intensity: 1.0,
+        }
+    }
+
+    pub fn conv(
+        name: &str,
+        kh: usize,
+        kw: usize,
+        in_ch: usize,
+        out_ch: usize,
+        pool: usize,
+    ) -> LayerSpec {
+        LayerSpec {
+            name: name.to_string(),
+            kind: LayerKind::Conv,
+            in_features: kh * kw * in_ch,
+            out_features: out_ch,
+            input_bits: 3,
+            output_bits: 8,
+            activation: Activation::Relu,
+            g_max_us: 40.0,
+            kh,
+            kw,
+            stride: 1,
+            in_channels: in_ch,
+            out_channels: out_ch,
+            pool,
+            intensity: 1.0,
+        }
+    }
+
+    /// Parameter count (weights + biases).
+    pub fn n_params(&self) -> usize {
+        self.in_features * self.out_features + self.out_features
+    }
+
+    pub fn in_mag_max(&self) -> i32 {
+        if self.input_bits <= 1 {
+            1
+        } else {
+            (1 << (self.input_bits - 1)) - 1
+        }
+    }
+}
+
+/// A whole model: ordered layers + input geometry.
+#[derive(Clone, Debug)]
+pub struct ModelGraph {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+    pub input_hw: usize,
+    pub input_ch: usize,
+    pub n_classes: usize,
+    /// Dataflow summary for Table 1.
+    pub dataflow: &'static str,
+}
+
+impl ModelGraph {
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.n_params()).sum()
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&LayerSpec> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_constructors() {
+        let d = LayerSpec::dense("fc", 100, 10);
+        assert_eq!(d.n_params(), 1010);
+        let c = LayerSpec::conv("c1", 3, 3, 8, 16, 2);
+        assert_eq!(c.in_features, 72);
+        assert_eq!(c.out_features, 16);
+    }
+}

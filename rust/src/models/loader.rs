@@ -1,0 +1,111 @@
+//! Model weight loading: compile a `ModelGraph` + weights (from an npz
+//! export of the python training path, or random-init fallback) into the
+//! conductance matrices the coordinator maps.
+//!
+//! npz key convention (matches `python/compile/train` exports):
+//! `<layer>.w` with shape [in_features, out_features], `<layer>.b` with
+//! shape [out_features].
+
+use super::conductance::ConductanceMatrix;
+use super::graph::ModelGraph;
+use crate::io::npz::Tensor;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Compile all layers from an npz weight map.
+pub fn compile_from_npz(
+    graph: &ModelGraph,
+    weights: &BTreeMap<String, Tensor>,
+    force_bias_rows: Option<usize>,
+) -> Result<Vec<ConductanceMatrix>, String> {
+    let mut out = Vec::new();
+    for l in &graph.layers {
+        let wk = format!("{}.w", l.name);
+        let w = weights
+            .get(&wk)
+            .ok_or_else(|| format!("missing weight {wk}"))?;
+        if w.numel() != l.in_features * l.out_features {
+            return Err(format!(
+                "{wk}: {} elements, expected {}x{}",
+                w.numel(),
+                l.in_features,
+                l.out_features
+            ));
+        }
+        let bk = format!("{}.b", l.name);
+        let b = weights.get(&bk).map(|t| t.data.as_slice());
+        out.push(ConductanceMatrix::compile(
+            &l.name,
+            &w.data,
+            b,
+            l.in_features,
+            l.out_features,
+            l.in_mag_max(),
+            l.g_max_us,
+            1.0,
+            force_bias_rows,
+        ));
+    }
+    Ok(out)
+}
+
+/// Random He-init weights (untrained baseline / smoke tests).
+pub fn compile_random(graph: &ModelGraph, seed: u64) -> Vec<ConductanceMatrix> {
+    let mut rng = Rng::new(seed);
+    graph
+        .layers
+        .iter()
+        .map(|l| {
+            let std = (2.0 / l.in_features as f64).sqrt();
+            let w: Vec<f32> = (0..l.in_features * l.out_features)
+                .map(|_| (rng.normal() * std) as f32)
+                .collect();
+            let b = vec![0.0f32; l.out_features];
+            ConductanceMatrix::compile(
+                &l.name,
+                &w,
+                Some(&b),
+                l.in_features,
+                l.out_features,
+                l.in_mag_max(),
+                l.g_max_us,
+                1.0,
+                None,
+            )
+        })
+        .collect()
+}
+
+/// Per-layer compute intensity vector for the mapper.
+pub fn intensities(graph: &ModelGraph) -> Vec<f64> {
+    graph.layers.iter().map(|l| l.intensity).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::builtin::mnist_cnn7;
+
+    #[test]
+    fn random_compile_covers_all_layers() {
+        let g = mnist_cnn7(8);
+        let ms = compile_random(&g, 1);
+        assert_eq!(ms.len(), g.layers.len());
+        for (m, l) in ms.iter().zip(&g.layers) {
+            assert_eq!(m.cols, l.out_features);
+            assert!(m.rows >= l.in_features);
+        }
+    }
+
+    #[test]
+    fn npz_compile_validates_shapes() {
+        let g = mnist_cnn7(8);
+        let mut weights = BTreeMap::new();
+        weights.insert(
+            "conv1.w".to_string(),
+            Tensor { shape: vec![9, 8], data: vec![0.1; 72] },
+        );
+        // missing other layers
+        assert!(compile_from_npz(&g, &weights, None).is_err());
+    }
+}

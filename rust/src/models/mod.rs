@@ -1,0 +1,15 @@
+//! Model compilation: layer graphs, weight -> differential-conductance
+//! encoding, quantization helpers, and the built-in model zoo mirroring
+//! `python/compile/model.py` (the two sides must agree on shapes so
+//! npz-exported weights load cleanly).
+
+pub mod builtin;
+pub mod conductance;
+pub mod graph;
+pub mod quant;
+
+pub use builtin::{cifar_resnet, mnist_cnn7, rbm_image, speech_lstm};
+pub use conductance::{encode_differential, ConductanceMatrix};
+pub use graph::{LayerKind, LayerSpec, ModelGraph};
+pub mod executor;
+pub mod loader;

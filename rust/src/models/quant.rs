@@ -1,0 +1,84 @@
+//! Digital quantization helpers: layer-to-layer requantization (the
+//! power-of-two shift that model-driven calibration tunes) and input
+//! quantizers matching `python/compile/data.py`.
+
+/// floor(y / 2^shift) clipped to unsigned `bits`.
+pub fn requantize_unsigned(y: f64, shift: f64, bits: u32) -> i32 {
+    let q = (y / 2f64.powf(shift)).floor();
+    let m = ((1u32 << bits) - 1) as f64;
+    q.clamp(0.0, m) as i32
+}
+
+/// floor(y / 2^shift) clipped to signed `bits`.
+pub fn requantize_signed(y: f64, shift: f64, bits: u32) -> i32 {
+    let q = (y / 2f64.powf(shift)).floor();
+    let m = ((1i32 << (bits - 1)) - 1) as f64;
+    q.clamp(-m, m) as i32
+}
+
+/// [0,1] float -> unsigned n-bit integer (chip input format).
+pub fn quantize_unit_unsigned(x: f32, bits: u32) -> i32 {
+    let m = ((1u32 << bits) - 1) as f32;
+    (x * m).round().clamp(0.0, m) as i32
+}
+
+/// zero-mean float -> signed n-bit via sigma clipping (MFCC inputs).
+pub fn quantize_signed_sigma(x: f32, sigma: f32, bits: u32) -> i32 {
+    let m = ((1i32 << (bits - 1)) - 1) as f32;
+    (x / (2.5 * sigma + 1e-6) * m).round().clamp(-m, m) as i32
+}
+
+/// Pick the requantization shift so `pctile_value` maps just inside the
+/// next layer's input range (model-driven calibration rule; mirrors
+/// `noise_train.calibrate_shifts`).
+pub fn calibrate_shift(pctile_value: f64, next_bits: u32) -> f64 {
+    let q_max = ((1u32 << next_bits) - 1) as f64;
+    (pctile_value.max(1e-6) / q_max).log2().ceil().max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requant_unsigned_clips() {
+        assert_eq!(requantize_unsigned(100.0, 2.0, 3), 7);
+        assert_eq!(requantize_unsigned(10.0, 1.0, 3), 5);
+        assert_eq!(requantize_unsigned(-5.0, 0.0, 3), 0);
+    }
+
+    #[test]
+    fn requant_signed_symmetric() {
+        assert_eq!(requantize_signed(9.0, 1.0, 4), 4);
+        assert_eq!(requantize_signed(-9.0, 1.0, 4), -5); // floor semantics
+        assert_eq!(requantize_signed(1000.0, 0.0, 4), 7);
+        assert_eq!(requantize_signed(-1000.0, 0.0, 4), -7);
+    }
+
+    #[test]
+    fn unit_quantizer() {
+        assert_eq!(quantize_unit_unsigned(0.0, 3), 0);
+        assert_eq!(quantize_unit_unsigned(1.0, 3), 7);
+        assert_eq!(quantize_unit_unsigned(0.5, 3), 4);
+    }
+
+    #[test]
+    fn shift_calibration_rule() {
+        // pctile 56 with 3-bit target (max 7): shift = ceil(log2(8)) = 3
+        assert_eq!(calibrate_shift(56.0, 3), 3.0);
+        // small outputs need no shift
+        assert_eq!(calibrate_shift(5.0, 3), 0.0);
+    }
+
+    #[test]
+    fn shift_keeps_percentile_in_range() {
+        for p in [3.0, 17.0, 200.0, 9000.0] {
+            let s = calibrate_shift(p, 3);
+            let q = p / 2f64.powf(s);
+            assert!(q <= 7.0 + 1e-9, "p={p} q={q}");
+            if s > 0.0 {
+                assert!(q > 3.5, "p={p} underutilizes range: q={q}");
+            }
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Artifact manifest: `artifacts/manifest.json` written by
+//! `python/compile/aot.py`.  Describes each HLO artifact's parameter
+//! order/shapes (the contract between the jax lowering and the rust
+//! executor), the golden parity vectors, and the device constants both
+//! sides must agree on.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub kind: String,
+    pub params: Vec<ParamSpec>,
+    pub outputs: Vec<ParamSpec>,
+    pub raw: Json,
+}
+
+impl ArtifactInfo {
+    pub fn hlo_path(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("{}.hlo.txt", self.name))
+    }
+
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GoldenSpec {
+    pub artifact: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    pub lsb_tolerance: Option<f64>,
+    pub rel_tolerance: Option<f64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub golden: BTreeMap<String, GoldenSpec>,
+    pub device_constants: Json,
+}
+
+fn parse_params(j: &Json) -> Result<Vec<ParamSpec>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("params not an array"))?;
+    arr.iter()
+        .map(|p| {
+            let name = p
+                .idx(0)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("param name"))?
+                .to_string();
+            let shape = p
+                .idx(1)
+                .and_then(|v| v.as_shape())
+                .ok_or_else(|| anyhow!("param shape"))?;
+            Ok(ParamSpec { name, shape })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("manifest: no artifacts"))?;
+        for (name, info) in arts {
+            let kind = info
+                .get("kind")
+                .and_then(|k| k.as_str())
+                .unwrap_or("unknown")
+                .to_string();
+            let params = parse_params(
+                info.get("params").ok_or_else(|| anyhow!("params"))?,
+            )?;
+            let outputs = parse_params(
+                info.get("outputs").ok_or_else(|| anyhow!("outputs"))?,
+            )?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    kind,
+                    params,
+                    outputs,
+                    raw: info.clone(),
+                },
+            );
+        }
+
+        let mut golden = BTreeMap::new();
+        if let Some(g) = j.get("golden").and_then(|g| g.as_obj()) {
+            for (name, spec) in g {
+                let inputs: Vec<String> = spec
+                    .get("inputs")
+                    .and_then(|a| a.as_arr())
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|v| v.as_str().map(String::from))
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                let outputs: Vec<String> = match spec.get("outputs") {
+                    Some(o) => o
+                        .as_arr()
+                        .map(|a| {
+                            a.iter()
+                                .filter_map(|v| v.as_str().map(String::from))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                    None => spec
+                        .get("output")
+                        .and_then(|v| v.as_str())
+                        .map(|s| vec![s.to_string()])
+                        .unwrap_or_default(),
+                };
+                golden.insert(
+                    name.clone(),
+                    GoldenSpec {
+                        artifact: spec
+                            .get("artifact")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("")
+                            .to_string(),
+                        inputs,
+                        outputs,
+                        lsb_tolerance: spec
+                            .get("lsb_tolerance")
+                            .and_then(|v| v.as_f64()),
+                        rel_tolerance: spec
+                            .get("rel_tolerance")
+                            .and_then(|v| v.as_f64()),
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            dir,
+            artifacts,
+            golden,
+            device_constants: j
+                .get("device_constants")
+                .cloned()
+                .unwrap_or(Json::Null),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))
+    }
+
+    /// First artifact of a given kind (e.g. "cnn_forward").
+    pub fn artifact_of_kind(&self, kind: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.values().find(|a| a.kind == kind)
+    }
+
+    /// Cross-check a device constant against the rust-side value.
+    pub fn check_constant(&self, key: &str, expect: f64, tol: f64) -> Result<()> {
+        let v = self
+            .device_constants
+            .get(key)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("manifest missing constant {key}"))?;
+        if (v - expect).abs() > tol {
+            return Err(anyhow!(
+                "device constant {key}: manifest {v} vs rust {expect}"
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let dir = std::env::temp_dir().join("neurram_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,
+                "device_constants": {"g_min_us": 1.0},
+                "artifacts": {"m": {"kind": "cim_mvm",
+                  "params": [["x", [4, 8]], ["g", [8, 2]]],
+                  "outputs": [["y", [4, 2]]]}},
+                "golden": {"m": {"artifact": "m", "inputs": ["a"],
+                  "output": "b", "lsb_tolerance": 1}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.artifact("m").unwrap();
+        assert_eq!(a.params.len(), 2);
+        assert_eq!(a.params[0].shape, vec![4, 8]);
+        assert_eq!(m.golden["m"].outputs, vec!["b".to_string()]);
+        m.check_constant("g_min_us", 1.0, 1e-9).unwrap();
+        assert!(m.check_constant("g_min_us", 2.0, 1e-9).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime: load AOT-lowered HLO text artifacts, compile them on the
+//! CPU client, cache executables, and execute them on the request path.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactInfo, Manifest};
+pub use client::Runtime;

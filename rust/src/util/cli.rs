@@ -1,0 +1,111 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Grammar: `binary <subcommand> [--flag] [--key value] ...`
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping the binary name).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse(argv: Vec<String>) -> Args {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // --key=value | --key value | --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.options.insert(name.to_string(), v);
+                } else {
+                    a.flags.push(name.to_string());
+                }
+            } else if a.subcommand.is_none() {
+                a.subcommand = Some(tok);
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()).collect())
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("infer extra --model mnist --batch 32 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("infer"));
+        assert_eq!(a.get("model"), Some("mnist"));
+        assert_eq!(a.usize_or("batch", 0), 32);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn eq_form() {
+        let a = parse("bench --in-bits=4 --scale=0.5");
+        assert_eq!(a.usize_or("in-bits", 0), 4);
+        assert!((a.f64_or("scale", 0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert!(!a.flag("nope"));
+    }
+}

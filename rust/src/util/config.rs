@@ -1,0 +1,192 @@
+//! Chip + run configuration: a JSON-backed config system so deployments
+//! can adjust the simulator without recompiling
+//! (`neurram <cmd> --config chip.json`).
+//!
+//! Any field may be omitted; defaults mirror the paper's 130 nm chip.
+
+use crate::core_sim::CrossbarNonIdealities;
+use crate::device::{DeviceParams, WriteVerifyConfig};
+use crate::energy::EnergyParams;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Debug)]
+pub struct ChipConfig {
+    pub num_cores: usize,
+    pub seed: u64,
+    pub device: DeviceParams,
+    pub write_verify: WriteVerifyConfig,
+    pub nonideal: CrossbarNonIdealities,
+    pub energy: EnergyParams,
+}
+
+impl Default for ChipConfig {
+    fn default() -> Self {
+        ChipConfig {
+            num_cores: crate::NUM_CORES,
+            seed: 0,
+            device: DeviceParams::default(),
+            write_verify: WriteVerifyConfig::default(),
+            nonideal: CrossbarNonIdealities::default(),
+            energy: EnergyParams::default(),
+        }
+    }
+}
+
+fn get_f64(j: &Json, key: &str, out: &mut f64) {
+    if let Some(v) = j.get(key).and_then(|v| v.as_f64()) {
+        *out = v;
+    }
+}
+
+fn get_usize(j: &Json, key: &str, out: &mut usize) {
+    if let Some(v) = j.get(key).and_then(|v| v.as_usize()) {
+        *out = v;
+    }
+}
+
+impl ChipConfig {
+    pub fn from_file(path: &str) -> Result<ChipConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&text)
+    }
+
+    pub fn from_json(text: &str) -> Result<ChipConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut c = ChipConfig::default();
+        get_usize(&j, "num_cores", &mut c.num_cores);
+        if let Some(v) = j.get("seed").and_then(|v| v.as_f64()) {
+            c.seed = v as u64;
+        }
+        if let Some(d) = j.get("device") {
+            get_f64(d, "g_min_us", &mut c.device.g_min_us);
+            get_f64(d, "g_max_us", &mut c.device.g_max_us);
+            get_f64(d, "relax_sigma_peak_us", &mut c.device.relax_sigma_peak_us);
+            get_f64(d, "read_sigma_us", &mut c.device.read_sigma_us);
+            get_f64(d, "pulse_sigma", &mut c.device.pulse_sigma);
+        }
+        if let Some(w) = j.get("write_verify") {
+            get_f64(w, "accept_us", &mut c.write_verify.accept_us);
+            get_f64(w, "set_v0", &mut c.write_verify.set_v0);
+            get_f64(w, "reset_v0", &mut c.write_verify.reset_v0);
+            get_f64(w, "v_step", &mut c.write_verify.v_step);
+            if let Some(v) = w.get("max_reversals").and_then(|v| v.as_usize()) {
+                c.write_verify.max_reversals = v as u32;
+            }
+            if let Some(v) = w.get("iterations").and_then(|v| v.as_usize()) {
+                c.write_verify.iterations = v as u32;
+            }
+        }
+        if let Some(n) = j.get("nonidealities") {
+            get_f64(n, "ir_alpha", &mut c.nonideal.ir_alpha);
+            get_f64(n, "coupling_sigma_v", &mut c.nonideal.coupling_sigma_v);
+        }
+        if let Some(e) = j.get("energy") {
+            get_f64(e, "e_wl_toggle_pj", &mut c.energy.e_wl_toggle_pj);
+            get_f64(e, "e_input_wire_pj", &mut c.energy.e_input_wire_pj);
+            get_f64(e, "t_adc_step_ns", &mut c.energy.t_adc_step_ns);
+            get_f64(e, "t_settle_ns", &mut c.energy.t_settle_ns);
+        }
+        if c.num_cores == 0 || c.num_cores > 1024 {
+            return Err(anyhow!("num_cores {} out of range", c.num_cores));
+        }
+        Ok(c)
+    }
+
+    /// Dump the effective configuration as JSON (for reproducibility
+    /// records in experiment logs).
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let mut device = BTreeMap::new();
+        device.insert("g_min_us".into(), Json::Num(self.device.g_min_us));
+        device.insert("g_max_us".into(), Json::Num(self.device.g_max_us));
+        device.insert("relax_sigma_peak_us".into(),
+                      Json::Num(self.device.relax_sigma_peak_us));
+        let mut wv = BTreeMap::new();
+        wv.insert("accept_us".into(), Json::Num(self.write_verify.accept_us));
+        wv.insert("iterations".into(),
+                  Json::Num(self.write_verify.iterations as f64));
+        let mut ni = BTreeMap::new();
+        ni.insert("ir_alpha".into(), Json::Num(self.nonideal.ir_alpha));
+        ni.insert("coupling_sigma_v".into(),
+                  Json::Num(self.nonideal.coupling_sigma_v));
+        let mut top = BTreeMap::new();
+        top.insert("num_cores".into(), Json::Num(self.num_cores as f64));
+        top.insert("seed".into(), Json::Num(self.seed as f64));
+        top.insert("device".into(), Json::Obj(device));
+        top.insert("write_verify".into(), Json::Obj(wv));
+        top.insert("nonidealities".into(), Json::Obj(ni));
+        Json::Obj(top)
+    }
+
+    /// Build a chip from this configuration.
+    pub fn build_chip(&self) -> crate::coordinator::NeuRramChip {
+        let mut chip =
+            crate::coordinator::NeuRramChip::with_cores(self.num_cores,
+                                                        self.seed);
+        chip.ir_alpha = self.nonideal.ir_alpha;
+        for core in &mut chip.cores {
+            core.array.params = self.device.clone();
+            core.g_max_us = self.device.g_max_us;
+        }
+        chip
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = ChipConfig::default();
+        assert_eq!(c.num_cores, 48);
+        assert_eq!(c.device.g_max_us, 40.0);
+        assert_eq!(c.write_verify.iterations, 3);
+    }
+
+    #[test]
+    fn partial_override() {
+        let c = ChipConfig::from_json(
+            r#"{"num_cores": 16,
+                "device": {"g_max_us": 30.0},
+                "nonidealities": {"ir_alpha": 0.4},
+                "write_verify": {"iterations": 5}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.num_cores, 16);
+        assert_eq!(c.device.g_max_us, 30.0);
+        assert_eq!(c.device.g_min_us, 1.0); // untouched default
+        assert_eq!(c.nonideal.ir_alpha, 0.4);
+        assert_eq!(c.write_verify.iterations, 5);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(ChipConfig::from_json(r#"{"num_cores": 0}"#).is_err());
+        assert!(ChipConfig::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_json_dump() {
+        let c = ChipConfig::from_json(
+            r#"{"num_cores": 8, "nonidealities": {"ir_alpha": 0.25}}"#,
+        )
+        .unwrap();
+        let dumped = c.to_json().to_string_pretty();
+        let c2 = ChipConfig::from_json(&dumped).unwrap();
+        assert_eq!(c2.num_cores, 8);
+        assert_eq!(c2.nonideal.ir_alpha, 0.25);
+    }
+
+    #[test]
+    fn builds_configured_chip() {
+        let c = ChipConfig::from_json(
+            r#"{"num_cores": 4, "seed": 9, "device": {"g_max_us": 30.0}}"#,
+        )
+        .unwrap();
+        let chip = c.build_chip();
+        assert_eq!(chip.cores.len(), 4);
+        assert_eq!(chip.cores[0].g_max_us, 30.0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Linear-feedback shift registers mirroring the chip's pseudo-random
+//! source (paper Extended Data Fig. 1d): two LFSR chains propagating in
+//! opposite directions whose registers are XORed to produce spatially
+//! uncorrelated per-neuron random bits for probabilistic sampling.
+
+/// Maximal-length 16-bit Fibonacci LFSR (taps 16,15,13,4 -> period 2^16-1).
+#[derive(Clone, Debug)]
+pub struct Lfsr16 {
+    state: u16,
+}
+
+impl Lfsr16 {
+    pub fn new(seed: u16) -> Self {
+        Lfsr16 { state: if seed == 0 { 0xACE1 } else { seed } }
+    }
+
+    #[inline]
+    pub fn step(&mut self) -> u16 {
+        let s = self.state;
+        let bit = ((s >> 0) ^ (s >> 2) ^ (s >> 3) ^ (s >> 5)) & 1;
+        self.state = (s >> 1) | (bit << 15);
+        self.state
+    }
+
+    pub fn state(&self) -> u16 {
+        self.state
+    }
+}
+
+/// The chip's sampling-noise block: two counter-propagating chains of
+/// per-neuron registers; neuron j's random word is `fwd[j] ^ bwd[j]`.
+#[derive(Clone, Debug)]
+pub struct LfsrChains {
+    fwd: Vec<u16>,
+    bwd: Vec<u16>,
+    gen_f: Lfsr16,
+    gen_b: Lfsr16,
+}
+
+impl LfsrChains {
+    pub fn new(n: usize, seed: u16) -> Self {
+        let mut gen_f = Lfsr16::new(seed);
+        let mut gen_b = Lfsr16::new(seed.wrapping_mul(31).wrapping_add(17));
+        let fwd: Vec<u16> = (0..n).map(|_| gen_f.step()).collect();
+        let bwd: Vec<u16> = (0..n).map(|_| gen_b.step()).collect();
+        LfsrChains { fwd, bwd, gen_f, gen_b }
+    }
+
+    /// Advance both chains one cycle: forward chain shifts toward higher
+    /// indices, backward chain toward lower (counter-propagating).
+    pub fn step(&mut self) {
+        let n = self.fwd.len();
+        for i in (1..n).rev() {
+            self.fwd[i] = self.fwd[i - 1];
+        }
+        self.fwd[0] = self.gen_f.step();
+        for i in 0..n - 1 {
+            self.bwd[i] = self.bwd[i + 1];
+        }
+        self.bwd[n - 1] = self.gen_b.step();
+    }
+
+    /// Per-neuron random word.
+    #[inline]
+    pub fn word(&self, j: usize) -> u16 {
+        self.fwd[j] ^ self.bwd[j]
+    }
+
+    /// Per-neuron noise voltage, uniform in [-amp, amp] (injected into the
+    /// neuron integrator during stochastic sampling).
+    #[inline]
+    pub fn noise(&self, j: usize, amp: f32) -> f32 {
+        let w = self.word(j) as f32 / 65535.0; // [0,1]
+        amp * (2.0 * w - 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lfsr_full_period() {
+        let mut l = Lfsr16::new(1);
+        let start = l.state();
+        let mut n = 0u32;
+        loop {
+            l.step();
+            n += 1;
+            if l.state() == start {
+                break;
+            }
+            assert!(n < 70_000);
+        }
+        assert_eq!(n, 65_535);
+    }
+
+    #[test]
+    fn lfsr_never_zero() {
+        let mut l = Lfsr16::new(0); // auto-reseeded
+        for _ in 0..10_000 {
+            assert_ne!(l.step(), 0);
+        }
+    }
+
+    #[test]
+    fn chains_spatially_uncorrelated() {
+        let mut c = LfsrChains::new(256, 0xBEEF);
+        // correlation between adjacent neuron words over time
+        let mut same_bits = 0u32;
+        let mut total = 0u32;
+        for _ in 0..200 {
+            c.step();
+            for j in 0..255 {
+                same_bits += (c.word(j) ^ c.word(j + 1)).count_zeros();
+                total += 16;
+            }
+        }
+        let frac = same_bits as f64 / total as f64;
+        assert!((frac - 0.5).abs() < 0.02, "adjacent-bit agreement {frac}");
+    }
+
+    #[test]
+    fn noise_bounded_and_centered() {
+        let mut c = LfsrChains::new(64, 7);
+        let mut sum = 0.0f64;
+        let mut n = 0;
+        for _ in 0..500 {
+            c.step();
+            for j in 0..64 {
+                let v = c.noise(j, 0.1);
+                assert!(v.abs() <= 0.1 + 1e-6);
+                sum += v as f64;
+                n += 1;
+            }
+        }
+        assert!((sum / n as f64).abs() < 2e-3);
+    }
+}

@@ -1,0 +1,11 @@
+//! Support utilities implemented in-tree (this build environment is
+//! offline: no serde/clap/rand/criterion), all substrates in their own
+//! right: the LFSR mirrors the chip's probabilistic-sampling hardware.
+
+pub mod bench;
+pub mod config;
+pub mod cli;
+pub mod json;
+pub mod lfsr;
+pub mod rng;
+pub mod stats;

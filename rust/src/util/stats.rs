@@ -1,0 +1,93 @@
+//! Small statistics helpers shared by the device model, calibration and
+//! the bench harness.
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+        / (xs.len() as f64 - 1.0))
+        .sqrt()
+}
+
+/// Percentile (linear interpolation), p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() as f64 - 1.0);
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+    }
+}
+
+/// Fixed-width histogram over [lo, hi); returns bin counts.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        if x >= lo && x < hi {
+            h[((x - lo) / w) as usize] += 1;
+        }
+    }
+    h
+}
+
+/// Render a one-line ASCII sparkline of a histogram (for CLI reports).
+pub fn sparkline(counts: &[usize]) -> String {
+    const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = counts.iter().copied().max().unwrap_or(0).max(1);
+    counts
+        .iter()
+        .map(|&c| GLYPHS[(c * 7 + max / 2) / max])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - 1.2909944).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let xs = [0.1, 0.2, 0.9];
+        assert_eq!(histogram(&xs, 0.0, 1.0, 2), vec![2, 1]);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+}

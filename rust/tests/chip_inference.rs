@@ -1,0 +1,106 @@
+//! Whole-chip inference integration: trained weights -> conductances ->
+//! mapping -> write-verify -> calibration -> accuracy.
+
+use neurram::calib::calibrate::calibrate_cnn_shifts;
+use neurram::coordinator::mapping::MappingStrategy;
+use neurram::coordinator::NeuRramChip;
+use neurram::io::{datasets, metrics, npz};
+use neurram::models::executor::run_cnn;
+use neurram::models::loader::{compile_from_npz, compile_random, intensities};
+use neurram::models::{mnist_cnn7, quant};
+use std::path::Path;
+
+fn chip_accuracy(write_verify: bool, n: usize, seed: u64) -> Option<f64> {
+    let graph = mnist_cnn7(8);
+    let weights = npz::load_npz("artifacts/mnist_weights.npz").ok()?;
+    let matrices = compile_from_npz(&graph, &weights, None).ok()?;
+    let mut chip = NeuRramChip::new(seed);
+    chip.program_model(matrices, &intensities(&graph),
+                       MappingStrategy::Balanced, write_verify)
+        .ok()?;
+    chip.gate_unused();
+    let (probe, _) = datasets::digits28(5, seed + 1, 0.15);
+    let shifts = calibrate_cnn_shifts(&mut chip, &graph, &probe);
+    let (imgs, labels) = datasets::digits28(n, 911, 0.15);
+    let in_bits = graph.layers[0].input_bits - 1;
+    let mut logits = Vec::new();
+    for img in &imgs {
+        let q: Vec<i32> = img
+            .iter()
+            .map(|&p| quant::quantize_unit_unsigned(p, in_bits))
+            .collect();
+        logits.push(run_cnn(&mut chip, &graph, &q, &shifts));
+    }
+    Some(metrics::accuracy(&logits, &labels))
+}
+
+#[test]
+fn trained_cnn_beats_chance_on_chip() {
+    if !Path::new("artifacts/mnist_weights.npz").exists() {
+        eprintln!("skipping: train weights first (make artifacts + \
+                   compile.train.train_models)");
+        return;
+    }
+    let acc = chip_accuracy(true, 60, 42).unwrap();
+    // full non-idealities; trained model must stay far above 10% chance
+    assert!(acc > 0.6, "chip accuracy {acc}");
+}
+
+#[test]
+fn ideal_load_at_least_as_good_as_write_verify() {
+    if !Path::new("artifacts/mnist_weights.npz").exists() {
+        eprintln!("skipping");
+        return;
+    }
+    let ideal = chip_accuracy(false, 60, 43).unwrap();
+    let programmed = chip_accuracy(true, 60, 43).unwrap();
+    // programming noise can only cost accuracy (within sampling slack)
+    assert!(ideal + 0.10 >= programmed,
+            "ideal {ideal} vs programmed {programmed}");
+    assert!(ideal > 0.6);
+}
+
+#[test]
+fn random_weights_are_chance_level() {
+    let graph = mnist_cnn7(8);
+    let matrices = compile_random(&graph, 7);
+    let mut chip = NeuRramChip::new(8);
+    chip.program_model(matrices, &intensities(&graph),
+                       MappingStrategy::Simple, false)
+        .unwrap();
+    let (probe, _) = datasets::digits28(4, 9, 0.15);
+    let shifts = calibrate_cnn_shifts(&mut chip, &graph, &probe);
+    let (imgs, labels) = datasets::digits28(40, 10, 0.15);
+    let in_bits = graph.layers[0].input_bits - 1;
+    let mut logits = Vec::new();
+    for img in &imgs {
+        let q: Vec<i32> = img
+            .iter()
+            .map(|&p| quant::quantize_unit_unsigned(p, in_bits))
+            .collect();
+        logits.push(run_cnn(&mut chip, &graph, &q, &shifts));
+    }
+    let acc = metrics::accuracy(&logits, &labels);
+    assert!(acc < 0.5, "random weights should be near chance: {acc}");
+}
+
+#[test]
+fn power_gating_preserves_weights() {
+    let graph = mnist_cnn7(8);
+    let matrices = compile_random(&graph, 11);
+    let mut chip = NeuRramChip::new(12);
+    chip.program_model(matrices, &intensities(&graph),
+                       MappingStrategy::Simple, false)
+        .unwrap();
+    chip.gate_unused();
+    // power cycle all cores: RRAM is non-volatile
+    let (gp_before, _) = chip.cores[0].read_conductances();
+    for c in &mut chip.cores {
+        c.power_off();
+    }
+    for c in &mut chip.cores {
+        c.power_on();
+    }
+    let (gp_after, _) = chip.cores[0].read_conductances();
+    assert_eq!(gp_before, gp_after);
+}

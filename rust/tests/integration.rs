@@ -1,0 +1,107 @@
+//! Cross-layer integration: the rust core simulator must agree with the
+//! python oracle (via golden vectors), and the device constants must
+//! match the artifact manifest.
+
+use neurram::core_sim::{CimCore, MvmDirection, NeuronConfig};
+use neurram::device::DeviceParams;
+use neurram::io::npz;
+use neurram::runtime::Manifest;
+use neurram::util::rng::Rng;
+use std::path::Path;
+
+fn artifacts_available() -> bool {
+    Path::new("artifacts/manifest.json").exists()
+        && Path::new("artifacts/golden.npz").exists()
+}
+
+#[test]
+fn manifest_constants_match_rust_device_params() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let m = Manifest::load("artifacts").unwrap();
+    let p = DeviceParams::default();
+    m.check_constant("g_min_us", p.g_min_us, 1e-9).unwrap();
+    m.check_constant("g_max_cnn_us", p.g_max_us, 1e-9).unwrap();
+    m.check_constant("g_max_rnn_us", DeviceParams::rnn().g_max_us, 1e-9)
+        .unwrap();
+    m.check_constant("relax_sigma_peak_us", p.relax_sigma_peak_us, 1e-9)
+        .unwrap();
+    m.check_constant("v_read", 0.5, 1e-9).unwrap();
+    m.check_constant("n_max_decrement",
+                     neurram::core_sim::neuron::N_MAX_DECREMENT as f64, 1e-9)
+        .unwrap();
+}
+
+#[test]
+fn core_sim_matches_python_golden_mvm() {
+    // The rust cycle-level core and the python jnp oracle implement the
+    // same physics; outputs must agree within 1 ADC LSB on the golden
+    // CIM-MVM case exported by aot.py.
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let golden = npz::load_npz("artifacts/golden.npz").unwrap();
+    let x = &golden["mvm_x"]; // [32, 128]
+    let gp = &golden["mvm_g_pos"]; // [128, 256]
+    let gn = &golden["mvm_g_neg"];
+    let want = &golden["mvm_y"]; // [32, 256]
+
+    let mut core = CimCore::new(0, DeviceParams::default());
+    core.power_on();
+    core.load_ideal(&gp.data, &gn.data, 128, 256);
+    let cfg = NeuronConfig::default(); // 4b in / 8b out, same as artifact
+    let mut rng = Rng::new(1);
+    let mut exact = 0usize;
+    let mut total = 0usize;
+    for b in 0..32 {
+        let xi: Vec<i32> = (0..128)
+            .map(|r| x.data[b * 128 + r] as i32)
+            .collect();
+        let y = core.mvm(&xi, &cfg, MvmDirection::Forward, 0.0, &mut rng);
+        for j in 0..256 {
+            let w = want.data[b * 256 + j] as i32;
+            let d = (y[j] - w).abs();
+            assert!(d <= 1, "batch {b} col {j}: rust {} vs golden {w}", y[j]);
+            exact += (d == 0) as usize;
+            total += 1;
+        }
+    }
+    // floor-boundary ties are rare
+    assert!(exact as f64 / total as f64 > 0.98,
+            "only {exact}/{total} exact matches");
+}
+
+#[test]
+fn mvm_scales_recover_golden_magnitudes() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let golden = npz::load_npz("artifacts/golden.npz").unwrap();
+    let gp = &golden["mvm_g_pos"];
+    let gn = &golden["mvm_g_neg"];
+    let mut core = CimCore::new(0, DeviceParams::default());
+    core.power_on();
+    core.load_ideal(&gp.data, &gn.data, 128, 256);
+    let cfg = NeuronConfig::default();
+    let scales = core.mvm_scales(&cfg, 1.0, MvmDirection::Forward);
+    assert_eq!(scales.len(), 256);
+    assert!(scales.iter().all(|&s| s > 0.0));
+}
+
+#[test]
+fn lstm_golden_shapes_consistent() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let golden = npz::load_npz("artifacts/golden.npz").unwrap();
+    assert_eq!(golden["lstm_x_t"].shape, vec![8, 40]);
+    assert_eq!(golden["lstm_h_next"].shape, vec![8, 64]);
+    assert_eq!(golden["lstm_wx_g_pos"].shape, vec![41, 256]);
+    // hidden state outputs are tanh-bounded
+    assert!(golden["lstm_h_next"].data.iter().all(|&v| v.abs() <= 1.0 + 1e-5));
+}

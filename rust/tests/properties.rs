@@ -1,0 +1,208 @@
+//! Property-style tests (hand-rolled generators; proptest isn't available
+//! offline): randomized sweeps over the core invariants.
+
+use neurram::core_sim::neuron::{convert, NeuronConfig};
+use neurram::core_sim::tnsa::Tnsa;
+use neurram::core_sim::{Activation, Crossbar};
+use neurram::coordinator::mapping::{plan, split_matrix, MappingStrategy};
+use neurram::models::quant::calibrate_shift;
+use neurram::models::ConductanceMatrix;
+use neurram::util::json::Json;
+use neurram::util::rng::Rng;
+
+#[test]
+fn prop_split_matrix_exact_cover() {
+    let mut rng = Rng::new(1);
+    for _ in 0..200 {
+        let rows = 1 + rng.below(700);
+        let cols = 1 + rng.below(700);
+        let segs = split_matrix("l", rows, cols);
+        let mut cover = vec![0u32; rows * cols];
+        for s in &segs {
+            assert!(s.rows() <= 128 && s.cols() <= 256);
+            for r in s.row_lo..s.row_hi {
+                for c in s.col_lo..s.col_hi {
+                    cover[r * cols + c] += 1;
+                }
+            }
+        }
+        assert!(cover.iter().all(|&n| n == 1), "{rows}x{cols}");
+    }
+}
+
+#[test]
+fn prop_mapping_places_every_segment_once() {
+    let mut rng = Rng::new(2);
+    for round in 0..30 {
+        let n_mats = 1 + rng.below(6);
+        let mats: Vec<ConductanceMatrix> = (0..n_mats)
+            .map(|i| {
+                let rows = 1 + rng.below(256);
+                let cols = 1 + rng.below(300);
+                let w = vec![0.1f32; rows * cols];
+                ConductanceMatrix::compile(&format!("m{i}"), &w, None, rows,
+                                           cols, 7, 40.0, 1.0, None)
+            })
+            .collect();
+        let intensity = vec![1.0; n_mats];
+        if let Ok(p) = plan(&mats, &intensity, MappingStrategy::Packed, 48) {
+            for m in &mats {
+                let segs = split_matrix(&m.layer, m.rows, m.cols);
+                let placed = p
+                    .placements
+                    .iter()
+                    .filter(|q| q.segment.layer == m.layer && q.replica == 0)
+                    .count();
+                assert_eq!(placed, segs.len(), "round {round} {}", m.layer);
+            }
+            // no core over-packed (columns within capacity per core)
+            let mut per_core: std::collections::BTreeMap<usize, usize> =
+                Default::default();
+            for q in &p.placements {
+                *per_core.entry(q.core).or_default() += q.segment.cols();
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_adc_monotone_and_bounded() {
+    let mut rng = Rng::new(3);
+    for _ in 0..50 {
+        let cfg = NeuronConfig {
+            input_bits: 1 + rng.below(6) as u32,
+            output_bits: 1 + rng.below(8) as u32,
+            adc_lsb_frac: 1.0 / (8 << rng.below(6)) as f64,
+            activation: Activation::None,
+            ..Default::default()
+        };
+        let mut prev = i32::MIN;
+        for step in -400..400 {
+            let v = step as f64 * 0.001;
+            let (y, cyc) = convert(v, &cfg, 0.0);
+            assert!(y >= prev, "non-monotone at {v}");
+            assert!(y.unsigned_abs() <= cfg.out_mag_max());
+            assert!(cyc.decrement_steps <= cfg.out_mag_max());
+            prev = y;
+        }
+    }
+}
+
+#[test]
+fn prop_tnsa_bijective_for_any_dim() {
+    for dim in [2usize, 4, 8, 16, 32] {
+        let t = Tnsa { dim };
+        let n = dim * dim;
+        let mut bl_seen = vec![false; n];
+        let mut sl_seen = vec![false; n];
+        for i in 0..dim {
+            for j in 0..dim {
+                let bl = t.bl_of_corelet(i, j);
+                let sl = t.sl_of_corelet(i, j);
+                assert!(!bl_seen[bl] && !sl_seen[sl]);
+                bl_seen[bl] = true;
+                sl_seen[sl] = true;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_crossbar_linear_in_input() {
+    // settle(a + b) == settle(a) + settle(b): the analog system is linear
+    let mut rng = Rng::new(4);
+    for _ in 0..20 {
+        let rows = 2 + rng.below(40);
+        let cols = 1 + rng.below(40);
+        let mut gp = vec![1.0f32; rows * cols];
+        let mut gn = vec![1.0f32; rows * cols];
+        for i in 0..rows * cols {
+            let w = rng.normal() as f32;
+            if w > 0.0 {
+                gp[i] = (40.0 * w).clamp(1.0, 40.0);
+            } else {
+                gn[i] = (-40.0 * w).clamp(1.0, 40.0);
+            }
+        }
+        let xb = Crossbar::from_conductances(&gp, &gn, rows, cols, 40.0, 0.5);
+        let a: Vec<i32> = (0..rows).map(|_| rng.below(7) as i32 - 3).collect();
+        let b: Vec<i32> = (0..rows).map(|_| rng.below(7) as i32 - 3).collect();
+        let ab: Vec<i32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        let mut va = vec![0.0f32; cols];
+        let mut vb = vec![0.0f32; cols];
+        let mut vab = vec![0.0f32; cols];
+        xb.settle_int(&a, &mut va);
+        xb.settle_int(&b, &mut vb);
+        xb.settle_int(&ab, &mut vab);
+        for j in 0..cols {
+            assert!((va[j] + vb[j] - vab[j]).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    let mut rng = Rng::new(5);
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => Json::Str(format!("s{}-\"q\\{}", rng.below(100),
+                                   rng.below(10))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth + 1))
+                .collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(5) {
+                    m.insert(format!("k{i}"), gen(rng, depth + 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    for _ in 0..300 {
+        let j = gen(&mut rng, 0);
+        let enc = j.to_string_pretty();
+        let back = Json::parse(&enc).unwrap_or_else(|e| panic!("{enc}: {e}"));
+        assert_eq!(j, back, "{enc}");
+    }
+}
+
+#[test]
+fn prop_calibrate_shift_fills_range() {
+    let mut rng = Rng::new(6);
+    for _ in 0..300 {
+        let p99 = rng.uniform_in(0.1, 1e5);
+        for bits in 1..=7u32 {
+            let s = calibrate_shift(p99, bits);
+            let q = p99 / 2f64.powf(s);
+            let q_max = ((1u32 << bits) - 1) as f64;
+            assert!(q <= q_max + 1e-9, "p99={p99} bits={bits}");
+            if s > 0.0 {
+                assert!(q > q_max / 2.0 - 1e-9,
+                        "underutilized: p99={p99} bits={bits} q={q}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_conductance_encoding_within_device_range() {
+    let mut rng = Rng::new(7);
+    for _ in 0..50 {
+        let n = 1 + rng.below(200);
+        let w: Vec<f32> = (0..n).map(|_| (rng.normal() * 2.0) as f32).collect();
+        let w_max = w.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1e-9);
+        let (gp, gn) = neurram::models::encode_differential(&w, 40.0, 1.0, w_max);
+        for i in 0..n {
+            assert!((1.0..=40.0 + 1e-4).contains(&gp[i]));
+            assert!((1.0..=40.0 + 1e-4).contains(&gn[i]));
+            // at most one branch carries signal
+            assert!(gp[i] <= 1.0 + 1e-6 || gn[i] <= 1.0 + 1e-6);
+            // decode approximates the weight
+            let dec = (gp[i] - gn[i]) * w_max / 40.0;
+            assert!((dec - w[i]).abs() <= w_max / 40.0 + 1e-5);
+        }
+    }
+}

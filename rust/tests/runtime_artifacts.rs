@@ -1,0 +1,90 @@
+//! PJRT runtime integration: every golden spec in the manifest must
+//! execute and match, and artifact parameter bookkeeping must hold.
+
+use neurram::io::npz;
+use neurram::runtime::Runtime;
+use std::path::Path;
+
+fn available() -> bool {
+    Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn all_golden_specs_pass() {
+    if !available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::new("artifacts").unwrap();
+    let golden = npz::load_npz("artifacts/golden.npz").unwrap();
+    let specs: Vec<_> = rt.manifest.golden.values().cloned().collect();
+    assert!(!specs.is_empty());
+    for spec in specs {
+        let inputs: Vec<npz::Tensor> = spec
+            .inputs
+            .iter()
+            .map(|k| golden[k].clone())
+            .collect();
+        let outs = rt.execute(&spec.artifact, &inputs).unwrap();
+        for (oi, key) in spec.outputs.iter().enumerate() {
+            let want = &golden[key];
+            let got = &outs[oi];
+            assert_eq!(got.data.len(), want.data.len(), "{key}");
+            let mut max_err = 0.0f64;
+            let mut max_rel = 0.0f64;
+            for (&g, &w) in got.data.iter().zip(&want.data) {
+                let e = (g as f64 - w as f64).abs();
+                max_err = max_err.max(e);
+                max_rel = max_rel.max(e / (w as f64).abs().max(1.0));
+            }
+            match (spec.lsb_tolerance, spec.rel_tolerance) {
+                (Some(l), _) => assert!(max_err <= l + 1e-9,
+                                        "{key}: max_err {max_err}"),
+                (None, Some(r)) => assert!(max_rel <= r,
+                                           "{key}: max_rel {max_rel}"),
+                (None, None) => assert!(max_err <= 1e-5),
+            }
+        }
+    }
+}
+
+#[test]
+fn executable_caching_is_stable() {
+    if !available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::new("artifacts").unwrap();
+    let golden = npz::load_npz("artifacts/golden.npz").unwrap();
+    let spec = rt.manifest.golden.get("cim_mvm").cloned().unwrap();
+    let inputs: Vec<npz::Tensor> =
+        spec.inputs.iter().map(|k| golden[k].clone()).collect();
+    // two executions reuse the compiled executable and agree exactly
+    let a = rt.execute(&spec.artifact, &inputs).unwrap();
+    let b = rt.execute(&spec.artifact, &inputs).unwrap();
+    assert_eq!(a[0].data, b[0].data);
+}
+
+#[test]
+fn wrong_arity_is_rejected() {
+    if !available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::new("artifacts").unwrap();
+    let err = rt.execute("cim_mvm_4b8b_none_r128c256b32", &[]);
+    assert!(err.is_err());
+}
+
+#[test]
+fn manifest_lists_all_expected_kinds() {
+    if !available() {
+        eprintln!("skipping");
+        return;
+    }
+    let rt = Runtime::new("artifacts").unwrap();
+    for kind in ["cim_mvm", "cnn_forward", "lstm_step", "rbm_gibbs"] {
+        assert!(rt.manifest.artifact_of_kind(kind).is_some(),
+                "missing artifact kind {kind}");
+    }
+}
