@@ -29,12 +29,16 @@ fn neurram_point(in_bits: u32, out_bits: u32, mvms: usize) -> MvmCost {
     let cfg = NeuronConfig { input_bits: in_bits, output_bits: out_bits,
                              ..Default::default() };
     let in_mag = cfg.in_mag_max();
-    for i in 0..mvms {
-        let x: Vec<i32> = (0..rows)
-            .map(|r| ((r + i) as i32 % (2 * in_mag + 1)) - in_mag)
-            .collect();
-        chip.mvm_layer("w", &x, &cfg, 0);
-    }
+    // the whole workload goes through the batched engine in one dispatch
+    let inputs: Vec<Vec<i32>> = (0..mvms)
+        .map(|i| {
+            (0..rows)
+                .map(|r| ((r + i) as i32 % (2 * in_mag + 1)) - in_mag)
+                .collect()
+        })
+        .collect();
+    let refs: Vec<&[i32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    chip.mvm_layer_batch("w", &refs, &cfg, 0);
     // segments run on parallel cores: wall latency = max core busy time
     let per_core_max = chip
         .cores

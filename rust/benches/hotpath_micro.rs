@@ -44,6 +44,27 @@ fn main() {
         black_box(&dv);
     });
 
+    section("L3: batched crossbar settle (batch 32, 128x256)");
+    let batch = 32usize;
+    let xs_b: Vec<i32> = (0..batch * rows)
+        .map(|_| rng.below(15) as i32 - 7)
+        .collect();
+    let mut out_b = vec![0.0f32; batch * cols];
+    let r_loop = bench("settle_int x32 (per-vector loop)", 400, || {
+        for b in 0..batch {
+            xb.settle_int(black_box(&xs_b[b * rows..(b + 1) * rows]),
+                          &mut dv);
+            black_box(&dv);
+        }
+    });
+    let r_batch = bench("crossbar::settle_batch b32", 400, || {
+        xb.settle_batch(black_box(&xs_b), batch, &mut out_b);
+        black_box(&out_b);
+    });
+    println!("  settle_batch speedup over per-vector loop: {:.2}x \
+              (acceptance target >= 2x)",
+             r_loop.median_ns / r_batch.median_ns);
+
     section("L3: neuron ADC conversion (256 conversions)");
     let cfg = NeuronConfig::default();
     bench("neuron::convert x256 (8-bit)", 200, || {
@@ -61,6 +82,21 @@ fn main() {
                            &mut rng));
     });
 
+    section("L3: batched core MVM (batch 32, 128x256 4b/8b)");
+    let r_loop = bench("CimCore::mvm x32 (per-vector loop)", 600, || {
+        for b in 0..batch {
+            black_box(core.mvm(black_box(&xs_b[b * rows..(b + 1) * rows]),
+                               &cfg, MvmDirection::Forward, 0.0, &mut rng));
+        }
+    });
+    let r_batch = bench("CimCore::mvm_batch b32", 600, || {
+        black_box(core.mvm_batch(black_box(&xs_b), batch, &cfg,
+                                 MvmDirection::Forward, 0.0, &mut rng));
+    });
+    println!("  mvm_batch speedup over per-vector loop: {:.2}x \
+              (acceptance target >= 2x)",
+             r_loop.median_ns / r_batch.median_ns);
+
     section("L3: chip-level split-layer MVM (1024x1024 over 32 cores)");
     let big_rows = 1024usize;
     let w: Vec<f32> = (0..big_rows * 1024).map(|_| rng.normal() as f32).collect();
@@ -73,6 +109,24 @@ fn main() {
     bench("NeuRramChip::mvm_layer 1024x1024", 600, || {
         black_box(chip.mvm_layer("w", black_box(&xbig), &cfg, 0));
     });
+
+    section("chip: batched split-layer MVM (batch 32, 1024x1024)");
+    let xbig_b: Vec<Vec<i32>> = (0..32)
+        .map(|_| (0..big_rows).map(|_| rng.below(15) as i32 - 7).collect())
+        .collect();
+    let xbig_refs: Vec<&[i32]> =
+        xbig_b.iter().map(|v| v.as_slice()).collect();
+    let r_loop = bench("mvm_layer x32 (per-vector loop)", 900, || {
+        for xi in &xbig_b {
+            black_box(chip.mvm_layer("w", black_box(xi), &cfg, 0));
+        }
+    });
+    let r_batch = bench("NeuRramChip::mvm_layer_batch b32", 900, || {
+        black_box(chip.mvm_layer_batch("w", black_box(&xbig_refs), &cfg, 0));
+    });
+    println!("  mvm_layer_batch speedup over per-vector loop: {:.2}x \
+              (acceptance target >= 2x)",
+             r_loop.median_ns / r_batch.median_ns);
 
     section("device: write-verify programming (64x64 array)");
     bench("write-verify 64x64", 800, || {

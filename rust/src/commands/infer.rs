@@ -11,7 +11,7 @@ use neurram::coordinator::mapping::MappingStrategy;
 use neurram::coordinator::NeuRramChip;
 use neurram::energy::EnergyParams;
 use neurram::io::{datasets, metrics, npz};
-use neurram::models::executor::run_cnn;
+use neurram::models::executor::run_cnn_batch;
 use neurram::models::loader::{compile_from_npz, compile_random, intensities};
 use neurram::models::{mnist_cnn7, quant};
 use neurram::util::cli::Args;
@@ -21,6 +21,7 @@ pub fn run_mnist(args: &Args) -> Result<()> {
     let n_test = args.usize_or("samples", 50);
     let width = args.usize_or("width", 8);
     let seed = args.u64_or("seed", 5);
+    let batch = args.usize_or("batch", 8).max(1);
     let write_verify = args.flag("write-verify");
 
     let graph = mnist_cnn7(width);
@@ -65,20 +66,30 @@ pub fn run_mnist(args: &Args) -> Result<()> {
     let shifts = calibrate_cnn_shifts(&mut chip, &graph, &train_imgs);
     println!("calibrated shifts: {shifts:?}");
 
-    // ---- inference ----
+    // ---- inference: batched through the whole engine ----
     chip.reset_energy();
     let (imgs, labels) = datasets::digits28(n_test, seed + 3, 0.15);
     let in_bits = graph.layers[0].input_bits - 1;
-    let mut logits = Vec::new();
-    for img in &imgs {
-        let q: Vec<i32> = img
-            .iter()
-            .map(|&p| quant::quantize_unit_unsigned(p, in_bits))
-            .collect();
-        logits.push(run_cnn(&mut chip, &graph, &q, &shifts));
+    let quantized: Vec<Vec<i32>> = imgs
+        .iter()
+        .map(|img| {
+            img.iter()
+                .map(|&p| quant::quantize_unit_unsigned(p, in_bits))
+                .collect()
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let mut logits = Vec::with_capacity(quantized.len());
+    for chunk in quantized.chunks(batch) {
+        logits.extend(run_cnn_batch(&mut chip, &graph, chunk, &shifts));
     }
+    let wall = t0.elapsed().as_secs_f64();
     let acc = metrics::accuracy(&logits, &labels);
     println!("accuracy: {:.2}% on {} samples", acc * 100.0, n_test);
+    println!(
+        "batched inference (--batch {batch}): {:.1} images/s wall-clock",
+        n_test as f64 / wall.max(1e-9)
+    );
 
     let cost = chip.cost(&EnergyParams::default());
     println!(

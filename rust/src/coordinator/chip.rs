@@ -103,6 +103,9 @@ impl NeuRramChip {
     ///
     /// Input `x` is the full logical input (bias rows NOT included; they
     /// are driven at full scale automatically).
+    ///
+    /// Thin wrapper over [`NeuRramChip::mvm_layer_batch`] with a batch of
+    /// one, so the serial and batched chip paths cannot diverge.
     pub fn mvm_layer(
         &mut self,
         layer: &str,
@@ -110,7 +113,32 @@ impl NeuRramChip {
         cfg: &NeuronConfig,
         replica: usize,
     ) -> Vec<f64> {
-        // hot path: copy only the small metadata, never the conductances
+        let (mut outs, _) = self.mvm_layer_batch(layer, &[x], cfg, replica);
+        outs.pop().expect("one output per input")
+    }
+
+    /// Batched multi-core MVM for one layer: the whole `[batch]` of input
+    /// vectors is routed through every row segment of the given replica
+    /// in one `CimCore::mvm_batch` dispatch per placement, amortizing the
+    /// bias-row augmentation, the per-core crossbar lookup and the
+    /// de-normalization scale computation across the batch.
+    ///
+    /// Returns the per-item de-normalized outputs plus each item's
+    /// summed-over-segments latency contribution in nanoseconds.
+    ///
+    /// Outputs are identical to looping [`NeuRramChip::mvm_layer`] over
+    /// the items: the forward chip path draws no per-output randomness
+    /// (coupling noise is configured off by `program_model` and the
+    /// stochastic amplitude is zero), so reordering items x segments
+    /// cannot change any value (pinned by
+    /// `prop_chip_layer_batch_equals_serial_loop`).
+    pub fn mvm_layer_batch(
+        &mut self,
+        layer: &str,
+        inputs: &[&[i32]],
+        cfg: &NeuronConfig,
+        replica: usize,
+    ) -> (Vec<Vec<f64>>, Vec<f64>) {
         let (rows, cols, w_max, n_bias_rows) = {
             let m = self
                 .matrix(layer)
@@ -118,13 +146,20 @@ impl NeuRramChip {
             (m.rows, m.cols, m.w_max, m.n_bias_rows)
         };
         let in_mag = cfg.in_mag_max();
-        // bias rows driven at full scale
-        let mut x_full = Vec::with_capacity(rows);
-        x_full.extend_from_slice(x);
-        x_full.extend(std::iter::repeat(in_mag).take(n_bias_rows));
-        assert_eq!(x_full.len(), rows, "input width for {layer}");
+        let batch = inputs.len();
 
-        let mut out = vec![0.0f64; cols];
+        // bias-augmented [batch x rows] input matrix, built once
+        let mut x_full = Vec::with_capacity(batch * rows);
+        for x in inputs {
+            assert_eq!(x.len() + n_bias_rows, rows,
+                       "input width for {layer}");
+            x_full.extend_from_slice(x);
+            x_full.extend(std::iter::repeat(in_mag).take(n_bias_rows));
+        }
+
+        let mut out = vec![0.0f64; batch * cols];
+        let mut item_ns = vec![0.0f64; batch];
+        let mut seg_xs: Vec<i32> = Vec::new();
         let mut found = false;
         for pi in 0..self.plan.placements.len() {
             let (core_id, row_lo, row_hi, col_lo) = {
@@ -136,17 +171,32 @@ impl NeuRramChip {
                  pl.segment.col_lo)
             };
             found = true;
-            let xs = &x_full[row_lo..row_hi];
+            seg_xs.clear();
+            for b in 0..batch {
+                seg_xs.extend_from_slice(
+                    &x_full[b * rows + row_lo..b * rows + row_hi],
+                );
+            }
             let core = &mut self.cores[core_id];
-            let y = core.mvm(xs, cfg, MvmDirection::Forward, 0.0, &mut self.rng);
+            let (y, ns) = core.mvm_batch(&seg_xs, batch, cfg,
+                                         MvmDirection::Forward, 0.0,
+                                         &mut self.rng);
             let scales =
                 core.mvm_scales(cfg, w_max as f64, MvmDirection::Forward);
-            for (j, (&yi, &s)) in y.iter().zip(&scales).enumerate() {
-                out[col_lo + j] += yi as f64 * s;
+            let out_w = scales.len();
+            for b in 0..batch {
+                let yb = &y[b * out_w..(b + 1) * out_w];
+                for (j, (&yi, &s)) in yb.iter().zip(&scales).enumerate() {
+                    out[b * cols + col_lo + j] += yi as f64 * s;
+                }
+                item_ns[b] += ns[b];
             }
         }
         assert!(found, "no replica {replica} of {layer}");
-        out
+        let outputs = (0..batch)
+            .map(|b| out[b * cols..(b + 1) * cols].to_vec())
+            .collect();
+        (outputs, item_ns)
     }
 
     /// Backward MVM through a layer (RBM hidden -> visible).
@@ -308,6 +358,36 @@ mod tests {
         assert!(y[0] > 0.05, "positive bias leaks through: {}", y[0]);
         assert!(y[1] < -0.05, "negative bias: {}", y[1]);
         assert!(y[3].abs() < 0.05, "zero bias: {}", y[3]);
+    }
+
+    #[test]
+    fn layer_batch_matches_serial_loop() {
+        // a split layer (2 row segments on 2 cores), batch of 4
+        let mk = || {
+            let mut chip = NeuRramChip::with_cores(4, 4);
+            let m = compiled("tall", 256, 16, 9);
+            chip.program_model(vec![m], &[1.0], MappingStrategy::Simple,
+                               false)
+                .unwrap();
+            chip
+        };
+        let mut batched = mk();
+        let mut serial = mk();
+        let cfg = NeuronConfig::default();
+        let inputs: Vec<Vec<i32>> = (0..4)
+            .map(|i| (0..256).map(|r| ((r + i) % 15) as i32 - 7).collect())
+            .collect();
+        let refs: Vec<&[i32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let (ys, ns) = batched.mvm_layer_batch("tall", &refs, &cfg, 0);
+        for (i, x) in inputs.iter().enumerate() {
+            let y = serial.mvm_layer("tall", x, &cfg, 0);
+            assert_eq!(ys[i], y, "item {i}");
+        }
+        assert_eq!(ns.len(), 4);
+        assert!(ns.iter().all(|&v| v > 0.0));
+        let (ea, eb) = (batched.energy_counters(), serial.energy_counters());
+        assert_eq!(ea.busy_ns.to_bits(), eb.busy_ns.to_bits());
+        assert_eq!(ea.macs, eb.macs);
     }
 
     #[test]

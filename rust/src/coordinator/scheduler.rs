@@ -7,6 +7,13 @@
 //! share the `NeuRramChip` RNG); parallelism is modelled in the *latency*
 //! domain: concurrent core executions overlap, so the makespan is the
 //! max over parallel units rather than the sum.
+//!
+//! Since the batched-engine refactor the scheduler dispatches one whole
+//! batch slice per replica through [`NeuRramChip::mvm_layer_batch`]
+//! (round-robin item assignment, so replica `r` owns items `r`,
+//! `r + n_rep`, ...) instead of issuing one `mvm_layer` call per item.
+//! Outputs and latency bookkeeping are identical to the per-item loop;
+//! only the dispatch overhead changes.
 
 use super::chip::NeuRramChip;
 use crate::core_sim::NeuronConfig;
@@ -26,6 +33,9 @@ pub struct ScheduleReport {
     /// Modelled makespan with replica data-parallelism + layer pipelining.
     pub makespan_ns: f64,
     pub items: usize,
+    /// Latency of the batch's leading item through this stage alone
+    /// (drives the pipeline fill model).
+    pub first_item_ns: f64,
     /// items per replica of each layer
     pub replica_load: Vec<(String, Vec<usize>)>,
 }
@@ -44,9 +54,10 @@ pub struct Scheduler;
 
 impl Scheduler {
     /// Run a batch of items through one layer, round-robining inputs over
-    /// the layer's replicas (data parallelism, mapping case 2).
+    /// the layer's replicas (data parallelism, mapping case 2).  Each
+    /// replica receives its whole item slice as ONE batched dispatch.
     ///
-    /// Returns (outputs, report).
+    /// Returns (outputs in input order, report).
     pub fn run_layer_batch(
         chip: &mut NeuRramChip,
         layer: &str,
@@ -54,20 +65,33 @@ impl Scheduler {
         cfg: &NeuronConfig,
     ) -> (Vec<Vec<f64>>, ScheduleReport) {
         let n_rep = chip.plan.replica_count(layer).max(1);
-        let mut outputs = Vec::with_capacity(inputs.len());
+        let mut outputs: Vec<Vec<f64>> = vec![Vec::new(); inputs.len()];
         let mut rep_busy = vec![0.0f64; n_rep];
         let mut rep_items = vec![0usize; n_rep];
         let mut serial = 0.0;
+        let mut first_item_ns = 0.0;
 
-        for (i, x) in inputs.iter().enumerate() {
-            let rep = i % n_rep;
-            let before = chip.energy_counters().busy_ns;
-            let y = chip.mvm_layer(layer, x, cfg, rep);
-            let dt = chip.energy_counters().busy_ns - before;
-            serial += dt;
-            rep_busy[rep] += dt;
-            rep_items[rep] += 1;
-            outputs.push(y);
+        for rep in 0..n_rep {
+            let idxs: Vec<usize> =
+                (rep..inputs.len()).step_by(n_rep).collect();
+            if idxs.is_empty() {
+                continue;
+            }
+            let slice: Vec<&[i32]> =
+                idxs.iter().map(|&i| inputs[i].as_slice()).collect();
+            let (ys, item_ns) =
+                chip.mvm_layer_batch(layer, &slice, cfg, rep);
+            for (k, y) in ys.into_iter().enumerate() {
+                let i = idxs[k];
+                let dt = item_ns[k];
+                outputs[i] = y;
+                serial += dt;
+                rep_busy[rep] += dt;
+                rep_items[rep] += 1;
+                if i == 0 {
+                    first_item_ns = dt;
+                }
+            }
         }
         let makespan = rep_busy.iter().cloned().fold(0.0f64, f64::max);
         (
@@ -76,32 +100,43 @@ impl Scheduler {
                 serial_ns: serial,
                 makespan_ns: makespan,
                 items: inputs.len(),
+                first_item_ns,
                 replica_load: vec![(layer.to_string(), rep_items)],
             },
         )
     }
 
-    /// Pipeline latency model over a sequence of per-layer reports: the
-    /// pipeline makespan is bounded by the slowest stage (paper: ResNet
+    /// Pipeline latency model over a sequence of per-layer reports.
+    ///
+    /// The steady state is bounded by the slowest stage (paper: ResNet
     /// throughput is limited by the most compute-intensive block-1
-    /// matrices) plus the fill latency.
+    /// matrices); on top of that the pipeline pays a *fill* latency: the
+    /// leading item must traverse every non-bottleneck stage once before
+    /// the bottleneck runs back-to-back.  With uniform per-item stage
+    /// times `t_s` over `n` items this evaluates to the textbook
+    /// `sum_s t_s + (n - 1) * max_s t_s`.
+    ///
+    /// (The seed model charged `makespan / items` of every stage --
+    /// a replica-averaged whole-batch quantity -- instead of the leading
+    /// item's own single-item latencies.)
     pub fn pipeline_makespan(stage_reports: &[ScheduleReport]) -> f64 {
         if stage_reports.is_empty() {
             return 0.0;
         }
-        let bottleneck = stage_reports
+        let bottleneck_idx = stage_reports
             .iter()
-            .map(|r| r.makespan_ns)
-            .fold(0.0f64, f64::max);
+            .enumerate()
+            .max_by(|a, b| {
+                a.1.makespan_ns.partial_cmp(&b.1.makespan_ns).unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let bottleneck = stage_reports[bottleneck_idx].makespan_ns;
         let fill: f64 = stage_reports
             .iter()
-            .map(|r| {
-                if r.items > 0 {
-                    r.makespan_ns / r.items as f64
-                } else {
-                    0.0
-                }
-            })
+            .enumerate()
+            .filter(|&(i, _)| i != bottleneck_idx)
+            .map(|(_, r)| r.first_item_ns)
             .sum();
         bottleneck + fill
     }
@@ -135,6 +170,7 @@ mod tests {
             &mut chip, "hot", &inputs, &NeuronConfig::default());
         assert_eq!(outs.len(), 8);
         assert!(rep.speedup() > 1.5, "speedup {}", rep.speedup());
+        assert!(rep.first_item_ns > 0.0);
     }
 
     #[test]
@@ -150,21 +186,73 @@ mod tests {
     }
 
     #[test]
+    fn batched_dispatch_matches_per_item_loop() {
+        // the batched scheduler path must reproduce the per-item loop
+        // exactly: same outputs in the same order, same latency totals
+        let mut chip_a = chip_with_hot_layer(4);
+        let mut chip_b = chip_with_hot_layer(4);
+        let inputs: Vec<Vec<i32>> =
+            (0..7).map(|i| vec![(i % 7) as i32 - 3; 32]).collect();
+        let cfg = NeuronConfig::default();
+        let (outs, rep) =
+            Scheduler::run_layer_batch(&mut chip_a, "hot", &inputs, &cfg);
+        // reference: hand-rolled per-item round-robin loop
+        let n_rep = chip_b.plan.replica_count("hot").max(1);
+        let mut serial = 0.0;
+        for (i, x) in inputs.iter().enumerate() {
+            let before = chip_b.energy_counters().busy_ns;
+            let y = chip_b.mvm_layer("hot", x, &cfg, i % n_rep);
+            serial += chip_b.energy_counters().busy_ns - before;
+            assert_eq!(outs[i], y, "item {i}");
+        }
+        assert_eq!(rep.serial_ns.to_bits(), serial.to_bits());
+    }
+
+    #[test]
     fn pipeline_bounded_by_bottleneck() {
         let fast = ScheduleReport {
             serial_ns: 100.0,
             makespan_ns: 100.0,
             items: 10,
+            first_item_ns: 10.0,
             replica_load: vec![],
         };
         let slow = ScheduleReport {
             serial_ns: 1000.0,
             makespan_ns: 1000.0,
             items: 10,
+            first_item_ns: 100.0,
             replica_load: vec![],
         };
         let mk = Scheduler::pipeline_makespan(&[fast.clone(), slow.clone()]);
         assert!(mk >= 1000.0);
         assert!(mk < 1000.0 + 200.0);
+    }
+
+    #[test]
+    fn pipeline_fill_is_leading_item_latency() {
+        // two uniform stages, one replica each: n items of t1 = 10 ns and
+        // t2 = 30 ns pipeline to t1 + t2 + (n-1)*max = 10 + 30 + 4*30
+        let n = 5;
+        let (t1, t2) = (10.0, 30.0);
+        let s1 = ScheduleReport {
+            serial_ns: n as f64 * t1,
+            makespan_ns: n as f64 * t1,
+            items: n,
+            first_item_ns: t1,
+            replica_load: vec![],
+        };
+        let s2 = ScheduleReport {
+            serial_ns: n as f64 * t2,
+            makespan_ns: n as f64 * t2,
+            items: n,
+            first_item_ns: t2,
+            replica_load: vec![],
+        };
+        let mk = Scheduler::pipeline_makespan(&[s1, s2]);
+        let analytic = t1 + t2 + (n - 1) as f64 * t2.max(t1);
+        assert!((mk - analytic).abs() < 1e-9, "{mk} vs {analytic}");
+        // the seed formula (sum of makespan/items) would give 190, not 160
+        assert!((mk - 160.0).abs() < 1e-9);
     }
 }

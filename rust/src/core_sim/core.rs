@@ -44,6 +44,9 @@ pub struct CimCore {
     pub lfsr: LfsrChains,
     pub energy: EnergyModel,
     pub stats: CoreStats,
+    /// Settled-voltage scratch reused across batched MVMs (avoids a
+    /// fresh allocation + zero-fill per call on the hot path).
+    settle_scratch: Vec<f32>,
     /// Power gating (paper: idle cores are clock/power gated; RRAM state
     /// is non-volatile and survives).
     pub powered_on: bool,
@@ -65,6 +68,7 @@ impl CimCore {
             lfsr: LfsrChains::new(CORE_COLS, 0x1357 ^ id as u16),
             energy: EnergyModel::default(),
             stats: CoreStats::default(),
+            settle_scratch: Vec::new(),
             powered_on: false,
             g_max_us: g_max,
             v_read: 0.5,
@@ -292,6 +296,110 @@ impl CimCore {
         out
     }
 
+    /// Batched MVM: `xs` is a row-major `[batch x in_w]` input matrix.
+    /// Returns the row-major `[batch x out_w]` outputs plus each item's
+    /// latency contribution in nanoseconds (consumed by the scheduler's
+    /// pipeline-fill model).
+    ///
+    /// Per-call setup -- crossbar lookup, the NeuronConfig-derived phase
+    /// and cycle constants, energy pricing -- is amortized across the
+    /// batch, and the analog settle runs through
+    /// [`Crossbar::settle_batch`], which streams the conductance matrix
+    /// once for the whole batch instead of once per vector.  Outputs,
+    /// RNG/LFSR draw order and energy counters are identical to looping
+    /// [`CimCore::mvm`] over the items (the settle phase draws no
+    /// randomness, so hoisting it ahead of the per-item conversions keeps
+    /// the draw sequence unchanged); `prop_mvm_batch_equals_mvm_loop` in
+    /// `rust/tests/properties.rs` pins this bitwise.
+    pub fn mvm_batch(
+        &mut self,
+        xs: &[i32],
+        batch: usize,
+        cfg: &NeuronConfig,
+        dir: MvmDirection,
+        stoch_amp_v: f64,
+        rng: &mut Rng,
+    ) -> (Vec<i32>, Vec<f64>) {
+        assert!(self.powered_on, "core {} is power-gated", self.id);
+        let (in_w, out_w) = match dir {
+            Dataflow::Forward => (self.used_rows, self.used_cols),
+            _ => (self.used_cols, self.used_rows),
+        };
+        assert_eq!(xs.len(), batch * in_w, "input matrix shape");
+        let in_mag = cfg.in_mag_max();
+        debug_assert!(xs.iter().all(|&v| v.abs() <= in_mag));
+
+        // ---- input phase: one settle pass for the whole batch ----
+        let mut dv = std::mem::take(&mut self.settle_scratch);
+        dv.resize(batch * out_w, 0.0);
+        {
+            let xb = self.xbar(dir);
+            xb.settle_batch(xs, batch, &mut dv);
+        }
+
+        let phases = cfg.input_phases() as u64;
+        let sample_cycles = cfg.sample_cycles() as u64;
+        let p = EnergyParams::default();
+        let coupling_on = self.nonideal.coupling_sigma_v > 0.0;
+
+        let mut out = vec![0i32; batch * out_w];
+        let mut item_ns = Vec::with_capacity(batch);
+        let mut noise: Vec<f64> = Vec::new();
+        for b in 0..batch {
+            let x = &xs[b * in_w..(b + 1) * in_w];
+            let active_wires = x.iter().filter(|&&v| v != 0).count() as u64;
+            let active_frac = active_wires as f64 / in_w.max(1) as f64;
+            noise.clear();
+            if coupling_on {
+                let xb = self.xbar(dir);
+                noise.extend(
+                    (0..out_w).map(|_| xb.coupling_noise(active_frac, rng)),
+                );
+            }
+
+            // ---- output phase: per-neuron conversion ----
+            self.lfsr.step();
+            let dvb = &dv[b * out_w..(b + 1) * out_w];
+            let mut max_steps = 0u32;
+            let mut total_cmp = 0u64;
+            let mut total_dec = 0u64;
+            for j in 0..out_w {
+                let nz = if cfg.activation == Activation::Stochastic {
+                    self.lfsr.noise(j % CORE_COLS, stoch_amp_v as f32) as f64
+                } else if coupling_on {
+                    noise[j]
+                } else {
+                    0.0
+                };
+                let (y, cyc) = convert(dvb[j] as f64, cfg, nz);
+                out[b * out_w + j] = y;
+                total_cmp += cyc.comparisons as u64;
+                total_dec += cyc.decrement_steps as u64;
+                max_steps = max_steps.max(cyc.decrement_steps);
+            }
+
+            // ---- energy + latency accounting (same model as mvm) ----
+            let c = &mut self.energy.counters;
+            c.wl_toggles += in_w as u64 * phases;
+            c.input_wire_phases += active_wires * phases;
+            c.sample_cycles += out_w as u64 * sample_cycles;
+            c.comparisons += total_cmp;
+            c.decrement_steps += total_dec;
+            c.ctrl_phases += phases;
+            c.reg_writes += out_w as u64;
+            c.macs += (in_w * out_w) as u64;
+            let dt = phases as f64 * p.t_settle_ns
+                + sample_cycles as f64 * p.t_sample_ns
+                + (1 + max_steps) as f64 * p.t_adc_step_ns
+                + p.t_readout_ns;
+            c.busy_ns += dt;
+            item_ns.push(dt);
+            self.stats.mvms += 1;
+        }
+        self.settle_scratch = dv;
+        (out, item_ns)
+    }
+
     /// Cost of the accumulated workload under the given pricing.
     pub fn cost(&self, p: &EnergyParams) -> MvmCost {
         self.energy.cost(p)
@@ -428,6 +536,32 @@ mod tests {
                            0.0, &mut rng);
         let dot: i64 = y.iter().zip(&y2).map(|(&a, &b)| a as i64 * b as i64).sum();
         assert!(dot > 0, "programmed vs ideal outputs anti-correlated");
+    }
+
+    #[test]
+    fn mvm_batch_equals_per_vector_loop() {
+        let (mut batched, _, _) = programmed_core(16, 8, 48);
+        let (mut serial, _, _) = programmed_core(16, 8, 48);
+        let mut rng_a = Rng::new(9);
+        let mut rng_b = Rng::new(9);
+        let cfg = NeuronConfig::default();
+        let batch = 5;
+        let xs: Vec<i32> =
+            (0..batch * 16).map(|i| (i % 15) as i32 - 7).collect();
+        let (y_batch, item_ns) =
+            batched.mvm_batch(&xs, batch, &cfg, Dataflow::Forward, 0.0,
+                              &mut rng_a);
+        for b in 0..batch {
+            let y = serial.mvm(&xs[b * 16..(b + 1) * 16], &cfg,
+                               Dataflow::Forward, 0.0, &mut rng_b);
+            assert_eq!(&y_batch[b * 8..(b + 1) * 8], &y[..], "item {b}");
+        }
+        assert_eq!(item_ns.len(), batch);
+        let (ea, eb) = (batched.energy.counters, serial.energy.counters);
+        assert_eq!(ea.busy_ns.to_bits(), eb.busy_ns.to_bits());
+        assert_eq!(ea.macs, eb.macs);
+        assert_eq!(ea.decrement_steps, eb.decrement_steps);
+        assert_eq!(batched.stats.mvms, batch as u64);
     }
 
     #[test]

@@ -118,6 +118,52 @@ impl Crossbar {
         self.finish_settle(dv);
     }
 
+    /// Settle a whole batch of signed-integer input vectors at once.
+    ///
+    /// `xs` is a row-major `[batch x rows]` input matrix; the settled
+    /// voltages are written into `out` as a row-major `[batch x cols]`
+    /// matrix.  This is the batched hot path: the conductance matrix is
+    /// streamed exactly once per call (each row slice stays cache-hot
+    /// while it is applied to every batch item), instead of once per
+    /// input vector as in [`Crossbar::settle_int`].
+    ///
+    /// Per batch item the accumulation visits rows in ascending order and
+    /// applies the same `finish_settle` normalization, so each output row
+    /// is **bitwise identical** to a `settle_int` call on that item
+    /// (pinned by `prop_settle_batch_bitwise_equals_settle_int` in
+    /// `rust/tests/properties.rs`).
+    pub fn settle_batch(&self, xs: &[i32], batch: usize, out: &mut [f32]) {
+        assert_eq!(xs.len(), batch * self.rows, "input matrix shape");
+        assert_eq!(out.len(), batch * self.cols, "output matrix shape");
+        // Batch blocking: a chunk's accumulator slices (CHUNK x cols f32)
+        // stay L1-resident while each conductance row is applied to every
+        // item of the chunk.  Any (row, item) interleaving that keeps
+        // rows ascending per item leaves the per-item f32 accumulation
+        // order -- and therefore the result bits -- unchanged.
+        const CHUNK: usize = 8;
+        out.fill(0.0);
+        for c0 in (0..batch).step_by(CHUNK) {
+            let c1 = (c0 + CHUNK).min(batch);
+            for r in 0..self.rows {
+                let row = &self.g_diff[r * self.cols..(r + 1) * self.cols];
+                for b in c0..c1 {
+                    let xi = xs[b * self.rows + r];
+                    if xi == 0 {
+                        continue;
+                    }
+                    let xf = xi as f32;
+                    let acc = &mut out[b * self.cols..(b + 1) * self.cols];
+                    for (a, g) in acc.iter_mut().zip(row) {
+                        *a += xf * g;
+                    }
+                }
+            }
+        }
+        for b in 0..batch {
+            self.finish_settle(&mut out[b * self.cols..(b + 1) * self.cols]);
+        }
+    }
+
     #[inline]
     fn finish_settle(&self, dv: &mut [f32]) {
         let v_read = self.v_read as f32;
@@ -240,6 +286,22 @@ mod tests {
         b.settle_int(&x, &mut dvb);
         for j in 0..3 {
             assert!((dva[j] - dvb[j]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn settle_batch_matches_per_vector_loop() {
+        let (xb, _, _) = simple_xbar();
+        let xs = [2i32, -1, 0, 3, -3, 1]; // batch of 3 over 2 rows
+        let mut out = vec![0.0f32; 3 * 3];
+        xb.settle_batch(&xs, 3, &mut out);
+        let mut dv = vec![0.0f32; 3];
+        for b in 0..3 {
+            xb.settle_int(&xs[b * 2..(b + 1) * 2], &mut dv);
+            for j in 0..3 {
+                assert_eq!(out[b * 3 + j].to_bits(), dv[j].to_bits(),
+                           "item {b} col {j}");
+            }
         }
     }
 

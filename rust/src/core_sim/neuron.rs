@@ -141,9 +141,10 @@ pub fn convert(v: f64, cfg: &NeuronConfig, noise_v: f64) -> (i32, AdcCycles) {
         // negative sign-bit skips the decrement phase entirely (energy win)
         return (0, cyc);
     }
-    if sign == 0 {
-        return (0, cyc);
-    }
+    // No sign == 0 early-out: a zero voltage takes zero decrement steps,
+    // which yields 0 for linear/tanh folding but MID-SCALE for sigmoid
+    // ((0 + mag_max) / 2) -- the range folding ref.py adc_quantize pins.
+    // (The seed returned 0 here for every activation, breaking sigmoid.)
 
     // charge decrement: the comparator flips on the step whose cumulative
     // decrement first exceeds |v|; closed form of the step count (hot
@@ -230,6 +231,24 @@ mod tests {
             let (y, _) = convert(v, &c, 0.0);
             assert!((0..=c.out_mag_max() as i32).contains(&y), "v={v} y={y}");
         }
+    }
+
+    #[test]
+    fn sigmoid_zero_folds_to_midscale() {
+        // Contract with python/compile/kernels/ref.py adc_quantize: at
+        // v == 0 the sign bit is 0, the counter stays at 0, and the
+        // sigmoid renormalization (t + mag_max) / 2 lands mid-scale.
+        let c = NeuronConfig {
+            activation: Activation::Sigmoid,
+            ..Default::default()
+        };
+        let (y, cyc) = convert(0.0, &c, 0.0);
+        assert_eq!(y, c.out_mag_max() as i32 / 2); // 63 for 8-bit outputs
+        assert_eq!(cyc.decrement_steps, 0);
+        // and the fold is monotone through zero
+        let (lo, _) = convert(-1e-6, &c, 0.0);
+        let (hi, _) = convert(1e-6, &c, 0.0);
+        assert!(lo <= y && y <= hi);
     }
 
     #[test]

@@ -1,11 +1,16 @@
-//! npz / npy I/O built on the xla crate's Literal readers: the
-//! interchange format between the python build path (weights, golden
-//! vectors) and the rust runtime.
+//! npz / npy I/O: the interchange format between the python build path
+//! (weights, golden vectors) and the rust runtime.
+//!
+//! Both directions are hand-rolled (the build environment is offline, so
+//! no zip/ndarray crates): `np.savez` emits a *stored* (uncompressed) zip
+//! of npy v1.0 members, which is a format small enough to parse directly.
+//! The reader walks the central directory, so it also accepts archives
+//! with data descriptors or unusual member ordering, and converts f64 /
+//! i32 / i64 payloads to the f32 tensors the simulator consumes.
 
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
-use xla::FromRawBytes;
 
 /// A named f32 tensor loaded from an npz archive.
 #[derive(Clone, Debug)]
@@ -20,26 +25,207 @@ impl Tensor {
     }
 }
 
+fn u16le(b: &[u8], off: usize) -> Result<u16> {
+    b.get(off..off + 2)
+        .map(|s| u16::from_le_bytes([s[0], s[1]]))
+        .ok_or_else(|| anyhow!("zip: truncated at offset {off}"))
+}
+
+fn u32le(b: &[u8], off: usize) -> Result<u32> {
+    b.get(off..off + 4)
+        .map(|s| u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+        .ok_or_else(|| anyhow!("zip: truncated at offset {off}"))
+}
+
+/// Locate the end-of-central-directory record (scan the trailing 64 KiB
+/// for the signature, as zip readers must: a comment may follow it).
+fn find_eocd(bytes: &[u8]) -> Result<usize> {
+    if bytes.len() < 22 {
+        return Err(anyhow!("zip: file too short ({} bytes)", bytes.len()));
+    }
+    let lo = bytes.len().saturating_sub(65_557); // EOCD + max comment
+    let hi = bytes.len() - 22;
+    for off in (lo..=hi).rev() {
+        if bytes[off..off + 4] == [0x50, 0x4b, 0x05, 0x06] {
+            return Ok(off);
+        }
+    }
+    Err(anyhow!("zip: end-of-central-directory record not found"))
+}
+
+/// One parsed npy member: (name without .npy, shape, raw payload, descr).
+struct NpyMember<'a> {
+    name: String,
+    payload: &'a [u8],
+}
+
+/// Walk the central directory and return each member's name + payload.
+fn zip_members(bytes: &[u8]) -> Result<Vec<NpyMember<'_>>> {
+    let eocd = find_eocd(bytes)?;
+    let n_entries = u16le(bytes, eocd + 10)? as usize;
+    let mut cd = u32le(bytes, eocd + 16)? as usize;
+    let mut out = Vec::with_capacity(n_entries);
+    for _ in 0..n_entries {
+        if u32le(bytes, cd)? != 0x0201_4b50 {
+            return Err(anyhow!("zip: bad central-directory signature"));
+        }
+        let method = u16le(bytes, cd + 10)?;
+        let csize = u32le(bytes, cd + 20)? as usize;
+        let name_len = u16le(bytes, cd + 28)? as usize;
+        let extra_len = u16le(bytes, cd + 30)? as usize;
+        let comment_len = u16le(bytes, cd + 32)? as usize;
+        let lho = u32le(bytes, cd + 42)? as usize;
+        let name = String::from_utf8_lossy(
+            bytes
+                .get(cd + 46..cd + 46 + name_len)
+                .ok_or_else(|| anyhow!("zip: truncated member name"))?,
+        )
+        .into_owned();
+        if method != 0 {
+            return Err(anyhow!(
+                "zip member {name}: compression method {method} unsupported \
+                 (only stored; use np.savez, not np.savez_compressed)"
+            ));
+        }
+        // local header: sizes may live in the data descriptor, so trust
+        // the central directory and only skip the local name/extra here.
+        if u32le(bytes, lho)? != 0x0403_4b50 {
+            return Err(anyhow!("zip member {name}: bad local header"));
+        }
+        let l_name = u16le(bytes, lho + 26)? as usize;
+        let l_extra = u16le(bytes, lho + 28)? as usize;
+        let start = lho + 30 + l_name + l_extra;
+        let payload = bytes
+            .get(start..start + csize)
+            .ok_or_else(|| anyhow!("zip member {name}: truncated payload"))?;
+        out.push(NpyMember {
+            name: name.strip_suffix(".npy").unwrap_or(&name).to_string(),
+            payload,
+        });
+        cd += 46 + name_len + extra_len + comment_len;
+    }
+    Ok(out)
+}
+
+/// Pull `'key': value` out of the npy header dict (values are primitive:
+/// a quoted string, a boolean, or a parenthesized tuple).
+fn header_field<'a>(header: &'a str, key: &str) -> Result<&'a str> {
+    let pat = format!("'{key}':");
+    let at = header
+        .find(&pat)
+        .ok_or_else(|| anyhow!("npy header missing {key}: {header}"))?;
+    let rest = header[at + pat.len()..].trim_start();
+    let end = if rest.starts_with('(') {
+        rest.find(')').map(|i| i + 1)
+    } else {
+        rest.find(&[',', '}'][..])
+    }
+    .ok_or_else(|| anyhow!("npy header: unterminated {key}"))?;
+    Ok(rest[..end].trim())
+}
+
+/// Parse one npy v1.x/2.x payload to an f32 tensor.
+fn parse_npy(name: &str, bytes: &[u8]) -> Result<Tensor> {
+    if bytes.len() < 10 || &bytes[..6] != b"\x93NUMPY" {
+        return Err(anyhow!("{name}: not an npy payload"));
+    }
+    let major = bytes[6];
+    let (hlen, body_off) = if major >= 2 {
+        (u32le(bytes, 8)? as usize, 12)
+    } else {
+        (u16le(bytes, 8)? as usize, 10)
+    };
+    let header = std::str::from_utf8(
+        bytes
+            .get(body_off..body_off + hlen)
+            .ok_or_else(|| anyhow!("{name}: truncated npy header"))?,
+    )
+    .map_err(|e| anyhow!("{name}: npy header not utf-8: {e}"))?;
+
+    let descr = header_field(header, "descr")?.trim_matches(&['\'', '"'][..]);
+    let fortran = header_field(header, "fortran_order")?;
+    if fortran.starts_with("True") {
+        return Err(anyhow!("{name}: fortran-order arrays unsupported"));
+    }
+    let shape: Vec<usize> = header_field(header, "shape")?
+        .trim_matches(&['(', ')'][..])
+        .split(',')
+        .filter_map(|t| {
+            let t = t.trim();
+            if t.is_empty() {
+                None
+            } else {
+                Some(t.parse::<usize>())
+            }
+        })
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| anyhow!("{name}: bad shape: {e}"))?;
+    let numel: usize = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow!("{name}: shape {shape:?} overflows"))?;
+
+    let body = &bytes[body_off + hlen..];
+    let need = |w: usize| -> Result<()> {
+        match numel.checked_mul(w) {
+            Some(n) if body.len() >= n => Ok(()),
+            _ => Err(anyhow!(
+                "{name}: payload too short for {numel} x {w} bytes"
+            )),
+        }
+    };
+    let data: Vec<f32> = match descr {
+        "<f4" => {
+            need(4)?;
+            body.chunks_exact(4)
+                .take(numel)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        }
+        "<f8" => {
+            need(8)?;
+            body.chunks_exact(8)
+                .take(numel)
+                .map(|c| {
+                    f64::from_le_bytes([
+                        c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+                    ]) as f32
+                })
+                .collect()
+        }
+        "<i4" => {
+            need(4)?;
+            body.chunks_exact(4)
+                .take(numel)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32)
+                .collect()
+        }
+        "<i8" => {
+            need(8)?;
+            body.chunks_exact(8)
+                .take(numel)
+                .map(|c| {
+                    i64::from_le_bytes([
+                        c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+                    ]) as f32
+                })
+                .collect()
+        }
+        t => return Err(anyhow!("{name}: unsupported dtype {t}")),
+    };
+    Ok(Tensor { shape, data })
+}
+
 /// Load every array of an .npz file into f32 tensors.
 pub fn load_npz<P: AsRef<Path>>(path: P) -> Result<BTreeMap<String, Tensor>> {
     let path = path.as_ref();
-    let lits = xla::Literal::read_npz(path, &())
+    let bytes = std::fs::read(path)
         .with_context(|| format!("reading {}", path.display()))?;
     let mut out = BTreeMap::new();
-    for (name, lit) in lits {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data: Vec<f32> = match shape.ty() {
-            xla::ElementType::F32 => lit.to_vec::<f32>()?,
-            xla::ElementType::F64 => lit
-                .convert(xla::ElementType::F32.primitive_type())?
-                .to_vec::<f32>()?,
-            xla::ElementType::S32 | xla::ElementType::S64 => lit
-                .convert(xla::ElementType::F32.primitive_type())?
-                .to_vec::<f32>()?,
-            t => return Err(anyhow!("{name}: unsupported dtype {t:?}")),
-        };
-        out.insert(name, Tensor { shape: dims, data });
+    for m in zip_members(&bytes)? {
+        let t = parse_npy(&m.name, m.payload)
+            .with_context(|| format!("in {}", path.display()))?;
+        out.insert(m.name, t);
     }
     Ok(out)
 }
@@ -74,9 +260,6 @@ fn npy_bytes(t: &Tensor) -> Vec<u8> {
 }
 
 /// Write named f32 tensors to an .npz file (stored zip of .npy members).
-/// Hand-rolled writer: the xla crate's Literal-based writer rejects f32
-/// raw copies in this build, so we emit the npy bytes ourselves through
-/// the zip container format directly.
 pub fn save_npz<P: AsRef<Path>>(path: P, tensors: &[(String, Tensor)]) -> Result<()> {
     use std::io::Write;
     let f = std::fs::File::create(path.as_ref())?;
@@ -180,5 +363,30 @@ mod tests {
         let m = load_npz(&path).unwrap();
         assert_eq!(m["a"].shape, vec![2, 3]);
         assert_eq!(m["a"].data, t.data);
+    }
+
+    #[test]
+    fn multiple_members_roundtrip() {
+        let dir = std::env::temp_dir().join("neurram_npz_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.npz");
+        let a = Tensor { shape: vec![4], data: vec![0.5, -1.5, 2.0, 0.0] };
+        let b = Tensor { shape: vec![1, 2], data: vec![9.0, -9.0] };
+        save_npz(&path, &[("a".into(), a.clone()), ("b".into(), b.clone())])
+            .unwrap();
+        let m = load_npz(&path).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m["a"].data, a.data);
+        assert_eq!(m["b"].shape, vec![1, 2]);
+        assert_eq!(m["b"].data, b.data);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("neurram_npz_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.npz");
+        std::fs::write(&path, b"definitely not a zip archive").unwrap();
+        assert!(load_npz(&path).is_err());
     }
 }

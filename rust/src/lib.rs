@@ -17,6 +17,15 @@
 //! * [`runtime`]     -- PJRT client: load + execute HLO artifacts
 //! * [`calib`]       -- model-driven chip calibration
 //! * [`io`]          -- datasets (synthetic substrates), metrics, npz I/O
+//!
+//! The MVM hot path is batched end to end: `Crossbar::settle_batch`
+//! streams the conductance matrix once per `[batch x rows]` input
+//! matrix, `CimCore::mvm_batch` amortizes per-call setup across items,
+//! and `NeuRramChip::mvm_layer_batch` dispatches whole batch slices to
+//! every row-segment placement.  The batched path is output-identical
+//! (bitwise on settled voltages, draw-order identical on RNG/LFSR
+//! streams) to looping the per-vector calls -- see README.md and the
+//! equivalence property tests in `rust/tests/properties.rs`.
 
 pub mod calib;
 pub mod coordinator;

@@ -76,19 +76,48 @@ fn maxpool2(vals: &[f64], h: usize, w: usize, c: usize, k: usize)
 /// `img_q` is the input image quantized to the first layer's unsigned
 /// input range, channel-last.  `shifts[i]` is layer i's calibrated
 /// requantization shift.  Returns the logits (de-normalized floats).
+///
+/// Thin wrapper over [`run_cnn_batch`] with a batch of one.
 pub fn run_cnn(
     chip: &mut NeuRramChip,
     graph: &ModelGraph,
     img_q: &[i32],
     shifts: &[f64],
 ) -> Vec<f64> {
+    run_cnn_batch(chip, graph, &[img_q.to_vec()], shifts)
+        .pop()
+        .expect("one logit vector per image")
+}
+
+/// Execute a CNN graph on the chip for a batch of images.
+///
+/// Every conv layer gathers the im2col patches of ALL images, assigns
+/// each patch its replica by the image-local pixel index (`pixel %
+/// n_rep`, exactly the per-image round-robin the serial path used, so
+/// write-verified replicas see the same items), and dispatches one
+/// `NeuRramChip::mvm_layer_batch` call per replica.  The dense head runs
+/// as one batch over the images.  Outputs are identical to calling
+/// [`run_cnn`] image by image.
+pub fn run_cnn_batch(
+    chip: &mut NeuRramChip,
+    graph: &ModelGraph,
+    imgs_q: &[Vec<i32>],
+    shifts: &[f64],
+) -> Vec<Vec<f64>> {
     assert_eq!(shifts.len(), graph.layers.len());
-    let mut fm = FeatureMap {
-        h: graph.input_hw,
-        w: graph.input_hw,
-        c: graph.input_ch,
-        data: img_q.to_vec(),
-    };
+    if imgs_q.is_empty() {
+        return Vec::new();
+    }
+    let n_img = imgs_q.len();
+    let mut fms: Vec<FeatureMap> = imgs_q
+        .iter()
+        .map(|img| FeatureMap {
+            h: graph.input_hw,
+            w: graph.input_hw,
+            c: graph.input_ch,
+            data: img.clone(),
+        })
+        .collect();
 
     for (li, layer) in graph.layers.iter().enumerate() {
         // MVMs always run linear ADC: a layer split over row segments
@@ -109,23 +138,46 @@ pub fn run_cnn(
 
         match layer.kind {
             LayerKind::Conv => {
+                let (h, w) = (fms[0].h, fms[0].w);
+                let px = h * w;
                 let oc = layer.out_features;
-                let mut vals = vec![0.0f64; fm.h * fm.w * oc];
                 let n_rep = chip.plan.replica_count(&layer.name).max(1);
-                let mut item = 0usize;
-                for y in 0..fm.h {
-                    for x in 0..fm.w {
-                        let patch =
-                            extract_patch(&fm, y, x, layer.kh, layer.kw);
-                        let rep = item % n_rep;
-                        item += 1;
-                        let out =
-                            chip.mvm_layer(&layer.name, &patch, &cfg, rep);
-                        for (ch, v) in out.iter().enumerate() {
-                            vals[(y * fm.w + x) * oc + ch] = *v;
+
+                // gather the im2col patches of every image, image-major
+                let mut patches: Vec<Vec<i32>> =
+                    Vec::with_capacity(n_img * px);
+                for fm in &fms {
+                    for y in 0..h {
+                        for x in 0..w {
+                            patches.push(
+                                extract_patch(fm, y, x, layer.kh, layer.kw),
+                            );
                         }
                     }
                 }
+
+                // one batched dispatch per replica (image-local pixel
+                // index keeps the serial path's replica assignment)
+                let mut vals = vec![0.0f64; n_img * px * oc];
+                for rep in 0..n_rep {
+                    let idxs: Vec<usize> = (0..patches.len())
+                        .filter(|p| (p % px) % n_rep == rep)
+                        .collect();
+                    if idxs.is_empty() {
+                        continue;
+                    }
+                    let refs: Vec<&[i32]> =
+                        idxs.iter().map(|&p| patches[p].as_slice()).collect();
+                    let (outs, _) =
+                        chip.mvm_layer_batch(&layer.name, &refs, &cfg, rep);
+                    for (k, out) in outs.into_iter().enumerate() {
+                        let p = idxs[k];
+                        for (ch, v) in out.iter().enumerate() {
+                            vals[p * oc + ch] = *v;
+                        }
+                    }
+                }
+
                 // activation is folded in the neuron when the layer fits a
                 // single segment; a split layer accumulates linear
                 // partials, so apply ReLU digitally here as chip_forward
@@ -137,32 +189,43 @@ pub fn run_cnn(
                         }
                     }
                 }
-                let (pooled, nh, nw) =
-                    maxpool2(&vals, fm.h, fm.w, oc, layer.pool);
-                let mut next = FeatureMap::new(nh, nw, oc);
-                for (o, v) in next.data.iter_mut().zip(&pooled) {
-                    // unsigned activation in the positive half of the
-                    // next layer's signed range: clip at 2^(n-1)-1
-                    *o = requantize_unsigned(*v, shifts[li], next_bits - 1);
+                for (i, fm_next) in fms.iter_mut().enumerate() {
+                    let img_vals = &vals[i * px * oc..(i + 1) * px * oc];
+                    let (pooled, nh, nw) =
+                        maxpool2(img_vals, h, w, oc, layer.pool);
+                    let mut next = FeatureMap::new(nh, nw, oc);
+                    for (o, v) in next.data.iter_mut().zip(&pooled) {
+                        // unsigned activation in the positive half of the
+                        // next layer's signed range: clip at 2^(n-1)-1
+                        *o = requantize_unsigned(*v, shifts[li],
+                                                 next_bits - 1);
+                    }
+                    *fm_next = next;
                 }
-                fm = next;
             }
             _ => {
-                // dense head
-                let x: Vec<i32> = fm.data.clone();
-                let out = chip.mvm_layer(&layer.name, &x, &cfg, 0);
+                // dense head: one batch over all images
+                let refs: Vec<&[i32]> =
+                    fms.iter().map(|f| f.data.as_slice()).collect();
+                let (outs, _) =
+                    chip.mvm_layer_batch(&layer.name, &refs, &cfg, 0);
                 if last {
-                    return out;
+                    return outs;
                 }
-                let mut next = FeatureMap::new(1, 1, layer.out_features);
-                for (o, v) in next.data.iter_mut().zip(&out) {
-                    *o = requantize_unsigned(*v, shifts[li], next_bits - 1);
+                for (fm, out) in fms.iter_mut().zip(outs) {
+                    let mut next = FeatureMap::new(1, 1, layer.out_features);
+                    for (o, v) in next.data.iter_mut().zip(&out) {
+                        *o = requantize_unsigned(*v, shifts[li],
+                                                 next_bits - 1);
+                    }
+                    *fm = next;
                 }
-                fm = next;
             }
         }
     }
-    fm.data.iter().map(|&v| v as f64).collect()
+    fms.iter()
+        .map(|fm| fm.data.iter().map(|&v| v as f64).collect())
+        .collect()
 }
 
 /// Split-layer aware ReLU note: `mvm_layer` accumulates de-normalized

@@ -1,100 +1,147 @@
 //! PJRT execution: compile HLO-text artifacts once, cache the loaded
 //! executables, and run them with f32 tensor inputs.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: HLO text ->
-//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
-//! `PjRtClient::compile` -> `execute`, unwrapping the jax
-//! `return_tuple=True` tuple.
+//! The real implementation rides on the external `xla` crate (PJRT CPU
+//! client bindings) and is gated behind the `pjrt` cargo feature, because
+//! that crate cannot be fetched in offline builds.  The default build
+//! ships a stub with the same API whose constructor reports the feature
+//! as disabled, so every call site (CLI, benches, tests) compiles and
+//! degrades gracefully.
 
-use super::artifact::{ArtifactInfo, Manifest};
-use crate::io::npz::Tensor;
-use anyhow::{anyhow, Context, Result};
-use std::collections::BTreeMap;
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::Runtime;
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::Runtime;
 
-pub struct Runtime {
-    pub client: xla::PjRtClient,
-    pub manifest: Manifest,
-    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+/// Offline stub: same API, no executor behind it.
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use crate::io::npz::Tensor;
+    use crate::runtime::artifact::Manifest;
+    use anyhow::{anyhow, Result};
+
+    pub struct Runtime {
+        pub manifest: Manifest,
+    }
+
+    impl Runtime {
+        pub fn new(_artifact_dir: &str) -> Result<Runtime> {
+            Err(anyhow!(
+                "PJRT runtime unavailable: built without the `pjrt` feature \
+                 (the xla crate cannot be fetched offline)"
+            ))
+        }
+
+        pub fn execute(&mut self, name: &str, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            Err(anyhow!("PJRT runtime unavailable (artifact {name})"))
+        }
+
+        pub fn summary(&self) -> Vec<(String, String)> {
+            self.manifest
+                .artifacts
+                .values()
+                .map(|a| (a.name.clone(), a.kind.clone()))
+                .collect()
+        }
+    }
 }
 
-impl Runtime {
-    /// Create a CPU-PJRT runtime over an artifact directory.
-    pub fn new(artifact_dir: &str) -> Result<Runtime> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, manifest, executables: BTreeMap::new() })
+/// Pattern follows /opt/xla-example/load_hlo: HLO text ->
+/// `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+/// `PjRtClient::compile` -> `execute`, unwrapping the jax
+/// `return_tuple=True` tuple.
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use crate::io::npz::Tensor;
+    use crate::runtime::artifact::{ArtifactInfo, Manifest};
+    use anyhow::{anyhow, Context, Result};
+    use std::collections::BTreeMap;
+
+    pub struct Runtime {
+        pub client: xla::PjRtClient,
+        pub manifest: Manifest,
+        executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    /// Compile (or fetch cached) an artifact by name.
-    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.executables.contains_key(name) {
+    impl Runtime {
+        /// Create a CPU-PJRT runtime over an artifact directory.
+        pub fn new(artifact_dir: &str) -> Result<Runtime> {
+            let manifest = Manifest::load(artifact_dir)?;
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Runtime { client, manifest, executables: BTreeMap::new() })
+        }
+
+        /// Compile (or fetch cached) an artifact by name.
+        pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.executables.contains_key(name) {
+                let info = self.manifest.artifact(name)?.clone();
+                let path = info.hlo_path(&self.manifest.dir);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+                )
+                .with_context(|| format!("parsing {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self.client.compile(&comp)?;
+                self.executables.insert(name.to_string(), exe);
+            }
+            Ok(&self.executables[name])
+        }
+
+        /// Execute an artifact with tensors matched (by position) to the
+        /// manifest's parameter list.  Returns the tuple elements as tensors.
+        pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
             let info = self.manifest.artifact(name)?.clone();
-            let path = info.hlo_path(&self.manifest.dir);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-            )
-            .with_context(|| format!("parsing {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            self.executables.insert(name.to_string(), exe);
-        }
-        Ok(&self.executables[name])
-    }
-
-    /// Execute an artifact with tensors matched (by position) to the
-    /// manifest's parameter list.  Returns the tuple elements as tensors.
-    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let info = self.manifest.artifact(name)?.clone();
-        if inputs.len() != info.params.len() {
-            return Err(anyhow!(
-                "{name}: {} inputs given, {} expected",
-                inputs.len(),
-                info.params.len()
-            ));
-        }
-        for (t, p) in inputs.iter().zip(&info.params) {
-            if t.numel() != p.shape.iter().product::<usize>() {
+            if inputs.len() != info.params.len() {
                 return Err(anyhow!(
-                    "{name}: param {} shape {:?} vs tensor {:?}",
-                    p.name,
-                    p.shape,
-                    t.shape
+                    "{name}: {} inputs given, {} expected",
+                    inputs.len(),
+                    info.params.len()
                 ));
             }
+            for (t, p) in inputs.iter().zip(&info.params) {
+                if t.numel() != p.shape.iter().product::<usize>() {
+                    return Err(anyhow!(
+                        "{name}: param {} shape {:?} vs tensor {:?}",
+                        p.name,
+                        p.shape,
+                        t.shape
+                    ));
+                }
+            }
+            let lits: Vec<xla::Literal> = inputs
+                .iter()
+                .zip(&info.params)
+                .map(|(t, p)| {
+                    let lit = xla::Literal::vec1(&t.data);
+                    let dims: Vec<i64> =
+                        p.shape.iter().map(|&d| d as i64).collect();
+                    Ok(lit.reshape(&dims)?)
+                })
+                .collect::<Result<_>>()?;
+
+            let exe = self.load(name)?;
+            let result = exe.execute::<xla::Literal>(&lits)?[0][0]
+                .to_literal_sync()?;
+            Self::unpack_tuple(result, &info)
         }
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .zip(&info.params)
-            .map(|(t, p)| {
-                let lit = xla::Literal::vec1(&t.data);
-                let dims: Vec<i64> =
-                    p.shape.iter().map(|&d| d as i64).collect();
-                Ok(lit.reshape(&dims)?)
-            })
-            .collect::<Result<_>>()?;
 
-        let exe = self.load(name)?;
-        let result = exe.execute::<xla::Literal>(&lits)?[0][0]
-            .to_literal_sync()?;
-        Self::unpack_tuple(result, &info)
-    }
-
-    fn unpack_tuple(mut result: xla::Literal, info: &ArtifactInfo) -> Result<Vec<Tensor>> {
-        let elems = result.decompose_tuple()?;
-        let mut out = Vec::new();
-        for (lit, spec) in elems.into_iter().zip(&info.outputs) {
-            let data: Vec<f32> = lit.to_vec::<f32>()?;
-            out.push(Tensor { shape: spec.shape.clone(), data });
+        fn unpack_tuple(mut result: xla::Literal, info: &ArtifactInfo) -> Result<Vec<Tensor>> {
+            let elems = result.decompose_tuple()?;
+            let mut out = Vec::new();
+            for (lit, spec) in elems.into_iter().zip(&info.outputs) {
+                let data: Vec<f32> = lit.to_vec::<f32>()?;
+                out.push(Tensor { shape: spec.shape.clone(), data });
+            }
+            Ok(out)
         }
-        Ok(out)
-    }
 
-    /// Convenience: how many artifacts of each kind are available.
-    pub fn summary(&self) -> Vec<(String, String)> {
-        self.manifest
-            .artifacts
-            .values()
-            .map(|a| (a.name.clone(), a.kind.clone()))
-            .collect()
+        /// Convenience: how many artifacts of each kind are available.
+        pub fn summary(&self) -> Vec<(String, String)> {
+            self.manifest
+                .artifacts
+                .values()
+                .map(|a| (a.name.clone(), a.kind.clone()))
+                .collect()
+        }
     }
 }

@@ -35,23 +35,20 @@ fn chip_accuracy(write_verify: bool, n: usize, seed: u64) -> Option<f64> {
 }
 
 #[test]
+#[ignore = "requires trained weights (make artifacts + compile.train.train_models)"]
 fn trained_cnn_beats_chance_on_chip() {
-    if !Path::new("artifacts/mnist_weights.npz").exists() {
-        eprintln!("skipping: train weights first (make artifacts + \
-                   compile.train.train_models)");
-        return;
-    }
+    assert!(Path::new("artifacts/mnist_weights.npz").exists(),
+            "artifacts/mnist_weights.npz missing");
     let acc = chip_accuracy(true, 60, 42).unwrap();
     // full non-idealities; trained model must stay far above 10% chance
     assert!(acc > 0.6, "chip accuracy {acc}");
 }
 
 #[test]
+#[ignore = "requires trained weights (make artifacts + compile.train.train_models)"]
 fn ideal_load_at_least_as_good_as_write_verify() {
-    if !Path::new("artifacts/mnist_weights.npz").exists() {
-        eprintln!("skipping");
-        return;
-    }
+    assert!(Path::new("artifacts/mnist_weights.npz").exists(),
+            "artifacts/mnist_weights.npz missing");
     let ideal = chip_accuracy(false, 60, 43).unwrap();
     let programmed = chip_accuracy(true, 60, 43).unwrap();
     // programming noise can only cost accuracy (within sampling slack)

@@ -9,17 +9,21 @@ use neurram::runtime::Manifest;
 use neurram::util::rng::Rng;
 use std::path::Path;
 
-fn artifacts_available() -> bool {
-    Path::new("artifacts/manifest.json").exists()
-        && Path::new("artifacts/golden.npz").exists()
+/// Panic loudly when an `--ignored` run lacks the artifacts: these tests
+/// are `#[ignore]`d by default so that `cargo test` reports them as
+/// skipped instead of silently passing without checking anything.
+fn require_artifacts() {
+    assert!(
+        Path::new("artifacts/manifest.json").exists()
+            && Path::new("artifacts/golden.npz").exists(),
+        "artifacts/ missing: run `make artifacts` before --ignored runs"
+    );
 }
 
 #[test]
+#[ignore = "requires make artifacts"]
 fn manifest_constants_match_rust_device_params() {
-    if !artifacts_available() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
+    require_artifacts();
     let m = Manifest::load("artifacts").unwrap();
     let p = DeviceParams::default();
     m.check_constant("g_min_us", p.g_min_us, 1e-9).unwrap();
@@ -35,14 +39,12 @@ fn manifest_constants_match_rust_device_params() {
 }
 
 #[test]
+#[ignore = "requires make artifacts"]
 fn core_sim_matches_python_golden_mvm() {
     // The rust cycle-level core and the python jnp oracle implement the
     // same physics; outputs must agree within 1 ADC LSB on the golden
     // CIM-MVM case exported by aot.py.
-    if !artifacts_available() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
+    require_artifacts();
     let golden = npz::load_npz("artifacts/golden.npz").unwrap();
     let x = &golden["mvm_x"]; // [32, 128]
     let gp = &golden["mvm_g_pos"]; // [128, 256]
@@ -75,11 +77,9 @@ fn core_sim_matches_python_golden_mvm() {
 }
 
 #[test]
+#[ignore = "requires make artifacts"]
 fn mvm_scales_recover_golden_magnitudes() {
-    if !artifacts_available() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
+    require_artifacts();
     let golden = npz::load_npz("artifacts/golden.npz").unwrap();
     let gp = &golden["mvm_g_pos"];
     let gn = &golden["mvm_g_neg"];
@@ -93,11 +93,9 @@ fn mvm_scales_recover_golden_magnitudes() {
 }
 
 #[test]
+#[ignore = "requires make artifacts"]
 fn lstm_golden_shapes_consistent() {
-    if !artifacts_available() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
+    require_artifacts();
     let golden = npz::load_npz("artifacts/golden.npz").unwrap();
     assert_eq!(golden["lstm_x_t"].shape, vec![8, 40]);
     assert_eq!(golden["lstm_h_next"].shape, vec![8, 64]);

@@ -1,10 +1,14 @@
 //! Property-style tests (hand-rolled generators; proptest isn't available
 //! offline): randomized sweeps over the core invariants.
 
+use neurram::coordinator::mapping::{plan, split_matrix, MappingStrategy};
+use neurram::coordinator::NeuRramChip;
 use neurram::core_sim::neuron::{convert, NeuronConfig};
 use neurram::core_sim::tnsa::Tnsa;
-use neurram::core_sim::{Activation, Crossbar};
-use neurram::coordinator::mapping::{plan, split_matrix, MappingStrategy};
+use neurram::core_sim::{
+    Activation, CimCore, Crossbar, CrossbarNonIdealities, MvmDirection,
+};
+use neurram::device::DeviceParams;
 use neurram::models::quant::calibrate_shift;
 use neurram::models::ConductanceMatrix;
 use neurram::util::json::Json;
@@ -204,5 +208,188 @@ fn prop_conductance_encoding_within_device_range() {
             let dec = (gp[i] - gn[i]) * w_max / 40.0;
             assert!((dec - w[i]).abs() <= w_max / 40.0 + 1e-5);
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Batched-engine equivalence: the batched hot path must be *exactly* the
+// per-vector path -- bitwise on settled voltages, value-equal on digital
+// outputs, and draw-order identical on every RNG/LFSR stream.
+// ---------------------------------------------------------------------
+
+fn random_conductances(rng: &mut Rng, n: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut gp = vec![1.0f32; n];
+    let mut gn = vec![1.0f32; n];
+    for i in 0..n {
+        let w = rng.normal() as f32;
+        if w > 0.0 {
+            gp[i] = (40.0 * w).clamp(1.0, 40.0);
+        } else {
+            gn[i] = (-40.0 * w).clamp(1.0, 40.0);
+        }
+    }
+    (gp, gn)
+}
+
+#[test]
+fn prop_settle_batch_bitwise_equals_settle_int() {
+    let mut rng = Rng::new(31);
+    for round in 0..12 {
+        let rows = 1 + rng.below(128);
+        let cols = 1 + rng.below(256);
+        let batch = 1 + rng.below(9);
+        let (gp, gn) = random_conductances(&mut rng, rows * cols);
+        let mut xb =
+            Crossbar::from_conductances(&gp, &gn, rows, cols, 40.0, 0.5);
+        if round % 2 == 1 {
+            // the IR-drop branch of finish_settle must match too
+            xb.nonideal.ir_alpha = 0.3;
+        }
+        let xs: Vec<i32> = (0..batch * rows)
+            .map(|_| rng.below(15) as i32 - 7)
+            .collect();
+        let mut out = vec![0.0f32; batch * cols];
+        xb.settle_batch(&xs, batch, &mut out);
+        let mut dv = vec![0.0f32; cols];
+        for b in 0..batch {
+            xb.settle_int(&xs[b * rows..(b + 1) * rows], &mut dv);
+            for j in 0..cols {
+                assert_eq!(
+                    out[b * cols + j].to_bits(),
+                    dv[j].to_bits(),
+                    "round {round} item {b} col {j} ({rows}x{cols})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_mvm_batch_equals_mvm_loop() {
+    let activations = [
+        Activation::None,
+        Activation::Relu,
+        Activation::Tanh,
+        Activation::Sigmoid,
+        Activation::Stochastic,
+    ];
+    let mut rng = Rng::new(32);
+    for (ai, &act) in activations.iter().enumerate() {
+        for round in 0..4 {
+            let rows = 1 + rng.below(128);
+            let cols = 1 + rng.below(256);
+            let batch = 1 + rng.below(8);
+            let input_bits = 1 + rng.below(6) as u32;
+            let output_bits = 1 + rng.below(8) as u32;
+            let seed = 1000 + (ai * 10 + round) as u64;
+            let (gp, gn) = random_conductances(&mut Rng::new(seed), rows * cols);
+            let build = || {
+                let mut core = CimCore::new(0, DeviceParams::default());
+                core.power_on();
+                core.load_ideal(&gp, &gn, rows, cols);
+                if round % 2 == 1 {
+                    // per-output coupling draws force the strictest
+                    // draw-order equivalence
+                    core.set_nonidealities(CrossbarNonIdealities {
+                        ir_alpha: 0.2,
+                        coupling_sigma_v: 0.01,
+                    });
+                }
+                core
+            };
+            let mut batched = build();
+            let mut serial = build();
+            let cfg = NeuronConfig {
+                input_bits,
+                output_bits,
+                activation: act,
+                ..Default::default()
+            };
+            let in_mag = cfg.in_mag_max();
+            let span = (2 * in_mag + 1) as usize;
+            let xs: Vec<i32> = (0..batch * rows)
+                .map(|_| rng.below(span) as i32 - in_mag)
+                .collect();
+            let mut rng_a = Rng::new(seed + 7);
+            let mut rng_b = Rng::new(seed + 7);
+            let (y_batch, item_ns) = batched.mvm_batch(
+                &xs, batch, &cfg, MvmDirection::Forward, 0.1, &mut rng_a,
+            );
+            for b in 0..batch {
+                let y = serial.mvm(
+                    &xs[b * rows..(b + 1) * rows],
+                    &cfg,
+                    MvmDirection::Forward,
+                    0.1,
+                    &mut rng_b,
+                );
+                assert_eq!(
+                    &y_batch[b * cols..(b + 1) * cols],
+                    &y[..],
+                    "{act:?} round {round} item {b} ({rows}x{cols} b{batch})"
+                );
+            }
+            assert_eq!(item_ns.len(), batch);
+            let (ea, eb) = (batched.energy.counters, serial.energy.counters);
+            assert_eq!(ea.busy_ns.to_bits(), eb.busy_ns.to_bits(),
+                       "{act:?} round {round} busy_ns");
+            assert_eq!(ea.comparisons, eb.comparisons);
+            assert_eq!(ea.decrement_steps, eb.decrement_steps);
+            assert_eq!(ea.input_wire_phases, eb.input_wire_phases);
+            assert_eq!(ea.macs, eb.macs);
+        }
+    }
+}
+
+#[test]
+fn prop_chip_layer_batch_equals_serial_loop() {
+    let mut rng = Rng::new(33);
+    for round in 0..6 {
+        let rows = 32 + rng.below(300);
+        let cols = 1 + rng.below(64);
+        let batch = 1 + rng.below(6);
+        let seed = 2000 + round as u64;
+        let w: Vec<f32> = {
+            let mut wr = Rng::new(seed);
+            (0..rows * cols).map(|_| wr.normal() as f32).collect()
+        };
+        let bias: Vec<f32> = (0..cols).map(|j| j as f32 * 0.1 - 0.2).collect();
+        let with_bias = round % 2 == 0;
+        let build = || {
+            let m = ConductanceMatrix::compile(
+                "l",
+                &w,
+                if with_bias { Some(bias.as_slice()) } else { None },
+                rows,
+                cols,
+                7,
+                40.0,
+                1.0,
+                None,
+            );
+            let mut chip = NeuRramChip::with_cores(6, seed + 1);
+            chip.program_model(vec![m], &[1.0], MappingStrategy::Simple,
+                               false)
+                .unwrap();
+            chip
+        };
+        let mut batched = build();
+        let mut serial = build();
+        let cfg = NeuronConfig::default();
+        let inputs: Vec<Vec<i32>> = (0..batch)
+            .map(|_| (0..rows).map(|_| rng.below(15) as i32 - 7).collect())
+            .collect();
+        let refs: Vec<&[i32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let (ys, item_ns) = batched.mvm_layer_batch("l", &refs, &cfg, 0);
+        for (i, x) in inputs.iter().enumerate() {
+            let y = serial.mvm_layer("l", x, &cfg, 0);
+            assert_eq!(ys[i], y, "round {round} item {i} ({rows}x{cols})");
+        }
+        assert_eq!(item_ns.len(), batch);
+        assert_eq!(
+            batched.energy_counters().busy_ns.to_bits(),
+            serial.energy_counters().busy_ns.to_bits(),
+            "round {round}"
+        );
     }
 }
