@@ -1,0 +1,97 @@
+//! `neurram infer-speech`: voice-command recognition on the chip
+//! simulator -- the paper's Google-speech-commands LSTM workload
+//! (Table 1 "Recurrent + Forward" dataflow, Fig. 1e speech bar).
+//!
+//! With no trained export available offline, the command runs the LSTM
+//! as a fixed random recurrent reservoir: the `wx`/`wh` gate matrices
+//! keep their random initialization and step the MFCC series on the
+//! chip; the per-cell output matrices are then fit by softmax regression
+//! on the *chip-measured* final hidden states (so the readout absorbs
+//! the quantized recurrent dynamics), recompiled to conductances and
+//! executed on-chip for the test set.
+
+use anyhow::Result;
+use neurram::coordinator::mapping::MappingStrategy;
+use neurram::coordinator::NeuRramChip;
+use neurram::energy::EnergyParams;
+use neurram::io::{datasets, metrics};
+use neurram::models::executor::recurrent::{quantize_utterances, LstmExecutor};
+use neurram::models::loader::{compile_random, intensities};
+use neurram::models::speech_lstm;
+use neurram::models::train::fit_lstm_readouts;
+use neurram::util::cli::Args;
+
+pub fn run(args: &Args) -> Result<()> {
+    let n_train = args.usize_or("train", 160);
+    let n_test = args.usize_or("samples", 80);
+    let hidden = args.usize_or("hidden", 64);
+    let n_cells = args.usize_or("cells", 2).max(1);
+    let epochs = args.usize_or("epochs", 300);
+    let noise = args.f64_or("noise", 0.35);
+    let seed = args.u64_or("seed", 23);
+
+    let graph = speech_lstm(hidden, n_cells);
+    let mut matrices = compile_random(&graph, seed);
+    let mut chip = NeuRramChip::new(seed + 1);
+    chip.program_model(matrices.clone(), &intensities(&graph),
+                       MappingStrategy::Balanced, false)
+        .map_err(anyhow::Error::msg)?;
+    chip.gate_unused();
+    println!(
+        "mapped {}-cell LSTM (hidden {}) onto {} cores; replicas: {:?}",
+        n_cells, hidden, chip.plan.cores_used, chip.plan.replicas
+    );
+
+    // ---- scale calibration on training probes ----
+    let (xs_tr, y_tr) = datasets::mfcc_cmds(n_train, seed + 2, noise);
+    let q_tr = quantize_utterances(&graph, &xs_tr);
+    let mut exec = LstmExecutor::new(&graph).map_err(anyhow::Error::msg)?;
+    let n_probe = q_tr.len().min(16);
+    exec.calibrate(&mut chip, &graph, &q_tr[..n_probe]);
+    println!(
+        "calibrated gate scale {:.4} V/unit, cell scale {:.4} V/unit",
+        exec.calib.gate_v_per_unit, exec.calib.cell_v_per_unit
+    );
+
+    // ---- fit the readouts on chip-measured hidden states ----
+    let (hidden_tr, _, _) = exec.run_hidden(&mut chip, &graph, &q_tr, false);
+    fit_lstm_readouts(&graph, &mut matrices, &hidden_tr, &y_tr, epochs,
+                      seed + 7);
+    // reprogram: wx/wh unchanged (ideal loads are deterministic), wo now
+    // carries the trained readouts
+    chip.program_model(matrices, &intensities(&graph),
+                       MappingStrategy::Balanced, false)
+        .map_err(anyhow::Error::msg)?;
+    chip.gate_unused();
+    println!("readouts trained on {} utterances and reprogrammed", n_train);
+
+    // ---- end-to-end chip inference on held-out utterances ----
+    chip.reset_energy();
+    let (xs_te, y_te) = datasets::mfcc_cmds(n_test, seed + 3, noise);
+    let q_te = quantize_utterances(&graph, &xs_te);
+    let t0 = std::time::Instant::now();
+    let logits = exec.run_logits(&mut chip, &graph, &q_te);
+    let wall = t0.elapsed().as_secs_f64();
+    let acc = metrics::accuracy(&logits, &y_te);
+    println!(
+        "speech-command accuracy: {:.2}% on {} utterances \
+         (chance 8.3%, paper GSC 84.7%)",
+        100.0 * acc,
+        n_test
+    );
+    println!(
+        "batched recurrent inference: {:.1} utterances/s wall-clock \
+         ({} steps x {} gate MVM batches)",
+        n_test as f64 / wall.max(1e-9),
+        exec.spec.t_steps,
+        2 * n_cells
+    );
+    let cost = chip.cost(&EnergyParams::default());
+    println!(
+        "energy: {:.2} uJ total, {:.1} fJ/op, {:.1} TOPS/W equivalent",
+        cost.energy_pj / 1e6,
+        cost.femtojoule_per_op(),
+        cost.tops_per_watt()
+    );
+    Ok(())
+}

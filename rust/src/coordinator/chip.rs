@@ -3,7 +3,7 @@
 //! data-parallelism, power gating and chip-level energy aggregation.
 
 use super::mapping::{plan, MappingPlan, MappingStrategy};
-use crate::core_sim::{CimCore, MvmDirection, NeuronConfig};
+use crate::core_sim::{Activation, CimCore, MvmDirection, NeuronConfig};
 use crate::device::{DeviceParams, ProgramStats, WriteVerifyConfig};
 use crate::energy::{EnergyCounters, EnergyParams, MvmCost};
 use crate::models::ConductanceMatrix;
@@ -199,7 +199,13 @@ impl NeuRramChip {
         (outputs, item_ns)
     }
 
-    /// Backward MVM through a layer (RBM hidden -> visible).
+    /// Backward MVM through a layer (RBM hidden -> visible): the input
+    /// drives the columns and each row segment's transposed crossbar
+    /// produces its slice of the visible outputs (bias rows are dropped).
+    ///
+    /// Thin wrapper over [`NeuRramChip::mvm_layer_backward_batch`] with a
+    /// batch of one, so the serial and batched backward paths cannot
+    /// diverge.
     pub fn mvm_layer_backward(
         &mut self,
         layer: &str,
@@ -207,34 +213,99 @@ impl NeuRramChip {
         cfg: &NeuronConfig,
         stoch_amp_v: f64,
     ) -> Vec<f64> {
-        let (rows, w_max, n_bias_rows) = {
-            let m = self.matrix(layer).expect("layer");
-            (m.rows, m.w_max, m.n_bias_rows)
+        let (mut outs, _) =
+            self.mvm_layer_backward_batch(layer, &[x], cfg, stoch_amp_v, 0);
+        outs.pop().expect("one output per input")
+    }
+
+    /// Batched backward MVM through a layer: every input hidden vector is
+    /// routed through the transposed crossbar of each row-segment
+    /// placement in one `CimCore::mvm_batch` dispatch, mirroring the
+    /// forward batching of [`NeuRramChip::mvm_layer_batch`].
+    ///
+    /// Each input must span the layer's full column range; row segments
+    /// write disjoint output slices, so `Activation::Stochastic` neurons
+    /// sample legally per core (no cross-core partial sums in this
+    /// direction) -- enforced by an assert: a column-split layer (> 256
+    /// columns) must run linear and threshold digitally instead.  Bias
+    /// rows are excluded from the outputs.
+    ///
+    /// Outputs are identical to looping the serial path: stochastic
+    /// sampling draws from each core's own LFSR chains, which see the
+    /// items in the same ascending order either way, and the chip RNG is
+    /// untouched while coupling noise is off (pinned by
+    /// `prop_backward_batch_bitwise_equals_serial_loop`).
+    pub fn mvm_layer_backward_batch(
+        &mut self,
+        layer: &str,
+        inputs: &[&[i32]],
+        cfg: &NeuronConfig,
+        stoch_amp_v: f64,
+        replica: usize,
+    ) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let (rows, cols, w_max, n_bias_rows) = {
+            let m = self
+                .matrix(layer)
+                .unwrap_or_else(|| panic!("layer {layer} not programmed"));
+            (m.rows, m.cols, m.w_max, m.n_bias_rows)
         };
-        let mut out = vec![0.0f64; rows - n_bias_rows];
+        let batch = inputs.len();
+        for x in inputs {
+            assert_eq!(x.len(), cols, "hidden width for {layer}");
+        }
+        let out_rows = rows - n_bias_rows;
+        let mut out = vec![0.0f64; batch * out_rows];
+        let mut item_ns = vec![0.0f64; batch];
+        let mut seg_xs: Vec<i32> = Vec::new();
+        let mut found = false;
         for pi in 0..self.plan.placements.len() {
             let (core_id, row_lo, col_lo, col_hi) = {
                 let pl = &self.plan.placements[pi];
-                if pl.segment.layer != layer || pl.replica != 0 {
+                if pl.segment.layer != layer || pl.replica != replica {
                     continue;
                 }
                 (pl.core, pl.segment.row_lo, pl.segment.col_lo,
                  pl.segment.col_hi)
             };
-            let xs = &x[col_lo..col_hi];
+            found = true;
+            // a stochastic neuron must threshold its FULL pre-activation
+            // once; a column-split layer would sum independently sampled
+            // bits per visible row, which is not a Bernoulli sample of
+            // the accumulated drive (the forward executor has the same
+            // restriction for row splits)
+            assert!(
+                cfg.activation != Activation::Stochastic
+                    || (col_lo == 0 && col_hi == cols),
+                "stochastic backward sampling requires unsplit columns \
+                 for {layer}"
+            );
+            seg_xs.clear();
+            for x in inputs {
+                seg_xs.extend_from_slice(&x[col_lo..col_hi]);
+            }
             let core = &mut self.cores[core_id];
-            let y = core.mvm(xs, cfg, MvmDirection::Backward, stoch_amp_v,
-                             &mut self.rng);
+            let (y, ns) = core.mvm_batch(&seg_xs, batch, cfg,
+                                         MvmDirection::Backward, stoch_amp_v,
+                                         &mut self.rng);
             let scales =
                 core.mvm_scales(cfg, w_max as f64, MvmDirection::Backward);
-            for (i, (&yi, &s)) in y.iter().zip(&scales).enumerate() {
-                let row = row_lo + i;
-                if row < out.len() {
-                    out[row] += yi as f64 * s;
+            let out_w = scales.len();
+            for b in 0..batch {
+                let yb = &y[b * out_w..(b + 1) * out_w];
+                for (i, (&yi, &s)) in yb.iter().zip(&scales).enumerate() {
+                    let row = row_lo + i;
+                    if row < out_rows {
+                        out[b * out_rows + row] += yi as f64 * s;
+                    }
                 }
+                item_ns[b] += ns[b];
             }
         }
-        out
+        assert!(found, "no replica {replica} of {layer}");
+        let outputs = (0..batch)
+            .map(|b| out[b * out_rows..(b + 1) * out_rows].to_vec())
+            .collect();
+        (outputs, item_ns)
     }
 
     /// Aggregate energy counters over all cores.
@@ -385,6 +456,38 @@ mod tests {
         }
         assert_eq!(ns.len(), 4);
         assert!(ns.iter().all(|&v| v > 0.0));
+        let (ea, eb) = (batched.energy_counters(), serial.energy_counters());
+        assert_eq!(ea.busy_ns.to_bits(), eb.busy_ns.to_bits());
+        assert_eq!(ea.macs, eb.macs);
+    }
+
+    #[test]
+    fn backward_batch_matches_serial_loop() {
+        // a split layer (2 row segments), backward batch of 3
+        let mk = || {
+            let mut chip = NeuRramChip::with_cores(4, 4);
+            let m = compiled("tall", 256, 16, 9);
+            chip.program_model(vec![m], &[1.0], MappingStrategy::Simple,
+                               false)
+                .unwrap();
+            chip
+        };
+        let mut batched = mk();
+        let mut serial = mk();
+        let cfg = NeuronConfig { input_bits: 2, ..Default::default() };
+        let inputs: Vec<Vec<i32>> = (0..3)
+            .map(|i| (0..16).map(|c| ((c + i) % 3) as i32 - 1).collect())
+            .collect();
+        let refs: Vec<&[i32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let (ys, ns) =
+            batched.mvm_layer_backward_batch("tall", &refs, &cfg, 0.0, 0);
+        for (i, x) in inputs.iter().enumerate() {
+            let y = serial.mvm_layer_backward("tall", x, &cfg, 0.0);
+            assert_eq!(ys[i], y, "item {i}");
+        }
+        assert_eq!(ns.len(), 3);
+        assert!(ns.iter().all(|&v| v > 0.0));
+        assert_eq!(ys[0].len(), 256); // bias-free logical rows
         let (ea, eb) = (batched.energy_counters(), serial.energy_counters());
         assert_eq!(ea.busy_ns.to_bits(), eb.busy_ns.to_bits());
         assert_eq!(ea.macs, eb.macs);

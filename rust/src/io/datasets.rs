@@ -19,6 +19,13 @@ const FONT: [[&str; 7]; 10] = [
 ];
 
 /// One 28x28 digit image in [0,1] (row-major) + its label.
+///
+/// Draw order (fixed contract -- determinism tests pin it): label
+/// (`below(10)`), y-scale (`below(2)`), x-scale (`below(2)`), dilation
+/// coin (`uniform`), y-offset (`below`), x-offset (`below`), then
+/// exactly 784 `normal` draws for the pixel noise (drawn even at
+/// `noise == 0` so the stream position is independent of the noise
+/// level).
 pub fn digit28(rng: &mut Rng, noise: f64) -> (Vec<f32>, usize) {
     let label = rng.below(10);
     let glyph = &FONT[label];
@@ -75,6 +82,11 @@ pub fn digit28(rng: &mut Rng, noise: f64) -> (Vec<f32>, usize) {
 }
 
 /// Batch of digits: (images [n][784], labels).
+///
+/// One fresh `Rng::new(seed)` stream, consumed strictly sample by
+/// sample (see [`digit28`] for the per-sample draw order), so the first
+/// `k` samples of `digits28(n, s, ..)` equal `digits28(k, s, ..)` for
+/// any `k <= n`.
 pub fn digits28(n: usize, seed: u64, noise: f64) -> (Vec<Vec<f32>>, Vec<usize>) {
     let mut rng = Rng::new(seed);
     let mut imgs = Vec::with_capacity(n);
@@ -163,6 +175,12 @@ pub fn mfcc_series(rng: &mut Rng, class: usize, t: usize, d: usize,
     xs
 }
 
+/// Batch of MFCC-like series with global (whole-batch) normalization.
+///
+/// Draw order per sample: class (`below(12)`) then exactly `t * d`
+/// `normal` draws inside [`mfcc_series`].  Labels obey the same prefix
+/// property as [`digits28`]; the normalized VALUES do not, because the
+/// mean/std are computed over the whole batch.
 pub fn mfcc_cmds(n: usize, seed: u64, noise: f64) -> (Vec<Vec<f32>>, Vec<usize>) {
     let mut rng = Rng::new(seed);
     let mut xs = Vec::with_capacity(n);
@@ -185,6 +203,9 @@ pub fn mfcc_cmds(n: usize, seed: u64, noise: f64) -> (Vec<Vec<f32>>, Vec<usize>)
 }
 
 /// Corrupt a binary image: flip `frac` of pixels (RBM recovery workload).
+///
+/// Draw order: exactly one `uniform` per pixel, in pixel order,
+/// regardless of whether the pixel flips.
 pub fn corrupt_flip(img: &[f32], frac: f64, rng: &mut Rng) -> (Vec<f32>, Vec<bool>) {
     let mut out = img.to_vec();
     let mut known = vec![true; img.len()];
@@ -197,7 +218,8 @@ pub fn corrupt_flip(img: &[f32], frac: f64, rng: &mut Rng) -> (Vec<f32>, Vec<boo
     (out, known)
 }
 
-/// Occlude the bottom `rows` rows of a 28x28 image.
+/// Occlude the bottom `rows` rows of a 28x28 image (draw-free: consumes
+/// no randomness, so it never shifts a shared stream).
 pub fn corrupt_occlude(img: &[f32], rows: usize) -> (Vec<f32>, Vec<bool>) {
     let mut out = img.to_vec();
     let mut known = vec![true; img.len()];
@@ -253,6 +275,58 @@ mod tests {
         let all: Vec<f64> = xs.iter().flatten().map(|&v| v as f64).collect();
         assert!(crate::util::stats::mean(&all).abs() < 0.05);
         assert!((crate::util::stats::std_dev(&all) - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn generators_deterministic_same_seed() {
+        // same seed -> bitwise-identical output, for every generator
+        assert_eq!(digits28(12, 9, 0.1), digits28(12, 9, 0.1));
+        assert_eq!(mfcc_cmds(8, 9, 0.35), mfcc_cmds(8, 9, 0.35));
+        assert_eq!(textures32(5, 9, 0.1), textures32(5, 9, 0.1));
+        let img = vec![1.0f32; 784];
+        assert_eq!(
+            corrupt_flip(&img, 0.2, &mut Rng::new(4)),
+            corrupt_flip(&img, 0.2, &mut Rng::new(4))
+        );
+        assert_eq!(corrupt_occlude(&img, 5), corrupt_occlude(&img, 5));
+    }
+
+    #[test]
+    fn documented_draw_order_is_stable() {
+        // pins the per-sample draw sequence documented on digit28 /
+        // mfcc_cmds: these labels were computed with an independent
+        // (python) port of the xoshiro256++/Box-Muller stream, so any
+        // reordering or added/removed draw inside a sample breaks them
+        let (_, labels) = digits28(6, 1, 0.15);
+        assert_eq!(labels, vec![7, 3, 3, 9, 0, 3]);
+        let (_, labels) = mfcc_cmds(6, 4, 0.35);
+        assert_eq!(labels, vec![9, 2, 5, 3, 7, 9]);
+        // corrupt_flip draws one uniform per pixel in pixel order: the
+        // first flipped indices under seed 5 are fixed
+        let img = vec![1.0f32; 784];
+        let (_, known) = corrupt_flip(&img, 0.2, &mut Rng::new(5));
+        let flipped: Vec<usize> = known
+            .iter()
+            .enumerate()
+            .filter(|(_, &k)| !k)
+            .map(|(i, _)| i)
+            .take(5)
+            .collect();
+        assert_eq!(flipped, vec![2, 3, 7, 18, 24]);
+    }
+
+    #[test]
+    fn sample_prefix_property() {
+        // the batch generators consume the stream strictly sample by
+        // sample: generating more samples never changes the earlier ones
+        let (big, big_l) = digits28(10, 3, 0.1);
+        let (small, small_l) = digits28(4, 3, 0.1);
+        assert_eq!(&big[..4], &small[..]);
+        assert_eq!(&big_l[..4], &small_l[..]);
+        // mfcc labels share the property (values are batch-normalized)
+        let (_, l10) = mfcc_cmds(10, 6, 0.35);
+        let (_, l4) = mfcc_cmds(4, 6, 0.35);
+        assert_eq!(&l10[..4], &l4[..]);
     }
 
     #[test]

@@ -21,11 +21,17 @@
 //! The MVM hot path is batched end to end: `Crossbar::settle_batch`
 //! streams the conductance matrix once per `[batch x rows]` input
 //! matrix, `CimCore::mvm_batch` amortizes per-call setup across items,
-//! and `NeuRramChip::mvm_layer_batch` dispatches whole batch slices to
-//! every row-segment placement.  The batched path is output-identical
-//! (bitwise on settled voltages, draw-order identical on RNG/LFSR
-//! streams) to looping the per-vector calls -- see README.md and the
-//! equivalence property tests in `rust/tests/properties.rs`.
+//! and `NeuRramChip::mvm_layer_batch` /
+//! `NeuRramChip::mvm_layer_backward_batch` dispatch whole batch slices
+//! to every row-segment placement in both TNSA directions.  The batched
+//! paths are output-identical (bitwise on settled voltages, draw-order
+//! identical on RNG/LFSR streams) to looping the per-vector calls --
+//! see README.md and the equivalence property tests in
+//! `rust/tests/properties.rs`.
+//!
+//! `models/executor/` hosts one executor per Table-1 dataflow -- `cnn`
+//! (feed-forward), `recurrent` (time-stepped LSTM), `sampler`
+//! (bidirectional RBM Gibbs) -- sharing one quantize/dispatch core.
 
 pub mod calib;
 pub mod coordinator;

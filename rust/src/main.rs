@@ -1,19 +1,25 @@
 //! NeuRRAM-Sim CLI: the paper's "software toolchain" entry point.
 //!
-//! Subcommands:
+//! Subcommands (one per demonstrated dataflow + diagnostics):
 //!   info                chip + artifact summary
 //!   edp                 Fig. 1d-style EDP sweep over bit precisions
 //!   writeverify         ED Fig. 3 programming statistics
-//!   infer-mnist         end-to-end CNN inference on the chip simulator
+//!   infer-mnist         end-to-end CNN inference (Forward dataflow)
+//!   infer-speech        LSTM voice-command inference (Recurrent +
+//!                       Forward dataflow, batched across utterances)
+//!   recover-image       RBM Gibbs image recovery (Forward + Backward
+//!                       dataflow, stochastic neurons)
 //!   runtime-check       load + execute PJRT artifacts against golden
-//!   calibrate-demo      model-driven calibration walk-through
+//!   config-dump         print the effective chip configuration
 
 use neurram::util::cli::Args;
 
 mod commands {
     pub mod edp;
     pub mod infer;
+    pub mod infer_speech;
     pub mod info;
+    pub mod recover;
     pub mod runtime_check;
     pub mod writeverify;
 }
@@ -25,6 +31,8 @@ fn main() {
         Some("edp") => commands::edp::run(&args),
         Some("writeverify") => commands::writeverify::run(&args),
         Some("infer-mnist") => commands::infer::run_mnist(&args),
+        Some("infer-speech") => commands::infer_speech::run(&args),
+        Some("recover-image") => commands::recover::run(&args),
         Some("runtime-check") => commands::runtime_check::run(&args),
         Some("config-dump") => {
             let cfg = match args.get("config") {
@@ -35,12 +43,14 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: neurram <info|edp|writeverify|infer-mnist|runtime-check> [--opts]\n\
+                "usage: neurram <info|edp|writeverify|infer-mnist|infer-speech|recover-image|runtime-check> [--opts]\n\
                  \n\
                  info           chip configuration + artifact inventory\n\
                  edp            EDP/TOPS-W sweep over input/output bits (Fig. 1d)\n\
                  writeverify    write-verify programming statistics (ED Fig. 3)\n\
                  infer-mnist    CNN inference on the 48-core chip simulator\n\
+                 infer-speech   LSTM voice-command inference (recurrent dataflow)\n\
+                 recover-image  RBM Gibbs image recovery (bidirectional dataflow)\n\
                  runtime-check  PJRT artifact execution vs golden vectors\n\
                  config-dump    print the effective chip configuration\n\
                  \n\

@@ -1,12 +1,13 @@
-//! Chip-level model execution: drives a `NeuRramChip` through whole-model
-//! inference (im2col convolutions, pooling, requantization between
-//! layers), mirroring the integer pipeline of
+//! Feed-forward (CNN) executor: drives a `NeuRramChip` through
+//! whole-model inference (im2col convolutions, pooling, requantization
+//! between layers), mirroring the integer pipeline of
 //! `python/compile/model.py::chip_forward`.
 
-use super::graph::{LayerKind, ModelGraph};
-use super::quant::requantize_unsigned;
+use super::linear_mvm_cfg;
 use crate::coordinator::NeuRramChip;
-use crate::core_sim::{Activation, NeuronConfig};
+use crate::core_sim::Activation;
+use crate::models::graph::{LayerKind, ModelGraph};
+use crate::models::quant::requantize_unsigned;
 
 /// Feature map in channel-last layout [h][w][c], flattened.
 #[derive(Clone, Debug)]
@@ -120,19 +121,12 @@ pub fn run_cnn_batch(
         .collect();
 
     for (li, layer) in graph.layers.iter().enumerate() {
-        // MVMs always run linear ADC: a layer split over row segments
-        // accumulates de-normalized partials, so the nonlinearity must be
-        // applied digitally after accumulation (mirrors cim_linear, which
-        // only folds the activation when a layer fits a single segment).
-        let cfg = NeuronConfig {
-            input_bits: layer.input_bits,
-            output_bits: layer.output_bits,
-            activation: Activation::None,
-            // 1/64 LSB keeps the full +-1 V settled swing inside the
-            // 127-step decrement ceiling (finer LSBs clip first-layer
-            // voltages driven by 4-b-unsigned inputs)
-            ..Default::default()
-        };
+        // MVMs always run linear ADC (see `linear_mvm_cfg`): a layer
+        // split over row segments accumulates de-normalized partials, so
+        // the nonlinearity must be applied digitally after accumulation
+        // (mirrors cim_linear, which only folds the activation when a
+        // layer fits a single segment).
+        let cfg = linear_mvm_cfg(layer);
         let last = li == graph.layers.len() - 1;
         let next_bits = if last { 0 } else { graph.layers[li + 1].input_bits };
 
@@ -226,15 +220,6 @@ pub fn run_cnn_batch(
     fms.iter()
         .map(|fm| fm.data.iter().map(|&v| v as f64).collect())
         .collect()
-}
-
-/// Split-layer aware ReLU note: `mvm_layer` accumulates de-normalized
-/// partial sums; when a layer spans multiple row segments the folded
-/// neuron activation must be linear and the nonlinearity applied after
-/// accumulation.  The chip model therefore always requests linear ADC
-/// and applies ReLU digitally (matching `cim_linear`'s contract).
-pub fn effective_mvm_activation(_layer: &super::graph::LayerSpec) -> Activation {
-    Activation::None
 }
 
 #[cfg(test)]

@@ -1,0 +1,101 @@
+//! Chip-level model executors: one per dataflow of the paper's Table 1,
+//! sharing a single quantize/dispatch core.
+//!
+//! * [`cnn`]       -- feed-forward im2col inference (MNIST / CIFAR CNNs)
+//! * [`recurrent`] -- time-stepped LSTM inference (speech commands),
+//!                    batched across utterances
+//! * [`sampler`]   -- bidirectional RBM Gibbs sampling (Bayesian image
+//!                    recovery) with stochastic neurons
+//!
+//! The shared quantize/dispatch core is the per-dataflow LSB constants
+//! + [`linear_mvm_cfg`] + [`dispatch_batch`]: every executor requests
+//! *linear* ADC conversion from the chip and applies its nonlinearity
+//! digitally after de-normalized partial sums are accumulated, because
+//! a layer split over row segments cannot fold a nonlinearity into
+//! per-segment neurons (the same contract `cim_linear` imposes on the
+//! python side).  `cnn`/`recurrent` build their dispatch configs with
+//! `linear_mvm_cfg` directly; the sampler's fixed binary-drive configs
+//! read the same `LSB_FRAC_SAMPLER` constant.
+
+pub mod cnn;
+pub mod recurrent;
+pub mod sampler;
+
+pub use cnn::{extract_patch, run_cnn, run_cnn_batch, FeatureMap};
+pub use recurrent::{LstmCalib, LstmExecutor, LstmSpec};
+pub use sampler::{recover_images, GibbsConfig, RecoveryReport};
+
+use crate::coordinator::NeuRramChip;
+use crate::core_sim::{Activation, NeuronConfig};
+use crate::models::graph::{LayerKind, LayerSpec};
+
+/// Per-dataflow ADC LSB granularities of the shared dispatch core --
+/// the single source both `linear_mvm_cfg` and the executors'
+/// hand-built configs read (see `linear_mvm_cfg` for the rationale).
+pub const LSB_FRAC_FEEDFORWARD: f64 = 1.0 / 64.0;
+pub const LSB_FRAC_RECURRENT: f64 = 1.0 / 128.0;
+pub const LSB_FRAC_SAMPLER: f64 = 1.0 / 512.0;
+
+/// The `NeuronConfig` every executor dispatches MVMs with: linear ADC
+/// (activations are applied digitally after partial-sum accumulation --
+/// see the module docs) at a per-dataflow LSB granularity.
+///
+/// * Conv/Dense: 1/64 LSB keeps the full +-1 V settled swing inside the
+///   127-step decrement ceiling (finer LSBs clip first-layer voltages
+///   driven by 4-b-unsigned inputs).
+/// * LSTM gates: 1/128 LSB -- gate pre-activations of the 40/64-row gate
+///   matrices settle well under half scale, so the finer LSB doubles the
+///   usable resolution of the digitally-summed wx + wh pre-activation.
+/// * RBM: 1/512 LSB -- binary +-1 drives over ~115-row segments settle
+///   to tens of millivolts; only the fine LSB resolves the energy
+///   differences the Gibbs sampler thresholds.
+pub fn linear_mvm_cfg(layer: &LayerSpec) -> NeuronConfig {
+    NeuronConfig {
+        input_bits: layer.input_bits,
+        output_bits: layer.output_bits,
+        activation: Activation::None,
+        adc_lsb_frac: match layer.kind {
+            LayerKind::Conv | LayerKind::Dense => LSB_FRAC_FEEDFORWARD,
+            LayerKind::LstmGate => LSB_FRAC_RECURRENT,
+            LayerKind::Rbm => LSB_FRAC_SAMPLER,
+        },
+        ..Default::default()
+    }
+}
+
+/// Shared batched dispatch: one `mvm_layer_batch` call over owned input
+/// vectors (the executors keep state as `Vec<Vec<i32>>`).
+pub fn dispatch_batch(
+    chip: &mut NeuRramChip,
+    layer: &str,
+    inputs: &[Vec<i32>],
+    cfg: &NeuronConfig,
+    replica: usize,
+) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let refs: Vec<&[i32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    chip.mvm_layer_batch(layer, &refs, cfg, replica)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_is_linear_for_every_kind() {
+        // the dispatch core never folds a nonlinearity into the neuron:
+        // split layers accumulate partials, so folding would be wrong
+        let mut conv = LayerSpec::conv("c", 3, 3, 4, 8, 1);
+        conv.activation = Activation::Relu;
+        let mut rbm = LayerSpec::dense("r", 794, 120);
+        rbm.kind = LayerKind::Rbm;
+        rbm.activation = Activation::Stochastic;
+        for spec in [&conv, &rbm] {
+            let cfg = linear_mvm_cfg(spec);
+            assert_eq!(cfg.activation, Activation::None);
+            assert_eq!(cfg.input_bits, spec.input_bits);
+        }
+        // per-dataflow LSB granularity
+        assert!(linear_mvm_cfg(&rbm).adc_lsb_frac
+                < linear_mvm_cfg(&conv).adc_lsb_frac);
+    }
+}

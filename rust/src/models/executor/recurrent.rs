@@ -1,0 +1,350 @@
+//! Recurrent (LSTM) executor: steps the `speech_lstm` graph over time on
+//! the chip simulator.
+//!
+//! Per time step, each cell's `wx` and `wh` gate matrices run as batched
+//! MVMs across ALL utterances (the whole MFCC set rides the batched
+//! multi-core engine via `Scheduler::run_layer_batch`, round-robining
+//! utterances over layer replicas).  The two de-normalized gate MVMs are
+//! summed digitally and the gate nonlinearities are applied through the
+//! *neuron ADC contract* (`neuron::convert` with the PWL tanh/sigmoid
+//! decrement schedule), exactly the conversion the analog neuron would
+//! fold if the pre-activation fit a single MVM.  The element-wise cell
+//! state update runs digitally (the paper places it on the FPGA).
+//!
+//! Gate order inside the `4*hidden` output columns: `[i, f, g, o]`
+//! (input, forget, candidate, output), sigmoid/sigmoid/tanh/sigmoid.
+
+use super::{linear_mvm_cfg, LSB_FRAC_RECURRENT};
+use crate::coordinator::{NeuRramChip, Scheduler};
+use crate::core_sim::neuron::{convert, pwl_compress};
+use crate::core_sim::{Activation, NeuronConfig};
+use crate::models::graph::{LayerKind, ModelGraph};
+use crate::models::quant::quantize_signed_sigma;
+use crate::util::stats::percentile;
+
+/// Shape of the recurrent stack, parsed from a `speech_lstm`-style graph.
+#[derive(Clone, Copy, Debug)]
+pub struct LstmSpec {
+    pub n_cells: usize,
+    pub hidden: usize,
+    pub input_dim: usize,
+    pub n_classes: usize,
+    pub t_steps: usize,
+}
+
+/// Calibrated scales mapping de-normalized (weight-unit) sums into the
+/// neuron's voltage domain for the digital ADC-contract conversions.
+#[derive(Clone, Copy, Debug)]
+pub struct LstmCalib {
+    /// Volts per gate pre-activation unit (wx + wh sum).
+    pub gate_v_per_unit: f64,
+    /// Volts per cell-state unit (output tanh).
+    pub cell_v_per_unit: f64,
+}
+
+impl Default for LstmCalib {
+    fn default() -> Self {
+        // saturates everything until `calibrate` measures real scales
+        LstmCalib { gate_v_per_unit: 1.0, cell_v_per_unit: 1.0 }
+    }
+}
+
+/// NeuronConfig for the digital gate conversions (the PWL decrement
+/// schedule the analog neuron applies, run digitally after the two gate
+/// MVMs are accumulated).
+fn gate_cfg(act: Activation) -> NeuronConfig {
+    NeuronConfig { activation: act, ..Default::default() }
+}
+
+/// Full-scale PWL code: the tanh plateau the decrement counter reaches
+/// when it clips at `out_mag_max` (61 for 8-bit outputs).
+fn pwl_full_scale(cfg: &NeuronConfig) -> f64 {
+    pwl_compress(cfg.out_mag_max(), cfg.out_mag_max()) as f64
+}
+
+/// Precomputed constants of the gate conversion (the fixed conversion
+/// configs and their PWL normalization), hoisted out of the per-unit
+/// inner loop -- `run_hidden` applies five conversions per (utterance,
+/// hidden unit, step, cell) tuple.
+#[derive(Clone, Copy, Debug)]
+struct GateNorm {
+    sig: NeuronConfig,
+    tanh: NeuronConfig,
+    mag: f64,
+    t_max: f64,
+}
+
+impl GateNorm {
+    fn new() -> GateNorm {
+        let tanh = gate_cfg(Activation::Tanh);
+        GateNorm {
+            sig: gate_cfg(Activation::Sigmoid),
+            tanh,
+            mag: tanh.out_mag_max() as f64,
+            t_max: pwl_full_scale(&tanh),
+        }
+    }
+
+    fn sigmoid(&self, sum: f64, v_per_unit: f64) -> f64 {
+        let (code, _) = convert(sum * v_per_unit, &self.sig, 0.0);
+        (0.5 * (1.0 + (2.0 * code as f64 - self.mag) / self.t_max))
+            .clamp(0.0, 1.0)
+    }
+
+    fn tanh(&self, sum: f64, v_per_unit: f64) -> f64 {
+        let (code, _) = convert(sum * v_per_unit, &self.tanh, 0.0);
+        (code as f64 / self.t_max).clamp(-1.0, 1.0)
+    }
+}
+
+/// Digital gate nonlinearity through the neuron ADC contract: the
+/// weight-unit sum is scaled into volts, converted with the PWL
+/// tanh/sigmoid schedule of `neuron::convert`, and normalized by the
+/// full-scale PWL code.  Returns sigmoid in [0, 1], tanh in [-1, 1].
+pub fn gate_activation(sum: f64, v_per_unit: f64, act: Activation) -> f64 {
+    let norm = GateNorm::new();
+    match act {
+        Activation::Sigmoid => norm.sigmoid(sum, v_per_unit),
+        Activation::Tanh => norm.tanh(sum, v_per_unit),
+        _ => convert(sum * v_per_unit, &gate_cfg(act), 0.0).0 as f64,
+    }
+}
+
+/// Quantize normalized (zero-mean, unit-std) MFCC series to the signed
+/// drive range of the `wx` gate matrices (sigma-clipped, matching the
+/// python data path's `quantize_signed_sigma`).
+pub fn quantize_utterances(graph: &ModelGraph, series: &[Vec<f32>]) -> Vec<Vec<i32>> {
+    let bits = graph
+        .layer("cell0.wx")
+        .map(|l| l.input_bits)
+        .unwrap_or(4);
+    series
+        .iter()
+        .map(|s| {
+            s.iter()
+                .map(|&v| quantize_signed_sigma(v, 1.0, bits))
+                .collect()
+        })
+        .collect()
+}
+
+/// The recurrent executor: owns the parsed shape and calibrated scales;
+/// the chip and graph are passed per call.
+pub struct LstmExecutor {
+    pub spec: LstmSpec,
+    pub calib: LstmCalib,
+}
+
+impl LstmExecutor {
+    pub fn new(graph: &ModelGraph) -> Result<LstmExecutor, String> {
+        let wx = graph
+            .layer("cell0.wx")
+            .ok_or_else(|| "graph has no cell0.wx gate matrix".to_string())?;
+        let wh = graph
+            .layer("cell0.wh")
+            .ok_or_else(|| "graph has no cell0.wh gate matrix".to_string())?;
+        if wx.out_features != 4 * wh.in_features {
+            return Err(format!(
+                "wx columns {} != 4 * hidden {}",
+                wx.out_features, wh.in_features
+            ));
+        }
+        let n_cells = graph
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::LstmGate)
+            .count()
+            / 2;
+        Ok(LstmExecutor {
+            spec: LstmSpec {
+                n_cells,
+                hidden: wh.in_features,
+                input_dim: wx.in_features,
+                n_classes: graph.n_classes,
+                t_steps: graph.input_hw,
+            },
+            calib: LstmCalib::default(),
+        })
+    }
+
+    /// Two-pass scale calibration on probe utterances: run the stack,
+    /// measure the 99th-percentile gate / cell-state magnitudes, and map
+    /// them onto the neuron's full decrement range (the model-driven
+    /// calibration rule, applied to the recurrent dataflow).  The first
+    /// pass runs with saturating default scales; the second refines on
+    /// the trajectory the calibrated scales produce.
+    pub fn calibrate(
+        &mut self,
+        chip: &mut NeuRramChip,
+        graph: &ModelGraph,
+        probes: &[Vec<i32>],
+    ) {
+        let cfg = gate_cfg(Activation::Tanh);
+        let full_v = cfg.out_mag_max() as f64 * cfg.v_decr();
+        self.calib = LstmCalib::default();
+        for _pass in 0..2 {
+            let (_, gate_abs, cell_abs) =
+                self.run_hidden(chip, graph, probes, true);
+            self.calib.gate_v_per_unit =
+                full_v / percentile(&gate_abs, 99.0).max(1e-9);
+            self.calib.cell_v_per_unit =
+                full_v / percentile(&cell_abs, 99.0).max(1e-9);
+        }
+    }
+
+    /// Step the recurrent stack over a batch of quantized utterances
+    /// (each `t_steps * input_dim` ints).  Returns the final quantized
+    /// hidden state per cell (`[cell][utterance][hidden]`) plus, when
+    /// `collect_stats`, the |gate| and |cell-state| samples the
+    /// calibration percentiles are computed from.
+    pub fn run_hidden(
+        &self,
+        chip: &mut NeuRramChip,
+        graph: &ModelGraph,
+        utts: &[Vec<i32>],
+        collect_stats: bool,
+    ) -> (Vec<Vec<Vec<i32>>>, Vec<f64>, Vec<f64>) {
+        let s = self.spec;
+        let n = utts.len();
+        for u in utts {
+            assert_eq!(u.len(), s.t_steps * s.input_dim, "utterance length");
+        }
+        let norm = GateNorm::new();
+        let mut gate_abs = Vec::new();
+        let mut cell_abs = Vec::new();
+        let mut hidden_q: Vec<Vec<Vec<i32>>> = Vec::with_capacity(s.n_cells);
+        for c in 0..s.n_cells {
+            let wx_name = format!("cell{c}.wx");
+            let wh_name = format!("cell{c}.wh");
+            let wx_spec = graph.layer(&wx_name).expect("wx layer in graph");
+            let wh_spec = graph.layer(&wh_name).expect("wh layer in graph");
+            let wx_cfg = linear_mvm_cfg(wx_spec);
+            let wh_cfg = linear_mvm_cfg(wh_spec);
+            let in_mag = wh_spec.in_mag_max() as f64;
+            let mut cell = vec![vec![0.0f64; s.hidden]; n];
+            let mut h_q = vec![vec![0i32; s.hidden]; n];
+            for t in 0..s.t_steps {
+                let xt: Vec<Vec<i32>> = utts
+                    .iter()
+                    .map(|u| {
+                        u[t * s.input_dim..(t + 1) * s.input_dim].to_vec()
+                    })
+                    .collect();
+                let (gx, _) =
+                    Scheduler::run_layer_batch(chip, &wx_name, &xt, &wx_cfg);
+                let (gh, _) =
+                    Scheduler::run_layer_batch(chip, &wh_name, &h_q, &wh_cfg);
+                for b in 0..n {
+                    for j in 0..s.hidden {
+                        let si = gx[b][j] + gh[b][j];
+                        let sf = gx[b][s.hidden + j] + gh[b][s.hidden + j];
+                        let sg =
+                            gx[b][2 * s.hidden + j] + gh[b][2 * s.hidden + j];
+                        let so =
+                            gx[b][3 * s.hidden + j] + gh[b][3 * s.hidden + j];
+                        if collect_stats {
+                            gate_abs.extend(
+                                [si.abs(), sf.abs(), sg.abs(), so.abs()],
+                            );
+                        }
+                        let g_v = self.calib.gate_v_per_unit;
+                        let i_g = norm.sigmoid(si, g_v);
+                        let f_g = norm.sigmoid(sf, g_v);
+                        let g_g = norm.tanh(sg, g_v);
+                        let o_g = norm.sigmoid(so, g_v);
+                        cell[b][j] = f_g * cell[b][j] + i_g * g_g;
+                        if collect_stats {
+                            cell_abs.push(cell[b][j].abs());
+                        }
+                        let h = o_g
+                            * norm.tanh(cell[b][j],
+                                        self.calib.cell_v_per_unit);
+                        h_q[b][j] =
+                            (h * in_mag).round().clamp(-in_mag, in_mag) as i32;
+                    }
+                }
+            }
+            hidden_q.push(h_q);
+        }
+        (hidden_q, gate_abs, cell_abs)
+    }
+
+    /// End-to-end inference: recurrent stack + per-cell output matrices
+    /// on the chip, logits summed across cells.
+    pub fn run_logits(
+        &self,
+        chip: &mut NeuRramChip,
+        graph: &ModelGraph,
+        utts: &[Vec<i32>],
+    ) -> Vec<Vec<f64>> {
+        let (hidden, _, _) = self.run_hidden(chip, graph, utts, false);
+        let mut logits = vec![vec![0.0f64; self.spec.n_classes]; utts.len()];
+        for (c, h_q) in hidden.iter().enumerate() {
+            let wo_name = format!("cell{c}.wo");
+            let wo_spec = graph.layer(&wo_name).expect("wo layer in graph");
+            // the readout rides the recurrent LSB granularity: its 65-row
+            // logits need the same fine resolution as the gate sums
+            let cfg = NeuronConfig {
+                adc_lsb_frac: LSB_FRAC_RECURRENT,
+                ..linear_mvm_cfg(wo_spec)
+            };
+            let (out, _) =
+                Scheduler::run_layer_batch(chip, &wo_name, h_q, &cfg);
+            for (l, o) in logits.iter_mut().zip(&out) {
+                for (a, b) in l.iter_mut().zip(o) {
+                    *a += b;
+                }
+            }
+        }
+        logits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::builtin::speech_lstm;
+
+    #[test]
+    fn spec_parses_builtin_graph() {
+        let g = speech_lstm(64, 4);
+        let e = LstmExecutor::new(&g).unwrap();
+        assert_eq!(e.spec.n_cells, 4);
+        assert_eq!(e.spec.hidden, 64);
+        assert_eq!(e.spec.input_dim, 40);
+        assert_eq!(e.spec.n_classes, 12);
+        assert_eq!(e.spec.t_steps, 50);
+    }
+
+    #[test]
+    fn gate_activation_ranges_and_monotonicity() {
+        let mut prev_s = -1.0;
+        let mut prev_t = -2.0;
+        for step in -300..=300 {
+            let x = step as f64 * 0.1;
+            let s = gate_activation(x, 0.05, Activation::Sigmoid);
+            let t = gate_activation(x, 0.05, Activation::Tanh);
+            assert!((0.0..=1.0).contains(&s));
+            assert!((-1.0..=1.0).contains(&t));
+            assert!(s >= prev_s, "sigmoid non-monotone at {x}");
+            assert!(t >= prev_t, "tanh non-monotone at {x}");
+            prev_s = s;
+            prev_t = t;
+        }
+        // saturation at the PWL plateau
+        assert_eq!(gate_activation(1e6, 0.05, Activation::Tanh), 1.0);
+        assert_eq!(gate_activation(-1e6, 0.05, Activation::Tanh), -1.0);
+        assert_eq!(gate_activation(1e6, 0.05, Activation::Sigmoid), 1.0);
+        assert_eq!(gate_activation(-1e6, 0.05, Activation::Sigmoid), 0.0);
+    }
+
+    #[test]
+    fn quantizer_clips_to_drive_range() {
+        let g = speech_lstm(8, 1);
+        let series = vec![vec![-5.0f32, -0.1, 0.0, 0.1, 5.0]];
+        let q = quantize_utterances(&g, &series);
+        assert_eq!(q[0][0], -7);
+        assert_eq!(q[0][2], 0);
+        assert_eq!(q[0][4], 7);
+    }
+}

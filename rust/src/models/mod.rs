@@ -13,3 +13,4 @@ pub use conductance::{encode_differential, ConductanceMatrix};
 pub use graph::{LayerKind, LayerSpec, ModelGraph};
 pub mod executor;
 pub mod loader;
+pub mod train;

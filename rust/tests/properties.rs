@@ -342,6 +342,124 @@ fn prop_mvm_batch_equals_mvm_loop() {
 }
 
 #[test]
+fn prop_backward_batch_bitwise_equals_serial_loop() {
+    // the batched backward (transposed) path must reproduce the serial
+    // loop exactly -- including the per-core LFSR draw order that
+    // Activation::Stochastic sampling consumes
+    let mut rng = Rng::new(34);
+    for round in 0..8 {
+        let rows = 150 + rng.below(300); // multi-segment layers
+        let cols = 1 + rng.below(120);
+        let batch = 1 + rng.below(6);
+        let seed = 3000 + round as u64;
+        let stochastic = round % 2 == 1;
+        let with_bias = round % 3 == 0;
+        let w: Vec<f32> = {
+            let mut wr = Rng::new(seed);
+            (0..rows * cols).map(|_| wr.normal() as f32).collect()
+        };
+        let bias: Vec<f32> = (0..cols).map(|j| j as f32 * 0.05 - 0.1).collect();
+        let build = || {
+            let m = ConductanceMatrix::compile(
+                "l",
+                &w,
+                if with_bias { Some(bias.as_slice()) } else { None },
+                rows,
+                cols,
+                1,
+                40.0,
+                1.0,
+                None,
+            );
+            let mut chip = NeuRramChip::with_cores(8, seed + 1);
+            chip.program_model(vec![m], &[1.0], MappingStrategy::Simple,
+                               false)
+                .unwrap();
+            chip
+        };
+        let mut batched = build();
+        let mut serial = build();
+        let cfg = NeuronConfig {
+            input_bits: 2,
+            activation: if stochastic {
+                Activation::Stochastic
+            } else {
+                Activation::None
+            },
+            ..Default::default()
+        };
+        let inputs: Vec<Vec<i32>> = (0..batch)
+            .map(|_| {
+                (0..cols)
+                    .map(|_| if rng.uniform() < 0.5 { 1 } else { -1 })
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[i32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let (ys, item_ns) =
+            batched.mvm_layer_backward_batch("l", &refs, &cfg, 0.01, 0);
+        for (i, x) in inputs.iter().enumerate() {
+            let y = serial.mvm_layer_backward("l", x, &cfg, 0.01);
+            assert_eq!(ys[i], y,
+                       "round {round} item {i} ({rows}x{cols} b{batch})");
+            assert_eq!(y.len(), rows, "bias rows excluded");
+        }
+        assert_eq!(item_ns.len(), batch);
+        let (ea, eb) = (
+            batched.energy_counters(),
+            serial.energy_counters(),
+        );
+        assert_eq!(ea.busy_ns.to_bits(), eb.busy_ns.to_bits(),
+                   "round {round} busy_ns");
+        assert_eq!(ea.macs, eb.macs);
+        assert_eq!(ea.comparisons, eb.comparisons);
+    }
+}
+
+#[test]
+fn prop_recurrent_batch_equals_per_utterance() {
+    // batching utterances through the recurrent executor must equal
+    // running them one at a time: the chip path is draw-free under
+    // linear ADC and ideal programming makes all replicas bit-identical,
+    // so the round-robin replica assignment cannot change any value
+    use neurram::models::executor::recurrent::{
+        quantize_utterances, LstmCalib, LstmExecutor,
+    };
+    use neurram::models::loader::{compile_random, intensities};
+    use neurram::models::speech_lstm;
+
+    let mut graph = speech_lstm(8, 2);
+    graph.input_hw = 6; // 6 time steps keep the sweep fast
+    let build = || {
+        let mut chip = NeuRramChip::with_cores(12, 51);
+        chip.program_model(compile_random(&graph, 50), &intensities(&graph),
+                           MappingStrategy::Balanced, false)
+            .unwrap();
+        chip
+    };
+    let mut exec = LstmExecutor::new(&graph).unwrap();
+    exec.calib = LstmCalib { gate_v_per_unit: 0.05, cell_v_per_unit: 0.3 };
+
+    let mut rng = Rng::new(52);
+    let series: Vec<Vec<f32>> = (0..5)
+        .map(|_| (0..6 * 40).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let utts = quantize_utterances(&graph, &series);
+
+    let mut chip_batched = build();
+    let logits_batch = exec.run_logits(&mut chip_batched, &graph, &utts);
+    let mut chip_serial = build();
+    for (i, u) in utts.iter().enumerate() {
+        let one = exec.run_logits(&mut chip_serial, &graph,
+                                  &[u.clone()]);
+        assert_eq!(logits_batch[i], one[0], "utterance {i}");
+    }
+    // replicas actually exist, so the round-robin path was exercised
+    assert!(chip_batched.plan.replica_count("cell0.wx") >= 2,
+            "replicas: {:?}", chip_batched.plan.replicas);
+}
+
+#[test]
 fn prop_chip_layer_batch_equals_serial_loop() {
     let mut rng = Rng::new(33);
     for round in 0..6 {
