@@ -44,7 +44,7 @@ fn main() {
         for _ in 0..16 {
             let x: Vec<i32> =
                 (0..128).map(|_| rng.below((2 * m + 1) as usize) as i32 - m).collect();
-            core.mvm(&x, &cfg, MvmDirection::Forward, 0.0, &mut rng);
+            core.mvm(&x, &cfg, MvmDirection::Forward, 0.0);
         }
         // input-stage components only
         let b = core.energy.breakdown(&p);
@@ -70,7 +70,7 @@ fn main() {
                                  ..Default::default() };
         for _ in 0..8 {
             let x: Vec<i32> = (0..128).map(|_| rng.below(15) as i32 - 7).collect();
-            core.mvm(&x, &cfg, MvmDirection::Forward, 0.0, &mut rng);
+            core.mvm(&x, &cfg, MvmDirection::Forward, 0.0);
         }
         let b = core.energy.breakdown(&p);
         let convs = 8.0 * 256.0;
@@ -93,7 +93,7 @@ fn main() {
     let cfg = NeuronConfig::default();
     for _ in 0..16 {
         let x: Vec<i32> = (0..128).map(|_| rng.below(15) as i32 - 7).collect();
-        core.mvm(&x, &cfg, MvmDirection::Forward, 0.0, &mut rng);
+        core.mvm(&x, &cfg, MvmDirection::Forward, 0.0);
     }
     let b = core.energy.breakdown(&p);
     let input_total = b.wl_pj + b.input_wires_pj + b.sampling_pj + b.digital_pj;
@@ -124,7 +124,7 @@ fn main() {
         for _ in 0..8 {
             let x: Vec<i32> =
                 (0..128).map(|_| rng.below((2 * m + 1) as usize) as i32 - m).collect();
-            core.mvm(&x, &cfg, MvmDirection::Forward, 0.0, &mut rng);
+            core.mvm(&x, &cfg, MvmDirection::Forward, 0.0);
         }
         let c = core.cost(&p);
         rows.push(vec![

@@ -15,6 +15,7 @@ use neurram::coordinator::NeuRramChip;
 use neurram::energy::{EnergyParams, MvmCost};
 use neurram::models::ConductanceMatrix;
 use neurram::util::bench::{section, table};
+use neurram::util::benchjson::BenchJson;
 use neurram::util::rng::Rng;
 
 fn neurram_point(in_bits: u32, out_bits: u32, mvms: usize) -> MvmCost {
@@ -82,14 +83,28 @@ fn current_mode_point(in_bits: u32, out_bits: u32, mvms: usize,
 
 fn main() {
     let mvms = 2;
+    let mut record = BenchJson::new("fig1d_edp");
     section("Fig. 1d -- NeuRRAM (simulated) across precisions, 1024x1024 MVM");
     let mut rows = Vec::new();
     let mut nr_4b8b: Option<MvmCost> = None;
+    let mut fj_op = Vec::new();
+    let mut tops_w = Vec::new();
+    let mut gops = Vec::new();
+    let mut edps = Vec::new();
+    let mut labels = String::new();
     for (ib, ob) in [(1u32, 3u32), (2, 4), (4, 6), (4, 8), (6, 8)] {
         let c = neurram_point(ib, ob, mvms);
         if (ib, ob) == (4, 8) {
             nr_4b8b = Some(c);
         }
+        fj_op.push(c.femtojoule_per_op());
+        tops_w.push(c.tops_per_watt());
+        gops.push(c.gops());
+        edps.push(c.edp());
+        if !labels.is_empty() {
+            labels.push(',');
+        }
+        labels.push_str(&format!("{ib}b/{ob}b"));
         rows.push(vec![
             format!("{ib}b in / {ob}b out"),
             format!("{:.1}", c.femtojoule_per_op()),
@@ -98,6 +113,11 @@ fn main() {
             format!("{:.3e}", c.edp()),
         ]);
     }
+    record.text("precisions", &labels);
+    record.nums("neurram_fj_per_op", &fj_op);
+    record.nums("neurram_tops_per_watt", &tops_w);
+    record.nums("neurram_gops", &gops);
+    record.nums("neurram_edp_pj_ns", &edps);
     table(&["precision", "fJ/op", "TOPS/W", "peak GOPS", "EDP (pJ*ns)"],
           &rows);
 
@@ -130,6 +150,12 @@ fn main() {
         "peak-throughput ratio: {:.1}x   [paper: 20-61x]",
         nr.gops() / cm.gops()
     );
+    record.num("edp_ratio_vs_current_mode", cm.edp() / nr.edp());
+    record.num("throughput_ratio_vs_current_mode", nr.gops() / cm.gops());
+    record.num("neurram_4b8b_tops_per_watt", nr.tops_per_watt());
+    if let Err(e) = record.write("BENCH_edp.json") {
+        println!("(could not write BENCH_edp.json: {e})");
+    }
 
     section("published prior art (numbers from the cited papers)");
     table(

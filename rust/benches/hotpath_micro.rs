@@ -3,8 +3,15 @@
 //!
 //! Covers every layer of the stack:
 //!   L3 crossbar settle (the MVM inner loop), neuron ADC conversion,
-//!   full-core MVM, chip-level layer MVM with partial sums, write-verify
+//!   full-core MVM, chip-level layer MVM with partial sums, the
+//!   thread-scaling curve of the parallel dispatch engine, write-verify
 //!   programming, and the PJRT runtime executing the L1/L2 artifact.
+//!
+//! Flags: `--quick` (CI smoke: ~10x smaller timing budgets).  Besides
+//! stdout, the run emits `BENCH_hotpath.json` (see `util::benchjson`)
+//! so future PRs can diff the perf trajectory:
+//!   cargo bench --bench hotpath_micro            # full numbers
+//!   cargo bench --bench hotpath_micro -- --quick # CI smoke + JSON
 
 use neurram::coordinator::mapping::MappingStrategy;
 use neurram::coordinator::NeuRramChip;
@@ -14,9 +21,14 @@ use neurram::io::npz::Tensor;
 use neurram::models::ConductanceMatrix;
 use neurram::runtime::Runtime;
 use neurram::util::bench::{bench, black_box, section};
+use neurram::util::benchjson::BenchJson;
 use neurram::util::rng::Rng;
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let budget = |ms: u64| if quick { (ms / 10).max(20) } else { ms };
+    let mut record = BenchJson::new("hotpath_micro");
+    record.text("mode", if quick { "quick" } else { "full" });
     let mut rng = Rng::new(99);
 
     section("L3: crossbar settle (128x256, dense int inputs)");
@@ -34,12 +46,12 @@ fn main() {
     let xb = Crossbar::from_conductances(&gp, &gn, rows, cols, 40.0, 0.5);
     let x: Vec<i32> = (0..rows).map(|_| rng.below(15) as i32 - 7).collect();
     let mut dv = vec![0.0f32; cols];
-    bench("crossbar::settle_int 128x256", 300, || {
+    bench("crossbar::settle_int 128x256", budget(300), || {
         xb.settle_int(black_box(&x), &mut dv);
         black_box(&dv);
     });
     let plane: Vec<i8> = x.iter().map(|&v| v.signum() as i8).collect();
-    bench("crossbar::settle_plane 128x256", 300, || {
+    bench("crossbar::settle_plane 128x256", budget(300), || {
         xb.settle_plane(black_box(&plane), &mut dv);
         black_box(&dv);
     });
@@ -50,24 +62,27 @@ fn main() {
         .map(|_| rng.below(15) as i32 - 7)
         .collect();
     let mut out_b = vec![0.0f32; batch * cols];
-    let r_loop = bench("settle_int x32 (per-vector loop)", 400, || {
+    let r_loop = bench("settle_int x32 (per-vector loop)", budget(400), || {
         for b in 0..batch {
             xb.settle_int(black_box(&xs_b[b * rows..(b + 1) * rows]),
                           &mut dv);
             black_box(&dv);
         }
     });
-    let r_batch = bench("crossbar::settle_batch b32", 400, || {
+    let r_batch = bench("crossbar::settle_batch b32", budget(400), || {
         xb.settle_batch(black_box(&xs_b), batch, &mut out_b);
         black_box(&out_b);
     });
+    let settle_speedup = r_loop.median_ns / r_batch.median_ns;
     println!("  settle_batch speedup over per-vector loop: {:.2}x \
               (acceptance target >= 2x)",
-             r_loop.median_ns / r_batch.median_ns);
+             settle_speedup);
+    record.num("settle_batch_speedup_b32", settle_speedup);
+    record.num("settle_batch_b32_median_ns", r_batch.median_ns);
 
     section("L3: neuron ADC conversion (256 conversions)");
     let cfg = NeuronConfig::default();
-    bench("neuron::convert x256 (8-bit)", 200, || {
+    bench("neuron::convert x256 (8-bit)", budget(200), || {
         for j in 0..256 {
             black_box(neuron::convert(dv[j % cols] as f64, &cfg, 0.0));
         }
@@ -77,25 +92,26 @@ fn main() {
     let mut core = CimCore::new(0, DeviceParams::default());
     core.power_on();
     core.load_ideal(&gp, &gn, rows, cols);
-    bench("CimCore::mvm 128x256 4b/8b", 400, || {
-        black_box(core.mvm(black_box(&x), &cfg, MvmDirection::Forward, 0.0,
-                           &mut rng));
+    bench("CimCore::mvm 128x256 4b/8b", budget(400), || {
+        black_box(core.mvm(black_box(&x), &cfg, MvmDirection::Forward, 0.0));
     });
 
     section("L3: batched core MVM (batch 32, 128x256 4b/8b)");
-    let r_loop = bench("CimCore::mvm x32 (per-vector loop)", 600, || {
+    let r_loop = bench("CimCore::mvm x32 (per-vector loop)", budget(600), || {
         for b in 0..batch {
             black_box(core.mvm(black_box(&xs_b[b * rows..(b + 1) * rows]),
-                               &cfg, MvmDirection::Forward, 0.0, &mut rng));
+                               &cfg, MvmDirection::Forward, 0.0));
         }
     });
-    let r_batch = bench("CimCore::mvm_batch b32", 600, || {
+    let r_batch = bench("CimCore::mvm_batch b32", budget(600), || {
         black_box(core.mvm_batch(black_box(&xs_b), batch, &cfg,
-                                 MvmDirection::Forward, 0.0, &mut rng));
+                                 MvmDirection::Forward, 0.0));
     });
+    let core_speedup = r_loop.median_ns / r_batch.median_ns;
     println!("  mvm_batch speedup over per-vector loop: {:.2}x \
               (acceptance target >= 2x)",
-             r_loop.median_ns / r_batch.median_ns);
+             core_speedup);
+    record.num("core_mvm_batch_speedup_b32", core_speedup);
 
     section("L3: chip-level split-layer MVM (1024x1024 over 32 cores)");
     let big_rows = 1024usize;
@@ -103,33 +119,71 @@ fn main() {
     let m = ConductanceMatrix::compile("w", &w, None, big_rows, 1024, 7, 40.0,
                                        1.0, None);
     let mut chip = NeuRramChip::with_cores(48, 5);
+    chip.threads = 1; // the serial oracle; the scaling section sweeps this
     chip.program_model(vec![m], &[1.0], MappingStrategy::Simple, false)
         .unwrap();
     let xbig: Vec<i32> = (0..big_rows).map(|_| rng.below(15) as i32 - 7).collect();
-    bench("NeuRramChip::mvm_layer 1024x1024", 600, || {
+    bench("NeuRramChip::mvm_layer 1024x1024", budget(600), || {
         black_box(chip.mvm_layer("w", black_box(&xbig), &cfg, 0));
     });
 
-    section("chip: batched split-layer MVM (batch 32, 1024x1024)");
+    section("chip: batched split-layer MVM (batch 32, 1024x1024, serial)");
     let xbig_b: Vec<Vec<i32>> = (0..32)
         .map(|_| (0..big_rows).map(|_| rng.below(15) as i32 - 7).collect())
         .collect();
     let xbig_refs: Vec<&[i32]> =
         xbig_b.iter().map(|v| v.as_slice()).collect();
-    let r_loop = bench("mvm_layer x32 (per-vector loop)", 900, || {
+    let r_loop = bench("mvm_layer x32 (per-vector loop)", budget(900), || {
         for xi in &xbig_b {
             black_box(chip.mvm_layer("w", black_box(xi), &cfg, 0));
         }
     });
-    let r_batch = bench("NeuRramChip::mvm_layer_batch b32", 900, || {
+    let r_batch = bench("NeuRramChip::mvm_layer_batch b32", budget(900), || {
         black_box(chip.mvm_layer_batch("w", black_box(&xbig_refs), &cfg, 0));
     });
+    let chip_speedup = r_loop.median_ns / r_batch.median_ns;
     println!("  mvm_layer_batch speedup over per-vector loop: {:.2}x \
               (acceptance target >= 2x)",
-             r_loop.median_ns / r_batch.median_ns);
+             chip_speedup);
+    record.num("chip_layer_batch_speedup_b32", chip_speedup);
+
+    section("chip: thread scaling (batch 32, 1024x1024; oracle = 1 thread)");
+    let thread_counts = [1usize, 2, 4, 8];
+    let (ys_ref, _) = chip.mvm_layer_batch("w", &xbig_refs, &cfg, 0);
+    let mut walls: Vec<f64> = Vec::new();
+    for &t in &thread_counts {
+        chip.threads = t;
+        let r = bench(&format!("mvm_layer_batch b32 @ {t} thread(s)"),
+                      budget(600), || {
+            black_box(chip.mvm_layer_batch("w", black_box(&xbig_refs), &cfg,
+                                           0));
+        });
+        // the parallel engine must stay output-identical to the oracle
+        let (ys, _) = chip.mvm_layer_batch("w", &xbig_refs, &cfg, 0);
+        assert_eq!(ys, ys_ref, "parallel outputs diverged at {t} threads");
+        walls.push(r.median_ns);
+    }
+    let speedups: Vec<f64> = walls.iter().map(|&w| walls[0] / w).collect();
+    let speedup_t4 = speedups[2];
+    let best_wall = walls.iter().cloned().fold(f64::INFINITY, f64::min);
+    let items_per_s = 32.0 * 1e9 / best_wall;
+    println!("  thread-scaling speedups vs NEURRAM_THREADS=1: \
+              {:.2}x / {:.2}x / {:.2}x / {:.2}x (1/2/4/8 threads)",
+             speedups[0], speedups[1], speedups[2], speedups[3]);
+    println!("  chip-layer batch-32 @ 4 threads vs serial: {:.2}x \
+              (acceptance target >= 2x)",
+             speedup_t4);
+    println!("  best throughput: {:.0} items/s", items_per_s);
+    record.nums("thread_counts",
+                &thread_counts.iter().map(|&t| t as f64).collect::<Vec<_>>());
+    record.nums("thread_wall_ns_b32", &walls);
+    record.nums("thread_speedup_b32", &speedups);
+    record.num("chip_batch32_speedup_t4", speedup_t4);
+    record.num("chip_batch32_items_per_s_best", items_per_s);
+    chip.threads = 1;
 
     section("device: write-verify programming (64x64 array)");
-    bench("write-verify 64x64", 800, || {
+    bench("write-verify 64x64", budget(800), || {
         let mut rng2 = Rng::new(7);
         let mut array = neurram::device::RramArray::new(
             64, 64, DeviceParams::default());
@@ -151,7 +205,7 @@ fn main() {
             let gnt = Tensor { shape: vec![128, 256], data: gn.clone() };
             // warm compile
             let _ = rt.execute(name, &[xs.clone(), gpt.clone(), gnt.clone()]);
-            bench("PJRT cim_mvm b32 (4b/8b)", 1500, || {
+            bench("PJRT cim_mvm b32 (4b/8b)", budget(1500), || {
                 black_box(
                     rt.execute(name, &[xs.clone(), gpt.clone(), gnt.clone()])
                         .unwrap(),
@@ -159,5 +213,10 @@ fn main() {
             });
         }
         Err(e) => println!("(skipping PJRT bench: {e})"),
+    }
+
+    section("perf trajectory record");
+    if let Err(e) = record.write("BENCH_hotpath.json") {
+        println!("(could not write BENCH_hotpath.json: {e})");
     }
 }

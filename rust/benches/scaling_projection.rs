@@ -43,7 +43,7 @@ fn main() {
     let cfg = NeuronConfig::default();
     for _ in 0..8 {
         let x: Vec<i32> = (0..rows).map(|_| rng.below(15) as i32 - 7).collect();
-        core.mvm(&x, &cfg, MvmDirection::Forward, 0.0, &mut rng);
+        core.mvm(&x, &cfg, MvmDirection::Forward, 0.0);
     }
     let c = core.cost(&EnergyParams::default());
 

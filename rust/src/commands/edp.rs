@@ -15,7 +15,9 @@ use neurram::util::cli::Args;
 use neurram::util::rng::Rng;
 
 /// Run the 1024x1024 workload at a precision point; returns the cost.
-pub fn edp_point(in_bits: u32, out_bits: u32, mvms: usize, seed: u64) -> MvmCost {
+/// `threads = 0` keeps the chip's resolved default (`NEURRAM_THREADS`).
+pub fn edp_point(in_bits: u32, out_bits: u32, mvms: usize, seed: u64,
+                 threads: usize) -> MvmCost {
     let mut rng = Rng::new(seed);
     let rows = 1024usize;
     let cols = 1024usize;
@@ -24,6 +26,9 @@ pub fn edp_point(in_bits: u32, out_bits: u32, mvms: usize, seed: u64) -> MvmCost
                                        1.0, None);
     // 8 row segments x 4 col segments = 32 cores in parallel
     let mut chip = NeuRramChip::with_cores(48, seed + 1);
+    if threads > 0 {
+        chip.threads = threads;
+    }
     chip.program_model(vec![m], &[1.0], MappingStrategy::Simple, false)
         .unwrap();
 
@@ -53,10 +58,12 @@ pub fn edp_point(in_bits: u32, out_bits: u32, mvms: usize, seed: u64) -> MvmCost
 
 pub fn run(args: &Args) -> Result<()> {
     let mvms = args.usize_or("mvms", 4);
+    // --threads n overrides NEURRAM_THREADS / available_parallelism
+    let threads = args.usize_or("threads", 0);
     println!("Fig. 1d sweep: 1024x1024 MVM x{mvms}, voltage-mode, 48 cores\n");
     let mut rows = Vec::new();
     for (ib, ob) in [(1u32, 3u32), (2, 4), (4, 6), (6, 8)] {
-        let c = edp_point(ib, ob, mvms, 7);
+        let c = edp_point(ib, ob, mvms, 7, threads);
         rows.push(vec![
             format!("{ib}b/{ob}b"),
             format!("{:.1}", c.energy_pj / 1000.0),

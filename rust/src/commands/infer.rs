@@ -44,6 +44,12 @@ pub fn run_mnist(args: &Args) -> Result<()> {
         }
         None => NeuRramChip::new(seed + 1),
     };
+    // --threads n overrides NEURRAM_THREADS; 0/absent keeps the chip's
+    // resolved default (available_parallelism), same as the env knob
+    match args.usize_or("threads", 0) {
+        0 => {}
+        n => chip.threads = n,
+    }
     let stats = chip
         .program_model(matrices, &intensities(&graph),
                        MappingStrategy::Balanced, write_verify)

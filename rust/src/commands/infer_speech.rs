@@ -33,6 +33,12 @@ pub fn run(args: &Args) -> Result<()> {
     let graph = speech_lstm(hidden, n_cells);
     let mut matrices = compile_random(&graph, seed);
     let mut chip = NeuRramChip::new(seed + 1);
+    // --threads n overrides NEURRAM_THREADS; 0/absent keeps the chip's
+    // resolved default (available_parallelism), same as the env knob
+    match args.usize_or("threads", 0) {
+        0 => {}
+        n => chip.threads = n,
+    }
     chip.program_model(matrices.clone(), &intensities(&graph),
                        MappingStrategy::Balanced, false)
         .map_err(anyhow::Error::msg)?;

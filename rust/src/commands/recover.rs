@@ -60,6 +60,12 @@ pub fn run(args: &Args) -> Result<()> {
     );
 
     let mut chip = NeuRramChip::new(seed + 2);
+    // --threads n overrides NEURRAM_THREADS; 0/absent keeps the chip's
+    // resolved default (available_parallelism), same as the env knob
+    match args.usize_or("threads", 0) {
+        0 => {}
+        n => chip.threads = n,
+    }
     chip.program_model(vec![matrix], &intensities(&graph),
                        MappingStrategy::Simple, false)
         .map_err(anyhow::Error::msg)?;

@@ -1,6 +1,30 @@
 //! The 48-core NeuRRAM chip: programs mapped models onto its cores and
 //! executes multi-core MVMs with partial-sum accumulation, replica
 //! data-parallelism, power gating and chip-level energy aggregation.
+//!
+//! ## Thread-parallel dispatch with deterministic RNG streams
+//!
+//! Segment/replica MVM work fans out over scoped OS threads
+//! ([`NeuRramChip::threads`], default `NEURRAM_THREADS` /
+//! `available_parallelism`; `1` = the serial oracle).  Determinism holds
+//! at every thread count because nothing execution-order-dependent is
+//! shared across cores:
+//!
+//! * **Noise streams are counter-derived, not shared.**  The chip RNG is
+//!   only used for programming (write-verify, serial).  MVM-path draws
+//!   (coupling noise) come from `rng::stream(chip seed, core id,
+//!   per-core item counter)` -- a dispatched item's draw sequence is a
+//!   pure function of which core ran it and of that core's dispatch
+//!   index, never of thread interleaving.  Per-core `LfsrChains`
+//!   (stochastic neurons) already had this property.
+//! * **Each core is owned by exactly one worker per fan-out**, so its
+//!   LFSR state, energy counters and dispatch counter advance in the
+//!   same order as the serial schedule.
+//! * **Partial sums accumulate post-join in placement order**, so the
+//!   f64 addition order of row-split layers is the serial order
+//!   bit-for-bit (pinned by
+//!   `prop_parallel_dispatch_bitwise_equals_serial` across thread
+//!   counts).
 
 use super::mapping::{plan, MappingPlan, MappingStrategy};
 use crate::core_sim::{Activation, CimCore, MvmDirection, NeuronConfig};
@@ -10,14 +34,107 @@ use crate::models::ConductanceMatrix;
 use crate::util::rng::Rng;
 use crate::NUM_CORES;
 
+/// One replica's slice of a multi-replica layer dispatch (the scheduler
+/// round-robins a batch over replicas and issues all slices in ONE
+/// [`NeuRramChip::mvm_layer_batch_multi`] call so they can execute on
+/// concurrent worker threads).
+pub struct ReplicaBatch<'a> {
+    pub replica: usize,
+    pub inputs: Vec<&'a [i32]>,
+}
+
+/// One (dispatch, placement) unit of segment work, routed to one core.
+struct SegJob {
+    /// Index into the dispatch list (`ReplicaBatch` order).
+    d: usize,
+    /// Placement index in the mapping plan (fixes accumulation order).
+    p: usize,
+    core: usize,
+    /// Input slice [lo, hi) of each item's full input vector.
+    in_lo: usize,
+    in_hi: usize,
+    /// Output offset of this segment's de-normalized partials.
+    out_lo: usize,
+}
+
+/// A finished segment job: de-normalized f64 partial outputs, ready to
+/// be accumulated in placement order on the issuing thread.
+struct SegResult {
+    d: usize,
+    p: usize,
+    out_lo: usize,
+    out_w: usize,
+    /// Row-major `[batch x out_w]` partials (`y * scale` per element).
+    partial: Vec<f64>,
+    /// Per-item latency contribution of this segment (ns).
+    ns: Vec<f64>,
+}
+
+/// Execute one worker's share of a fan-out: every job of every core in
+/// `bucket`, in (dispatch, placement) order per core.  The scratch
+/// buffers (`seg_xs`, `y`, `ns`) are reused across the bucket's jobs, so
+/// the only per-job allocations are the result buffers (de-normalized
+/// partials + per-item ns) that must outlive the fan-out.
+fn exec_segment_bucket(
+    bucket: Vec<(&mut CimCore, Vec<SegJob>)>,
+    x_full: &[Vec<i32>],
+    width: usize,
+    cfg: &NeuronConfig,
+    dir: MvmDirection,
+    stoch_amp_v: f64,
+    w_max: f64,
+) -> Vec<SegResult> {
+    let mut seg_xs: Vec<i32> = Vec::new();
+    let mut y: Vec<i32> = Vec::new();
+    let mut ns: Vec<f64> = Vec::new();
+    let mut results = Vec::new();
+    for (core, jobs) in bucket {
+        for job in jobs {
+            let xf = &x_full[job.d];
+            let batch = xf.len() / width.max(1);
+            seg_xs.clear();
+            for b in 0..batch {
+                seg_xs.extend_from_slice(
+                    &xf[b * width + job.in_lo..b * width + job.in_hi],
+                );
+            }
+            core.mvm_batch_into(&seg_xs, batch, cfg, dir, stoch_amp_v,
+                                &mut y, &mut ns);
+            let scales = core.mvm_scales(cfg, w_max, dir);
+            let out_w = scales.len();
+            let mut partial = vec![0.0f64; batch * out_w];
+            for b in 0..batch {
+                for (j, &s) in scales.iter().enumerate() {
+                    partial[b * out_w + j] = y[b * out_w + j] as f64 * s;
+                }
+            }
+            results.push(SegResult {
+                d: job.d,
+                p: job.p,
+                out_lo: job.out_lo,
+                out_w,
+                partial,
+                ns: ns.clone(),
+            });
+        }
+    }
+    results
+}
+
 pub struct NeuRramChip {
     pub cores: Vec<CimCore>,
     pub plan: MappingPlan,
     /// Compiled matrices by layer name (w_max etc. needed at run time).
     pub matrices: Vec<ConductanceMatrix>,
+    /// Programming-path RNG (write-verify).  MVM-path noise comes from
+    /// the cores' counter-derived streams instead -- see the module docs.
     pub rng: Rng,
     /// Global non-ideality settings applied to all cores.
     pub ir_alpha: f64,
+    /// Worker threads for segment-parallel dispatch (`1` = serial
+    /// oracle; resolved from `NEURRAM_THREADS` at construction, see
+    /// `util::threads`).  Outputs are bitwise identical at any setting.
+    pub threads: usize,
 }
 
 impl NeuRramChip {
@@ -27,15 +144,21 @@ impl NeuRramChip {
 
     pub fn with_cores(n: usize, seed: u64) -> Self {
         let rng = Rng::new(seed);
-        let cores = (0..n)
+        let mut cores: Vec<CimCore> = (0..n)
             .map(|id| CimCore::new(id, DeviceParams::default()))
             .collect();
+        for c in &mut cores {
+            // per-core noise streams separate by core id under the one
+            // chip seed
+            c.set_stream_seed(seed);
+        }
         NeuRramChip {
             cores,
             plan: MappingPlan::default(),
             matrices: Vec::new(),
             rng,
             ir_alpha: 0.0,
+            threads: crate::util::threads::resolve(),
         }
     }
 
@@ -117,21 +240,12 @@ impl NeuRramChip {
         outs.pop().expect("one output per input")
     }
 
-    /// Batched multi-core MVM for one layer: the whole `[batch]` of input
-    /// vectors is routed through every row segment of the given replica
-    /// in one `CimCore::mvm_batch` dispatch per placement, amortizing the
-    /// bias-row augmentation, the per-core crossbar lookup and the
-    /// de-normalization scale computation across the batch.
+    /// Batched multi-core MVM for one layer and one replica: thin wrapper
+    /// over [`NeuRramChip::mvm_layer_batch_multi`] with a single replica
+    /// slice, so the single- and multi-replica chip paths cannot diverge.
     ///
     /// Returns the per-item de-normalized outputs plus each item's
     /// summed-over-segments latency contribution in nanoseconds.
-    ///
-    /// Outputs are identical to looping [`NeuRramChip::mvm_layer`] over
-    /// the items: the forward chip path draws no per-output randomness
-    /// (coupling noise is configured off by `program_model` and the
-    /// stochastic amplitude is zero), so reordering items x segments
-    /// cannot change any value (pinned by
-    /// `prop_chip_layer_batch_equals_serial_loop`).
     pub fn mvm_layer_batch(
         &mut self,
         layer: &str,
@@ -139,6 +253,38 @@ impl NeuRramChip {
         cfg: &NeuronConfig,
         replica: usize,
     ) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let dispatches =
+            [ReplicaBatch { replica, inputs: inputs.to_vec() }];
+        self.mvm_layer_batch_multi(layer, &dispatches, cfg)
+            .pop()
+            .expect("one result per dispatch")
+    }
+
+    /// Batched multi-core MVM over MANY replica slices of one layer in a
+    /// single fan-out: every `(dispatch, row-segment placement)` pair
+    /// becomes one `CimCore::mvm_batch_into` job, jobs are grouped by
+    /// core (a core's jobs run on one worker in (dispatch, placement)
+    /// order) and the core groups execute on up to
+    /// [`NeuRramChip::threads`] scoped threads.  The bias-row
+    /// augmentation, per-core crossbar lookup and de-normalization scales
+    /// are amortized across each dispatch's batch as before.
+    ///
+    /// Returns, per dispatch, the per-item de-normalized outputs plus
+    /// each item's summed-over-segments latency in nanoseconds.
+    ///
+    /// Outputs are identical to looping [`NeuRramChip::mvm_layer`] over
+    /// replicas and items at ANY thread count: each core's LFSR/stream
+    /// state sees the same item sequence (cores are exclusively owned and
+    /// noise streams are counter-derived), and the f64 partial sums are
+    /// accumulated post-join in placement order (pinned by
+    /// `prop_chip_layer_batch_equals_serial_loop` and
+    /// `prop_parallel_dispatch_bitwise_equals_serial`).
+    pub fn mvm_layer_batch_multi(
+        &mut self,
+        layer: &str,
+        dispatches: &[ReplicaBatch],
+        cfg: &NeuronConfig,
+    ) -> Vec<(Vec<Vec<f64>>, Vec<f64>)> {
         let (rows, cols, w_max, n_bias_rows) = {
             let m = self
                 .matrix(layer)
@@ -146,57 +292,143 @@ impl NeuRramChip {
             (m.rows, m.cols, m.w_max, m.n_bias_rows)
         };
         let in_mag = cfg.in_mag_max();
-        let batch = inputs.len();
 
-        // bias-augmented [batch x rows] input matrix, built once
-        let mut x_full = Vec::with_capacity(batch * rows);
-        for x in inputs {
-            assert_eq!(x.len() + n_bias_rows, rows,
-                       "input width for {layer}");
-            x_full.extend_from_slice(x);
-            x_full.extend(std::iter::repeat(in_mag).take(n_bias_rows));
-        }
+        // bias-augmented [batch x rows] input matrix per dispatch
+        let x_full: Vec<Vec<i32>> = dispatches
+            .iter()
+            .map(|dsp| {
+                let mut xf = Vec::with_capacity(dsp.inputs.len() * rows);
+                for x in &dsp.inputs {
+                    assert_eq!(x.len() + n_bias_rows, rows,
+                               "input width for {layer}");
+                    xf.extend_from_slice(x);
+                    xf.extend(std::iter::repeat(in_mag).take(n_bias_rows));
+                }
+                xf
+            })
+            .collect();
 
-        let mut out = vec![0.0f64; batch * cols];
-        let mut item_ns = vec![0.0f64; batch];
-        let mut seg_xs: Vec<i32> = Vec::new();
-        let mut found = false;
-        for pi in 0..self.plan.placements.len() {
-            let (core_id, row_lo, row_hi, col_lo) = {
-                let pl = &self.plan.placements[pi];
-                if pl.segment.layer != layer || pl.replica != replica {
+        // one job per (dispatch, placement), gathered in (d, p) order
+        let mut jobs: Vec<SegJob> = Vec::new();
+        for (d, dsp) in dispatches.iter().enumerate() {
+            let mut found = false;
+            for (p, pl) in self.plan.placements.iter().enumerate() {
+                if pl.segment.layer != layer || pl.replica != dsp.replica {
                     continue;
                 }
-                (pl.core, pl.segment.row_lo, pl.segment.row_hi,
-                 pl.segment.col_lo)
-            };
-            found = true;
-            seg_xs.clear();
-            for b in 0..batch {
-                seg_xs.extend_from_slice(
-                    &x_full[b * rows + row_lo..b * rows + row_hi],
-                );
+                found = true;
+                jobs.push(SegJob {
+                    d,
+                    p,
+                    core: pl.core,
+                    in_lo: pl.segment.row_lo,
+                    in_hi: pl.segment.row_hi,
+                    out_lo: pl.segment.col_lo,
+                });
             }
-            let core = &mut self.cores[core_id];
-            let (y, ns) = core.mvm_batch(&seg_xs, batch, cfg,
-                                         MvmDirection::Forward, 0.0,
-                                         &mut self.rng);
-            let scales =
-                core.mvm_scales(cfg, w_max as f64, MvmDirection::Forward);
-            let out_w = scales.len();
-            for b in 0..batch {
-                let yb = &y[b * out_w..(b + 1) * out_w];
-                for (j, (&yi, &s)) in yb.iter().zip(&scales).enumerate() {
-                    out[b * cols + col_lo + j] += yi as f64 * s;
+            assert!(found, "no replica {} of {layer}", dsp.replica);
+        }
+
+        let results = self.dispatch_segments(
+            jobs, &x_full, rows, cfg, MvmDirection::Forward, 0.0,
+            w_max as f64,
+        );
+
+        // placement-ordered accumulation (results arrive sorted by
+        // (d, p)): bitwise the serial partial-sum order
+        let mut outs: Vec<(Vec<f64>, Vec<f64>)> = dispatches
+            .iter()
+            .map(|dsp| {
+                (vec![0.0f64; dsp.inputs.len() * cols],
+                 vec![0.0f64; dsp.inputs.len()])
+            })
+            .collect();
+        for r in &results {
+            let (out, item_ns) = &mut outs[r.d];
+            for b in 0..item_ns.len() {
+                let yb = &r.partial[b * r.out_w..(b + 1) * r.out_w];
+                for (j, &v) in yb.iter().enumerate() {
+                    out[b * cols + r.out_lo + j] += v;
                 }
-                item_ns[b] += ns[b];
+                item_ns[b] += r.ns[b];
             }
         }
-        assert!(found, "no replica {replica} of {layer}");
-        let outputs = (0..batch)
-            .map(|b| out[b * cols..(b + 1) * cols].to_vec())
-            .collect();
-        (outputs, item_ns)
+        outs.into_iter()
+            .map(|(out, item_ns)| {
+                let outputs = (0..item_ns.len())
+                    .map(|b| out[b * cols..(b + 1) * cols].to_vec())
+                    .collect();
+                (outputs, item_ns)
+            })
+            .collect()
+    }
+
+    /// Run segment jobs on up to `self.threads` scoped worker threads
+    /// (serially on the calling thread when `threads == 1` or only one
+    /// core is involved).  Jobs are grouped by core; each group runs
+    /// entirely on one worker in (dispatch, placement) order, so every
+    /// core observes the same item sequence as the serial schedule.
+    /// Returns the results sorted by (dispatch, placement) for
+    /// deterministic accumulation.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_segments(
+        &mut self,
+        jobs: Vec<SegJob>,
+        x_full: &[Vec<i32>],
+        width: usize,
+        cfg: &NeuronConfig,
+        dir: MvmDirection,
+        stoch_amp_v: f64,
+        w_max: f64,
+    ) -> Vec<SegResult> {
+        let n_cores = self.cores.len();
+        let mut per_core: Vec<Vec<SegJob>> =
+            (0..n_cores).map(|_| Vec::new()).collect();
+        for j in jobs {
+            per_core[j.core].push(j);
+        }
+        let active: Vec<usize> =
+            (0..n_cores).filter(|&c| !per_core[c].is_empty()).collect();
+        let workers = self.threads.max(1).min(active.len().max(1));
+
+        // hand each bucket exclusive &mut access to its cores
+        let mut slots: Vec<Option<&mut CimCore>> =
+            self.cores.iter_mut().map(Some).collect();
+        let mut buckets: Vec<Vec<(&mut CimCore, Vec<SegJob>)>> =
+            (0..workers).map(|_| Vec::new()).collect();
+        for (i, &c) in active.iter().enumerate() {
+            let core = slots[c].take().expect("each core in one bucket");
+            buckets[i % workers]
+                .push((core, std::mem::take(&mut per_core[c])));
+        }
+
+        let mut results: Vec<SegResult> = if workers > 1 {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = buckets
+                    .into_iter()
+                    .map(|bucket| {
+                        s.spawn(move || {
+                            exec_segment_bucket(bucket, x_full, width, cfg,
+                                                dir, stoch_amp_v, w_max)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("segment worker panicked"))
+                    .collect()
+            })
+        } else {
+            buckets
+                .into_iter()
+                .flat_map(|bucket| {
+                    exec_segment_bucket(bucket, x_full, width, cfg, dir,
+                                        stoch_amp_v, w_max)
+                })
+                .collect()
+        };
+        results.sort_by_key(|r| (r.d, r.p));
+        results
     }
 
     /// Backward MVM through a layer (RBM hidden -> visible): the input
@@ -230,11 +462,13 @@ impl NeuRramChip {
     /// columns) must run linear and threshold digitally instead.  Bias
     /// rows are excluded from the outputs.
     ///
-    /// Outputs are identical to looping the serial path: stochastic
-    /// sampling draws from each core's own LFSR chains, which see the
-    /// items in the same ascending order either way, and the chip RNG is
-    /// untouched while coupling noise is off (pinned by
-    /// `prop_backward_batch_bitwise_equals_serial_loop`).
+    /// Outputs are identical to looping the serial path at ANY thread
+    /// count: stochastic sampling draws from each core's own LFSR chains,
+    /// which see the items in the same ascending order on the one worker
+    /// that owns the core, the chip RNG is untouched on the MVM path,
+    /// and partial rows accumulate post-join in placement order (pinned
+    /// by `prop_backward_batch_bitwise_equals_serial_loop` and
+    /// `prop_parallel_dispatch_bitwise_equals_serial`).
     pub fn mvm_layer_backward_batch(
         &mut self,
         layer: &str,
@@ -250,23 +484,20 @@ impl NeuRramChip {
             (m.rows, m.cols, m.w_max, m.n_bias_rows)
         };
         let batch = inputs.len();
+        let mut xf = Vec::with_capacity(batch * cols);
         for x in inputs {
             assert_eq!(x.len(), cols, "hidden width for {layer}");
+            xf.extend_from_slice(x);
         }
+        let x_full = [xf];
         let out_rows = rows - n_bias_rows;
-        let mut out = vec![0.0f64; batch * out_rows];
-        let mut item_ns = vec![0.0f64; batch];
-        let mut seg_xs: Vec<i32> = Vec::new();
+
+        let mut jobs: Vec<SegJob> = Vec::new();
         let mut found = false;
-        for pi in 0..self.plan.placements.len() {
-            let (core_id, row_lo, col_lo, col_hi) = {
-                let pl = &self.plan.placements[pi];
-                if pl.segment.layer != layer || pl.replica != replica {
-                    continue;
-                }
-                (pl.core, pl.segment.row_lo, pl.segment.col_lo,
-                 pl.segment.col_hi)
-            };
+        for (p, pl) in self.plan.placements.iter().enumerate() {
+            if pl.segment.layer != layer || pl.replica != replica {
+                continue;
+            }
             found = true;
             // a stochastic neuron must threshold its FULL pre-activation
             // once; a column-split layer would sum independently sampled
@@ -275,33 +506,41 @@ impl NeuRramChip {
             // restriction for row splits)
             assert!(
                 cfg.activation != Activation::Stochastic
-                    || (col_lo == 0 && col_hi == cols),
+                    || (pl.segment.col_lo == 0 && pl.segment.col_hi == cols),
                 "stochastic backward sampling requires unsplit columns \
                  for {layer}"
             );
-            seg_xs.clear();
-            for x in inputs {
-                seg_xs.extend_from_slice(&x[col_lo..col_hi]);
-            }
-            let core = &mut self.cores[core_id];
-            let (y, ns) = core.mvm_batch(&seg_xs, batch, cfg,
-                                         MvmDirection::Backward, stoch_amp_v,
-                                         &mut self.rng);
-            let scales =
-                core.mvm_scales(cfg, w_max as f64, MvmDirection::Backward);
-            let out_w = scales.len();
-            for b in 0..batch {
-                let yb = &y[b * out_w..(b + 1) * out_w];
-                for (i, (&yi, &s)) in yb.iter().zip(&scales).enumerate() {
-                    let row = row_lo + i;
-                    if row < out_rows {
-                        out[b * out_rows + row] += yi as f64 * s;
-                    }
-                }
-                item_ns[b] += ns[b];
-            }
+            jobs.push(SegJob {
+                d: 0,
+                p,
+                core: pl.core,
+                in_lo: pl.segment.col_lo,
+                in_hi: pl.segment.col_hi,
+                out_lo: pl.segment.row_lo,
+            });
         }
         assert!(found, "no replica {replica} of {layer}");
+
+        let results = self.dispatch_segments(
+            jobs, &x_full, cols, cfg, MvmDirection::Backward, stoch_amp_v,
+            w_max as f64,
+        );
+
+        let mut out = vec![0.0f64; batch * out_rows];
+        let mut item_ns = vec![0.0f64; batch];
+        for r in &results {
+            for b in 0..batch {
+                let yb = &r.partial[b * r.out_w..(b + 1) * r.out_w];
+                for (i, &v) in yb.iter().enumerate() {
+                    let row = r.out_lo + i;
+                    // bias rows sit past the logical visible range
+                    if row < out_rows {
+                        out[b * out_rows + row] += v;
+                    }
+                }
+                item_ns[b] += r.ns[b];
+            }
+        }
         let outputs = (0..batch)
             .map(|b| out[b * out_rows..(b + 1) * out_rows].to_vec())
             .collect();

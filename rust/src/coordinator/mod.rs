@@ -6,6 +6,6 @@ pub mod chip;
 pub mod mapping;
 pub mod scheduler;
 
-pub use chip::NeuRramChip;
+pub use chip::{NeuRramChip, ReplicaBatch};
 pub use mapping::{MappingPlan, MappingStrategy, Segment, SegmentPlacement};
 pub use scheduler::Scheduler;

@@ -3,19 +3,24 @@
 //! duplicated hot layers process different inputs in parallel; distinct
 //! layers on distinct cores form an inference pipeline).
 //!
-//! The simulator is deterministic and single-threaded per chip (cores
-//! share the `NeuRramChip` RNG); parallelism is modelled in the *latency*
-//! domain: concurrent core executions overlap, so the makespan is the
-//! max over parallel units rather than the sum.
+//! The simulator is deterministic at every thread count: replica/segment
+//! dispatch executes on real OS threads (`NeuRramChip::threads`, the
+//! `NEURRAM_THREADS` knob; `1` forces the serial oracle order), while
+//! per-core counter-derived RNG streams and placement-ordered partial-sum
+//! accumulation keep the outputs bitwise independent of interleaving --
+//! see `coordinator/chip.rs`.  The *latency* model is unchanged and
+//! complementary: concurrent core executions overlap, so the modelled
+//! makespan is the max over parallel units rather than the sum,
+//! whatever wall-clock parallelism the host machine provides.
 //!
-//! Since the batched-engine refactor the scheduler dispatches one whole
-//! batch slice per replica through [`NeuRramChip::mvm_layer_batch`]
-//! (round-robin item assignment, so replica `r` owns items `r`,
-//! `r + n_rep`, ...) instead of issuing one `mvm_layer` call per item.
-//! Outputs and latency bookkeeping are identical to the per-item loop;
-//! only the dispatch overhead changes.
+//! The scheduler round-robins a batch over a layer's replicas (replica
+//! `r` owns items `r`, `r + n_rep`, ...) and issues ALL replica slices in
+//! ONE [`NeuRramChip::mvm_layer_batch_multi`] call, so distinct replicas
+//! (and distinct row segments within each) run concurrently.  Outputs
+//! and latency bookkeeping are identical to the per-item loop; only the
+//! wall-clock changes.
 
-use super::chip::NeuRramChip;
+use super::chip::{NeuRramChip, ReplicaBatch};
 use crate::core_sim::NeuronConfig;
 
 /// Work item: one input vector through one layer.
@@ -54,8 +59,10 @@ pub struct Scheduler;
 
 impl Scheduler {
     /// Run a batch of items through one layer, round-robining inputs over
-    /// the layer's replicas (data parallelism, mapping case 2).  Each
-    /// replica receives its whole item slice as ONE batched dispatch.
+    /// the layer's replicas (data parallelism, mapping case 2).  All
+    /// replica slices are issued as ONE multi-dispatch, so they execute
+    /// on concurrent worker threads (`chip.threads`); outputs and
+    /// latency bookkeeping are bitwise those of the serial replica loop.
     ///
     /// Returns (outputs in input order, report).
     pub fn run_layer_batch(
@@ -65,24 +72,32 @@ impl Scheduler {
         cfg: &NeuronConfig,
     ) -> (Vec<Vec<f64>>, ScheduleReport) {
         let n_rep = chip.plan.replica_count(layer).max(1);
+        // round-robin slices, built once per call: replica r owns items
+        // r, r + n_rep, ... (the item index is recovered arithmetically
+        // below, so no per-replica index vectors are allocated)
+        let dispatches: Vec<ReplicaBatch> = (0..n_rep)
+            .filter(|&rep| rep < inputs.len())
+            .map(|rep| ReplicaBatch {
+                replica: rep,
+                inputs: inputs
+                    .iter()
+                    .skip(rep)
+                    .step_by(n_rep)
+                    .map(|v| v.as_slice())
+                    .collect(),
+            })
+            .collect();
+        let results = chip.mvm_layer_batch_multi(layer, &dispatches, cfg);
+
         let mut outputs: Vec<Vec<f64>> = vec![Vec::new(); inputs.len()];
         let mut rep_busy = vec![0.0f64; n_rep];
         let mut rep_items = vec![0usize; n_rep];
         let mut serial = 0.0;
         let mut first_item_ns = 0.0;
-
-        for rep in 0..n_rep {
-            let idxs: Vec<usize> =
-                (rep..inputs.len()).step_by(n_rep).collect();
-            if idxs.is_empty() {
-                continue;
-            }
-            let slice: Vec<&[i32]> =
-                idxs.iter().map(|&i| inputs[i].as_slice()).collect();
-            let (ys, item_ns) =
-                chip.mvm_layer_batch(layer, &slice, cfg, rep);
+        for (dsp, (ys, item_ns)) in dispatches.iter().zip(results) {
+            let rep = dsp.replica;
             for (k, y) in ys.into_iter().enumerate() {
-                let i = idxs[k];
+                let i = rep + k * n_rep;
                 let dt = item_ns[k];
                 outputs[i] = y;
                 serial += dt;

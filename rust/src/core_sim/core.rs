@@ -47,6 +47,22 @@ pub struct CimCore {
     /// Settled-voltage scratch reused across batched MVMs (avoids a
     /// fresh allocation + zero-fill per call on the hot path).
     settle_scratch: Vec<f32>,
+    /// Coupling-noise scratch, same reuse pattern as `settle_scratch`.
+    noise_scratch: Vec<f64>,
+    /// Transpose/mask scratch for `Crossbar::settle_batch_with_scratch`.
+    settle_xt_scratch: Vec<f32>,
+    settle_mask_scratch: Vec<bool>,
+    /// Seed of the per-core noise streams (the chip seed; set via
+    /// [`CimCore::set_stream_seed`]).  An item's coupling-noise draws
+    /// come from `rng::stream(stream_seed, id, items_dispatched)`, a pure
+    /// function of (core, dispatch index): cores never share a generator,
+    /// so thread interleaving cannot reorder any draw.
+    stream_seed: u64,
+    /// Monotone count of items this core has dispatched; advances once
+    /// per item whether or not the item draws noise, so the stream
+    /// address of item `k` of a dispatch sequence is always
+    /// `(stream_seed, id, k)`.
+    items_dispatched: u64,
     /// Power gating (paper: idle cores are clock/power gated; RRAM state
     /// is non-volatile and survives).
     pub powered_on: bool,
@@ -69,10 +85,29 @@ impl CimCore {
             energy: EnergyModel::default(),
             stats: CoreStats::default(),
             settle_scratch: Vec::new(),
+            noise_scratch: Vec::new(),
+            settle_xt_scratch: Vec::new(),
+            settle_mask_scratch: Vec::new(),
+            stream_seed: 0,
+            items_dispatched: 0,
             powered_on: false,
             g_max_us: g_max,
             v_read: 0.5,
         }
+    }
+
+    /// Re-seed the per-core noise streams (the chip passes its own seed;
+    /// streams are then separated by core id) and rewind the dispatch
+    /// counter, so the next dispatched item draws from stream address
+    /// `(seed, id, 0)`.
+    pub fn set_stream_seed(&mut self, seed: u64) {
+        self.stream_seed = seed;
+        self.items_dispatched = 0;
+    }
+
+    /// Items dispatched so far (the next item's stream-counter value).
+    pub fn dispatch_counter(&self) -> u64 {
+        self.items_dispatched
     }
 
     pub fn power_on(&mut self) {
@@ -209,90 +244,21 @@ impl CimCore {
     ///
     /// `x` length must match the direction's input width (used_rows
     /// forward, used_cols backward).  Stochastic activation draws LFSR
-    /// noise per output (amplitude `stoch_amp_v`).
+    /// noise per output (amplitude `stoch_amp_v`); coupling noise (when
+    /// enabled) draws from this core's counter-derived stream.
+    ///
+    /// Thin wrapper over [`CimCore::mvm_batch`] with a batch of one, so
+    /// the serial and batched core paths cannot diverge: either way item
+    /// `k` of a dispatch sequence advances the LFSR once and occupies
+    /// stream address `(stream_seed, id, k)`.
     pub fn mvm(
         &mut self,
         x: &[i32],
         cfg: &NeuronConfig,
         dir: MvmDirection,
         stoch_amp_v: f64,
-        rng: &mut Rng,
     ) -> Vec<i32> {
-        assert!(self.powered_on, "core {} is power-gated", self.id);
-        let (in_w, out_w) = match dir {
-            Dataflow::Forward => (self.used_rows, self.used_cols),
-            _ => (self.used_cols, self.used_rows),
-        };
-        assert_eq!(x.len(), in_w, "input width mismatch");
-        let in_mag = cfg.in_mag_max();
-        debug_assert!(x.iter().all(|&v| v.abs() <= in_mag));
-
-        // ---- input phase: bit-serial planes ----
-        // The analog system is linear, so the integrated voltage equals
-        // the full-integer settle; we compute it in one pass and charge
-        // the energy/latency of the bit-serial schedule.
-        let mut dv = vec![0.0f32; out_w];
-        {
-            let xb = self.xbar(dir);
-            xb.settle_int(x, &mut dv);
-        }
-        let phases = cfg.input_phases() as u64;
-        let sample_cycles = cfg.sample_cycles() as u64;
-        let active_wires = x.iter().filter(|&&v| v != 0).count() as u64;
-
-        // coupling noise (non-ideality vi): one draw per output, scaled by
-        // simultaneously switching wire fraction; skip the per-output
-        // draws entirely when the mechanism is disabled (hot path)
-        let active_frac = active_wires as f64 / in_w.max(1) as f64;
-        let coupling_on = self.nonideal.coupling_sigma_v > 0.0;
-        let noise: Vec<f64> = if coupling_on {
-            let xb = self.xbar(dir);
-            (0..out_w).map(|_| xb.coupling_noise(active_frac, rng)).collect()
-        } else {
-            Vec::new()
-        };
-
-        // ---- output phase: per-neuron conversion ----
-        self.lfsr.step();
-        let mut out = vec![0i32; out_w];
-        let mut max_steps = 0u32;
-        let mut total_cmp = 0u64;
-        let mut total_dec = 0u64;
-        for j in 0..out_w {
-            let nz = if cfg.activation == Activation::Stochastic {
-                self.lfsr.noise(j % CORE_COLS, stoch_amp_v as f32) as f64
-            } else if coupling_on {
-                noise[j]
-            } else {
-                0.0
-            };
-            let (y, cyc) = convert(dv[j] as f64, cfg, nz);
-            out[j] = y;
-            total_cmp += cyc.comparisons as u64;
-            total_dec += cyc.decrement_steps as u64;
-            max_steps = max_steps.max(cyc.decrement_steps);
-        }
-
-        // ---- energy + latency accounting ----
-        let c = &mut self.energy.counters;
-        // all WLs within the input vector length toggle each phase
-        c.wl_toggles += in_w as u64 * phases;
-        c.input_wire_phases += active_wires * phases;
-        c.sample_cycles += out_w as u64 * sample_cycles;
-        c.comparisons += total_cmp;
-        c.decrement_steps += total_dec;
-        c.ctrl_phases += phases;
-        c.reg_writes += out_w as u64;
-        c.macs += (in_w * out_w) as u64;
-        let p = EnergyParams::default();
-        // latency: settle per phase + sampling + ADC (early stop: the
-        // conversion runs until the LAST neuron flips) + readout
-        c.busy_ns += phases as f64 * p.t_settle_ns
-            + sample_cycles as f64 * p.t_sample_ns
-            + (1 + max_steps) as f64 * p.t_adc_step_ns
-            + p.t_readout_ns;
-
-        self.stats.mvms += 1;
+        let (out, _) = self.mvm_batch(x, 1, cfg, dir, stoch_amp_v);
         out
     }
 
@@ -301,16 +267,9 @@ impl CimCore {
     /// latency contribution in nanoseconds (consumed by the scheduler's
     /// pipeline-fill model).
     ///
-    /// Per-call setup -- crossbar lookup, the NeuronConfig-derived phase
-    /// and cycle constants, energy pricing -- is amortized across the
-    /// batch, and the analog settle runs through
-    /// [`Crossbar::settle_batch`], which streams the conductance matrix
-    /// once for the whole batch instead of once per vector.  Outputs,
-    /// RNG/LFSR draw order and energy counters are identical to looping
-    /// [`CimCore::mvm`] over the items (the settle phase draws no
-    /// randomness, so hoisting it ahead of the per-item conversions keeps
-    /// the draw sequence unchanged); `prop_mvm_batch_equals_mvm_loop` in
-    /// `rust/tests/properties.rs` pins this bitwise.
+    /// Allocating wrapper over [`CimCore::mvm_batch_into`]; hot callers
+    /// (the chip's segment-dispatch engine) pass reusable buffers
+    /// instead.
     pub fn mvm_batch(
         &mut self,
         xs: &[i32],
@@ -318,8 +277,43 @@ impl CimCore {
         cfg: &NeuronConfig,
         dir: MvmDirection,
         stoch_amp_v: f64,
-        rng: &mut Rng,
     ) -> (Vec<i32>, Vec<f64>) {
+        let mut out = Vec::new();
+        let mut item_ns = Vec::new();
+        self.mvm_batch_into(xs, batch, cfg, dir, stoch_amp_v, &mut out,
+                            &mut item_ns);
+        (out, item_ns)
+    }
+
+    /// Batched MVM writing into caller-owned buffers (`out` and
+    /// `item_ns` are cleared and refilled), killing the per-dispatch
+    /// output allocations on the hot path; the settled-voltage and
+    /// coupling-noise scratches are core-owned and reused across calls.
+    ///
+    /// Per-call setup -- crossbar lookup, the NeuronConfig-derived phase
+    /// and cycle constants, energy pricing -- is amortized across the
+    /// batch, and the analog settle runs through
+    /// [`Crossbar::settle_batch`], which streams the conductance matrix
+    /// once for the whole batch instead of once per vector.  Outputs,
+    /// noise-stream addresses, LFSR draw order and energy counters are
+    /// identical to looping [`CimCore::mvm`] over the items: the settle
+    /// phase draws no randomness, the LFSR steps once per item either
+    /// way, and each item's coupling noise comes from the counter-derived
+    /// stream `(stream_seed, id, items_dispatched)` -- the counter
+    /// advances exactly once per item, so batch boundaries are invisible
+    /// to the draw sequence.  `prop_mvm_batch_equals_mvm_loop` in
+    /// `rust/tests/properties.rs` pins this bitwise.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mvm_batch_into(
+        &mut self,
+        xs: &[i32],
+        batch: usize,
+        cfg: &NeuronConfig,
+        dir: MvmDirection,
+        stoch_amp_v: f64,
+        out: &mut Vec<i32>,
+        item_ns: &mut Vec<f64>,
+    ) {
         assert!(self.powered_on, "core {} is power-gated", self.id);
         let (in_w, out_w) = match dir {
             Dataflow::Forward => (self.used_rows, self.used_cols),
@@ -331,30 +325,44 @@ impl CimCore {
 
         // ---- input phase: one settle pass for the whole batch ----
         let mut dv = std::mem::take(&mut self.settle_scratch);
+        let mut xt = std::mem::take(&mut self.settle_xt_scratch);
+        let mut mask = std::mem::take(&mut self.settle_mask_scratch);
         dv.resize(batch * out_w, 0.0);
         {
             let xb = self.xbar(dir);
-            xb.settle_batch(xs, batch, &mut dv);
+            xb.settle_batch_with_scratch(xs, batch, &mut dv, &mut xt,
+                                         &mut mask);
         }
+        self.settle_xt_scratch = xt;
+        self.settle_mask_scratch = mask;
 
         let phases = cfg.input_phases() as u64;
         let sample_cycles = cfg.sample_cycles() as u64;
         let p = EnergyParams::default();
         let coupling_on = self.nonideal.coupling_sigma_v > 0.0;
 
-        let mut out = vec![0i32; batch * out_w];
-        let mut item_ns = Vec::with_capacity(batch);
-        let mut noise: Vec<f64> = Vec::new();
+        out.clear();
+        out.resize(batch * out_w, 0);
+        item_ns.clear();
+        item_ns.reserve(batch);
+        let mut noise = std::mem::take(&mut self.noise_scratch);
         for b in 0..batch {
             let x = &xs[b * in_w..(b + 1) * in_w];
             let active_wires = x.iter().filter(|&&v| v != 0).count() as u64;
             let active_frac = active_wires as f64 / in_w.max(1) as f64;
+            // the stream counter advances once per item, drawn-from or
+            // not, so an item's stream address never depends on whether
+            // earlier items had noise mechanisms enabled
+            let stream_ctr = self.items_dispatched;
+            self.items_dispatched += 1;
             noise.clear();
             if coupling_on {
+                let mut stream = crate::util::rng::stream(
+                    self.stream_seed, self.id as u64, stream_ctr);
                 let xb = self.xbar(dir);
-                noise.extend(
-                    (0..out_w).map(|_| xb.coupling_noise(active_frac, rng)),
-                );
+                noise.extend((0..out_w).map(|_| {
+                    xb.coupling_noise(active_frac, &mut stream)
+                }));
             }
 
             // ---- output phase: per-neuron conversion ----
@@ -378,8 +386,9 @@ impl CimCore {
                 max_steps = max_steps.max(cyc.decrement_steps);
             }
 
-            // ---- energy + latency accounting (same model as mvm) ----
+            // ---- energy + latency accounting ----
             let c = &mut self.energy.counters;
+            // all WLs within the input vector length toggle each phase
             c.wl_toggles += in_w as u64 * phases;
             c.input_wire_phases += active_wires * phases;
             c.sample_cycles += out_w as u64 * sample_cycles;
@@ -388,6 +397,8 @@ impl CimCore {
             c.ctrl_phases += phases;
             c.reg_writes += out_w as u64;
             c.macs += (in_w * out_w) as u64;
+            // latency: settle per phase + sampling + ADC (early stop: the
+            // conversion runs until the LAST neuron flips) + readout
             let dt = phases as f64 * p.t_settle_ns
                 + sample_cycles as f64 * p.t_sample_ns
                 + (1 + max_steps) as f64 * p.t_adc_step_ns
@@ -396,8 +407,8 @@ impl CimCore {
             item_ns.push(dt);
             self.stats.mvms += 1;
         }
+        self.noise_scratch = noise;
         self.settle_scratch = dv;
-        (out, item_ns)
     }
 
     /// Cost of the accumulated workload under the given pricing.
@@ -440,10 +451,9 @@ mod tests {
     #[test]
     fn mvm_matches_reference_formula() {
         let (mut core, gp, gn) = programmed_core(16, 8, 42);
-        let mut rng = Rng::new(1);
         let cfg = NeuronConfig::default();
         let x: Vec<i32> = (0..16).map(|i| (i % 15) as i32 - 7).collect();
-        let y = core.mvm(&x, &cfg, Dataflow::Forward, 0.0, &mut rng);
+        let y = core.mvm(&x, &cfg, Dataflow::Forward, 0.0);
         // reference: floor(|v|/v_decr) with v = vr * num/den
         for j in 0..8 {
             let mut num = 0.0f64;
@@ -462,10 +472,9 @@ mod tests {
     #[test]
     fn backward_direction_transposes() {
         let (mut core, gp, gn) = programmed_core(8, 12, 43);
-        let mut rng = Rng::new(2);
         let cfg = NeuronConfig::default();
         let x: Vec<i32> = (0..12).map(|i| (i % 5) as i32 - 2).collect();
-        let y = core.mvm(&x, &cfg, Dataflow::Backward, 0.0, &mut rng);
+        let y = core.mvm(&x, &cfg, Dataflow::Backward, 0.0);
         assert_eq!(y.len(), 8);
         // spot check output 0 against the transposed formula
         let mut num = 0.0f64;
@@ -483,12 +492,11 @@ mod tests {
     #[test]
     fn energy_accumulates_per_mvm() {
         let (mut core, _, _) = programmed_core(16, 8, 44);
-        let mut rng = Rng::new(3);
         let cfg = NeuronConfig::default();
         let x = vec![1i32; 16];
-        core.mvm(&x, &cfg, Dataflow::Forward, 0.0, &mut rng);
+        core.mvm(&x, &cfg, Dataflow::Forward, 0.0);
         let e1 = core.energy.counters;
-        core.mvm(&x, &cfg, Dataflow::Forward, 0.0, &mut rng);
+        core.mvm(&x, &cfg, Dataflow::Forward, 0.0);
         let e2 = core.energy.counters;
         assert_eq!(e2.wl_toggles, 2 * e1.wl_toggles);
         assert!(e2.busy_ns > e1.busy_ns);
@@ -500,9 +508,8 @@ mod tests {
     fn power_gated_core_rejects_mvm() {
         let (mut core, _, _) = programmed_core(4, 4, 45);
         core.power_off();
-        let mut rng = Rng::new(4);
         core.mvm(&[1, 0, 0, 1], &NeuronConfig::default(), Dataflow::Forward,
-                 0.0, &mut rng);
+                 0.0);
     }
 
     #[test]
@@ -526,14 +533,14 @@ mod tests {
         assert!(stats.success_rate() > 0.95);
         let x = vec![3i32; rows];
         let y = core.mvm(&x, &NeuronConfig::default(), Dataflow::Forward,
-                         0.0, &mut rng);
+                         0.0);
         assert_eq!(y.len(), cols);
         // programmed (noisy) MVM correlates with ideal-weight MVM
         let mut ideal = CimCore::new(2, DeviceParams::default());
         ideal.power_on();
         ideal.load_ideal(&gp, &gn, rows, cols);
         let y2 = ideal.mvm(&x, &NeuronConfig::default(), Dataflow::Forward,
-                           0.0, &mut rng);
+                           0.0);
         let dot: i64 = y.iter().zip(&y2).map(|(&a, &b)| a as i64 * b as i64).sum();
         assert!(dot > 0, "programmed vs ideal outputs anti-correlated");
     }
@@ -542,18 +549,15 @@ mod tests {
     fn mvm_batch_equals_per_vector_loop() {
         let (mut batched, _, _) = programmed_core(16, 8, 48);
         let (mut serial, _, _) = programmed_core(16, 8, 48);
-        let mut rng_a = Rng::new(9);
-        let mut rng_b = Rng::new(9);
         let cfg = NeuronConfig::default();
         let batch = 5;
         let xs: Vec<i32> =
             (0..batch * 16).map(|i| (i % 15) as i32 - 7).collect();
         let (y_batch, item_ns) =
-            batched.mvm_batch(&xs, batch, &cfg, Dataflow::Forward, 0.0,
-                              &mut rng_a);
+            batched.mvm_batch(&xs, batch, &cfg, Dataflow::Forward, 0.0);
         for b in 0..batch {
             let y = serial.mvm(&xs[b * 16..(b + 1) * 16], &cfg,
-                               Dataflow::Forward, 0.0, &mut rng_b);
+                               Dataflow::Forward, 0.0);
             assert_eq!(&y_batch[b * 8..(b + 1) * 8], &y[..], "item {b}");
         }
         assert_eq!(item_ns.len(), batch);
@@ -562,12 +566,57 @@ mod tests {
         assert_eq!(ea.macs, eb.macs);
         assert_eq!(ea.decrement_steps, eb.decrement_steps);
         assert_eq!(batched.stats.mvms, batch as u64);
+        // batch boundaries are invisible to the per-core stream counter
+        assert_eq!(batched.dispatch_counter(), serial.dispatch_counter());
+    }
+
+    #[test]
+    fn noise_streams_independent_of_other_cores_and_dispatch_order() {
+        // coupling noise on: outputs depend on the per-core stream, so
+        // this pins that a core's draw sequence is a pure function of
+        // (stream seed, core id, per-core item counter) -- no matter when
+        // any OTHER core runs, and no matter how items are batched.
+        let mk = |id: usize, rows: usize, cols: usize| {
+            // same weights on every core: output differences below can
+            // only come from the noise streams
+            let (_, gp, gn) = programmed_core(rows, cols, 60);
+            let mut core = CimCore::new(id, DeviceParams::default());
+            core.power_on();
+            core.load_ideal(&gp, &gn, rows, cols);
+            core.set_stream_seed(99);
+            core.set_nonidealities(CrossbarNonIdealities {
+                ir_alpha: 0.0,
+                coupling_sigma_v: 0.05,
+            });
+            core
+        };
+        let cfg = NeuronConfig::default();
+        let xa: Vec<i32> = (0..16).map(|i| (i % 15) as i32 - 7).collect();
+        let xb: Vec<i32> = (0..16).map(|i| ((i * 5) % 15) as i32 - 7).collect();
+
+        // order 1: core 0's two items first, then core 1's
+        let (mut a1, mut b1) = (mk(0, 16, 8), mk(1, 16, 8));
+        let ya1 = [a1.mvm(&xa, &cfg, Dataflow::Forward, 0.0),
+                   a1.mvm(&xb, &cfg, Dataflow::Forward, 0.0)];
+        let yb1 = [b1.mvm(&xa, &cfg, Dataflow::Forward, 0.0),
+                   b1.mvm(&xb, &cfg, Dataflow::Forward, 0.0)];
+        // order 2: interleaved + batched the other way around
+        let (mut a2, mut b2) = (mk(0, 16, 8), mk(1, 16, 8));
+        let xab: Vec<i32> = xa.iter().chain(&xb).cloned().collect();
+        let (yb2, _) = b2.mvm_batch(&xab, 2, &cfg, Dataflow::Forward, 0.0);
+        let (ya2, _) = a2.mvm_batch(&xab, 2, &cfg, Dataflow::Forward, 0.0);
+        for k in 0..2 {
+            assert_eq!(ya1[k], &ya2[k * 8..(k + 1) * 8], "core 0 item {k}");
+            assert_eq!(yb1[k], &yb2[k * 8..(k + 1) * 8], "core 1 item {k}");
+        }
+        // distinct core ids draw distinct streams from the same seed
+        assert_ne!(ya1[0], yb1[0],
+                   "cores must not share a noise stream");
     }
 
     #[test]
     fn stochastic_mode_uses_lfsr() {
         let (mut core, _, _) = programmed_core(16, 16, 47);
-        let mut rng = Rng::new(5);
         let cfg = NeuronConfig {
             activation: Activation::Stochastic,
             input_bits: 2,
@@ -578,7 +627,7 @@ mod tests {
         let mut flips = 0;
         let mut last = -1i32;
         for _ in 0..64 {
-            let y = core.mvm(&x, &cfg, Dataflow::Forward, 0.2, &mut rng);
+            let y = core.mvm(&x, &cfg, Dataflow::Forward, 0.2);
             assert!(y.iter().all(|&v| v == 0 || v == 1));
             if y[0] != last {
                 flips += 1;

@@ -133,28 +133,76 @@ impl Crossbar {
     /// (pinned by `prop_settle_batch_bitwise_equals_settle_int` in
     /// `rust/tests/properties.rs`).
     pub fn settle_batch(&self, xs: &[i32], batch: usize, out: &mut [f32]) {
+        let mut xt = Vec::new();
+        let mut row_any = Vec::new();
+        self.settle_batch_with_scratch(xs, batch, out, &mut xt, &mut row_any);
+    }
+
+    /// [`Crossbar::settle_batch`] with caller-owned transpose/mask
+    /// scratch (cleared and refilled), so hot callers -- the core's
+    /// batched MVM -- pay no per-dispatch allocation here (the same
+    /// reuse pattern as `CimCore`'s `settle_scratch`).
+    ///
+    /// Batch blocking: a chunk's accumulator slices (CHUNK x cols f32)
+    /// stay L1-resident while each conductance row is applied to every
+    /// item of the chunk; column blocking keeps the active accumulator
+    /// and conductance sub-rows register/L1-hot across the chunk.  Any
+    /// (row, item, column-block) interleaving that keeps rows ascending
+    /// per (item, column) leaves the per-item f32 accumulation order --
+    /// and therefore the result bits -- unchanged.
+    ///
+    /// The per-item zero-test is hoisted out of the row x column-block
+    /// loops: each chunk transposes its integer inputs to f32 once
+    /// (`xt`) and records which rows drive *any* chunk item
+    /// (`row_any`).  All-zero rows are skipped whole; partially-zero
+    /// rows run the dense branch-free kernel, because adding an
+    /// `xf == 0` term is bitwise neutral: conductances are finite, so
+    /// `0.0 * g` is +-0.0, and an accumulator seeded at +0.0 can never
+    /// reach -0.0 under round-to-nearest addition -- hence `a + (+-0.0)
+    /// == a` bit-for-bit (pinned, with dense zero runs, by
+    /// `prop_settle_batch_bitwise_equals_settle_int`).
+    pub fn settle_batch_with_scratch(
+        &self,
+        xs: &[i32],
+        batch: usize,
+        out: &mut [f32],
+        xt: &mut Vec<f32>,
+        row_any: &mut Vec<bool>,
+    ) {
         assert_eq!(xs.len(), batch * self.rows, "input matrix shape");
         assert_eq!(out.len(), batch * self.cols, "output matrix shape");
-        // Batch blocking: a chunk's accumulator slices (CHUNK x cols f32)
-        // stay L1-resident while each conductance row is applied to every
-        // item of the chunk.  Any (row, item) interleaving that keeps
-        // rows ascending per item leaves the per-item f32 accumulation
-        // order -- and therefore the result bits -- unchanged.
         const CHUNK: usize = 8;
+        const COL_BLOCK: usize = 64;
         out.fill(0.0);
+        xt.clear();
+        xt.resize(CHUNK * self.rows, 0.0);
+        row_any.clear();
+        row_any.resize(self.rows, false);
         for c0 in (0..batch).step_by(CHUNK) {
-            let c1 = (c0 + CHUNK).min(batch);
+            let clen = (batch - c0).min(CHUNK);
             for r in 0..self.rows {
-                let row = &self.g_diff[r * self.cols..(r + 1) * self.cols];
-                for b in c0..c1 {
-                    let xi = xs[b * self.rows + r];
-                    if xi == 0 {
+                let mut any = false;
+                for k in 0..clen {
+                    let xi = xs[(c0 + k) * self.rows + r];
+                    any |= xi != 0;
+                    xt[r * CHUNK + k] = xi as f32;
+                }
+                row_any[r] = any;
+            }
+            for j0 in (0..self.cols).step_by(COL_BLOCK) {
+                let j1 = (j0 + COL_BLOCK).min(self.cols);
+                for r in 0..self.rows {
+                    if !row_any[r] {
                         continue;
                     }
-                    let xf = xi as f32;
-                    let acc = &mut out[b * self.cols..(b + 1) * self.cols];
-                    for (a, g) in acc.iter_mut().zip(row) {
-                        *a += xf * g;
+                    let row = &self.g_diff[r * self.cols + j0..r * self.cols + j1];
+                    for k in 0..clen {
+                        let xf = xt[r * CHUNK + k];
+                        let acc = &mut out
+                            [(c0 + k) * self.cols + j0..(c0 + k) * self.cols + j1];
+                        for (a, g) in acc.iter_mut().zip(row) {
+                            *a += xf * g;
+                        }
                     }
                 }
             }

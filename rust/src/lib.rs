@@ -23,10 +23,15 @@
 //! matrix, `CimCore::mvm_batch` amortizes per-call setup across items,
 //! and `NeuRramChip::mvm_layer_batch` /
 //! `NeuRramChip::mvm_layer_backward_batch` dispatch whole batch slices
-//! to every row-segment placement in both TNSA directions.  The batched
-//! paths are output-identical (bitwise on settled voltages, draw-order
+//! to every row-segment placement in both TNSA directions.  Dispatch is
+//! also *thread-parallel*: replica/segment jobs fan out over scoped OS
+//! threads (`NeuRramChip::threads`, the `NEURRAM_THREADS` / `--threads`
+//! knob; `1` = serial oracle) while per-core counter-derived RNG streams
+//! (`util::rng::stream`) and placement-ordered accumulation keep the
+//! results bitwise identical at every thread count.  The batched paths
+//! are output-identical (bitwise on settled voltages, draw-order
 //! identical on RNG/LFSR streams) to looping the per-vector calls --
-//! see README.md and the equivalence property tests in
+//! see README.md ("Performance") and the equivalence property tests in
 //! `rust/tests/properties.rs`.
 //!
 //! `models/executor/` hosts one executor per Table-1 dataflow -- `cnn`

@@ -54,7 +54,9 @@ fn main() {
                  runtime-check  PJRT artifact execution vs golden vectors\n\
                  config-dump    print the effective chip configuration\n\
                  \n\
-                 --config chip.json overrides device/write-verify/energy params"
+                 --config chip.json overrides device/write-verify/energy params\n\
+                 --threads n sets the dispatch worker threads (default: \
+                 NEURRAM_THREADS or all cores; 1 = serial; outputs identical)"
             );
             std::process::exit(2);
         }

@@ -4,7 +4,7 @@
 //! `python/compile/model.py::chip_forward`.
 
 use super::linear_mvm_cfg;
-use crate::coordinator::NeuRramChip;
+use crate::coordinator::{NeuRramChip, ReplicaBatch};
 use crate::core_sim::Activation;
 use crate::models::graph::{LayerKind, ModelGraph};
 use crate::models::quant::requantize_unsigned;
@@ -150,9 +150,13 @@ pub fn run_cnn_batch(
                     }
                 }
 
-                // one batched dispatch per replica (image-local pixel
-                // index keeps the serial path's replica assignment)
+                // all replica slices in ONE multi-dispatch, so replicas
+                // execute on concurrent worker threads (image-local
+                // pixel index keeps the serial path's replica
+                // assignment; outputs are bitwise the per-replica loop)
                 let mut vals = vec![0.0f64; n_img * px * oc];
+                let mut rep_idxs: Vec<Vec<usize>> = Vec::new();
+                let mut dispatches: Vec<ReplicaBatch> = Vec::new();
                 for rep in 0..n_rep {
                     let idxs: Vec<usize> = (0..patches.len())
                         .filter(|p| (p % px) % n_rep == rep)
@@ -160,10 +164,18 @@ pub fn run_cnn_batch(
                     if idxs.is_empty() {
                         continue;
                     }
-                    let refs: Vec<&[i32]> =
-                        idxs.iter().map(|&p| patches[p].as_slice()).collect();
-                    let (outs, _) =
-                        chip.mvm_layer_batch(&layer.name, &refs, &cfg, rep);
+                    dispatches.push(ReplicaBatch {
+                        replica: rep,
+                        inputs: idxs
+                            .iter()
+                            .map(|&p| patches[p].as_slice())
+                            .collect(),
+                    });
+                    rep_idxs.push(idxs);
+                }
+                let results =
+                    chip.mvm_layer_batch_multi(&layer.name, &dispatches, &cfg);
+                for (idxs, (outs, _)) in rep_idxs.iter().zip(results) {
                     for (k, out) in outs.into_iter().enumerate() {
                         let p = idxs[k];
                         for (ch, v) in out.iter().enumerate() {

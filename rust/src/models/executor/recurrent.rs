@@ -213,6 +213,10 @@ impl LstmExecutor {
         let mut gate_abs = Vec::new();
         let mut cell_abs = Vec::new();
         let mut hidden_q: Vec<Vec<Vec<i32>>> = Vec::with_capacity(s.n_cells);
+        // per-timestep input-slice buffers, allocated once and refilled
+        // each step (the gate MVMs run every (cell, step) pair, so a
+        // fresh Vec-of-Vecs per step was a measurable allocation cost)
+        let mut xt: Vec<Vec<i32>> = vec![vec![0i32; s.input_dim]; n];
         for c in 0..s.n_cells {
             let wx_name = format!("cell{c}.wx");
             let wh_name = format!("cell{c}.wh");
@@ -224,12 +228,11 @@ impl LstmExecutor {
             let mut cell = vec![vec![0.0f64; s.hidden]; n];
             let mut h_q = vec![vec![0i32; s.hidden]; n];
             for t in 0..s.t_steps {
-                let xt: Vec<Vec<i32>> = utts
-                    .iter()
-                    .map(|u| {
-                        u[t * s.input_dim..(t + 1) * s.input_dim].to_vec()
-                    })
-                    .collect();
+                for (x, u) in xt.iter_mut().zip(utts) {
+                    x.copy_from_slice(
+                        &u[t * s.input_dim..(t + 1) * s.input_dim],
+                    );
+                }
                 let (gx, _) =
                     Scheduler::run_layer_batch(chip, &wx_name, &xt, &wx_cfg);
                 let (gh, _) =

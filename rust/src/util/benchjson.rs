@@ -1,0 +1,75 @@
+//! Machine-readable bench output: a tiny writer for the `BENCH_*.json`
+//! perf-trajectory files the benches emit next to their stdout tables.
+//!
+//! Every record carries the bench name plus flat numeric / string /
+//! numeric-array fields, serialized through [`crate::util::json::Json`]
+//! (stable key order via `BTreeMap`), so future PRs can diff perf by
+//! comparing two files: run the bench before and after a change and
+//! compare e.g. `.chip_batch32_speedup_t4` directly.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Builder for one `BENCH_<name>.json` record.
+#[derive(Debug, Default)]
+pub struct BenchJson {
+    root: BTreeMap<String, Json>,
+}
+
+impl BenchJson {
+    pub fn new(bench: &str) -> Self {
+        let mut root = BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str(bench.to_string()));
+        BenchJson { root }
+    }
+
+    pub fn num(&mut self, key: &str, v: f64) -> &mut Self {
+        self.root.insert(key.to_string(), Json::Num(v));
+        self
+    }
+
+    pub fn text(&mut self, key: &str, v: &str) -> &mut Self {
+        self.root.insert(key.to_string(), Json::Str(v.to_string()));
+        self
+    }
+
+    pub fn nums(&mut self, key: &str, vs: &[f64]) -> &mut Self {
+        self.root.insert(
+            key.to_string(),
+            Json::Arr(vs.iter().map(|&v| Json::Num(v)).collect()),
+        );
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.root.clone())
+    }
+
+    /// Write the record to `path` (conventionally `BENCH_<name>.json` in
+    /// the working directory the bench runs from).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        let mut s = self.to_json().to_string_pretty();
+        s.push('\n');
+        std::fs::write(path, s)?;
+        println!("  wrote {path}");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_roundtrips_through_json() {
+        let mut b = BenchJson::new("hotpath");
+        b.num("speedup", 2.5)
+            .text("mode", "full")
+            .nums("curve", &[1.0, 1.9, 3.6]);
+        let enc = b.to_json().to_string_pretty();
+        let back = Json::parse(&enc).unwrap();
+        assert_eq!(back["bench"].as_str(), Some("hotpath"));
+        assert_eq!(back["speedup"].as_f64(), Some(2.5));
+        assert_eq!(back["curve"].idx(2).and_then(|j| j.as_f64()), Some(3.6));
+    }
+}

@@ -3,9 +3,11 @@
 //! right: the LFSR mirrors the chip's probabilistic-sampling hardware.
 
 pub mod bench;
+pub mod benchjson;
 pub mod config;
 pub mod cli;
 pub mod json;
 pub mod lfsr;
 pub mod rng;
 pub mod stats;
+pub mod threads;

@@ -1,0 +1,51 @@
+//! Worker-thread knob for the parallel dispatch engine.
+//!
+//! `NEURRAM_THREADS` selects how many OS threads the chip fans
+//! segment-parallel MVM work out to (`NeuRramChip::threads`):
+//!
+//! * unset / `0` / unparsable -> `std::thread::available_parallelism()`
+//! * `1`                      -> the serial oracle (today's dispatch
+//!                               order on the calling thread)
+//! * `n > 1`                  -> up to `n` scoped worker threads
+//!
+//! Outputs are bitwise identical at every setting: per-core RNG streams
+//! are counter-derived (see `util::rng::stream`) and partial sums are
+//! accumulated in placement order after the fan-out joins, so the knob
+//! trades wall-clock only.  The CLI mirrors it as `--threads n`.
+
+/// Environment variable naming the worker-thread count.
+pub const THREADS_ENV: &str = "NEURRAM_THREADS";
+
+/// Number of worker threads the hardware offers (fallback 1).
+pub fn available() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Resolve the effective thread count from `NEURRAM_THREADS`.
+pub fn resolve() -> usize {
+    match std::env::var(THREADS_ENV) {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => available(),
+        },
+        Err(_) => available(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn available_is_at_least_one() {
+        assert!(available() >= 1);
+    }
+
+    #[test]
+    fn resolve_is_at_least_one() {
+        // whatever the ambient env says, the result must be usable
+        assert!(resolve() >= 1);
+    }
+}

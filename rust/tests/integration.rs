@@ -6,7 +6,6 @@ use neurram::core_sim::{CimCore, MvmDirection, NeuronConfig};
 use neurram::device::DeviceParams;
 use neurram::io::npz;
 use neurram::runtime::Manifest;
-use neurram::util::rng::Rng;
 use std::path::Path;
 
 /// Panic loudly when an `--ignored` run lacks the artifacts: these tests
@@ -55,14 +54,13 @@ fn core_sim_matches_python_golden_mvm() {
     core.power_on();
     core.load_ideal(&gp.data, &gn.data, 128, 256);
     let cfg = NeuronConfig::default(); // 4b in / 8b out, same as artifact
-    let mut rng = Rng::new(1);
     let mut exact = 0usize;
     let mut total = 0usize;
     for b in 0..32 {
         let xi: Vec<i32> = (0..128)
             .map(|r| x.data[b * 128 + r] as i32)
             .collect();
-        let y = core.mvm(&xi, &cfg, MvmDirection::Forward, 0.0, &mut rng);
+        let y = core.mvm(&xi, &cfg, MvmDirection::Forward, 0.0);
         for j in 0..256 {
             let w = want.data[b * 256 + j] as i32;
             let d = (y[j] - w).abs();

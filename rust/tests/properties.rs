@@ -2,7 +2,7 @@
 //! offline): randomized sweeps over the core invariants.
 
 use neurram::coordinator::mapping::{plan, split_matrix, MappingStrategy};
-use neurram::coordinator::NeuRramChip;
+use neurram::coordinator::{NeuRramChip, Scheduler};
 use neurram::core_sim::neuron::{convert, NeuronConfig};
 use neurram::core_sim::tnsa::Tnsa;
 use neurram::core_sim::{
@@ -245,8 +245,18 @@ fn prop_settle_batch_bitwise_equals_settle_int() {
             // the IR-drop branch of finish_settle must match too
             xb.nonideal.ir_alpha = 0.3;
         }
+        // even rounds are zero-heavy: they drive the kernel's dense
+        // zero-add path (adding an xf == 0 term must be bitwise neutral)
+        // and its whole-row skip, not just the dense arithmetic
+        let zero_p = if round % 2 == 0 { 0.6 } else { 1.0 / 15.0 };
         let xs: Vec<i32> = (0..batch * rows)
-            .map(|_| rng.below(15) as i32 - 7)
+            .map(|_| {
+                if rng.uniform() < zero_p {
+                    0
+                } else {
+                    rng.below(15) as i32 - 7
+                }
+            })
             .collect();
         let mut out = vec![0.0f32; batch * cols];
         xb.settle_batch(&xs, batch, &mut out);
@@ -310,10 +320,8 @@ fn prop_mvm_batch_equals_mvm_loop() {
             let xs: Vec<i32> = (0..batch * rows)
                 .map(|_| rng.below(span) as i32 - in_mag)
                 .collect();
-            let mut rng_a = Rng::new(seed + 7);
-            let mut rng_b = Rng::new(seed + 7);
             let (y_batch, item_ns) = batched.mvm_batch(
-                &xs, batch, &cfg, MvmDirection::Forward, 0.1, &mut rng_a,
+                &xs, batch, &cfg, MvmDirection::Forward, 0.1,
             );
             for b in 0..batch {
                 let y = serial.mvm(
@@ -321,7 +329,6 @@ fn prop_mvm_batch_equals_mvm_loop() {
                     &cfg,
                     MvmDirection::Forward,
                     0.1,
-                    &mut rng_b,
                 );
                 assert_eq!(
                     &y_batch[b * cols..(b + 1) * cols],
@@ -509,5 +516,163 @@ fn prop_chip_layer_batch_equals_serial_loop() {
             serial.energy_counters().busy_ns.to_bits(),
             "round {round}"
         );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Thread-parallel dispatch: the scoped-thread fan-out must be *bitwise*
+// the NEURRAM_THREADS=1 serial oracle at every thread count -- outputs,
+// latency bookkeeping and energy counters alike.  Coupling noise is
+// switched ON so the outputs genuinely depend on the per-core
+// counter-derived RNG streams, and stochastic backward sampling covers
+// the LFSR draw order.
+// ---------------------------------------------------------------------
+
+fn assert_outputs_bits_eq(a: &[Vec<f64>], b: &[Vec<f64>], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: batch size");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.len(), y.len(), "{ctx}: item {i} width");
+        for (j, (u, v)) in x.iter().zip(y).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "{ctx}: item {i} col {j}");
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_dispatch_bitwise_equals_serial() {
+    // forward path: split layer (multiple row segments), replicated onto
+    // spare cores (the scheduler multi-dispatch), coupling noise enabled
+    for round in 0..3 {
+        let seed = 7000 + round as u64;
+        let rows = 200 + 40 * round; // always >= 2 row segments
+        let cols = 24;
+        let w: Vec<f32> = {
+            let mut wr = Rng::new(seed);
+            (0..rows * cols).map(|_| wr.normal() as f32).collect()
+        };
+        let bias: Vec<f32> = (0..cols).map(|j| j as f32 * 0.04 - 0.1).collect();
+        let with_bias = round % 2 == 0;
+        let build = || {
+            let m = ConductanceMatrix::compile(
+                "hot",
+                &w,
+                if with_bias { Some(bias.as_slice()) } else { None },
+                rows,
+                cols,
+                7,
+                40.0,
+                1.0,
+                None,
+            );
+            let mut chip = NeuRramChip::with_cores(12, seed + 1);
+            chip.program_model(vec![m], &[4.0], MappingStrategy::Balanced,
+                               false)
+                .unwrap();
+            // coupling noise ON: outputs now depend on the per-core
+            // counter-derived streams, the strictest determinism check
+            for c in &mut chip.cores {
+                c.set_nonidealities(CrossbarNonIdealities {
+                    ir_alpha: 0.1,
+                    coupling_sigma_v: 0.02,
+                });
+            }
+            chip
+        };
+        let cfg = NeuronConfig::default();
+        let mut rng = Rng::new(seed + 2);
+        let inputs: Vec<Vec<i32>> = (0..9)
+            .map(|_| (0..rows).map(|_| rng.below(15) as i32 - 7).collect())
+            .collect();
+
+        let mut oracle = build();
+        oracle.threads = 1;
+        assert!(oracle.plan.replica_count("hot") >= 2,
+                "round {round}: replicas must be exercised");
+        let (ys0, rep0) =
+            Scheduler::run_layer_batch(&mut oracle, "hot", &inputs, &cfg);
+        let e0 = oracle.energy_counters();
+
+        for threads in [2usize, 4, 8] {
+            let mut chip = build();
+            chip.threads = threads;
+            let (ys, rep) =
+                Scheduler::run_layer_batch(&mut chip, "hot", &inputs, &cfg);
+            let ctx = format!("round {round} @ {threads} threads");
+            assert_outputs_bits_eq(&ys, &ys0, &ctx);
+            assert_eq!(rep.serial_ns.to_bits(), rep0.serial_ns.to_bits(),
+                       "{ctx}: serial_ns");
+            assert_eq!(rep.makespan_ns.to_bits(), rep0.makespan_ns.to_bits(),
+                       "{ctx}: makespan_ns");
+            assert_eq!(rep.first_item_ns.to_bits(),
+                       rep0.first_item_ns.to_bits(),
+                       "{ctx}: first_item_ns");
+            assert_eq!(rep.replica_load, rep0.replica_load, "{ctx}: load");
+            let e = chip.energy_counters();
+            assert_eq!(e.busy_ns.to_bits(), e0.busy_ns.to_bits(),
+                       "{ctx}: busy_ns");
+            assert_eq!(e.comparisons, e0.comparisons, "{ctx}: comparisons");
+            assert_eq!(e.decrement_steps, e0.decrement_steps, "{ctx}: decs");
+            assert_eq!(e.macs, e0.macs, "{ctx}: macs");
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_backward_stochastic_equals_serial() {
+    // backward path: split rows on distinct cores, on-chip stochastic
+    // neurons (per-core LFSR draws) -- parallel must equal the oracle
+    for round in 0..2 {
+        let seed = 8100 + round as u64;
+        let rows = 260;
+        let cols = 20;
+        let w: Vec<f32> = {
+            let mut wr = Rng::new(seed);
+            (0..rows * cols).map(|_| wr.normal() as f32).collect()
+        };
+        let build = || {
+            let m = ConductanceMatrix::compile("rbm", &w, None, rows, cols,
+                                               1, 40.0, 1.0, None);
+            let mut chip = NeuRramChip::with_cores(6, seed + 1);
+            chip.program_model(vec![m], &[1.0], MappingStrategy::Simple,
+                               false)
+                .unwrap();
+            chip
+        };
+        let cfg = NeuronConfig {
+            input_bits: 2,
+            activation: Activation::Stochastic,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(seed + 3);
+        let inputs: Vec<Vec<i32>> = (0..7)
+            .map(|_| {
+                (0..cols)
+                    .map(|_| if rng.uniform() < 0.5 { 1 } else { -1 })
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[i32]> = inputs.iter().map(|v| v.as_slice()).collect();
+
+        let mut oracle = build();
+        oracle.threads = 1;
+        let (ys0, ns0) =
+            oracle.mvm_layer_backward_batch("rbm", &refs, &cfg, 0.05, 0);
+        let e0 = oracle.energy_counters();
+        for threads in [2usize, 4, 8] {
+            let mut chip = build();
+            chip.threads = threads;
+            let (ys, ns) =
+                chip.mvm_layer_backward_batch("rbm", &refs, &cfg, 0.05, 0);
+            let ctx = format!("round {round} @ {threads} threads");
+            assert_outputs_bits_eq(&ys, &ys0, &ctx);
+            assert_eq!(ns.len(), ns0.len(), "{ctx}: ns len");
+            for (a, b) in ns.iter().zip(&ns0) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: item ns");
+            }
+            let e = chip.energy_counters();
+            assert_eq!(e.busy_ns.to_bits(), e0.busy_ns.to_bits(),
+                       "{ctx}: busy_ns");
+            assert_eq!(e.comparisons, e0.comparisons, "{ctx}: comparisons");
+        }
     }
 }
