@@ -1,0 +1,82 @@
+//! Fig. 1g-style CIFAR ResNet reproduction: accuracy of the 20-layer
+//! ResNet mapped through the **Packed** (merged multi-matrix-per-core)
+//! path, plus the pipeline makespan over the 20-layer stage reports --
+//! both the naive bottleneck model and the plan-aware variant that
+//! serializes sequential-access merges (shared word/bit lines) while
+//! letting diagonal merges overlap.
+//!
+//! Shares `models::cifar::run_cifar` with the `infer-cifar` CLI (same
+//! recipe discipline as `fig1e_speech` / `fig1f_rbm`), and emits
+//! `BENCH_cifar.json` for the perf-trajectory artifacts.
+//!
+//! `cargo bench --bench fig1g_cifar [-- --quick]`
+
+use neurram::coordinator::NeuRramChip;
+use neurram::energy::EnergyParams;
+use neurram::models::cifar::{run_cifar, CifarRecipe};
+use neurram::util::bench::{section, table};
+use neurram::util::benchjson::BenchJson;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let recipe = if quick {
+        CifarRecipe::quick()
+    } else {
+        CifarRecipe::default()
+    };
+    let mut chip = NeuRramChip::new(recipe.seed + 11);
+    let run = run_cifar(&mut chip, &recipe).expect("cifar recipe");
+
+    let merged = chip.plan.merged_placements();
+    assert!(merged > 0,
+            "Packed plan must contain merged (nonzero-offset) placements");
+    // accuracy gate shared with the CLI: a silent collapse of the
+    // Packed/residual/readout path fails CI instead of emitting JSON
+    run.check_above_chance().expect("accuracy gate");
+    let (naive, planned) = run.makespans(&chip.plan);
+    let cost = chip.cost(&EnergyParams::default());
+
+    section(&format!(
+        "Fig. 1g -- CIFAR ResNet-{} on textures32 ({} mode)",
+        run.graph.layers.len(),
+        if quick { "quick" } else { "full" }
+    ));
+    table(
+        &["metric", "value"],
+        &[
+            vec!["accuracy".into(),
+                 format!("{:.2}% ({} samples, chance 10%)",
+                         100.0 * run.accuracy, run.n_test)],
+            vec!["cores used".into(), format!("{}", chip.plan.cores_used)],
+            vec!["merged placements".into(), format!("{merged}")],
+            vec!["pipeline makespan (naive)".into(),
+                 format!("{:.3} ms", naive / 1e6)],
+            vec!["pipeline makespan (merge-aware)".into(),
+                 format!("{:.3} ms", planned / 1e6)],
+            vec!["throughput".into(),
+                 format!("{:.1} images/s wall-clock", run.images_per_s)],
+            vec!["energy".into(),
+                 format!("{:.2} uJ, {:.1} fJ/op", cost.energy_pj / 1e6,
+                         cost.femtojoule_per_op())],
+        ],
+    );
+    println!(
+        "\n[paper: trained ResNet-20 reaches 85.7% CIFAR-10; this is a \
+         random conv reservoir with a chip-measured-feature readout, so \
+         the bar is the 10-class chance line]"
+    );
+
+    let mut b = BenchJson::new("fig1g_cifar");
+    b.text("mode", if quick { "quick" } else { "full" })
+        .num("accuracy", run.accuracy)
+        .num("n_test", run.n_test as f64)
+        .num("layers", run.graph.layers.len() as f64)
+        .num("cores_used", chip.plan.cores_used as f64)
+        .num("merged_placements", merged as f64)
+        .num("pipeline_makespan_ns", naive)
+        .num("pipeline_makespan_planned_ns", planned)
+        .num("images_per_s", run.images_per_s)
+        .num("energy_pj", cost.energy_pj)
+        .num("fj_per_op", cost.femtojoule_per_op());
+    b.write("BENCH_cifar.json").expect("write BENCH_cifar.json");
+}

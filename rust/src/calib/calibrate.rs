@@ -70,43 +70,45 @@ pub fn measure_adc_offsets(chip: &NeuRramChip, core: usize,
 /// network layer by layer with the shifts found so far and applies the
 /// percentile rule at each step (the rust mirror of
 /// `noise_train.calibrate_shifts`).
+///
+/// The probe forward rides the REAL batched executor in ONE walk of
+/// the graph (`executor::cnn::calibrate_shifts_progressive` -- each
+/// layer is calibrated from the state advanced with the shifts chosen
+/// so far), so residual skip connections and every other executor
+/// detail shape the calibration features exactly as they shape
+/// inference, at O(L) layer executions instead of O(L^2).
 pub fn calibrate_cnn_shifts(
     chip: &mut NeuRramChip,
     graph: &crate::models::ModelGraph,
     probe_imgs: &[Vec<f32>],
 ) -> Vec<f64> {
-    use crate::models::quant;
-    let mut shifts = vec![0.0f64; graph.layers.len()];
-    let in_bits = graph.layers[0].input_bits - 1;
-    for li in 0..graph.layers.len().saturating_sub(1) {
+    use crate::models::executor::cnn::{calibrate_shifts_progressive,
+                                       quantize_inputs};
+    let imgs_q = quantize_inputs(graph, probe_imgs);
+    let n_probe = probe_imgs.len().max(1);
+    calibrate_shifts_progressive(chip, graph, &imgs_q, |chip, li, inputs| {
         let layer = &graph.layers[li];
         let next_bits = graph.layers[li + 1].input_bits;
-        let mut probes: Vec<Vec<i32>> = Vec::new();
-        for img in probe_imgs {
-            let q: Vec<i32> = img
-                .iter()
-                .map(|&p| quant::quantize_unit_unsigned(p, in_bits))
-                .collect();
-            let patches = forward_collect_patches(chip, graph, &q, &shifts, li);
-            // sample patches dispersed across the feature map -- corner
-            // patches are mostly padding and would skew the percentile
-            let stride = (patches.len() / 24).max(1);
-            probes.extend(patches.into_iter().step_by(stride));
-        }
+        // sample patches dispersed across the feature maps -- corner
+        // patches are mostly padding and would skew the percentile
+        let stride = (inputs.len() / (24 * n_probe)).max(1);
+        let probes: Vec<Vec<i32>> =
+            inputs.into_iter().step_by(stride).collect();
         let cfg = NeuronConfig {
             input_bits: layer.input_bits,
             output_bits: layer.output_bits,
             ..Default::default()
         };
-        let rep = calibrate_layer_shift(chip, &layer.name, &probes, &cfg,
-                                        next_bits - 1);
-        shifts[li] = rep.shift;
-    }
-    shifts
+        calibrate_layer_shift(chip, &layer.name, &probes, &cfg,
+                              next_bits - 1)
+            .shift
+    })
 }
 
 /// Run conv layers [0, upto) and return the im2col patches entering layer
-/// `upto` (calibration probe collection).
+/// `upto` (legacy per-image probe collection; residual skips are NOT
+/// modelled here -- `executor::cnn::calibrate_shifts_progressive` is
+/// the executor-faithful path the CNN calibration uses).
 pub fn forward_collect_patches(
     chip: &mut NeuRramChip,
     graph: &crate::models::ModelGraph,

@@ -13,7 +13,7 @@ use neurram::energy::EnergyParams;
 use neurram::io::{datasets, metrics, npz};
 use neurram::models::executor::run_cnn_batch;
 use neurram::models::loader::{compile_from_npz, compile_random, intensities};
-use neurram::models::{mnist_cnn7, quant};
+use neurram::models::mnist_cnn7;
 use neurram::util::cli::Args;
 use neurram::util::config::ChipConfig;
 
@@ -75,15 +75,7 @@ pub fn run_mnist(args: &Args) -> Result<()> {
     // ---- inference: batched through the whole engine ----
     chip.reset_energy();
     let (imgs, labels) = datasets::digits28(n_test, seed + 3, 0.15);
-    let in_bits = graph.layers[0].input_bits - 1;
-    let quantized: Vec<Vec<i32>> = imgs
-        .iter()
-        .map(|img| {
-            img.iter()
-                .map(|&p| quant::quantize_unit_unsigned(p, in_bits))
-                .collect()
-        })
-        .collect();
+    let quantized = neurram::models::executor::quantize_inputs(&graph, &imgs);
     let t0 = std::time::Instant::now();
     let mut logits = Vec::with_capacity(quantized.len());
     for chunk in quantized.chunks(batch) {

@@ -1,0 +1,86 @@
+//! `neurram infer-cifar`: end-to-end ResNet-20-shaped CNN inference on
+//! the chip simulator via the **Packed** mapping path -- the paper's
+//! CIFAR-10 workload (Table 1 Forward dataflow, 85.7% headline) on the
+//! deterministic `textures32` substrate.
+//!
+//! The ~90 segments of the 20-layer model only fit the 48 cores through
+//! merged (nonzero-offset) placements, so this command is the
+//! end-to-end exercise of multi-matrix-per-core packing.  The conv
+//! stack runs as a fixed random reservoir (residual skips on-chip); the
+//! dense readout is fit on chip-measured features and reprogrammed --
+//! the recipe lives in `models::cifar` and is shared with the
+//! `fig1g_cifar` bench so figure and CLI cannot drift.
+
+use anyhow::Result;
+use neurram::energy::EnergyParams;
+use neurram::models::cifar::{run_cifar, CifarRecipe};
+use neurram::util::cli::Args;
+
+pub fn run(args: &Args) -> Result<()> {
+    let mut r = if args.flag("quick") {
+        CifarRecipe::quick()
+    } else {
+        CifarRecipe::default()
+    };
+    r.width = args.usize_or("width", r.width);
+    r.blocks = args.usize_or("blocks", r.blocks);
+    r.n_train = args.usize_or("train", r.n_train);
+    r.n_test = args.usize_or("samples", r.n_test);
+    r.epochs = args.usize_or("epochs", r.epochs);
+    r.calib_probes = args.usize_or("probes", r.calib_probes).max(1);
+    r.batch = args.usize_or("batch", r.batch).max(1);
+    r.noise = args.f64_or("noise", r.noise);
+    r.seed = args.u64_or("seed", r.seed);
+    r.write_verify = r.write_verify || args.flag("write-verify");
+
+    let mut chip = neurram::coordinator::NeuRramChip::new(r.seed + 11);
+    // --threads n overrides NEURRAM_THREADS; 0/absent keeps the chip's
+    // resolved default (available_parallelism), same as the env knob
+    match args.usize_or("threads", 0) {
+        0 => {}
+        n => chip.threads = n,
+    }
+
+    let run = run_cifar(&mut chip, &r).map_err(anyhow::Error::msg)?;
+    let merged = chip.plan.merged_placements();
+    println!(
+        "mapped {} layers ({} segments) onto {} cores via Packed: \
+         {} merged placements at nonzero offsets; replicas: {:?}",
+        run.graph.layers.len(),
+        chip.plan.placements.iter().filter(|p| p.replica == 0).count(),
+        chip.plan.cores_used,
+        merged,
+        chip.plan.replicas,
+    );
+    // merged > 0 is guaranteed: prepare_cifar_chip rejects plans with
+    // no merged placement right after mapping (fails in seconds, not
+    // after the whole pipeline)
+    println!(
+        "cifar-texture accuracy: {:.2}% on {} samples (chance 10%, \
+         random-reservoir readout; paper trained ResNet-20: 85.7%)",
+        100.0 * run.accuracy,
+        run.n_test
+    );
+    run.check_above_chance().map_err(anyhow::Error::msg)?;
+    println!("batched inference (--batch {}): {:.1} images/s wall-clock",
+             r.batch, run.images_per_s);
+
+    let (naive, planned) = run.makespans(&chip.plan);
+    println!(
+        "pipeline makespan over {} stages: {:.2} ms naive, {:.2} ms with \
+         merge-access serialization (sequential-access merges add, \
+         diagonal merges overlap)",
+        run.stage_reports.len(),
+        naive / 1e6,
+        planned / 1e6
+    );
+
+    let cost = chip.cost(&EnergyParams::default());
+    println!(
+        "energy: {:.2} uJ total, {:.1} fJ/op, {:.1} TOPS/W equivalent",
+        cost.energy_pj / 1e6,
+        cost.femtojoule_per_op(),
+        cost.tops_per_watt()
+    );
+    Ok(())
+}

@@ -2,6 +2,17 @@
 //! executes multi-core MVMs with partial-sum accumulation, replica
 //! data-parallelism, power gating and chip-level energy aggregation.
 //!
+//! Merged placements (Packed mapping, paper cases 3/4) share a core at
+//! distinct `(core_row_off, core_col_off)` windows: `program_model`
+//! programs every placement into its own `CoreRegion` and segment
+//! dispatch routes each job through its placement's region index, so a
+//! merged segment settles against its OWN conductance window (with its
+//! own `g_max_us` de-normalization) rather than whatever matrix sits at
+//! offset 0.  A core's jobs still execute one after another on its
+//! owning worker, which is exactly the sequential-access latency model
+//! of a horizontal (shared-row) merge; see `coordinator/mapping.rs` for
+//! how diagonal merges earn parallel access in the pipeline model.
+//!
 //! ## Thread-parallel dispatch with deterministic RNG streams
 //!
 //! Segment/replica MVM work fans out over scoped OS threads
@@ -50,6 +61,11 @@ struct SegJob {
     /// Placement index in the mapping plan (fixes accumulation order).
     p: usize,
     core: usize,
+    /// Mapped region of the core this placement was programmed into
+    /// (merged matrices share a core at distinct windows; dispatching
+    /// through the region index is what makes a merged segment read its
+    /// OWN weights instead of whatever sits at offset 0).
+    region: usize,
     /// Input slice [lo, hi) of each item's full input vector.
     in_lo: usize,
     in_hi: usize,
@@ -98,9 +114,9 @@ fn exec_segment_bucket(
                     &xf[b * width + job.in_lo..b * width + job.in_hi],
                 );
             }
-            core.mvm_batch_into(&seg_xs, batch, cfg, dir, stoch_amp_v,
-                                &mut y, &mut ns);
-            let scales = core.mvm_scales(cfg, w_max, dir);
+            core.mvm_batch_region_into(job.region, &seg_xs, batch, cfg, dir,
+                                       stoch_amp_v, &mut y, &mut ns);
+            let scales = core.mvm_scales_region(job.region, cfg, w_max, dir);
             let out_w = scales.len();
             let mut partial = vec![0.0f64; batch * out_w];
             for b in 0..batch {
@@ -168,6 +184,13 @@ impl NeuRramChip {
 
     /// Map + program a set of compiled matrices.  `write_verify = false`
     /// loads ideal conductances (noise-free baseline).
+    ///
+    /// EVERY placement is programmed into its own `CoreRegion` at the
+    /// plan's `(core_row_off, core_col_off)` window -- merged matrices
+    /// (Packed, cases 3/4) coexist on one core with their own weights
+    /// and their own conductance full-scale, so a merged segment never
+    /// reads a neighbour's matrix and a core shared by matrices compiled
+    /// against different `g_max_us` de-normalizes each correctly.
     pub fn program_model(
         &mut self,
         matrices: Vec<ConductanceMatrix>,
@@ -176,8 +199,26 @@ impl NeuRramChip {
         write_verify: bool,
     ) -> Result<Vec<ProgramStats>, String> {
         let p = plan(&matrices, intensity, strategy, self.cores.len())?;
+        // RESET-sweep every core the plan touches exactly once (and set
+        // the global non-idealities up front, so each region's crossbar
+        // views are built exactly once, already correct), then program
+        // each placement's window (placement order fixes the region
+        // order and the write-verify RNG draw order)
+        let mut cleared = vec![false; self.cores.len()];
+        for pl in &p.placements {
+            if !cleared[pl.core] {
+                let core = &mut self.cores[pl.core];
+                core.clear_mapping();
+                core.set_nonidealities(
+                    crate::core_sim::CrossbarNonIdealities {
+                        ir_alpha: self.ir_alpha,
+                        coupling_sigma_v: 0.0,
+                    },
+                );
+                cleared[pl.core] = true;
+            }
+        }
         let mut stats = Vec::new();
-        // program every placement
         for pl in &p.placements {
             let m = matrices
                 .iter()
@@ -188,34 +229,104 @@ impl NeuRramChip {
                 .col_slice(pl.segment.col_lo, pl.segment.col_hi);
             let core = &mut self.cores[pl.core];
             core.power_on();
-            core.g_max_us = m.g_max_us;
-            // NOTE: merged placements (col offsets) share a core; the
-            // simulator keeps one matrix per core and models merge by
-            // sequential access, so offsets beyond 0 re-use the core via
-            // separate `load`s at execute time. For simplicity each
-            // placement programs into its own region when offset is 0.
-            if pl.core_col_off == 0 && pl.core_row_off == 0 {
-                if write_verify {
-                    let s = core.program(
-                        &sub.g_pos,
-                        &sub.g_neg,
-                        sub.rows,
-                        sub.cols,
-                        WriteVerifyConfig::default(),
-                        &mut self.rng,
-                    );
-                    stats.push(s);
-                } else {
-                    core.load_ideal(&sub.g_pos, &sub.g_neg, sub.rows, sub.cols);
-                }
+            if write_verify {
+                let s = core.program_region(
+                    &sub.g_pos,
+                    &sub.g_neg,
+                    sub.rows,
+                    sub.cols,
+                    pl.core_row_off,
+                    pl.core_col_off,
+                    m.g_max_us,
+                    WriteVerifyConfig::default(),
+                    &mut self.rng,
+                );
+                stats.push(s);
+            } else {
+                core.load_ideal_region(
+                    &sub.g_pos,
+                    &sub.g_neg,
+                    sub.rows,
+                    sub.cols,
+                    pl.core_row_off,
+                    pl.core_col_off,
+                    m.g_max_us,
+                );
             }
-            core.set_nonidealities(crate::core_sim::CrossbarNonIdealities {
-                ir_alpha: self.ir_alpha,
-                coupling_sigma_v: 0.0,
-            });
         }
         self.plan = p;
         self.matrices = matrices;
+        Ok(stats)
+    }
+
+    /// Re-program ONE layer's placements in place (all replicas),
+    /// swapping `m` into the compiled matrix set.  Every OTHER region
+    /// keeps its programmed conductances untouched -- crucial when the
+    /// rest of the model was write-verified and then measured
+    /// (calibration shifts, readout features): a full `program_model`
+    /// would re-draw programming noise for every layer and invalidate
+    /// those measurements.  The plan is unchanged, so `m` must have the
+    /// mapped layer's shape.
+    pub fn reprogram_layer(
+        &mut self,
+        m: ConductanceMatrix,
+        write_verify: bool,
+    ) -> Result<Vec<ProgramStats>, String> {
+        {
+            let cur = self
+                .matrix(&m.layer)
+                .ok_or_else(|| format!("layer {} is not mapped", m.layer))?;
+            if cur.rows != m.rows || cur.cols != m.cols
+                || cur.n_bias_rows != m.n_bias_rows
+            {
+                return Err(format!(
+                    "matrix for {} must match the mapped shape \
+                     ({}x{}, {} bias rows), got {}x{} with {}",
+                    m.layer, cur.rows, cur.cols, cur.n_bias_rows, m.rows,
+                    m.cols, m.n_bias_rows
+                ));
+            }
+        }
+        let mut stats = Vec::new();
+        let mut found = false;
+        for pl in &self.plan.placements {
+            if pl.segment.layer != m.layer {
+                continue;
+            }
+            found = true;
+            let sub = m
+                .row_slice(pl.segment.row_lo, pl.segment.row_hi)
+                .col_slice(pl.segment.col_lo, pl.segment.col_hi);
+            let core = &mut self.cores[pl.core];
+            let idx = core
+                .region_index(pl.core_row_off, pl.core_col_off)
+                .ok_or_else(|| {
+                    format!("placement of {} not programmed", m.layer)
+                })?;
+            let s = core.reprogram_region(
+                idx,
+                &sub.g_pos,
+                &sub.g_neg,
+                m.g_max_us,
+                if write_verify {
+                    Some((WriteVerifyConfig::default(), &mut self.rng))
+                } else {
+                    None
+                },
+            );
+            if let Some(s) = s {
+                stats.push(s);
+            }
+        }
+        if !found {
+            return Err(format!("layer {} is not mapped", m.layer));
+        }
+        let slot = self
+            .matrices
+            .iter_mut()
+            .find(|x| x.layer == m.layer)
+            .ok_or_else(|| format!("layer {} has no compiled slot", m.layer))?;
+        *slot = m;
         Ok(stats)
     }
 
@@ -321,6 +432,12 @@ impl NeuRramChip {
                     d,
                     p,
                     core: pl.core,
+                    region: self.cores[pl.core]
+                        .region_index(pl.core_row_off, pl.core_col_off)
+                        .unwrap_or_else(|| {
+                            panic!("placement of {layer} not programmed on \
+                                    core {}", pl.core)
+                        }),
                     in_lo: pl.segment.row_lo,
                     in_hi: pl.segment.row_hi,
                     out_lo: pl.segment.col_lo,
@@ -514,6 +631,12 @@ impl NeuRramChip {
                 d: 0,
                 p,
                 core: pl.core,
+                region: self.cores[pl.core]
+                    .region_index(pl.core_row_off, pl.core_col_off)
+                    .unwrap_or_else(|| {
+                        panic!("placement of {layer} not programmed on \
+                                core {}", pl.core)
+                    }),
                 in_lo: pl.segment.col_lo,
                 in_hi: pl.segment.col_hi,
                 out_lo: pl.segment.row_lo,
@@ -730,6 +853,153 @@ mod tests {
         let (ea, eb) = (batched.energy_counters(), serial.energy_counters());
         assert_eq!(ea.busy_ns.to_bits(), eb.busy_ns.to_bits());
         assert_eq!(ea.macs, eb.macs);
+    }
+
+    #[test]
+    fn merged_core_second_segment_reads_own_weights() {
+        // two single-segment layers forced onto ONE core under Packed
+        // (a at (0,0), b merged at a nonzero offset) must produce
+        // exactly the outputs of a Simple chip that gives each layer its
+        // own core.  Before the region fix, b silently executed against
+        // a's weights.  The layers are compiled against DIFFERENT
+        // g_max_us, so this also pins the per-region conductance scale
+        // (the seed code clobbered core.g_max_us with the last matrix).
+        let mk_mats = || {
+            let mut rng = Rng::new(77);
+            let wa: Vec<f32> =
+                (0..20 * 240).map(|_| rng.normal() as f32).collect();
+            let wb: Vec<f32> =
+                (0..30 * 10).map(|_| rng.normal() as f32).collect();
+            let a = ConductanceMatrix::compile("a", &wa, None, 20, 240, 7,
+                                               40.0, 1.0, None);
+            let b = ConductanceMatrix::compile("b", &wb, None, 30, 10, 7,
+                                               30.0, 1.0, None);
+            vec![a, b]
+        };
+        let mut packed = NeuRramChip::with_cores(1, 9);
+        packed
+            .program_model(mk_mats(), &[1.0, 1.0], MappingStrategy::Packed,
+                           false)
+            .unwrap();
+        assert_eq!(packed.plan.cores_used, 1);
+        assert!(packed.plan.merged_placements() > 0, "b must be merged");
+        assert_eq!(packed.cores[0].n_regions(), 2);
+        // per-region conductance scales survive side by side
+        let gb = packed.plan.placements_of("b")[0];
+        let rb = packed.cores[0]
+            .region_index(gb.core_row_off, gb.core_col_off)
+            .unwrap();
+        assert_eq!(packed.cores[0].region(rb).g_max_us, 30.0);
+        assert_eq!(packed.cores[0].region(1 - rb).g_max_us, 40.0);
+
+        let mut simple = NeuRramChip::with_cores(2, 9);
+        simple
+            .program_model(mk_mats(), &[1.0, 1.0], MappingStrategy::Simple,
+                           false)
+            .unwrap();
+
+        let cfg = NeuronConfig::default();
+        let xa: Vec<i32> = (0..20).map(|i| (i % 15) as i32 - 7).collect();
+        let xb: Vec<i32> = (0..30).map(|i| ((i * 5) % 15) as i32 - 7).collect();
+        for (layer, x) in [("a", &xa), ("b", &xb)] {
+            let yp = packed.mvm_layer(layer, x, &cfg, 0);
+            let ys = simple.mvm_layer(layer, x, &cfg, 0);
+            assert_eq!(yp, ys, "{layer}: packed != simple");
+            assert!(ys.iter().any(|&v| v != 0.0), "{layer}: degenerate");
+        }
+        // backward direction rides the same region machinery
+        let hb: Vec<i32> = (0..10).map(|i| (i % 3) as i32 - 1).collect();
+        let bp = packed.mvm_layer_backward("b", &hb, &cfg, 0.0);
+        let bs = simple.mvm_layer_backward("b", &hb, &cfg, 0.0);
+        assert_eq!(bp, bs, "backward packed != simple");
+    }
+
+    #[test]
+    fn write_verify_programs_every_merged_placement() {
+        // write-verify must program BOTH merged regions (the seed code
+        // skipped nonzero offsets entirely, so the merged segment read
+        // unprogrammed g_min cells)
+        let mut rng = Rng::new(78);
+        let wa: Vec<f32> = (0..20 * 240).map(|_| rng.normal() as f32).collect();
+        let wb: Vec<f32> = (0..30 * 10).map(|_| rng.normal() as f32).collect();
+        let mats = vec![
+            ConductanceMatrix::compile("a", &wa, None, 20, 240, 7, 40.0,
+                                       1.0, None),
+            ConductanceMatrix::compile("b", &wb, None, 30, 10, 7, 40.0,
+                                       1.0, None),
+        ];
+        let mut chip = NeuRramChip::with_cores(1, 10);
+        let stats = chip
+            .program_model(mats, &[1.0, 1.0], MappingStrategy::Packed, true)
+            .unwrap();
+        assert_eq!(stats.len(), 2, "one ProgramStats per placement");
+        assert_eq!(stats[0].cells, 2 * 20 * 240);
+        assert_eq!(stats[1].cells, 2 * 30 * 10);
+        assert!(stats.iter().all(|s| s.success_rate() > 0.95));
+        // the merged layer's outputs correlate with its ideal-load twin
+        let mut ideal = NeuRramChip::with_cores(2, 10);
+        let wb2 = wb.clone();
+        let m = ConductanceMatrix::compile("b", &wb2, None, 30, 10, 7, 40.0,
+                                           1.0, None);
+        ideal
+            .program_model(vec![m], &[1.0], MappingStrategy::Simple, false)
+            .unwrap();
+        let x: Vec<i32> = (0..30).map(|i| (i % 15) as i32 - 7).collect();
+        let cfg = NeuronConfig::default();
+        let yv = chip.mvm_layer("b", &x, &cfg, 0);
+        let yi = ideal.mvm_layer("b", &x, &cfg, 0);
+        let dot: f64 = yv.iter().zip(&yi).map(|(a, b)| a * b).sum();
+        assert!(dot > 0.0, "write-verified merged region anti-correlated");
+    }
+
+    #[test]
+    fn reprogram_layer_leaves_other_regions_untouched() {
+        // write-verify both merged layers, snapshot layer a's outputs,
+        // then swap layer b's weights in place: a's (noisy, measured)
+        // conductances must be bit-identical afterwards, and b must
+        // carry the new weights
+        let mut rng = Rng::new(91);
+        let wa: Vec<f32> = (0..20 * 240).map(|_| rng.normal() as f32).collect();
+        let wb: Vec<f32> = (0..30 * 10).map(|_| rng.normal() as f32).collect();
+        let wb2: Vec<f32> =
+            (0..30 * 10).map(|_| rng.normal() as f32).collect();
+        let compile = |name: &str, w: &[f32], rows: usize, cols: usize| {
+            ConductanceMatrix::compile(name, w, None, rows, cols, 7, 40.0,
+                                       1.0, None)
+        };
+        let mut chip = NeuRramChip::with_cores(1, 12);
+        chip.program_model(
+            vec![compile("a", &wa, 20, 240), compile("b", &wb, 30, 10)],
+            &[1.0, 1.0],
+            MappingStrategy::Packed,
+            true,
+        )
+        .unwrap();
+        let cfg = NeuronConfig::default();
+        let xa: Vec<i32> = (0..20).map(|i| (i % 15) as i32 - 7).collect();
+        let xb: Vec<i32> = (0..30).map(|i| ((i * 3) % 15) as i32 - 7).collect();
+        let ya_before = chip.mvm_layer("a", &xa, &cfg, 0);
+        let yb_before = chip.mvm_layer("b", &xb, &cfg, 0);
+
+        let stats = chip
+            .reprogram_layer(compile("b", &wb2, 30, 10), true)
+            .unwrap();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].cells, 2 * 30 * 10);
+
+        let ya_after = chip.mvm_layer("a", &xa, &cfg, 0);
+        assert_eq!(ya_before, ya_after,
+                   "untouched layer drifted under reprogram_layer");
+        let yb_after = chip.mvm_layer("b", &xb, &cfg, 0);
+        assert_ne!(yb_before, yb_after, "new head weights must show up");
+        // ideal path draws no RNG and also preserves neighbours
+        let before = chip.rng.clone();
+        chip.reprogram_layer(compile("b", &wb, 30, 10), false).unwrap();
+        let mut after = chip.rng.clone();
+        let mut b2 = before.clone();
+        assert_eq!(b2.next_u64(), after.next_u64(),
+                   "ideal reprogram must not advance the chip RNG");
+        assert_eq!(chip.mvm_layer("a", &xa, &cfg, 0), ya_before);
     }
 
     #[test]

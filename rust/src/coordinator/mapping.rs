@@ -1,13 +1,37 @@
 //! Weight-mapping strategies onto the 48 CIM cores (paper Fig. 2a and
 //! Methods "Weight mapping strategy").
 //!
-//! Cases implemented:
-//!   1. one matrix -> one core;
-//!   2. duplication of high-intensity matrices for data parallelism;
-//!   3. diagonal merge of small matrices into one core (parallel access);
-//!   4. horizontal merge (shared rows, sequential access);
-//!   5. vertical split of tall matrices across cores (parallel partials);
+//! Cases implemented (and how each enters the execution model):
+//!   1. one matrix -> one core (offset (0, 0), the whole array);
+//!   2. duplication of high-intensity matrices for data parallelism --
+//!      replicas round-robin a batch; under `Packed` replicas may land
+//!      on partially-free cores (never on a core already hosting the
+//!      same layer, which would defeat the parallelism);
+//!   3. diagonal merge of small matrices into one core: disjoint rows
+//!      AND disjoint columns ([`MergeAccess::Parallel`] -- both windows
+//!      can be driven in one analog settle, so merged pipeline stages
+//!      overlap in `Scheduler::pipeline_makespan_planned`);
+//!   4. horizontal merge (shared row band, disjoint columns,
+//!      [`MergeAccess::Sequential`] -- shared word lines force one
+//!      access at a time; a core's jobs already execute sequentially in
+//!      the latency domain);
+//!   5. vertical split of tall matrices across cores (parallel partial
+//!      sums, accumulated digitally);
 //!   6. vertical split of wide matrices to reduce IR drop.
+//!
+//! Every placement carries its `(core_row_off, core_col_off)` window;
+//! `NeuRramChip::program_model` programs each placement into its own
+//! `CoreRegion` so merged matrices keep their own weights and their own
+//! conductance full-scale.
+//!
+//! The `Packed` packer is a big-first first-fit over per-core *shelves*
+//! (row bands).  A segment first tries to sit beside an existing shelf's
+//! content (case 4); otherwise it opens a new shelf below, preferring
+//! the *diagonal* origin (to the right of every earlier shelf, case 3 --
+//! parallel access) and falling back to column 0 (row packing that
+//! shares bit lines: still legal, sequential access).  Shelf bands are
+//! disjoint in rows and slots within a shelf are disjoint in columns, so
+//! placements can never overlap cells.
 //!
 //! Priorities (Methods): fit everything on-chip first (no reprogramming
 //! during inference), then balance compute intensity, then respect the
@@ -44,11 +68,48 @@ impl Segment {
 pub struct SegmentPlacement {
     pub segment: Segment,
     pub core: usize,
-    /// Row/col offset inside the core (merged matrices share a core).
+    /// Pair-row / column offset of the window inside the core (merged
+    /// matrices share a core at disjoint windows).
     pub core_row_off: usize,
     pub core_col_off: usize,
     /// Replica index (0 = primary; >0 = duplicated for data parallelism).
     pub replica: usize,
+}
+
+impl SegmentPlacement {
+    /// Physical pair-row extent of the window on the core.
+    pub fn phys_rows(&self) -> std::ops::Range<usize> {
+        self.core_row_off..self.core_row_off + self.segment.rows()
+    }
+
+    /// Physical column extent of the window on the core.
+    pub fn phys_cols(&self) -> std::ops::Range<usize> {
+        self.core_col_off..self.core_col_off + self.segment.cols()
+    }
+}
+
+/// How two matrices merged onto ONE core can be accessed (paper
+/// Fig. 2a): diagonal merges (disjoint rows and columns) drive both
+/// windows in one analog settle; any shared word line (rows) or bit
+/// line / neuron (columns) forces one access at a time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeAccess {
+    Parallel,
+    Sequential,
+}
+
+/// Access relation of two placements sharing a core.
+pub fn merge_access(a: &SegmentPlacement, b: &SegmentPlacement) -> MergeAccess {
+    let disjoint = |x: &std::ops::Range<usize>, y: &std::ops::Range<usize>| {
+        x.end <= y.start || y.end <= x.start
+    };
+    let rows_dj = disjoint(&a.phys_rows(), &b.phys_rows());
+    let cols_dj = disjoint(&a.phys_cols(), &b.phys_cols());
+    if rows_dj && cols_dj {
+        MergeAccess::Parallel
+    } else {
+        MergeAccess::Sequential
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -57,7 +118,8 @@ pub enum MappingStrategy {
     Simple,
     /// + duplication of high-intensity layers into spare cores (case 2).
     Balanced,
-    /// + merging small matrices to fit big models (cases 3/4).
+    /// + merging small matrices to fit big models (cases 3/4), with
+    /// duplication into partially-free cores.
     Packed,
 }
 
@@ -84,6 +146,14 @@ impl MappingPlan {
             .find(|(l, _)| l == layer)
             .map(|(_, n)| *n)
             .unwrap_or(1)
+    }
+
+    /// Placements merged behind another matrix (nonzero window offset).
+    pub fn merged_placements(&self) -> usize {
+        self.placements
+            .iter()
+            .filter(|p| p.core_row_off != 0 || p.core_col_off != 0)
+            .count()
     }
 }
 
@@ -119,10 +189,93 @@ pub fn split_matrix(layer: &str, rows: usize, cols: usize) -> Vec<Segment> {
     segs
 }
 
+/// One row band of a core's packing state: segments placed side by side
+/// share the band's word lines (case 4).
+#[derive(Clone, Debug)]
+struct Shelf {
+    row_off: usize,
+    rows: usize,
+    col_cursor: usize,
+}
+
+/// Per-core packing state of the `Packed` first-fit.
+#[derive(Clone, Debug, Default)]
+struct CoreState {
+    shelves: Vec<Shelf>,
+    /// First free pair-row below every shelf.
+    row_cursor: usize,
+    /// Widest column extent over all shelves (the diagonal origin).
+    max_col: usize,
+}
+
+impl CoreState {
+    fn is_empty(&self) -> bool {
+        self.shelves.is_empty()
+    }
+
+    /// Try to place a `rows x cols` window; returns (row_off, col_off)
+    /// and commits the state on success.
+    fn place(&mut self, rows: usize, cols: usize) -> Option<(usize, usize)> {
+        // case 4: beside an existing shelf's content (shared row band)
+        for sh in self.shelves.iter_mut() {
+            if rows <= sh.rows && sh.col_cursor + cols <= CORE_COLS {
+                let at = (sh.row_off, sh.col_cursor);
+                sh.col_cursor += cols;
+                self.max_col = self.max_col.max(sh.col_cursor);
+                return Some(at);
+            }
+        }
+        // new shelf below; prefer the diagonal origin (case 3: disjoint
+        // rows AND columns from every earlier shelf -> parallel access),
+        // fall back to column 0 (row packing, shares bit lines)
+        if self.row_cursor + rows > CORE_WEIGHT_ROWS {
+            return None;
+        }
+        let col_off = if self.max_col + cols <= CORE_COLS {
+            self.max_col
+        } else if cols <= CORE_COLS {
+            0
+        } else {
+            return None;
+        };
+        let at = (self.row_cursor, col_off);
+        self.shelves.push(Shelf {
+            row_off: self.row_cursor,
+            rows,
+            col_cursor: col_off + cols,
+        });
+        self.row_cursor += rows;
+        self.max_col = self.max_col.max(col_off + cols);
+        Some(at)
+    }
+}
+
+/// First-fit over cores; `exclude(core)` vetoes candidate cores (used to
+/// keep a layer's replicas off cores already hosting that layer).
+fn first_fit(
+    states: &mut [CoreState],
+    rows: usize,
+    cols: usize,
+    exclude: impl Fn(usize) -> bool,
+) -> Option<(usize, usize, usize)> {
+    for core in 0..states.len() {
+        if exclude(core) {
+            continue;
+        }
+        if let Some((r, c)) = states[core].place(rows, cols) {
+            return Some((core, r, c));
+        }
+    }
+    None
+}
+
 /// Build a mapping plan for a set of compiled matrices.
 ///
-/// `intensity[i]` mirrors each layer's compute intensity; spare cores are
-/// filled with replicas of the highest-intensity layers (case 2).
+/// `intensity[i]` mirrors each layer's compute intensity; remaining
+/// capacity is filled with replicas of the highest-intensity layers
+/// (case 2), round-robin so one hot layer cannot starve the others, up
+/// to 8 replicas per layer.  NaN intensities are tolerated (`total_cmp`
+/// ordering) and simply sort ahead of every finite value.
 pub fn plan(
     matrices: &[ConductanceMatrix],
     intensity: &[f64],
@@ -139,8 +292,7 @@ pub fn plan(
     }
 
     let mut placements: Vec<SegmentPlacement> = Vec::new();
-    let mut core_free: Vec<(usize, usize)> = vec![(CORE_WEIGHT_ROWS, CORE_COLS); num_cores];
-    let mut next_core = 0usize;
+    let mut states: Vec<CoreState> = vec![CoreState::default(); num_cores];
 
     if all_segs.len() <= num_cores || strategy != MappingStrategy::Packed {
         if all_segs.len() > num_cores {
@@ -150,105 +302,74 @@ pub fn plan(
                 num_cores
             ));
         }
-        for (_, s) in &all_segs {
+        // cases 1/5/6: one segment per core, whole-array window
+        for (core, (_, s)) in all_segs.iter().enumerate() {
             placements.push(SegmentPlacement {
                 segment: s.clone(),
-                core: next_core,
+                core,
                 core_row_off: 0,
                 core_col_off: 0,
                 replica: 0,
             });
-            core_free[next_core] = (0, 0);
-            next_core += 1;
+            // mark the whole core consumed (the non-Packed strategies
+            // never co-locate matrices)
+            states[core].shelves.push(Shelf {
+                row_off: 0,
+                rows: CORE_WEIGHT_ROWS,
+                col_cursor: CORE_COLS,
+            });
+            states[core].row_cursor = CORE_WEIGHT_ROWS;
+            states[core].max_col = CORE_COLS;
         }
     } else {
-        // Packed: sort big-first, first-fit with row-then-col packing
-        // (diagonal/horizontal merge approximation).
+        // Packed: big-first first-fit through the shelf packer
         let mut order: Vec<usize> = (0..all_segs.len()).collect();
         order.sort_by_key(|&i| {
             std::cmp::Reverse(all_segs[i].1.rows() * all_segs[i].1.cols())
         });
-        // per-core packing state: list of (row_off used, col cursor)
-        let mut core_cursor: Vec<(usize, usize)> = vec![(0, 0); num_cores];
         for &i in &order {
             let (_, s) = &all_segs[i];
-            let mut placed = false;
-            for core in 0..num_cores {
-                let (row_used, col_used) = core_cursor[core];
-                // try placing beside existing content (shared rows --
-                // horizontal merge, case 4)
-                if row_used.max(s.rows()) <= CORE_WEIGHT_ROWS
-                    && col_used + s.cols() <= CORE_COLS
-                {
+            match first_fit(&mut states, s.rows(), s.cols(), |_| false) {
+                Some((core, row_off, col_off)) => {
                     placements.push(SegmentPlacement {
                         segment: s.clone(),
                         core,
-                        core_row_off: 0,
-                        core_col_off: col_used,
+                        core_row_off: row_off,
+                        core_col_off: col_off,
                         replica: 0,
                     });
-                    core_cursor[core] =
-                        (row_used.max(s.rows()), col_used + s.cols());
-                    placed = true;
-                    break;
                 }
-            }
-            if !placed {
-                return Err("model does not fit on chip".into());
+                None => return Err("model does not fit on chip".into()),
             }
         }
-        next_core = core_cursor.iter().filter(|&&(r, _)| r > 0).count();
-        core_free = core_cursor
-            .iter()
-            .map(|&(r, c)| (CORE_WEIGHT_ROWS - r, CORE_COLS - c))
-            .collect();
     }
 
-    // 2) duplication into spare cores (case 2), highest intensity first
+    // 2) duplication (case 2), round-robin over layers hottest-first so
+    // a saturated layer yields to the next-hottest instead of ending
+    // the whole pass
     let mut replicas: Vec<(String, usize)> =
         matrices.iter().map(|m| (m.layer.clone(), 1)).collect();
     if strategy != MappingStrategy::Simple {
-        let mut spare: Vec<usize> = (0..num_cores)
-            .filter(|&c| core_free[c] == (CORE_WEIGHT_ROWS, CORE_COLS))
-            .collect();
         let mut by_intensity: Vec<usize> = (0..matrices.len()).collect();
-        by_intensity.sort_by(|&a, &b| {
-            intensity[b].partial_cmp(&intensity[a]).unwrap()
-        });
-        'outer: for &li in by_intensity.iter().cycle() {
-            if spare.is_empty() || intensity[li] <= 1.0 {
-                break;
-            }
-            let m = &matrices[li];
-            let segs = split_matrix(&m.layer, m.rows, m.cols);
-            if segs.len() > spare.len() {
-                // try the next layer; if none fit, stop
-                let any_fit = by_intensity.iter().any(|&lj| {
-                    intensity[lj] > 1.0
-                        && split_matrix(&matrices[lj].layer, matrices[lj].rows,
-                                        matrices[lj].cols)
-                            .len()
-                            <= spare.len()
-                });
-                if !any_fit {
-                    break 'outer;
+        by_intensity.sort_by(|&a, &b| intensity[b].total_cmp(&intensity[a]));
+        loop {
+            let mut placed_any = false;
+            for &li in &by_intensity {
+                if !(intensity[li] > 1.0) || replicas[li].1 >= 8 {
+                    continue;
                 }
-                continue;
+                let m = &matrices[li];
+                let segs = split_matrix(&m.layer, m.rows, m.cols);
+                let rep = replicas[li].1;
+                if let Some(new) = try_replica(
+                    &mut states, &placements, &segs, rep, strategy,
+                ) {
+                    placements.extend(new);
+                    replicas[li].1 += 1;
+                    placed_any = true;
+                }
             }
-            let rep = replicas[li].1;
-            for s in segs {
-                let core = spare.pop().unwrap();
-                placements.push(SegmentPlacement {
-                    segment: s,
-                    core,
-                    core_row_off: 0,
-                    core_col_off: 0,
-                    replica: rep,
-                });
-            }
-            replicas[li].1 += 1;
-            // guard against infinite cycling once everything is saturated
-            if replicas[li].1 > 8 {
+            if !placed_any {
                 break;
             }
         }
@@ -261,8 +382,59 @@ pub fn plan(
         }
         used.iter().filter(|&&u| u).count()
     };
-    let _ = next_core;
     Ok(MappingPlan { placements, cores_used, replicas })
+}
+
+/// Try to place one full replica of a layer (all its segments).  All
+/// segments must fit or the core states are left untouched.  A replica
+/// never lands on a core already hosting ANY placement of the same
+/// layer -- co-locating replicas would serialize the data parallelism
+/// they exist to provide.  Under `Packed` replicas may use partially-
+/// free cores; `Balanced` keeps the one-segment-per-core discipline and
+/// only uses untouched cores.
+fn try_replica(
+    states: &mut Vec<CoreState>,
+    placements: &[SegmentPlacement],
+    segs: &[Segment],
+    rep: usize,
+    strategy: MappingStrategy,
+) -> Option<Vec<SegmentPlacement>> {
+    let layer = &segs[0].layer;
+    let mut trial = states.clone();
+    let mut new = Vec::with_capacity(segs.len());
+    for s in segs {
+        let own_core = |core: usize| {
+            placements
+                .iter()
+                .chain(new.iter())
+                .any(|p: &SegmentPlacement| {
+                    p.core == core && &p.segment.layer == layer
+                })
+        };
+        let hit = if strategy == MappingStrategy::Packed {
+            first_fit(&mut trial, s.rows(), s.cols(), own_core)
+        } else {
+            // whole-core duplication: first untouched core
+            let empty: Vec<bool> =
+                trial.iter().map(|st| st.is_empty()).collect();
+            first_fit(&mut trial, CORE_WEIGHT_ROWS, CORE_COLS, |c| {
+                own_core(c) || !empty[c]
+            })
+            .map(|(core, _, _)| (core, 0, 0))
+        };
+        match hit {
+            Some((core, row_off, col_off)) => new.push(SegmentPlacement {
+                segment: s.clone(),
+                core,
+                core_row_off: row_off,
+                core_col_off: col_off,
+                replica: rep,
+            }),
+            None => return None,
+        }
+    }
+    *states = trial;
+    Some(new)
 }
 
 #[cfg(test)]
@@ -323,6 +495,31 @@ mod tests {
     }
 
     #[test]
+    fn case2_saturated_layer_yields_to_next_hottest() {
+        // the hottest layer caps at 8 replicas; the spare cores beyond
+        // its cap must go to the NEXT hottest layer instead of being
+        // abandoned (the seed loop `break`-ed out entirely)
+        let ms = [matrix("hot", 64, 64), matrix("warm", 64, 64)];
+        let p = plan(&ms, &[4.0, 2.0], MappingStrategy::Balanced, 20).unwrap();
+        assert_eq!(p.replica_count("hot"), 8, "{:?}", p.replicas);
+        // 20 cores - 2 primary - 7 extra hot replicas = 11 spare; warm
+        // caps at 8 too and leaves the rest idle
+        assert_eq!(p.replica_count("warm"), 8, "{:?}", p.replicas);
+    }
+
+    #[test]
+    fn nan_intensity_does_not_panic() {
+        let ms = [matrix("a", 64, 64), matrix("b", 64, 64)];
+        let p = plan(&ms, &[f64::NAN, 2.0], MappingStrategy::Balanced, 6)
+            .unwrap();
+        // the NaN layer sorts first under total_cmp but `NaN > 1.0` is
+        // false, so it never replicates; the finite hot layer still
+        // gets its replicas instead of a panic
+        assert_eq!(p.replica_count("a"), 1);
+        assert!(p.replica_count("b") > 1, "{:?}", p.replicas);
+    }
+
+    #[test]
     fn packed_merges_small_matrices() {
         // 6 small matrices on 3 cores requires merging
         let ms: Vec<ConductanceMatrix> =
@@ -337,6 +534,101 @@ mod tests {
             per_core.entry(q.core).or_default().push(q.core_col_off);
         }
         assert!(per_core.values().any(|offs| offs.len() > 1));
+        assert!(p.merged_placements() > 0);
+    }
+
+    #[test]
+    fn packed_diagonal_merge_is_parallel_access() {
+        // a wide shelf (20x240) plus a small matrix that cannot sit
+        // beside it (rows too tall for the shelf) but fits diagonally:
+        // disjoint rows AND columns -> parallel access (case 3)
+        let ms = [matrix("wide", 20, 240), matrix("small", 30, 10)];
+        let p = plan(&ms, &[1.0, 1.0], MappingStrategy::Packed, 1).unwrap();
+        assert_eq!(p.cores_used, 1);
+        let wide = &p.placements_of("wide")[0];
+        let small = &p.placements_of("small")[0];
+        assert_eq!((wide.core_row_off, wide.core_col_off), (0, 0));
+        assert_eq!((small.core_row_off, small.core_col_off), (20, 240),
+                   "diagonal origin");
+        assert_eq!(merge_access(wide, small), MergeAccess::Parallel);
+    }
+
+    #[test]
+    fn packed_row_packing_falls_back_to_column_zero() {
+        // two matrices too wide to share columns: the second opens a new
+        // shelf at column 0 (row packing) -> shared bit lines, case 4
+        // sequential access
+        let ms = [matrix("a", 40, 200), matrix("b", 30, 200)];
+        let p = plan(&ms, &[1.0, 1.0], MappingStrategy::Packed, 1).unwrap();
+        let a = &p.placements_of("a")[0];
+        let b = &p.placements_of("b")[0];
+        assert_eq!((b.core_row_off, b.core_col_off), (40, 0));
+        assert_eq!(merge_access(a, b), MergeAccess::Sequential);
+        assert_eq!(p.merged_placements(), 1);
+    }
+
+    #[test]
+    fn packed_placements_never_overlap_cells() {
+        // randomized packing rounds: no two placements on a core may
+        // share a physical cell
+        let mut rng = crate::util::rng::Rng::new(41);
+        for round in 0..20 {
+            let n = 2 + rng.below(8);
+            let ms: Vec<ConductanceMatrix> = (0..n)
+                .map(|i| {
+                    matrix(&format!("m{i}"), 1 + rng.below(128),
+                           1 + rng.below(256))
+                })
+                .collect();
+            let intensity: Vec<f64> =
+                (0..n).map(|_| 1.0 + rng.below(4) as f64).collect();
+            let p = match plan(&ms, &intensity, MappingStrategy::Packed, 6) {
+                Ok(p) => p,
+                Err(_) => continue,
+            };
+            for (i, a) in p.placements.iter().enumerate() {
+                for b in p.placements.iter().skip(i + 1) {
+                    if a.core != b.core {
+                        continue;
+                    }
+                    let rows_dj = a.phys_rows().end <= b.phys_rows().start
+                        || b.phys_rows().end <= a.phys_rows().start;
+                    let cols_dj = a.phys_cols().end <= b.phys_cols().start
+                        || b.phys_cols().end <= a.phys_cols().start;
+                    assert!(rows_dj || cols_dj,
+                            "round {round}: overlap {a:?} vs {b:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_duplication_uses_partially_free_cores() {
+        // a 128x300 filler spans both cores partially (128x150 each);
+        // the hot matrix merges beside it on core 0 and its replica
+        // lands in core 1's leftover columns -- a partially-free core
+        let ms = [matrix("hot", 32, 64), matrix("filler", 128, 300)];
+        let p = plan(&ms, &[4.0, 1.0], MappingStrategy::Packed, 2).unwrap();
+        assert_eq!(p.replica_count("hot"), 2, "{:?}", p.replicas);
+        let reps: Vec<_> = p
+            .placements
+            .iter()
+            .filter(|q| q.segment.layer == "hot" && q.replica > 0)
+            .collect();
+        assert_eq!(reps.len(), 1);
+        assert!(reps[0].core_col_off > 0,
+                "replica should merge into a partially-free core: {:?}",
+                reps[0]);
+        // replicas of a layer never share a core with that layer
+        for rep in p.placements_of("hot") {
+            let same_core_same_layer = p
+                .placements_of("hot")
+                .iter()
+                .filter(|q| q.core == rep.core)
+                .count();
+            assert_eq!(same_core_same_layer, 1,
+                       "replicas must spread across cores");
+        }
     }
 
     #[test]

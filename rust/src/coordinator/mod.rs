@@ -7,5 +7,6 @@ pub mod mapping;
 pub mod scheduler;
 
 pub use chip::{NeuRramChip, ReplicaBatch};
-pub use mapping::{MappingPlan, MappingStrategy, Segment, SegmentPlacement};
+pub use mapping::{merge_access, MappingPlan, MappingStrategy, MergeAccess,
+                  Segment, SegmentPlacement};
 pub use scheduler::Scheduler;

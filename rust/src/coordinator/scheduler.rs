@@ -138,12 +138,12 @@ impl Scheduler {
         if stage_reports.is_empty() {
             return 0.0;
         }
+        // total_cmp: a NaN makespan (empty stage, poisoned latency) must
+        // not panic the whole pipeline model
         let bottleneck_idx = stage_reports
             .iter()
             .enumerate()
-            .max_by(|a, b| {
-                a.1.makespan_ns.partial_cmp(&b.1.makespan_ns).unwrap()
-            })
+            .max_by(|a, b| a.1.makespan_ns.total_cmp(&b.1.makespan_ns))
             .map(|(i, _)| i)
             .unwrap_or(0);
         let bottleneck = stage_reports[bottleneck_idx].makespan_ns;
@@ -154,6 +154,148 @@ impl Scheduler {
             .map(|(_, r)| r.first_item_ns)
             .sum();
         bottleneck + fill
+    }
+
+    /// Plan-aware pipeline latency: [`Scheduler::pipeline_makespan`]
+    /// refined by the merge geometry of the mapping plan.
+    ///
+    /// Distinct cores overlap freely, and so do stages merged
+    /// *diagonally* onto one core (disjoint rows and columns -- paper
+    /// case 3, parallel access: both windows can be driven in one
+    /// settle).  Stages whose placements share a core with overlapping
+    /// rows or columns (case 4 horizontal merge / row packing) contend
+    /// for word lines or neurons and must take turns on that core.
+    /// First-order model:
+    ///
+    /// * a stage's busy time on ONE core is its total busy
+    ///   (`serial_ns`) scaled by the core's cell-area share of the
+    ///   stage's placements -- a core holding one of fc's 33 segments
+    ///   serializes only that slice, not the whole stage;
+    /// * per core, the co-resident stages split into a sequential group
+    ///   (those in a `MergeAccess::Sequential` relation with any other
+    ///   stage there) and a parallel rest; the core's bound is
+    ///   `max(sum(sequential busys), max(parallel busys))`;
+    /// * the pipeline bottleneck is the largest bound over cores and
+    ///   over the stages' own makespans (a stage alone degenerates to
+    ///   its `makespan_ns`);
+    /// * the fill is the leading item's latency through every stage
+    ///   outside the bottleneck group, as before.
+    pub fn pipeline_makespan_planned(
+        plan: &crate::coordinator::mapping::MappingPlan,
+        stages: &[(String, ScheduleReport)],
+    ) -> f64 {
+        use crate::coordinator::mapping::{merge_access, MergeAccess};
+        if stages.is_empty() {
+            return 0.0;
+        }
+        let n_cores = plan
+            .placements
+            .iter()
+            .map(|p| p.core + 1)
+            .max()
+            .unwrap_or(0);
+        // one scan per stage: its placements, reused by every lookup
+        // below (placements_of scans the whole plan, so resolving it
+        // inside the per-core pair loops would be O(stages^2) rescans)
+        let stage_pls: Vec<Vec<&crate::coordinator::mapping::SegmentPlacement>> =
+            stages
+                .iter()
+                .map(|(layer, _)| plan.placements_of(layer))
+                .collect();
+        // core -> stage indices placed on it (deduped)
+        let mut core_stages: Vec<Vec<usize>> = vec![Vec::new(); n_cores];
+        for (si, pls) in stage_pls.iter().enumerate() {
+            for p in pls {
+                if !core_stages[p.core].contains(&si) {
+                    core_stages[p.core].push(si);
+                }
+            }
+        }
+        let area = |p: &crate::coordinator::mapping::SegmentPlacement| {
+            (p.segment.rows() * p.segment.cols()) as f64
+        };
+        let stage_area: Vec<f64> = stage_pls
+            .iter()
+            .map(|pls| {
+                pls.iter().map(|&p| area(p)).sum::<f64>().max(1.0)
+            })
+            .collect();
+        // this core's share of a stage's total busy time (cell area is
+        // the MAC-proportional first-order proxy)
+        let busy_on = |si: usize, core: usize| -> f64 {
+            let a: f64 = stage_pls[si]
+                .iter()
+                .filter(|p| p.core == core)
+                .map(|&p| area(p))
+                .sum();
+            stages[si].1.serial_ns * a / stage_area[si]
+        };
+        // baseline: every stage bounds the pipeline by itself
+        let mut best_t = f64::MIN;
+        let mut best_group: Vec<usize> = Vec::new();
+        for (si, (_, r)) in stages.iter().enumerate() {
+            if r.makespan_ns.total_cmp(&best_t).is_gt() {
+                best_t = r.makespan_ns;
+                best_group = vec![si];
+            }
+        }
+        for (core, sts) in core_stages.iter().enumerate() {
+            if sts.len() < 2 {
+                continue;
+            }
+            let mut seq: Vec<usize> = Vec::new();
+            let mut par: Vec<usize> = Vec::new();
+            for &si in sts {
+                let serializes = sts.iter().any(|&sj| {
+                    sj != si
+                        && stage_pls[si]
+                            .iter()
+                            .filter(|p| p.core == core)
+                            .any(|&a| {
+                                stage_pls[sj]
+                                    .iter()
+                                    .filter(|p| p.core == core)
+                                    .any(|&b| {
+                                        merge_access(a, b)
+                                            == MergeAccess::Sequential
+                                    })
+                            })
+                });
+                if serializes {
+                    seq.push(si);
+                } else {
+                    par.push(si);
+                }
+            }
+            let t_seq: f64 = seq.iter().map(|&si| busy_on(si, core)).sum();
+            let t_par = par
+                .iter()
+                .map(|&si| busy_on(si, core))
+                .fold(f64::MIN, f64::max);
+            let (t, group) = if t_seq.total_cmp(&t_par).is_ge() {
+                (t_seq, seq)
+            } else {
+                let top = par
+                    .iter()
+                    .copied()
+                    .max_by(|&a, &b| {
+                        busy_on(a, core).total_cmp(&busy_on(b, core))
+                    })
+                    .unwrap();
+                (t_par, vec![top])
+            };
+            if t.total_cmp(&best_t).is_gt() {
+                best_t = t;
+                best_group = group;
+            }
+        }
+        let fill: f64 = stages
+            .iter()
+            .enumerate()
+            .filter(|(si, _)| !best_group.contains(si))
+            .map(|(_, (_, r))| r.first_item_ns)
+            .sum();
+        best_t + fill
     }
 }
 
@@ -242,6 +384,98 @@ mod tests {
         let mk = Scheduler::pipeline_makespan(&[fast.clone(), slow.clone()]);
         assert!(mk >= 1000.0);
         assert!(mk < 1000.0 + 200.0);
+    }
+
+    #[test]
+    fn pipeline_makespan_tolerates_nan_stage() {
+        // a poisoned (NaN) makespan must not panic the bottleneck max
+        let nan = ScheduleReport {
+            serial_ns: f64::NAN,
+            makespan_ns: f64::NAN,
+            items: 1,
+            first_item_ns: 1.0,
+            replica_load: vec![],
+        };
+        let ok = ScheduleReport {
+            serial_ns: 10.0,
+            makespan_ns: 10.0,
+            items: 1,
+            first_item_ns: 10.0,
+            replica_load: vec![],
+        };
+        // total_cmp sorts NaN above every finite value; the call's job
+        // is to survive, and the fill stays finite
+        let mk = Scheduler::pipeline_makespan(&[ok, nan]);
+        assert!(mk.is_nan() || mk.is_finite());
+    }
+
+    fn planned_fixture(seq: bool) -> (crate::coordinator::mapping::MappingPlan,
+                                      Vec<(String, ScheduleReport)>) {
+        use crate::coordinator::mapping::{MappingPlan, Segment,
+                                          SegmentPlacement};
+        let seg = |layer: &str, rows: usize, cols: usize| Segment {
+            layer: layer.into(),
+            row_lo: 0,
+            row_hi: rows,
+            col_lo: 0,
+            col_hi: cols,
+        };
+        // two stages share core 0: either diagonally (disjoint rows AND
+        // cols -> parallel) or row-packed (shared columns -> sequential)
+        let b_col_off = if seq { 0 } else { 100 };
+        let plan = MappingPlan {
+            placements: vec![
+                SegmentPlacement {
+                    segment: seg("a", 50, 100),
+                    core: 0,
+                    core_row_off: 0,
+                    core_col_off: 0,
+                    replica: 0,
+                },
+                SegmentPlacement {
+                    segment: seg("b", 40, 100),
+                    core: 0,
+                    core_row_off: 50,
+                    core_col_off: b_col_off,
+                    replica: 0,
+                },
+            ],
+            cores_used: 1,
+            replicas: vec![("a".into(), 1), ("b".into(), 1)],
+        };
+        let rep = |makespan: f64, first: f64| ScheduleReport {
+            serial_ns: makespan,
+            makespan_ns: makespan,
+            items: 10,
+            first_item_ns: first,
+            replica_load: vec![],
+        };
+        let stages = vec![
+            ("a".to_string(), rep(100.0, 10.0)),
+            ("b".to_string(), rep(80.0, 8.0)),
+        ];
+        (plan, stages)
+    }
+
+    #[test]
+    fn planned_makespan_serializes_sequential_merge() {
+        // row-packed stages share bit lines: their times add, and the
+        // fill has no stage left outside the bottleneck group
+        let (plan, stages) = planned_fixture(true);
+        let mk = Scheduler::pipeline_makespan_planned(&plan, &stages);
+        assert!((mk - 180.0).abs() < 1e-9, "{mk}");
+        // the naive model would report bottleneck 100 + fill 8
+        assert!(mk > Scheduler::pipeline_makespan(
+            &stages.iter().map(|(_, r)| r.clone()).collect::<Vec<_>>()));
+    }
+
+    #[test]
+    fn planned_makespan_overlaps_diagonal_merge() {
+        // diagonal merge: parallel access, the stages overlap just like
+        // stages on distinct cores -- max(100, 80) + fill(8)
+        let (plan, stages) = planned_fixture(false);
+        let mk = Scheduler::pipeline_makespan_planned(&plan, &stages);
+        assert!((mk - 108.0).abs() < 1e-9, "{mk}");
     }
 
     #[test]

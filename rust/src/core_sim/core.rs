@@ -2,11 +2,28 @@
 //! the TNSA, with the three operating modes of the paper (weight
 //! programming, neuron testing, MVM) and full energy/latency accounting.
 //!
-//! Weights occupy differential row pairs: a core stores a logical matrix
+//! Weights occupy differential row pairs: a core stores logical matrices
 //! of up to 128 (pair) rows x 256 columns.  MVMs run bit-serially:
 //! `input_phases` ternary pulse trains, `2^k` sample/integrate cycles per
 //! plane, then the per-neuron charge-decrement conversion with global
 //! early stop.
+//!
+//! ## Mapped regions (merged matrices)
+//!
+//! The mapper may merge several matrices onto one core (paper Fig. 2a
+//! cases 3/4), so a core holds a list of [`CoreRegion`]s: windows
+//! `[row_off .. row_off + rows) x [col_off .. col_off + cols)` of the
+//! physical array, each programmed independently
+//! ([`CimCore::program_region`] / [`CimCore::load_ideal_region`]) and
+//! settled independently ([`CimCore::mvm_batch_region_into`]).  The
+//! 1T1R access transistors isolate unselected word lines, so a region's
+//! settled voltages only see its own rows -- merged neighbours never
+//! load each other's columns -- and each region carries its OWN
+//! conductance full-scale `g_max_us` (merged matrices may be compiled
+//! against different full-scales; the per-region scale is what keeps the
+//! de-normalization of the second matrix on a shared core correct).
+//! The single-matrix API (`program`, `load_ideal`, `mvm*`) is a wrapper
+//! around region 0 at offset (0, 0).
 
 use super::crossbar::{Crossbar, CrossbarNonIdealities};
 use super::neuron::{convert, Activation, NeuronConfig};
@@ -28,18 +45,47 @@ pub struct CoreStats {
     pub energy: EnergyCounters,
 }
 
+/// One mapped window of a core's physical array: a logical weight
+/// matrix occupying pair-rows `[row_off, row_off + rows)` and columns
+/// `[col_off, col_off + cols)`.  Regions never overlap cells; a region's
+/// crossbar view is built from its window alone (unselected word lines
+/// are isolated by the 1T1R access transistors).
+pub struct CoreRegion {
+    /// Pair-row offset inside the core (physical rows `2*row_off..`).
+    pub row_off: usize,
+    pub rows: usize,
+    /// Column offset inside the core.
+    pub col_off: usize,
+    pub cols: usize,
+    /// Conductance full-scale this region's matrix was compiled against
+    /// (merged matrices may differ; de-normalization uses THIS value).
+    pub g_max_us: f64,
+    /// Cached forward crossbar (rebuilt after programming).
+    xbar_fwd: Crossbar,
+    /// Cached backward (transposed) crossbar.
+    xbar_bwd: Crossbar,
+}
+
+impl CoreRegion {
+    fn xbar(&self, dir: MvmDirection) -> &Crossbar {
+        match dir {
+            Dataflow::Forward => &self.xbar_fwd,
+            Dataflow::Backward | Dataflow::Recurrent => &self.xbar_bwd,
+        }
+    }
+}
+
 /// One compute-in-memory core.
 pub struct CimCore {
     pub id: usize,
     /// Physical 256x256 array (row 2r = g+, row 2r+1 = g- of pair r).
     pub array: RramArray,
-    /// Logical rows (pairs) and columns in use by the mapped matrix.
+    /// Logical rows (pairs) and columns in use by region 0 (the
+    /// single-matrix view; kept for the legacy one-matrix-per-core API).
     pub used_rows: usize,
     pub used_cols: usize,
-    /// Cached forward crossbar (rebuilt after programming).
-    xbar_fwd: Option<Crossbar>,
-    /// Cached backward (transposed) crossbar.
-    xbar_bwd: Option<Crossbar>,
+    /// Mapped windows of the array, in programming order.
+    regions: Vec<CoreRegion>,
     pub nonideal: CrossbarNonIdealities,
     pub lfsr: LfsrChains,
     pub energy: EnergyModel,
@@ -78,8 +124,7 @@ impl CimCore {
             array: RramArray::new(CORE_ROWS, CORE_COLS, device),
             used_rows: 0,
             used_cols: 0,
-            xbar_fwd: None,
-            xbar_bwd: None,
+            regions: Vec::new(),
             nonideal: CrossbarNonIdealities::default(),
             lfsr: LfsrChains::new(CORE_COLS, 0x1357 ^ id as u16),
             energy: EnergyModel::default(),
@@ -122,9 +167,23 @@ impl CimCore {
     // Weight-programming mode
     // ------------------------------------------------------------------
 
+    /// Reset the mapped regions and park every cell at g_min (the RESET
+    /// sweep that precedes programming a new model onto the core).
+    pub fn clear_mapping(&mut self) {
+        self.regions.clear();
+        let g_min = self.array.params.g_min_us as f32;
+        self.array.g_us.fill(g_min);
+        self.used_rows = 0;
+        self.used_cols = 0;
+    }
+
     /// Program a logical weight matrix [rows x cols] of target
     /// *differential conductances* (g+, g-) via write-verify; models
     /// relaxation.  Returns programming statistics.
+    ///
+    /// Single-matrix wrapper: clears the core's mapping and programs the
+    /// matrix as region 0 at offset (0, 0) under the core's default
+    /// conductance full-scale.
     pub fn program(
         &mut self,
         g_pos_us: &[f32],
@@ -134,30 +193,153 @@ impl CimCore {
         wv_cfg: WriteVerifyConfig,
         rng: &mut Rng,
     ) -> crate::device::ProgramStats {
-        assert!(rows <= CORE_WEIGHT_ROWS, "rows {rows} > 128 pairs");
-        assert!(cols <= CORE_COLS, "cols {cols} > 256");
-        assert_eq!(g_pos_us.len(), rows * cols);
+        self.clear_mapping();
+        let g_max = self.g_max_us;
+        self.program_region(g_pos_us, g_neg_us, rows, cols, 0, 0, g_max,
+                            wv_cfg, rng)
+    }
 
-        // interleave pairs into the physical array target map
-        let g_min = self.array.params.g_min_us as f32;
-        let mut targets = vec![g_min; CORE_ROWS * CORE_COLS];
+    /// Write-verify program one window `[row_off.., col_off..]` of the
+    /// physical array, leaving every other region untouched.  Only the
+    /// window's cells are pulsed, verified and relaxed (the row-major
+    /// draw order inside the window is the fixed RNG contract).
+    #[allow(clippy::too_many_arguments)]
+    pub fn program_region(
+        &mut self,
+        g_pos_us: &[f32],
+        g_neg_us: &[f32],
+        rows: usize,
+        cols: usize,
+        row_off: usize,
+        col_off: usize,
+        g_max_us: f64,
+        wv_cfg: WriteVerifyConfig,
+        rng: &mut Rng,
+    ) -> crate::device::ProgramStats {
+        self.assert_region_free(rows, cols, row_off, col_off);
+        let stats = self.write_verify_window(g_pos_us, g_neg_us, rows, cols,
+                                             row_off, col_off, wv_cfg, rng);
+        self.push_region(rows, cols, row_off, col_off, g_max_us);
+        stats
+    }
+
+    /// Write-verify one window in place: copy the window into a
+    /// window-sized array (cells keep their current state), program its
+    /// cells in window-row-major order (the fixed RNG draw contract),
+    /// relax, and copy the result back.  Shared by
+    /// [`CimCore::program_region`] and [`CimCore::reprogram_region`] so
+    /// the two paths cannot drift.
+    #[allow(clippy::too_many_arguments)]
+    fn write_verify_window(
+        &mut self,
+        g_pos_us: &[f32],
+        g_neg_us: &[f32],
+        rows: usize,
+        cols: usize,
+        row_off: usize,
+        col_off: usize,
+        wv_cfg: WriteVerifyConfig,
+        rng: &mut Rng,
+    ) -> crate::device::ProgramStats {
+        assert_eq!(g_pos_us.len(), rows * cols);
+        assert_eq!(g_neg_us.len(), rows * cols);
+        let mut win =
+            RramArray::new(2 * rows, cols, self.array.params.clone());
+        for r in 0..2 * rows {
+            for c in 0..cols {
+                win.g_us[r * cols + c] = self.array.g_us
+                    [(2 * row_off + r) * CORE_COLS + col_off + c];
+            }
+        }
+        let mut targets = vec![0.0f32; 2 * rows * cols];
         for r in 0..rows {
             for c in 0..cols {
-                targets[(2 * r) * CORE_COLS + c] = g_pos_us[r * cols + c];
-                targets[(2 * r + 1) * CORE_COLS + c] = g_neg_us[r * cols + c];
+                targets[(2 * r) * cols + c] = g_pos_us[r * cols + c];
+                targets[(2 * r + 1) * cols + c] = g_neg_us[r * cols + c];
             }
         }
         let wv = WriteVerify::new(wv_cfg);
-        let stats = wv.program_array(&mut self.array, &targets, rng);
+        let stats = wv.program_array(&mut win, &targets, rng);
         self.stats.programming_pulses += stats.total_pulses;
-        self.used_rows = rows;
-        self.used_cols = cols;
-        self.rebuild_crossbars();
+        for r in 0..2 * rows {
+            for c in 0..cols {
+                self.array.g_us
+                    [(2 * row_off + r) * CORE_COLS + col_off + c] =
+                    win.g_us[r * cols + c];
+            }
+        }
+        stats
+    }
+
+    /// Write ideal conductances into one window (no RNG, no relaxation).
+    fn write_ideal_window(
+        &mut self,
+        g_pos_us: &[f32],
+        g_neg_us: &[f32],
+        rows: usize,
+        cols: usize,
+        row_off: usize,
+        col_off: usize,
+    ) {
+        assert_eq!(g_pos_us.len(), rows * cols);
+        assert_eq!(g_neg_us.len(), rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                self.array.g_us
+                    [(2 * (row_off + r)) * CORE_COLS + col_off + c] =
+                    g_pos_us[r * cols + c];
+                self.array.g_us
+                    [(2 * (row_off + r) + 1) * CORE_COLS + col_off + c] =
+                    g_neg_us[r * cols + c];
+            }
+        }
+    }
+
+    /// Re-program an EXISTING region in place: same window, new weights
+    /// (and possibly a new full-scale).  Every other region's cells and
+    /// crossbar views are untouched, and with `write_verify = None` no
+    /// RNG advances at all -- this is how a trained readout is swapped
+    /// into a mapped model without re-drawing the programming noise of
+    /// the layers that were already measured.
+    pub fn reprogram_region(
+        &mut self,
+        idx: usize,
+        g_pos_us: &[f32],
+        g_neg_us: &[f32],
+        g_max_us: f64,
+        write_verify: Option<(WriteVerifyConfig, &mut Rng)>,
+    ) -> Option<crate::device::ProgramStats> {
+        let (rows, cols, row_off, col_off) = {
+            let r = &self.regions[idx];
+            (r.rows, r.cols, r.row_off, r.col_off)
+        };
+        let stats = match write_verify {
+            Some((wv_cfg, rng)) => Some(self.write_verify_window(
+                g_pos_us, g_neg_us, rows, cols, row_off, col_off, wv_cfg,
+                rng,
+            )),
+            None => {
+                self.write_ideal_window(g_pos_us, g_neg_us, rows, cols,
+                                        row_off, col_off);
+                None
+            }
+        };
+        // rebuild this region's crossbar views in place (indices of the
+        // other regions must not shift)
+        let (fwd, bwd) =
+            self.window_views(rows, cols, row_off, col_off, g_max_us);
+        let reg = &mut self.regions[idx];
+        reg.g_max_us = g_max_us;
+        reg.xbar_fwd = fwd;
+        reg.xbar_bwd = bwd;
         stats
     }
 
     /// Load ideal conductances directly (bypasses write-verify; used for
     /// noise-free baselines and fast experiments).
+    ///
+    /// Single-matrix wrapper: clears the mapping and loads region 0 at
+    /// offset (0, 0) under the core's default conductance full-scale.
     pub fn load_ideal(
         &mut self,
         g_pos_us: &[f32],
@@ -165,51 +347,137 @@ impl CimCore {
         rows: usize,
         cols: usize,
     ) {
-        assert!(rows <= CORE_WEIGHT_ROWS && cols <= CORE_COLS);
-        let g_min = self.array.params.g_min_us as f32;
-        self.array.g_us.fill(g_min);
-        for r in 0..rows {
-            for c in 0..cols {
-                self.array.g_us[(2 * r) * CORE_COLS + c] = g_pos_us[r * cols + c];
-                self.array.g_us[(2 * r + 1) * CORE_COLS + c] =
-                    g_neg_us[r * cols + c];
-            }
-        }
-        self.used_rows = rows;
-        self.used_cols = cols;
-        self.rebuild_crossbars();
+        self.clear_mapping();
+        let g_max = self.g_max_us;
+        self.load_ideal_region(g_pos_us, g_neg_us, rows, cols, 0, 0, g_max);
     }
 
-    /// Extract the programmed (relaxed) differential conductances.
-    pub fn read_conductances(&self) -> (Vec<f32>, Vec<f32>) {
-        let (r, c) = (self.used_rows, self.used_cols);
-        let mut gp = vec![0.0f32; r * c];
-        let mut gn = vec![0.0f32; r * c];
-        for i in 0..r {
-            for j in 0..c {
-                gp[i * c + j] = self.array.g_us[(2 * i) * CORE_COLS + j];
-                gn[i * c + j] = self.array.g_us[(2 * i + 1) * CORE_COLS + j];
+    /// Load ideal conductances into one window of the physical array,
+    /// leaving every other region untouched.
+    #[allow(clippy::too_many_arguments)]
+    pub fn load_ideal_region(
+        &mut self,
+        g_pos_us: &[f32],
+        g_neg_us: &[f32],
+        rows: usize,
+        cols: usize,
+        row_off: usize,
+        col_off: usize,
+        g_max_us: f64,
+    ) {
+        self.assert_region_free(rows, cols, row_off, col_off);
+        self.write_ideal_window(g_pos_us, g_neg_us, rows, cols, row_off,
+                                col_off);
+        self.push_region(rows, cols, row_off, col_off, g_max_us);
+    }
+
+    fn assert_region_free(&self, rows: usize, cols: usize, row_off: usize,
+                          col_off: usize) {
+        assert!(rows > 0 && cols > 0, "empty region");
+        assert!(row_off + rows <= CORE_WEIGHT_ROWS,
+                "rows {row_off}+{rows} > 128 pairs");
+        assert!(col_off + cols <= CORE_COLS,
+                "cols {col_off}+{cols} > 256");
+        for reg in &self.regions {
+            let rows_disjoint = row_off + rows <= reg.row_off
+                || reg.row_off + reg.rows <= row_off;
+            let cols_disjoint = col_off + cols <= reg.col_off
+                || reg.col_off + reg.cols <= col_off;
+            assert!(
+                rows_disjoint || cols_disjoint,
+                "core {}: region [{row_off}+{rows} x {col_off}+{cols}] \
+                 overlaps [{}+{} x {}+{}]",
+                self.id, reg.row_off, reg.rows, reg.col_off, reg.cols
+            );
+        }
+    }
+
+    /// Forward + backward crossbar views of one array window.
+    fn window_views(&self, rows: usize, cols: usize, row_off: usize,
+                    col_off: usize, g_max_us: f64) -> (Crossbar, Crossbar) {
+        let (gp, gn) = self.window_conductances(rows, cols, row_off, col_off);
+        let mut fwd = Crossbar::from_conductances(&gp, &gn, rows, cols,
+                                                  g_max_us, self.v_read);
+        fwd.nonideal = self.nonideal.clone();
+        let bwd = fwd.transposed(&gp, &gn, g_max_us);
+        (fwd, bwd)
+    }
+
+    /// Build the region's crossbar views from the (possibly relaxed)
+    /// array window and append it to the mapping.
+    fn push_region(&mut self, rows: usize, cols: usize, row_off: usize,
+                   col_off: usize, g_max_us: f64) {
+        let (fwd, bwd) =
+            self.window_views(rows, cols, row_off, col_off, g_max_us);
+        self.regions.push(CoreRegion {
+            row_off,
+            rows,
+            col_off,
+            cols,
+            g_max_us,
+            xbar_fwd: fwd,
+            xbar_bwd: bwd,
+        });
+        if self.regions.len() == 1 {
+            self.used_rows = rows;
+            self.used_cols = cols;
+        }
+    }
+
+    fn window_conductances(&self, rows: usize, cols: usize, row_off: usize,
+                           col_off: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut gp = vec![0.0f32; rows * cols];
+        let mut gn = vec![0.0f32; rows * cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                gp[i * cols + j] = self.array.g_us
+                    [(2 * (row_off + i)) * CORE_COLS + col_off + j];
+                gn[i * cols + j] = self.array.g_us
+                    [(2 * (row_off + i) + 1) * CORE_COLS + col_off + j];
             }
         }
         (gp, gn)
     }
 
-    fn rebuild_crossbars(&mut self) {
-        let (gp, gn) = self.read_conductances();
-        let mut fwd = Crossbar::from_conductances(
-            &gp, &gn, self.used_rows, self.used_cols, self.g_max_us,
-            self.v_read,
-        );
-        fwd.nonideal = self.nonideal.clone();
-        self.xbar_bwd = Some(fwd.transposed(&gp, &gn, self.g_max_us));
-        self.xbar_fwd = Some(fwd);
+    /// Extract the programmed (relaxed) differential conductances of
+    /// region 0 (the single-matrix view).
+    pub fn read_conductances(&self) -> (Vec<f32>, Vec<f32>) {
+        match self.regions.first() {
+            Some(reg) => self.window_conductances(reg.rows, reg.cols,
+                                                  reg.row_off, reg.col_off),
+            None => (Vec::new(), Vec::new()),
+        }
     }
 
-    /// Re-apply non-ideality settings to the cached crossbars.
+    /// Number of mapped regions.
+    pub fn n_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn region(&self, i: usize) -> &CoreRegion {
+        &self.regions[i]
+    }
+
+    /// Index of the region mapped at exactly (row_off, col_off).
+    pub fn region_index(&self, row_off: usize, col_off: usize)
+                        -> Option<usize> {
+        self.regions
+            .iter()
+            .position(|r| r.row_off == row_off && r.col_off == col_off)
+    }
+
+    /// Re-apply non-ideality settings: every mapped region's crossbars
+    /// are rebuilt from the array state.
     pub fn set_nonidealities(&mut self, n: CrossbarNonIdealities) {
         self.nonideal = n;
-        if self.xbar_fwd.is_some() {
-            self.rebuild_crossbars();
+        let specs: Vec<(usize, usize, usize, usize, f64)> = self
+            .regions
+            .iter()
+            .map(|r| (r.rows, r.cols, r.row_off, r.col_off, r.g_max_us))
+            .collect();
+        self.regions.clear();
+        for (rows, cols, row_off, col_off, g_max) in specs {
+            self.push_region(rows, cols, row_off, col_off, g_max);
         }
     }
 
@@ -217,26 +485,27 @@ impl CimCore {
     // MVM mode
     // ------------------------------------------------------------------
 
-    /// Per-column de-normalization factors: den_j * v_decr * w_max /
-    /// (v_read * g_max) -- multiply digital outputs by this to recover
-    /// x @ w in weight units.
-    pub fn mvm_scales(&self, cfg: &NeuronConfig, w_max: f64, dir: MvmDirection) -> Vec<f64> {
-        let xb = self.xbar(dir);
-        xb.denominators()
+    /// Per-column de-normalization factors of one region: den_j * v_decr
+    /// * w_max / (v_read * g_max) -- multiply digital outputs by this to
+    /// recover x @ w in weight units.  `g_max` is the REGION's own
+    /// full-scale: merged matrices compiled against different
+    /// `g_max_us` values de-normalize independently.
+    pub fn mvm_scales_region(&self, region: usize, cfg: &NeuronConfig,
+                             w_max: f64, dir: MvmDirection) -> Vec<f64> {
+        let reg = &self.regions[region];
+        reg.xbar(dir)
+            .denominators()
             .iter()
             .map(|&den| {
-                den as f64 * cfg.v_decr() * w_max / (self.v_read * self.g_max_us)
+                den as f64 * cfg.v_decr() * w_max
+                    / (self.v_read * reg.g_max_us)
             })
             .collect()
     }
 
-    fn xbar(&self, dir: MvmDirection) -> &Crossbar {
-        match dir {
-            Dataflow::Forward => self.xbar_fwd.as_ref().expect("not programmed"),
-            Dataflow::Backward | Dataflow::Recurrent => {
-                self.xbar_bwd.as_ref().expect("not programmed")
-            }
-        }
+    /// [`CimCore::mvm_scales_region`] for region 0 (single-matrix view).
+    pub fn mvm_scales(&self, cfg: &NeuronConfig, w_max: f64, dir: MvmDirection) -> Vec<f64> {
+        self.mvm_scales_region(0, cfg, w_max, dir)
     }
 
     /// Execute one MVM: integer inputs -> integer neuron outputs, with
@@ -285,24 +554,7 @@ impl CimCore {
         (out, item_ns)
     }
 
-    /// Batched MVM writing into caller-owned buffers (`out` and
-    /// `item_ns` are cleared and refilled), killing the per-dispatch
-    /// output allocations on the hot path; the settled-voltage and
-    /// coupling-noise scratches are core-owned and reused across calls.
-    ///
-    /// Per-call setup -- crossbar lookup, the NeuronConfig-derived phase
-    /// and cycle constants, energy pricing -- is amortized across the
-    /// batch, and the analog settle runs through
-    /// [`Crossbar::settle_batch`], which streams the conductance matrix
-    /// once for the whole batch instead of once per vector.  Outputs,
-    /// noise-stream addresses, LFSR draw order and energy counters are
-    /// identical to looping [`CimCore::mvm`] over the items: the settle
-    /// phase draws no randomness, the LFSR steps once per item either
-    /// way, and each item's coupling noise comes from the counter-derived
-    /// stream `(stream_seed, id, items_dispatched)` -- the counter
-    /// advances exactly once per item, so batch boundaries are invisible
-    /// to the draw sequence.  `prop_mvm_batch_equals_mvm_loop` in
-    /// `rust/tests/properties.rs` pins this bitwise.
+    /// [`CimCore::mvm_batch_region_into`] for region 0.
     #[allow(clippy::too_many_arguments)]
     pub fn mvm_batch_into(
         &mut self,
@@ -314,10 +566,53 @@ impl CimCore {
         out: &mut Vec<i32>,
         item_ns: &mut Vec<f64>,
     ) {
+        self.mvm_batch_region_into(0, xs, batch, cfg, dir, stoch_amp_v,
+                                   out, item_ns);
+    }
+
+    /// Batched MVM through ONE mapped region, writing into caller-owned
+    /// buffers (`out` and `item_ns` are cleared and refilled), killing
+    /// the per-dispatch output allocations on the hot path; the
+    /// settled-voltage and coupling-noise scratches are core-owned and
+    /// reused across calls.
+    ///
+    /// Per-call setup -- crossbar lookup, the NeuronConfig-derived phase
+    /// and cycle constants, energy pricing -- is amortized across the
+    /// batch, and the analog settle runs through
+    /// [`Crossbar::settle_batch`], which streams the region's conductance
+    /// window once for the whole batch instead of once per vector.
+    /// Outputs, noise-stream addresses, LFSR draw order and energy
+    /// counters are identical to looping [`CimCore::mvm`] over the items:
+    /// the settle phase draws no randomness, the LFSR steps once per item
+    /// either way, and each item's coupling noise comes from the
+    /// counter-derived stream `(stream_seed, id, items_dispatched)` --
+    /// the counter advances exactly once per item (whatever region it
+    /// targets), so batch boundaries are invisible to the draw sequence.
+    /// `prop_mvm_batch_equals_mvm_loop` in `rust/tests/properties.rs`
+    /// pins this bitwise.
+    ///
+    /// Stochastic neurons draw LFSR noise at their PHYSICAL position
+    /// (`col_off + j` forward, `row_off + j` backward), so merged
+    /// regions sample distinct neuron chains.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mvm_batch_region_into(
+        &mut self,
+        region: usize,
+        xs: &[i32],
+        batch: usize,
+        cfg: &NeuronConfig,
+        dir: MvmDirection,
+        stoch_amp_v: f64,
+        out: &mut Vec<i32>,
+        item_ns: &mut Vec<f64>,
+    ) {
         assert!(self.powered_on, "core {} is power-gated", self.id);
-        let (in_w, out_w) = match dir {
-            Dataflow::Forward => (self.used_rows, self.used_cols),
-            _ => (self.used_cols, self.used_rows),
+        let (in_w, out_w, neuron_off) = {
+            let reg = &self.regions[region];
+            match dir {
+                Dataflow::Forward => (reg.rows, reg.cols, reg.col_off),
+                _ => (reg.cols, reg.rows, reg.row_off),
+            }
         };
         assert_eq!(xs.len(), batch * in_w, "input matrix shape");
         let in_mag = cfg.in_mag_max();
@@ -329,7 +624,7 @@ impl CimCore {
         let mut mask = std::mem::take(&mut self.settle_mask_scratch);
         dv.resize(batch * out_w, 0.0);
         {
-            let xb = self.xbar(dir);
+            let xb = self.regions[region].xbar(dir);
             xb.settle_batch_with_scratch(xs, batch, &mut dv, &mut xt,
                                          &mut mask);
         }
@@ -339,7 +634,8 @@ impl CimCore {
         let phases = cfg.input_phases() as u64;
         let sample_cycles = cfg.sample_cycles() as u64;
         let p = EnergyParams::default();
-        let coupling_on = self.nonideal.coupling_sigma_v > 0.0;
+        let coupling_sigma = self.nonideal.coupling_sigma_v;
+        let coupling_on = coupling_sigma > 0.0;
 
         out.clear();
         out.resize(batch * out_w, 0);
@@ -359,9 +655,10 @@ impl CimCore {
             if coupling_on {
                 let mut stream = crate::util::rng::stream(
                     self.stream_seed, self.id as u64, stream_ctr);
-                let xb = self.xbar(dir);
+                // same expression as Crossbar::coupling_noise (inlined to
+                // keep the region borrow out of the mutable item loop)
                 noise.extend((0..out_w).map(|_| {
-                    xb.coupling_noise(active_frac, &mut stream)
+                    stream.normal() * coupling_sigma * active_frac.sqrt()
                 }));
             }
 
@@ -373,7 +670,8 @@ impl CimCore {
             let mut total_dec = 0u64;
             for j in 0..out_w {
                 let nz = if cfg.activation == Activation::Stochastic {
-                    self.lfsr.noise(j % CORE_COLS, stoch_amp_v as f32) as f64
+                    self.lfsr.noise((neuron_off + j) % CORE_COLS,
+                                    stoch_amp_v as f32) as f64
                 } else if coupling_on {
                     noise[j]
                 } else {

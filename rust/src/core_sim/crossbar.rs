@@ -10,6 +10,14 @@
 //! This is the L3 hot path: the inner loop is a row-scaled accumulation
 //! over dense f32 column slices (auto-vectorizes), with per-column
 //! conductance sums cached between programmings.
+//!
+//! A `Crossbar` is the settled view of ONE mapped window of a core's
+//! physical array (`CimCore`'s `CoreRegion`s): its rows/cols/`den`
+//! normalizers cover exactly the window's cells, because the 1T1R
+//! access transistors disconnect unselected word lines -- matrices
+//! merged elsewhere on the same core contribute nothing to this
+//! window's column loads.  Merged regions therefore settle bitwise as
+//! if each sat alone on a core.
 
 use crate::util::rng::Rng;
 

@@ -9,7 +9,7 @@ pub mod neuron;
 pub mod periphery;
 pub mod tnsa;
 
-pub use core::{CimCore, CoreStats, MvmDirection};
+pub use core::{CimCore, CoreRegion, CoreStats, MvmDirection};
 pub use crossbar::{Crossbar, CrossbarNonIdealities};
 pub use neuron::{Activation, AdcCycles, NeuronConfig};
 pub use tnsa::Tnsa;

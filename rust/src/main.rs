@@ -5,6 +5,8 @@
 //!   edp                 Fig. 1d-style EDP sweep over bit precisions
 //!   writeverify         ED Fig. 3 programming statistics
 //!   infer-mnist         end-to-end CNN inference (Forward dataflow)
+//!   infer-cifar         ResNet-20 CNN inference through the Packed
+//!                       (merged multi-matrix-per-core) mapping path
 //!   infer-speech        LSTM voice-command inference (Recurrent +
 //!                       Forward dataflow, batched across utterances)
 //!   recover-image       RBM Gibbs image recovery (Forward + Backward
@@ -17,6 +19,7 @@ use neurram::util::cli::Args;
 mod commands {
     pub mod edp;
     pub mod infer;
+    pub mod infer_cifar;
     pub mod infer_speech;
     pub mod info;
     pub mod recover;
@@ -31,6 +34,7 @@ fn main() {
         Some("edp") => commands::edp::run(&args),
         Some("writeverify") => commands::writeverify::run(&args),
         Some("infer-mnist") => commands::infer::run_mnist(&args),
+        Some("infer-cifar") => commands::infer_cifar::run(&args),
         Some("infer-speech") => commands::infer_speech::run(&args),
         Some("recover-image") => commands::recover::run(&args),
         Some("runtime-check") => commands::runtime_check::run(&args),
@@ -43,12 +47,13 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: neurram <info|edp|writeverify|infer-mnist|infer-speech|recover-image|runtime-check> [--opts]\n\
+                "usage: neurram <info|edp|writeverify|infer-mnist|infer-cifar|infer-speech|recover-image|runtime-check> [--opts]\n\
                  \n\
                  info           chip configuration + artifact inventory\n\
                  edp            EDP/TOPS-W sweep over input/output bits (Fig. 1d)\n\
                  writeverify    write-verify programming statistics (ED Fig. 3)\n\
                  infer-mnist    CNN inference on the 48-core chip simulator\n\
+                 infer-cifar    ResNet-20 inference via Packed merged mapping\n\
                  infer-speech   LSTM voice-command inference (recurrent dataflow)\n\
                  recover-image  RBM Gibbs image recovery (bidirectional dataflow)\n\
                  runtime-check  PJRT artifact execution vs golden vectors\n\

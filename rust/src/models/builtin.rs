@@ -37,6 +37,12 @@ pub fn mnist_cnn7(width: usize) -> ModelGraph {
 }
 
 /// ResNet-20-shaped CNN for 32x32x3 (paper CIFAR-10 model, width-scaled).
+///
+/// Each (stage, block) is a pair of 3x3 convs with a residual skip from
+/// the block's input to its second conv's requantized output
+/// (`res_open` on the first conv, `res_close` on the second; the
+/// executor downsamples / zero-pads the tap at stage entries where the
+/// first conv pools and doubles the channels).
 pub fn cifar_resnet(width: usize, blocks_per_stage: usize) -> ModelGraph {
     let mut layers = Vec::new();
     let mut l0 = LayerSpec::conv("conv_in", 3, 3, 3, width, 1);
@@ -58,6 +64,8 @@ pub fn cifar_resnet(width: usize, blocks_per_stage: usize) -> ModelGraph {
                     1 => 2.0,
                     _ => 1.0,
                 };
+                l.res_open = half == 0;
+                l.res_close = half == 1;
                 layers.push(l);
                 cur = out;
                 idx += 1;
@@ -152,6 +160,21 @@ mod tests {
         // 1 input conv + 3 stages * 3 blocks * 2 convs + fc = 20 layers
         assert_eq!(m.layers.len(), 20);
         assert_eq!(m.layers.last().unwrap().out_features, 10);
+    }
+
+    #[test]
+    fn cifar_blocks_carry_residual_flags() {
+        let m = cifar_resnet(8, 3);
+        assert!(!m.layers[0].res_open && !m.layers[0].res_close);
+        for (i, l) in m.layers.iter().enumerate().skip(1).take(18) {
+            if (i - 1) % 2 == 0 {
+                assert!(l.res_open && !l.res_close, "layer {i}");
+            } else {
+                assert!(l.res_close && !l.res_open, "layer {i}");
+            }
+        }
+        let fc = m.layers.last().unwrap();
+        assert!(!fc.res_open && !fc.res_close);
     }
 
     #[test]

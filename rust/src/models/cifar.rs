@@ -1,0 +1,228 @@
+//! Shared train/compile/run recipe for the CIFAR ResNet workload: the
+//! `infer-cifar` command and the `fig1g_cifar` bench both drive THIS
+//! module (same discipline as `RbmRecipe` / `fit_lstm_readouts`), so
+//! the paper-figure bench can never drift from what the CLI reports.
+//!
+//! With no trained export available offline, the 20-layer ResNet runs
+//! as a fixed random convolutional reservoir: the conv stack keeps its
+//! random He initialization and executes on the chip (residual skips
+//! included), requantization shifts are calibrated on probe textures,
+//! and the dense readout head is fit by softmax regression on the
+//! *chip-measured* integer features (so the readout absorbs the
+//! quantized reservoir dynamics), recompiled to conductances and
+//! reprogrammed.  The whole model maps through
+//! [`MappingStrategy::Packed`] -- on the 48-core chip the ~90 segments
+//! only fit via merged (nonzero-offset) placements, the path this
+//! recipe exists to exercise end-to-end.
+
+use crate::calib::calibrate::calibrate_cnn_shifts;
+use crate::coordinator::mapping::MappingStrategy;
+use crate::coordinator::scheduler::ScheduleReport;
+use crate::coordinator::NeuRramChip;
+use crate::io::{datasets, metrics};
+use crate::models::builtin::cifar_resnet;
+use crate::models::executor::{collect_layer_inputs, quantize_inputs,
+                              run_cnn_batch_traced};
+use crate::models::loader::{compile_random, intensities};
+use crate::models::train::fit_cnn_readout;
+use crate::models::ModelGraph;
+
+/// Recipe for preparing + running the CIFAR ResNet on a chip.
+#[derive(Clone, Copy, Debug)]
+pub struct CifarRecipe {
+    /// Stage-0 channel width (16 = the ResNet-20 scale the zoo tests pin).
+    pub width: usize,
+    /// Residual blocks per stage (3 -> 20 layers).
+    pub blocks: usize,
+    /// Readout-training textures (chip-measured features).
+    pub n_train: usize,
+    /// Held-out test textures.
+    pub n_test: usize,
+    pub noise: f64,
+    /// Softmax readout epochs.
+    pub epochs: usize,
+    /// Probe images for shift calibration.
+    pub calib_probes: usize,
+    /// Inference batch (bounds im2col memory).
+    pub batch: usize,
+    pub seed: u64,
+    pub write_verify: bool,
+}
+
+impl Default for CifarRecipe {
+    fn default() -> Self {
+        CifarRecipe {
+            width: 16,
+            blocks: 3,
+            n_train: 60,
+            n_test: 40,
+            noise: 0.1,
+            epochs: 300,
+            calib_probes: 4,
+            batch: 8,
+            seed: 33,
+            write_verify: false,
+        }
+    }
+}
+
+impl CifarRecipe {
+    /// CI smoke preset: a width-8 ResNet-20 (still > 48 segments, so the
+    /// Packed merge path is exercised) on a handful of samples.
+    pub fn quick() -> Self {
+        CifarRecipe {
+            width: 8,
+            n_train: 16,
+            n_test: 8,
+            epochs: 150,
+            calib_probes: 2,
+            ..Default::default()
+        }
+    }
+}
+
+/// Everything a caller needs to report: accuracy, per-layer latency
+/// reports (merged over inference batches) and throughput.
+pub struct CifarRun {
+    pub graph: ModelGraph,
+    pub shifts: Vec<f64>,
+    pub accuracy: f64,
+    /// Per-layer (name, report) pairs from the test inference, the
+    /// stage inputs of `Scheduler::pipeline_makespan{,_planned}`.
+    pub stage_reports: Vec<(String, ScheduleReport)>,
+    pub images_per_s: f64,
+    pub n_test: usize,
+}
+
+impl CifarRun {
+    /// The acceptance gate, shared by the CLI and the bench: a
+    /// regression that collapses the residual stack, the calibration or
+    /// the readout swap must fail loudly, not print a chance-level
+    /// number (a numpy mirror of this pipeline measures ~50% at the
+    /// default recipe, ~37% at `--quick`; chance is 10%).  The CLI
+    /// surfaces the Err; the bench unwraps it.
+    pub fn check_above_chance(&self) -> Result<(), String> {
+        if self.accuracy > 0.15 {
+            Ok(())
+        } else {
+            Err(format!(
+                "accuracy {:.2}% is not clearly above the 10-class \
+                 chance bar",
+                100.0 * self.accuracy
+            ))
+        }
+    }
+
+    /// (naive, merge-aware) pipeline makespans over the stage reports.
+    pub fn makespans(&self, plan: &crate::coordinator::MappingPlan)
+                     -> (f64, f64) {
+        let naive = crate::coordinator::Scheduler::pipeline_makespan(
+            &self.stage_reports
+                .iter()
+                .map(|(_, r)| r.clone())
+                .collect::<Vec<_>>(),
+        );
+        let planned =
+            crate::coordinator::Scheduler::pipeline_makespan_planned(
+                plan, &self.stage_reports);
+        (naive, planned)
+    }
+}
+
+/// Build, map (Packed), calibrate and readout-train the CIFAR ResNet on
+/// `chip`.  Returns the graph + calibrated shifts, leaving the chip
+/// programmed with the trained readout.
+pub fn prepare_cifar_chip(
+    chip: &mut NeuRramChip,
+    r: &CifarRecipe,
+) -> Result<(ModelGraph, Vec<f64>), String> {
+    let graph = cifar_resnet(r.width, r.blocks);
+    let mut matrices = compile_random(&graph, r.seed);
+    chip.program_model(matrices.clone(), &intensities(&graph),
+                       MappingStrategy::Packed, r.write_verify)?;
+    chip.gate_unused();
+    // fail in seconds, not after the whole train/calibrate/infer
+    // pipeline: this workload exists to exercise merged placements
+    if chip.plan.merged_placements() == 0 {
+        return Err(format!(
+            "Packed plan contains no merged placement -- width {} / \
+             blocks {} is small enough that every segment gets its own \
+             core; raise them to exercise the merged mapping path",
+            r.width, r.blocks
+        ));
+    }
+
+    // requantization shifts from probe textures through the real
+    // executor (residual skips shape the calibration features)
+    let (probe, _) = datasets::textures32(r.calib_probes, r.seed + 1,
+                                          r.noise);
+    let shifts = calibrate_cnn_shifts(chip, &graph, &probe);
+
+    // readout fit on chip-measured features entering the dense head
+    let (tr_imgs, tr_labels) =
+        datasets::textures32(r.n_train, r.seed + 2, r.noise);
+    let q_tr = quantize_inputs(&graph, &tr_imgs);
+    let head = graph.layers.len() - 1;
+    let mut feats: Vec<Vec<i32>> = Vec::with_capacity(q_tr.len());
+    for chunk in q_tr.chunks(r.batch.max(1)) {
+        feats.extend(collect_layer_inputs(chip, &graph, chunk, &shifts,
+                                          head));
+    }
+    fit_cnn_readout(&graph, &mut matrices, &feats, &tr_labels, r.epochs,
+                    r.seed + 7);
+    // swap ONLY the head in place: the conv stack keeps the exact
+    // conductances the shifts and features were measured against (a
+    // full reprogram would re-draw write-verify noise for every layer
+    // and hand the readout a reservoir it was never fitted on)
+    let head_name = &graph.layers[head].name;
+    let trained = matrices
+        .iter()
+        .find(|m| &m.layer == head_name)
+        .expect("trained head in matrices")
+        .clone();
+    chip.reprogram_layer(trained, r.write_verify)
+        .map_err(|e| format!("readout swap: {e}"))?;
+    Ok((graph, shifts))
+}
+
+/// Full recipe: prepare the chip, then run held-out inference and
+/// collect accuracy + per-layer latency reports.
+pub fn run_cifar(chip: &mut NeuRramChip, r: &CifarRecipe)
+                 -> Result<CifarRun, String> {
+    let (graph, shifts) = prepare_cifar_chip(chip, r)?;
+    chip.reset_energy();
+    let (te_imgs, te_labels) =
+        datasets::textures32(r.n_test, r.seed + 3, r.noise);
+    let q_te = quantize_inputs(&graph, &te_imgs);
+    let t0 = std::time::Instant::now();
+    let mut logits = Vec::with_capacity(q_te.len());
+    let mut merged: Vec<(String, ScheduleReport)> = graph
+        .layers
+        .iter()
+        .map(|l| (l.name.clone(), ScheduleReport::default()))
+        .collect();
+    for chunk in q_te.chunks(r.batch.max(1)) {
+        let (outs, reports) =
+            run_cnn_batch_traced(chip, &graph, chunk, &shifts);
+        logits.extend(outs);
+        for ((_, acc), rep) in merged.iter_mut().zip(reports) {
+            acc.serial_ns += rep.serial_ns;
+            acc.makespan_ns += rep.makespan_ns;
+            acc.items += rep.items;
+            if acc.first_item_ns == 0.0 {
+                acc.first_item_ns = rep.first_item_ns;
+                acc.replica_load = rep.replica_load;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let accuracy = metrics::accuracy(&logits, &te_labels);
+    Ok(CifarRun {
+        graph,
+        shifts,
+        accuracy,
+        stage_reports: merged,
+        images_per_s: r.n_test as f64 / wall.max(1e-9),
+        n_test: r.n_test,
+    })
+}

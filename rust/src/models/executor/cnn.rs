@@ -1,9 +1,24 @@
 //! Feed-forward (CNN) executor: drives a `NeuRramChip` through
 //! whole-model inference (im2col convolutions, pooling, requantization
 //! between layers), mirroring the integer pipeline of
-//! `python/compile/model.py::chip_forward`.
+//! `python/compile/model.py::chip_forward` -- plus residual skip
+//! connections for the ResNet-shaped CIFAR model.
+//!
+//! Residual blocks: a layer with `res_open` snapshots its INPUT feature
+//! maps as the block's tap; the matching `res_close` layer adds the tap
+//! to its requantized integer output (both sides live in the next
+//! layer's unsigned activation domain, so the add is a plain saturating
+//! integer add).  At stage entries the block pools and doubles the
+//! channels, so the tap is spatially max-pooled by the dim ratio (the
+//! same pooling the conv path uses) and zero-padded in channels -- the
+//! classic option-A shortcut adapted to this pooled integer pipeline.
+//! The block's ReLU runs before requantization as in every other layer,
+//! i.e. `relu(conv2(..)) + tap` (post-activation residual): with the
+//! readout trained on chip-measured features this choice is absorbed by
+//! calibration.
 
 use super::linear_mvm_cfg;
+use crate::coordinator::scheduler::ScheduleReport;
 use crate::coordinator::{NeuRramChip, ReplicaBatch};
 use crate::core_sim::Activation;
 use crate::models::graph::{LayerKind, ModelGraph};
@@ -72,83 +87,149 @@ fn maxpool2(vals: &[f64], h: usize, w: usize, c: usize, k: usize)
     (out, nh, nw)
 }
 
-/// Execute a CNN graph on the chip for one image.
-///
-/// `img_q` is the input image quantized to the first layer's unsigned
-/// input range, channel-last.  `shifts[i]` is layer i's calibrated
-/// requantization shift.  Returns the logits (de-normalized floats).
-///
-/// Thin wrapper over [`run_cnn_batch`] with a batch of one.
-pub fn run_cnn(
-    chip: &mut NeuRramChip,
-    graph: &ModelGraph,
-    img_q: &[i32],
-    shifts: &[f64],
-) -> Vec<f64> {
-    run_cnn_batch(chip, graph, &[img_q.to_vec()], shifts)
-        .pop()
-        .expect("one logit vector per image")
+/// Add a residual tap to a block's requantized integer output: spatial
+/// maxpool by the dim ratio, channel zero-pad, saturating add at `cap`
+/// (the next layer's unsigned activation ceiling).
+fn add_residual_skip(next: &mut FeatureMap, tap: &FeatureMap, cap: i32) {
+    let k = if next.h > 0 { (tap.h / next.h).max(1) } else { 1 };
+    for y in 0..next.h {
+        for x in 0..next.w {
+            for ch in 0..tap.c.min(next.c) {
+                let mut m = 0i32;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        let (yy, xx) = (y * k + dy, x * k + dx);
+                        if yy < tap.h && xx < tap.w {
+                            m = m.max(tap.data[(yy * tap.w + xx) * tap.c
+                                + ch]);
+                        }
+                    }
+                }
+                let o = &mut next.data[(y * next.w + x) * next.c + ch];
+                *o = (*o + m).min(cap);
+            }
+        }
+    }
 }
 
-/// Execute a CNN graph on the chip for a batch of images.
-///
-/// Every conv layer gathers the im2col patches of ALL images, assigns
-/// each patch its replica by the image-local pixel index (`pixel %
-/// n_rep`, exactly the per-image round-robin the serial path used, so
-/// write-verified replicas see the same items), and dispatches one
-/// `NeuRramChip::mvm_layer_batch` call per replica.  The dense head runs
-/// as one batch over the images.  Outputs are identical to calling
-/// [`run_cnn`] image by image.
-pub fn run_cnn_batch(
+/// Quantize [0,1] float images to the first layer's unsigned input
+/// range (channel-last, matching [`FeatureMap`]).  The ONE quantization
+/// convention shared by inference, calibration and the workload
+/// recipes, so probe images can never be quantized differently from
+/// the images inference sees.
+pub fn quantize_inputs(graph: &ModelGraph, imgs: &[Vec<f32>])
+                       -> Vec<Vec<i32>> {
+    let in_bits = graph.layers[0].input_bits - 1;
+    imgs.iter()
+        .map(|img| {
+            img.iter()
+                .map(|&p| {
+                    crate::models::quant::quantize_unit_unsigned(p, in_bits)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Forward state threaded through the layer loop.
+struct CnnState {
+    fms: Vec<FeatureMap>,
+    /// Residual tap (one map per image) between res_open and res_close.
+    tap: Option<Vec<FeatureMap>>,
+    /// One latency report per executed layer (graph order).
+    reports: Vec<ScheduleReport>,
+}
+
+fn init_state(graph: &ModelGraph, imgs_q: &[Vec<i32>]) -> CnnState {
+    CnnState {
+        fms: imgs_q
+            .iter()
+            .map(|img| FeatureMap {
+                h: graph.input_hw,
+                w: graph.input_hw,
+                c: graph.input_ch,
+                data: img.clone(),
+            })
+            .collect(),
+        tap: None,
+        reports: Vec::new(),
+    }
+}
+
+/// The inputs layer `li` would consume from the current state: im2col
+/// patches for a conv layer (all images, image-major), flattened
+/// feature maps for a dense layer.
+fn layer_inputs_from(st: &CnnState, graph: &ModelGraph, li: usize)
+                     -> Vec<Vec<i32>> {
+    let layer = &graph.layers[li];
+    if layer.kind == LayerKind::Conv {
+        let mut patches = Vec::new();
+        for fm in &st.fms {
+            for y in 0..fm.h {
+                for x in 0..fm.w {
+                    patches.push(extract_patch(fm, y, x, layer.kh,
+                                               layer.kw));
+                }
+            }
+        }
+        patches
+    } else {
+        st.fms.iter().map(|f| f.data.clone()).collect()
+    }
+}
+
+/// Run layers `[0, upto)` of the graph on the chip (conv layers and
+/// non-final dense layers), returning the feature maps entering layer
+/// `upto` plus per-layer latency reports.
+fn forward_layers(
     chip: &mut NeuRramChip,
     graph: &ModelGraph,
     imgs_q: &[Vec<i32>],
     shifts: &[f64],
-) -> Vec<Vec<f64>> {
-    assert_eq!(shifts.len(), graph.layers.len());
-    if imgs_q.is_empty() {
-        return Vec::new();
+    upto: usize,
+) -> CnnState {
+    let mut st = init_state(graph, imgs_q);
+    for li in 0..upto {
+        step_layer(chip, graph, &mut st, li, shifts[li]);
     }
-    let n_img = imgs_q.len();
-    let mut fms: Vec<FeatureMap> = imgs_q
-        .iter()
-        .map(|img| FeatureMap {
-            h: graph.input_hw,
-            w: graph.input_hw,
-            c: graph.input_ch,
-            data: img.clone(),
-        })
-        .collect();
+    st
+}
 
-    for (li, layer) in graph.layers.iter().enumerate() {
+/// Execute ONE non-final layer, advancing the state in place
+/// (`shift` is that layer's requantization shift).
+fn step_layer(
+    chip: &mut NeuRramChip,
+    graph: &ModelGraph,
+    st: &mut CnnState,
+    li: usize,
+    shift: f64,
+) {
+    let n_img = st.fms.len();
+    {
+        let layer = &graph.layers[li];
         // MVMs always run linear ADC (see `linear_mvm_cfg`): a layer
         // split over row segments accumulates de-normalized partials, so
         // the nonlinearity must be applied digitally after accumulation
         // (mirrors cim_linear, which only folds the activation when a
         // layer fits a single segment).
         let cfg = linear_mvm_cfg(layer);
-        let last = li == graph.layers.len() - 1;
-        let next_bits = if last { 0 } else { graph.layers[li + 1].input_bits };
+        assert!(li + 1 < graph.layers.len(),
+                "step_layer only runs non-final layers");
+        let next_bits = graph.layers[li + 1].input_bits;
 
         match layer.kind {
             LayerKind::Conv => {
-                let (h, w) = (fms[0].h, fms[0].w);
+                if layer.res_open {
+                    st.tap = Some(st.fms.clone());
+                }
+                let (h, w) = (st.fms[0].h, st.fms[0].w);
                 let px = h * w;
                 let oc = layer.out_features;
                 let n_rep = chip.plan.replica_count(&layer.name).max(1);
 
-                // gather the im2col patches of every image, image-major
-                let mut patches: Vec<Vec<i32>> =
-                    Vec::with_capacity(n_img * px);
-                for fm in &fms {
-                    for y in 0..h {
-                        for x in 0..w {
-                            patches.push(
-                                extract_patch(fm, y, x, layer.kh, layer.kw),
-                            );
-                        }
-                    }
-                }
+                // im2col patches of every image, image-major -- the ONE
+                // input-gather calibration probes ride too
+                let patches = layer_inputs_from(st, graph, li);
 
                 // all replica slices in ONE multi-dispatch, so replicas
                 // execute on concurrent worker threads (image-local
@@ -175,14 +256,38 @@ pub fn run_cnn_batch(
                 }
                 let results =
                     chip.mvm_layer_batch_multi(&layer.name, &dispatches, &cfg);
-                for (idxs, (outs, _)) in rep_idxs.iter().zip(results) {
-                    for (k, out) in outs.into_iter().enumerate() {
+
+                // latency bookkeeping mirrors Scheduler::run_layer_batch
+                let mut serial = 0.0f64;
+                let mut first_item_ns = 0.0f64;
+                let mut rep_busy = Vec::with_capacity(results.len());
+                let mut rep_items = Vec::with_capacity(results.len());
+                for (di, (idxs, (outs, item_ns))) in
+                    rep_idxs.iter().zip(&results).enumerate()
+                {
+                    let busy: f64 = item_ns.iter().sum();
+                    serial += busy;
+                    rep_busy.push(busy);
+                    rep_items.push(idxs.len());
+                    if di == 0 {
+                        // image 0, pixel 0 always lands on replica 0
+                        first_item_ns = item_ns[0];
+                    }
+                    for (k, out) in outs.iter().enumerate() {
                         let p = idxs[k];
                         for (ch, v) in out.iter().enumerate() {
                             vals[p * oc + ch] = *v;
                         }
                     }
                 }
+                st.reports.push(ScheduleReport {
+                    serial_ns: serial,
+                    makespan_ns: rep_busy.iter().cloned()
+                        .fold(0.0f64, f64::max),
+                    items: n_img * px,
+                    first_item_ns,
+                    replica_load: vec![(layer.name.clone(), rep_items)],
+                });
 
                 // activation is folded in the neuron when the layer fits a
                 // single segment; a split layer accumulates linear
@@ -195,7 +300,7 @@ pub fn run_cnn_batch(
                         }
                     }
                 }
-                for (i, fm_next) in fms.iter_mut().enumerate() {
+                for (i, fm_next) in st.fms.iter_mut().enumerate() {
                     let img_vals = &vals[i * px * oc..(i + 1) * px * oc];
                     let (pooled, nh, nw) =
                         maxpool2(img_vals, h, w, oc, layer.pool);
@@ -203,35 +308,162 @@ pub fn run_cnn_batch(
                     for (o, v) in next.data.iter_mut().zip(&pooled) {
                         // unsigned activation in the positive half of the
                         // next layer's signed range: clip at 2^(n-1)-1
-                        *o = requantize_unsigned(*v, shifts[li],
-                                                 next_bits - 1);
+                        *o = requantize_unsigned(*v, shift, next_bits - 1);
                     }
                     *fm_next = next;
                 }
+                if layer.res_close {
+                    if let Some(taps) = st.tap.take() {
+                        let cap = (1i32 << (next_bits - 1)) - 1;
+                        for (fm, tap) in st.fms.iter_mut().zip(&taps) {
+                            add_residual_skip(fm, tap, cap);
+                        }
+                    }
+                }
             }
             _ => {
-                // dense head: one batch over all images
+                // non-final dense layer: one batch over all images
                 let refs: Vec<&[i32]> =
-                    fms.iter().map(|f| f.data.as_slice()).collect();
-                let (outs, _) =
+                    st.fms.iter().map(|f| f.data.as_slice()).collect();
+                let (outs, ns) =
                     chip.mvm_layer_batch(&layer.name, &refs, &cfg, 0);
-                if last {
-                    return outs;
-                }
-                for (fm, out) in fms.iter_mut().zip(outs) {
+                st.reports.push(dense_report(&layer.name, &ns));
+                for (fm, out) in st.fms.iter_mut().zip(outs) {
                     let mut next = FeatureMap::new(1, 1, layer.out_features);
                     for (o, v) in next.data.iter_mut().zip(&out) {
-                        *o = requantize_unsigned(*v, shifts[li],
-                                                 next_bits - 1);
+                        *o = requantize_unsigned(*v, shift, next_bits - 1);
                     }
                     *fm = next;
                 }
             }
         }
     }
-    fms.iter()
-        .map(|fm| fm.data.iter().map(|&v| v as f64).collect())
-        .collect()
+}
+
+fn dense_report(layer: &str, item_ns: &[f64]) -> ScheduleReport {
+    let serial: f64 = item_ns.iter().sum();
+    ScheduleReport {
+        serial_ns: serial,
+        // single replica: the items run back to back on one chain
+        makespan_ns: serial,
+        items: item_ns.len(),
+        first_item_ns: item_ns.first().copied().unwrap_or(0.0),
+        replica_load: vec![(layer.to_string(), vec![item_ns.len()])],
+    }
+}
+
+/// The inputs entering layer `upto` after running layers `[0, upto)` on
+/// the chip: im2col patches for a conv layer (all images, image-major),
+/// flattened feature maps for a dense layer.  This is the calibration
+/// probe path -- it rides the REAL executor (residual skips included),
+/// so shifts are calibrated against exactly the features inference sees.
+pub fn collect_layer_inputs(
+    chip: &mut NeuRramChip,
+    graph: &ModelGraph,
+    imgs_q: &[Vec<i32>],
+    shifts: &[f64],
+    upto: usize,
+) -> Vec<Vec<i32>> {
+    let st = forward_layers(chip, graph, imgs_q, shifts, upto);
+    layer_inputs_from(&st, graph, upto)
+}
+
+/// Progressive shift calibration driver: ONE forward walk of the graph.
+/// At each non-final layer, `pick(chip, li, inputs)` sees the inputs
+/// entering layer `li` (computed with the shifts chosen so far) and
+/// returns that layer's shift; the state then advances one layer with
+/// it.  Replaces re-running the whole prefix per layer -- O(L) layer
+/// executions instead of O(L^2) over a 20-layer ResNet.
+pub fn calibrate_shifts_progressive(
+    chip: &mut NeuRramChip,
+    graph: &ModelGraph,
+    imgs_q: &[Vec<i32>],
+    mut pick: impl FnMut(&mut NeuRramChip, usize, Vec<Vec<i32>>) -> f64,
+) -> Vec<f64> {
+    let mut shifts = vec![0.0f64; graph.layers.len()];
+    if imgs_q.is_empty() {
+        // no probes: all-zero shifts (same contract as an empty batch
+        // elsewhere in the executor -- do not drive the chip)
+        return shifts;
+    }
+    let mut st = init_state(graph, imgs_q);
+    for li in 0..graph.layers.len().saturating_sub(1) {
+        let inputs = layer_inputs_from(&st, graph, li);
+        shifts[li] = pick(chip, li, inputs);
+        step_layer(chip, graph, &mut st, li, shifts[li]);
+    }
+    shifts
+}
+
+/// Execute a CNN graph on the chip for one image.
+///
+/// `img_q` is the input image quantized to the first layer's unsigned
+/// input range, channel-last.  `shifts[i]` is layer i's calibrated
+/// requantization shift.  Returns the logits (de-normalized floats).
+///
+/// Thin wrapper over [`run_cnn_batch`] with a batch of one.
+pub fn run_cnn(
+    chip: &mut NeuRramChip,
+    graph: &ModelGraph,
+    img_q: &[i32],
+    shifts: &[f64],
+) -> Vec<f64> {
+    run_cnn_batch(chip, graph, &[img_q.to_vec()], shifts)
+        .pop()
+        .expect("one logit vector per image")
+}
+
+/// Execute a CNN graph on the chip for a batch of images (logits only).
+///
+/// Thin wrapper over [`run_cnn_batch_traced`], discarding the latency
+/// reports.
+pub fn run_cnn_batch(
+    chip: &mut NeuRramChip,
+    graph: &ModelGraph,
+    imgs_q: &[Vec<i32>],
+    shifts: &[f64],
+) -> Vec<Vec<f64>> {
+    run_cnn_batch_traced(chip, graph, imgs_q, shifts).0
+}
+
+/// Execute a CNN graph on the chip for a batch of images, returning the
+/// logits plus one latency [`ScheduleReport`] per layer (graph order) --
+/// the per-stage inputs of `Scheduler::pipeline_makespan` /
+/// `pipeline_makespan_planned`.
+///
+/// Every conv layer gathers the im2col patches of ALL images, assigns
+/// each patch its replica by the image-local pixel index (`pixel %
+/// n_rep`, exactly the per-image round-robin the serial path used, so
+/// write-verified replicas see the same items), and dispatches one
+/// `NeuRramChip::mvm_layer_batch_multi` call.  The dense head runs as
+/// one batch over the images.  Outputs are identical to calling
+/// [`run_cnn`] image by image.
+pub fn run_cnn_batch_traced(
+    chip: &mut NeuRramChip,
+    graph: &ModelGraph,
+    imgs_q: &[Vec<i32>],
+    shifts: &[f64],
+) -> (Vec<Vec<f64>>, Vec<ScheduleReport>) {
+    assert_eq!(shifts.len(), graph.layers.len());
+    if imgs_q.is_empty() {
+        return (Vec::new(), Vec::new());
+    }
+    let last = graph
+        .layers
+        .last()
+        .expect("non-empty graph");
+    assert!(last.kind != LayerKind::Conv,
+            "CNN graphs must end in a dense readout head");
+    let n_last = graph.layers.len() - 1;
+    let mut st = forward_layers(chip, graph, imgs_q, shifts, n_last);
+
+    // final dense head: logits, no requantization
+    let cfg = linear_mvm_cfg(last);
+    let refs: Vec<&[i32]> =
+        st.fms.iter().map(|f| f.data.as_slice()).collect();
+    let (outs, ns) = chip.mvm_layer_batch(&last.name, &refs, &cfg, 0);
+    st.reports.push(dense_report(&last.name, &ns));
+    (outs, st.reports)
 }
 
 #[cfg(test)]
@@ -268,5 +500,47 @@ mod tests {
         let (out, h, w) = maxpool2(&vals, 2, 2, 1, 2);
         assert_eq!((h, w), (1, 1));
         assert_eq!(out, vec![4.0]);
+    }
+
+    #[test]
+    fn residual_skip_identity_add_saturates() {
+        // same geometry: plain per-element saturating add
+        let mut next = FeatureMap::new(2, 2, 1);
+        next.data = vec![1, 2, 3, 7];
+        let mut tap = FeatureMap::new(2, 2, 1);
+        tap.data = vec![4, 0, 7, 7];
+        add_residual_skip(&mut next, &tap, 7);
+        assert_eq!(next.data, vec![5, 2, 7, 7]);
+    }
+
+    #[test]
+    fn residual_skip_downsamples_and_zero_pads_channels() {
+        // tap 4x4x1 -> output 2x2x2: maxpool the tap spatially, add to
+        // channel 0 only (channel 1 is the zero-padded half)
+        let mut next = FeatureMap::new(2, 2, 2);
+        next.data = vec![1, 1, 1, 1, 1, 1, 1, 1];
+        let mut tap = FeatureMap::new(4, 4, 1);
+        for (i, v) in tap.data.iter_mut().enumerate() {
+            *v = i as i32 % 5;
+        }
+        add_residual_skip(&mut next, &tap, 7);
+        // channel 1 untouched everywhere
+        for px in 0..4 {
+            assert_eq!(next.data[px * 2 + 1], 1, "pixel {px} channel 1");
+        }
+        // channel 0 got the 2x2 max of the tap quadrant
+        let quad_max = |y0: usize, x0: usize| {
+            let mut m = 0;
+            for dy in 0..2 {
+                for dx in 0..2 {
+                    m = m.max(tap.data[(y0 + dy) * 4 + x0 + dx]);
+                }
+            }
+            m
+        };
+        assert_eq!(next.data[0], (1 + quad_max(0, 0)).min(7));
+        assert_eq!(next.data[2], (1 + quad_max(0, 2)).min(7));
+        assert_eq!(next.data[4], (1 + quad_max(2, 0)).min(7));
+        assert_eq!(next.data[6], (1 + quad_max(2, 2)).min(7));
     }
 }

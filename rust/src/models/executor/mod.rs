@@ -21,7 +21,9 @@ pub mod cnn;
 pub mod recurrent;
 pub mod sampler;
 
-pub use cnn::{extract_patch, run_cnn, run_cnn_batch, FeatureMap};
+pub use cnn::{calibrate_shifts_progressive, collect_layer_inputs,
+              extract_patch, quantize_inputs, run_cnn, run_cnn_batch,
+              run_cnn_batch_traced, FeatureMap};
 pub use recurrent::{LstmCalib, LstmExecutor, LstmSpec};
 pub use sampler::{recover_images, GibbsConfig, RecoveryReport};
 

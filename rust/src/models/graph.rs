@@ -37,6 +37,14 @@ pub struct LayerSpec {
     pub pool: usize,
     /// Relative compute intensity (MACs per weight); drives duplication.
     pub intensity: f64,
+    /// Residual block entry: the executor snapshots this layer's INPUT
+    /// feature map as the skip tap.
+    pub res_open: bool,
+    /// Residual block exit: the saved tap is added to this layer's
+    /// requantized output (downsampled spatially / zero-padded in
+    /// channels when the block changed the geometry -- the option-A
+    /// shortcut adapted to the pooled integer pipeline).
+    pub res_close: bool,
 }
 
 impl LayerSpec {
@@ -57,6 +65,8 @@ impl LayerSpec {
             out_channels: 0,
             pool: 1,
             intensity: 1.0,
+            res_open: false,
+            res_close: false,
         }
     }
 
@@ -84,6 +94,8 @@ impl LayerSpec {
             out_channels: out_ch,
             pool,
             intensity: 1.0,
+            res_open: false,
+            res_close: false,
         }
     }
 

@@ -4,6 +4,7 @@
 //! npz-exported weights load cleanly).
 
 pub mod builtin;
+pub mod cifar;
 pub mod conductance;
 pub mod graph;
 pub mod quant;

@@ -132,6 +132,38 @@ pub fn fit_lstm_readouts(
     }
 }
 
+/// Fit the CNN's dense readout head on chip-measured feature vectors
+/// (the integer feature maps entering the head) and swap the recompiled
+/// matrix into `matrices`, ready for reprogramming.  Shared by
+/// `infer-cifar` and the `fig1g_cifar` bench (same recipe discipline as
+/// [`fit_lstm_readouts`]: the figure can never drift from the CLI).
+pub fn fit_cnn_readout(
+    graph: &ModelGraph,
+    matrices: &mut [ConductanceMatrix],
+    feats: &[Vec<i32>],
+    labels: &[usize],
+    epochs: usize,
+    seed: u64,
+) {
+    let spec = graph.layers.last().expect("readout head");
+    let (w, b) = train_softmax_readout(feats, labels, graph.n_classes,
+                                       epochs, 0.05, 1e-4, seed);
+    let slot = matrices
+        .iter_mut()
+        .find(|m| m.layer == spec.name)
+        .expect("readout slot in matrices");
+    // pin the bias-row count to the mapped matrix: the head is swapped
+    // in place (`reprogram_layer`), so a free-floating bias-row choice
+    // would change the row count and no longer fit the mapped window --
+    // an outsized trained bias is clamped into the weight range instead
+    // of silently dropping its extra row
+    let compiled = ConductanceMatrix::compile(
+        &spec.name, &w, Some(&b), spec.in_features, spec.out_features,
+        spec.in_mag_max(), spec.g_max_us, 1.0, Some(slot.n_bias_rows),
+    );
+    *slot = compiled;
+}
+
 /// A trained RBM: weights `[n_visible x n_hidden]` row-major plus the
 /// visible / hidden biases.
 #[derive(Clone, Debug)]
@@ -376,6 +408,33 @@ mod tests {
             }
         }
         assert!(correct >= 55, "only {correct}/60 correct");
+    }
+
+    #[test]
+    fn cnn_readout_keeps_mapped_shape() {
+        // the trained head is swapped in place (reprogram_layer), so
+        // the recompiled matrix must keep the mapped bias-row count
+        // even when the trained bias grows large relative to the
+        // weights -- the extra bias is clamped, not given a new row
+        use crate::models::builtin::cifar_resnet;
+        use crate::models::loader::compile_random;
+        let graph = cifar_resnet(8, 1);
+        let mut matrices = compile_random(&graph, 3);
+        let head = graph.layers.last().unwrap();
+        let (rows_before, nb_before) = {
+            let m = matrices.iter().find(|m| m.layer == head.name).unwrap();
+            (m.rows, m.n_bias_rows)
+        };
+        // strongly class-imbalanced labels drive a large bias
+        let feats: Vec<Vec<i32>> = (0..12)
+            .map(|i| vec![(i % 8) as i32; head.in_features])
+            .collect();
+        let labels: Vec<usize> =
+            (0..12).map(|i| if i % 4 == 0 { 1 } else { 0 }).collect();
+        fit_cnn_readout(&graph, &mut matrices, &feats, &labels, 10, 5);
+        let after = matrices.iter().find(|m| m.layer == head.name).unwrap();
+        assert_eq!(after.rows, rows_before, "row count drifted");
+        assert_eq!(after.n_bias_rows, nb_before, "bias rows drifted");
     }
 
     #[test]
