@@ -9,6 +9,7 @@ use neurram::core_sim::{CimCore, MvmDirection, NeuronConfig};
 use neurram::device::DeviceParams;
 use neurram::energy::{EnergyModel, EnergyParams};
 use neurram::util::bench::{section, table};
+use neurram::coordinator::PAPER_CORES;
 use neurram::util::rng::Rng;
 
 fn gaussian_core(seed: u64) -> CimCore {
@@ -130,7 +131,7 @@ fn main() {
         rows.push(vec![
             format!("{ib}b/{ob}b"),
             format!("{:.2}", c.gops()),
-            format!("{:.2}", c.gops() * 48.0), // 48-core chip
+            format!("{:.2}", c.gops() * PAPER_CORES as f64), // full-chip scale-out
             format!("{:.1}", c.tops_per_watt()),
         ]);
     }

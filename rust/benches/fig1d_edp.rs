@@ -11,7 +11,7 @@
 use neurram::core_sim::current_mode::{CurrentModeConfig, CurrentModeCore};
 use neurram::core_sim::NeuronConfig;
 use neurram::coordinator::mapping::MappingStrategy;
-use neurram::coordinator::NeuRramChip;
+use neurram::coordinator::{NeuRramChip, PAPER_CORES};
 use neurram::energy::{EnergyParams, MvmCost};
 use neurram::models::ConductanceMatrix;
 use neurram::util::bench::{section, table};
@@ -24,7 +24,7 @@ fn neurram_point(in_bits: u32, out_bits: u32, mvms: usize) -> MvmCost {
     let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
     let m = ConductanceMatrix::compile("w", &w, None, rows, cols, 7, 40.0,
                                        1.0, None);
-    let mut chip = NeuRramChip::with_cores(48, 8);
+    let mut chip = NeuRramChip::with_cores(PAPER_CORES, 8);
     chip.program_model(vec![m], &[1.0], MappingStrategy::Simple, false)
         .unwrap();
     let cfg = NeuronConfig { input_bits: in_bits, output_bits: out_bits,

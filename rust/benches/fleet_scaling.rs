@@ -1,0 +1,119 @@
+//! Fleet-scaling bench: modelled serving throughput vs chip count, plus
+//! a batch-policy sweep -- the perf-trajectory record of the multi-chip
+//! serving runtime.  Emits `BENCH_fleet.json`.
+//!
+//!   cargo bench --bench fleet_scaling            # full sweep
+//!   cargo bench --bench fleet_scaling -- --quick # CI smoke + JSON
+//!
+//! Section 1 replicates the MNIST workload data-parallel over 1..=N
+//! chips and serves the SAME closed-loop burst trace against each fleet
+//! size; requests/s (modelled) must increase STRICTLY with the chip
+//! count -- the bench asserts it, so a routing or replication
+//! regression fails CI instead of shipping a flat curve.  Section 2
+//! sweeps the batcher's max-batch/max-wait policy at a fixed fleet and
+//! records the latency/throughput trade.  All numbers are virtual-time
+//! (modelled chip ns): bitwise reproducible on any host at any
+//! `NEURRAM_THREADS`.
+
+use neurram::coordinator::PAPER_CORES;
+use neurram::fleet::router::presets;
+use neurram::fleet::BatchPolicy;
+use neurram::util::benchjson::BenchJson;
+
+fn serve_mnist(chips: usize, requests: usize, policy: &BatchPolicy,
+               seed: u64) -> neurram::fleet::ServeReport {
+    let mix = presets::parse_mix("mnist").expect("static mix");
+    let mut sf = presets::build_serving_fleet(chips, PAPER_CORES, &mix,
+                                              seed, true)
+        .expect("mnist fleet builds");
+    let trace = presets::request_trace(&sf.workloads, &mix, requests, 0,
+                                       seed)
+        .expect("trace builds");
+    let (_, rep) = sf
+        .fleet
+        .serve(&sf.workloads, &trace, policy)
+        .expect("serve succeeds");
+    rep
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut record = BenchJson::new("fleet_scaling");
+    record.text("mode", if quick { "quick" } else { "full" });
+    let seed = 7u64;
+    let requests = if quick { 32 } else { 96 };
+    let chip_counts: &[usize] =
+        if quick { &[1, 2] } else { &[1, 2, 3, 4] };
+
+    println!("== fleet scaling: data-parallel MNIST, closed-loop burst of \
+              {requests} requests ==");
+    let policy = BatchPolicy::default();
+    let mut req_s = Vec::new();
+    let mut p50 = Vec::new();
+    let mut p99 = Vec::new();
+    for &n in chip_counts {
+        let rep = serve_mnist(n, requests, &policy, seed);
+        println!(
+            "  {n} chip(s): {:>9.1} requests/s modelled, p50 {:.3} ms, \
+             p99 {:.3} ms, {} batches over {} group(s)",
+            rep.requests_per_s,
+            rep.p50_latency_ns / 1e6,
+            rep.p99_latency_ns / 1e6,
+            rep.batches,
+            rep.fleet.groups
+        );
+        req_s.push(rep.requests_per_s);
+        p50.push(rep.p50_latency_ns);
+        p99.push(rep.p99_latency_ns);
+    }
+    record.nums("chips", &chip_counts.iter().map(|&c| c as f64)
+        .collect::<Vec<_>>());
+    record.nums("requests_per_s", &req_s);
+    record.nums("p50_latency_ns", &p50);
+    record.nums("p99_latency_ns", &p99);
+    // the acceptance gate: adding chips to a replicated model MUST buy
+    // throughput on a saturating trace
+    for w in req_s.windows(2) {
+        assert!(
+            w[1] > w[0],
+            "requests/s must increase strictly with chip count: {req_s:?}"
+        );
+    }
+    println!("  throughput strictly increasing across {chip_counts:?} \
+              chips: OK");
+    record.num("scaling_1_to_2", req_s[1] / req_s[0]);
+
+    println!("== batch-policy sweep: 2 chips, {requests} requests ==");
+    let mut pol_batch = Vec::new();
+    let mut pol_wait = Vec::new();
+    let mut pol_req_s = Vec::new();
+    let mut pol_p99 = Vec::new();
+    let waits_us: &[u64] = if quick { &[200] } else { &[50, 500] };
+    for &max_batch in &[1usize, 4, 8] {
+        for &wait_us in waits_us {
+            let p = BatchPolicy {
+                max_batch,
+                max_wait_ns: wait_us * 1000,
+            };
+            let rep = serve_mnist(2, requests, &p, seed);
+            println!(
+                "  max-batch {max_batch:>2}, max-wait {wait_us:>4} us: \
+                 {:>9.1} requests/s, p99 {:.3} ms",
+                rep.requests_per_s,
+                rep.p99_latency_ns / 1e6
+            );
+            pol_batch.push(max_batch as f64);
+            pol_wait.push(wait_us as f64);
+            pol_req_s.push(rep.requests_per_s);
+            pol_p99.push(rep.p99_latency_ns);
+        }
+    }
+    record.nums("policy_max_batch", &pol_batch);
+    record.nums("policy_max_wait_us", &pol_wait);
+    record.nums("policy_requests_per_s", &pol_req_s);
+    record.nums("policy_p99_latency_ns", &pol_p99);
+
+    record
+        .write("BENCH_fleet.json")
+        .expect("write BENCH_fleet.json");
+}

@@ -14,7 +14,7 @@
 //!   cargo bench --bench hotpath_micro -- --quick # CI smoke + JSON
 
 use neurram::coordinator::mapping::MappingStrategy;
-use neurram::coordinator::NeuRramChip;
+use neurram::coordinator::{NeuRramChip, PAPER_CORES};
 use neurram::core_sim::{neuron, CimCore, Crossbar, MvmDirection, NeuronConfig};
 use neurram::device::DeviceParams;
 use neurram::io::npz::Tensor;
@@ -118,7 +118,7 @@ fn main() {
     let w: Vec<f32> = (0..big_rows * 1024).map(|_| rng.normal() as f32).collect();
     let m = ConductanceMatrix::compile("w", &w, None, big_rows, 1024, 7, 40.0,
                                        1.0, None);
-    let mut chip = NeuRramChip::with_cores(48, 5);
+    let mut chip = NeuRramChip::with_cores(PAPER_CORES, 5);
     chip.threads = 1; // the serial oracle; the scaling section sweeps this
     chip.program_model(vec![m], &[1.0], MappingStrategy::Simple, false)
         .unwrap();

@@ -11,7 +11,7 @@
 //!     neuron-testing mode and record the code at zero input, to be
 //!     subtracted during inference (non-ideality (vii)).
 
-use crate::coordinator::NeuRramChip;
+use crate::coordinator::{DispatchTarget, NeuRramChip};
 use crate::core_sim::NeuronConfig;
 use crate::models::quant::calibrate_shift;
 use crate::util::stats::percentile;
@@ -26,8 +26,8 @@ pub struct CalibReport {
 
 /// Calibrate one layer's requantization shift from measured outputs on a
 /// set of probe inputs (which should come from training data).
-pub fn calibrate_layer_shift(
-    chip: &mut NeuRramChip,
+pub fn calibrate_layer_shift<T: DispatchTarget>(
+    chip: &mut T,
     layer: &str,
     probes: &[Vec<i32>],
     cfg: &NeuronConfig,
@@ -77,8 +77,8 @@ pub fn measure_adc_offsets(chip: &NeuRramChip, core: usize,
 /// so far), so residual skip connections and every other executor
 /// detail shape the calibration features exactly as they shape
 /// inference, at O(L) layer executions instead of O(L^2).
-pub fn calibrate_cnn_shifts(
-    chip: &mut NeuRramChip,
+pub fn calibrate_cnn_shifts<T: DispatchTarget>(
+    chip: &mut T,
     graph: &crate::models::ModelGraph,
     probe_imgs: &[Vec<f32>],
 ) -> Vec<f64> {
@@ -109,8 +109,8 @@ pub fn calibrate_cnn_shifts(
 /// `upto` (legacy per-image probe collection; residual skips are NOT
 /// modelled here -- `executor::cnn::calibrate_shifts_progressive` is
 /// the executor-faithful path the CNN calibration uses).
-pub fn forward_collect_patches(
-    chip: &mut NeuRramChip,
+pub fn forward_collect_patches<T: DispatchTarget>(
+    chip: &mut T,
     graph: &crate::models::ModelGraph,
     img_q: &[i32],
     shifts: &[f64],

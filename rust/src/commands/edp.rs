@@ -6,7 +6,7 @@
 
 use anyhow::Result;
 use neurram::coordinator::mapping::MappingStrategy;
-use neurram::coordinator::NeuRramChip;
+use neurram::coordinator::{NeuRramChip, PAPER_CORES};
 use neurram::core_sim::NeuronConfig;
 use neurram::energy::{EnergyParams, MvmCost};
 use neurram::models::ConductanceMatrix;
@@ -25,7 +25,7 @@ pub fn edp_point(in_bits: u32, out_bits: u32, mvms: usize, seed: u64,
     let m = ConductanceMatrix::compile("w", &w, None, rows, cols, 7, 40.0,
                                        1.0, None);
     // 8 row segments x 4 col segments = 32 cores in parallel
-    let mut chip = NeuRramChip::with_cores(48, seed + 1);
+    let mut chip = NeuRramChip::with_cores(PAPER_CORES, seed + 1);
     if threads > 0 {
         chip.threads = threads;
     }

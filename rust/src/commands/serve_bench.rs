@@ -1,0 +1,112 @@
+//! `neurram serve-bench`: multi-chip fleet load generator.
+//!
+//! Programs a fleet of paper-geometry (48-core) chips with the
+//! requested workload mix (data-parallel replication; model-parallel
+//! sharding kicks in automatically for models too big for one chip),
+//! generates a deterministic request trace, serves it through the
+//! batcher + least-loaded router, and reports modelled p50/p99 latency
+//! and requests/s.  This is a LOAD generator: weights are random-init,
+//! so throughput/latency are meaningful and logits are not.
+//!
+//!   neurram serve-bench --chips 4 --requests 128 \
+//!       --mix mnist=4:cifar=1:speech=2 --max-batch 8 --max-wait-us 200
+//!
+//! `--interval-us 0` (default) is the closed-loop saturation trace:
+//! every request arrives at t = 0, so requests/s measures fleet
+//! capacity and must scale with `--chips` on a replicated mix.
+//! `--quick` is the CI smoke preset (2 chips, 24 requests, width-8
+//! CIFAR).  All serving time is VIRTUAL (modelled chip ns), so the
+//! numbers are bitwise reproducible on any host at any thread count;
+//! wall-clock is printed separately.
+
+use anyhow::Result;
+use neurram::coordinator::PAPER_CORES;
+use neurram::fleet::router::presets;
+use neurram::fleet::BatchPolicy;
+use neurram::util::cli::Args;
+
+pub fn run(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let chips = args.usize_or("chips", 2).max(1);
+    let requests = args.usize_or("requests", if quick { 24 } else { 96 });
+    let mix_spec = args.get_or("mix", "mnist:cifar:speech");
+    let seed = args.u64_or("seed", 7);
+    let policy = BatchPolicy {
+        max_batch: args.usize_or("max-batch", 8).max(1),
+        max_wait_ns: args.u64_or("max-wait-us", 200) * 1000,
+    };
+    let interval_ns = args.u64_or("interval-us", 0) * 1000;
+
+    let mix = presets::parse_mix(mix_spec).map_err(anyhow::Error::msg)?;
+    let mut sf = presets::build_serving_fleet(chips, PAPER_CORES, &mix,
+                                              seed, quick)
+        .map_err(anyhow::Error::msg)?;
+    // --threads n overrides NEURRAM_THREADS on every chip; 0/absent
+    // keeps the resolved default (outputs identical either way)
+    match args.usize_or("threads", 0) {
+        0 => {}
+        n => sf.fleet.set_threads(n),
+    }
+    for (name, p) in &sf.placements {
+        println!(
+            "model {name}: {} segment(s)/copy ({} merged), {} chip(s)/copy \
+             x {} data-parallel cop{}",
+            p.segments,
+            p.merged,
+            p.chips_per_copy,
+            p.copies,
+            if p.copies == 1 { "y" } else { "ies" },
+        );
+    }
+
+    let trace = presets::request_trace(&sf.workloads, &mix, requests,
+                                       interval_ns, seed)
+        .map_err(anyhow::Error::msg)?;
+    println!(
+        "serving {requests} request(s) over {} chip(s): mix {mix_spec}, \
+         max-batch {}, max-wait {} us, {}",
+        chips,
+        policy.max_batch,
+        policy.max_wait_ns / 1000,
+        if interval_ns == 0 {
+            "closed-loop burst".to_string()
+        } else {
+            format!("open-loop every {} us", interval_ns / 1000)
+        },
+    );
+
+    let t0 = std::time::Instant::now();
+    let (_responses, rep) = sf
+        .fleet
+        .serve(&sf.workloads, &trace, &policy)
+        .map_err(anyhow::Error::msg)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "served {} request(s) in {} batch(es): {:.1} requests/s modelled \
+         ({:.3} ms fleet span)",
+        rep.requests,
+        rep.batches,
+        rep.requests_per_s,
+        rep.span_ns / 1e6
+    );
+    println!(
+        "latency: p50 {:.3} ms, p99 {:.3} ms (modelled, queue + batch + \
+         chip)",
+        rep.p50_latency_ns / 1e6,
+        rep.p99_latency_ns / 1e6
+    );
+    println!(
+        "fleet overlap: {:.2}x speedup over one-group-at-a-time across \
+         {} group(s) ({:.3} ms busy total)",
+        rep.fleet.speedup(),
+        rep.fleet.groups,
+        rep.busy_ns / 1e6
+    );
+    for (model, counts) in &rep.group_batches {
+        println!("  {model}: batches per replica group {counts:?}");
+    }
+    println!("wall-clock: {wall:.2} s ({:.1} requests/s host throughput)",
+             rep.requests as f64 / wall.max(1e-9));
+    Ok(())
+}

@@ -45,6 +45,12 @@ use crate::models::ConductanceMatrix;
 use crate::util::rng::Rng;
 use crate::NUM_CORES;
 
+/// Core count of the paper's fabricated chip (48 CIM cores).  Benches
+/// and commands that model the real device should request THIS geometry
+/// instead of hard-coding `48` at every call site; a fleet of
+/// paper-geometry chips is `ChipFleet::new(n, PAPER_CORES, seed)`.
+pub const PAPER_CORES: usize = NUM_CORES;
+
 /// One replica's slice of a multi-replica layer dispatch (the scheduler
 /// round-robins a batch over replicas and issues all slices in ONE
 /// [`NeuRramChip::mvm_layer_batch_multi`] call so they can execute on
@@ -73,17 +79,92 @@ struct SegJob {
     out_lo: usize,
 }
 
-/// A finished segment job: de-normalized f64 partial outputs, ready to
-/// be accumulated in placement order on the issuing thread.
-struct SegResult {
-    d: usize,
-    p: usize,
-    out_lo: usize,
-    out_w: usize,
+/// A finished segment job: one placement's de-normalized f64 partial
+/// outputs, ready to be accumulated in placement order on the issuing
+/// thread.
+///
+/// Public because the fleet's model-parallel dispatch
+/// (`crate::fleet::ChipFleet`) gathers partials from EVERY chip hosting
+/// a shard of a layer and folds them in GLOBAL placement order through
+/// the same [`accumulate_forward`] / [`accumulate_backward`] helpers
+/// the chip itself uses -- re-summing each chip's locally-accumulated
+/// outputs would change the f64 addition order and break the bitwise
+/// shard == single-chip contract.
+pub struct PlacementPartials {
+    /// Index into the dispatch list (`ReplicaBatch` order).
+    pub dispatch: usize,
+    /// Placement index in the executing chip's mapping plan (fixes the
+    /// accumulation order; the fleet remaps it into the global plan).
+    pub placement: usize,
+    /// Output offset of this segment's de-normalized partials.
+    pub out_lo: usize,
+    pub out_w: usize,
     /// Row-major `[batch x out_w]` partials (`y * scale` per element).
-    partial: Vec<f64>,
+    pub partial: Vec<f64>,
     /// Per-item latency contribution of this segment (ns).
-    ns: Vec<f64>,
+    pub ns: Vec<f64>,
+}
+
+/// Accumulate forward partials into per-dispatch outputs, in the order
+/// given.  This is THE partial-sum fold: the chip feeds it results
+/// sorted by (dispatch, placement) and the fleet re-sorts by (dispatch,
+/// GLOBAL placement) first, so single-chip and fleet-sharded execution
+/// share one f64 addition order bit for bit.
+pub(crate) fn accumulate_forward(
+    parts: &[PlacementPartials],
+    batch_sizes: &[usize],
+    cols: usize,
+) -> Vec<(Vec<Vec<f64>>, Vec<f64>)> {
+    let mut outs: Vec<(Vec<f64>, Vec<f64>)> = batch_sizes
+        .iter()
+        .map(|&n| (vec![0.0f64; n * cols], vec![0.0f64; n]))
+        .collect();
+    for r in parts {
+        let (out, item_ns) = &mut outs[r.dispatch];
+        for b in 0..item_ns.len() {
+            let yb = &r.partial[b * r.out_w..(b + 1) * r.out_w];
+            for (j, &v) in yb.iter().enumerate() {
+                out[b * cols + r.out_lo + j] += v;
+            }
+            item_ns[b] += r.ns[b];
+        }
+    }
+    outs.into_iter()
+        .map(|(out, item_ns)| {
+            let outputs = (0..item_ns.len())
+                .map(|b| out[b * cols..(b + 1) * cols].to_vec())
+                .collect();
+            (outputs, item_ns)
+        })
+        .collect()
+}
+
+/// Backward twin of [`accumulate_forward`]: row segments write disjoint
+/// output slices and bias rows (at or past `out_rows`) are dropped.
+pub(crate) fn accumulate_backward(
+    parts: &[PlacementPartials],
+    batch: usize,
+    out_rows: usize,
+) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut out = vec![0.0f64; batch * out_rows];
+    let mut item_ns = vec![0.0f64; batch];
+    for r in parts {
+        for b in 0..batch {
+            let yb = &r.partial[b * r.out_w..(b + 1) * r.out_w];
+            for (i, &v) in yb.iter().enumerate() {
+                let row = r.out_lo + i;
+                // bias rows sit past the logical visible range
+                if row < out_rows {
+                    out[b * out_rows + row] += v;
+                }
+            }
+            item_ns[b] += r.ns[b];
+        }
+    }
+    let outputs = (0..batch)
+        .map(|b| out[b * out_rows..(b + 1) * out_rows].to_vec())
+        .collect();
+    (outputs, item_ns)
 }
 
 /// Execute one worker's share of a fan-out: every job of every core in
@@ -99,7 +180,7 @@ fn exec_segment_bucket(
     dir: MvmDirection,
     stoch_amp_v: f64,
     w_max: f64,
-) -> Vec<SegResult> {
+) -> Vec<PlacementPartials> {
     let mut seg_xs: Vec<i32> = Vec::new();
     let mut y: Vec<i32> = Vec::new();
     let mut ns: Vec<f64> = Vec::new();
@@ -124,9 +205,9 @@ fn exec_segment_bucket(
                     partial[b * out_w + j] = y[b * out_w + j] as f64 * s;
                 }
             }
-            results.push(SegResult {
-                d: job.d,
-                p: job.p,
+            results.push(PlacementPartials {
+                dispatch: job.d,
+                placement: job.p,
                 out_lo: job.out_lo,
                 out_w,
                 partial,
@@ -199,6 +280,38 @@ impl NeuRramChip {
         write_verify: bool,
     ) -> Result<Vec<ProgramStats>, String> {
         let p = plan(&matrices, intensity, strategy, self.cores.len())?;
+        self.program_plan(p, matrices, write_verify)
+    }
+
+    /// Program an externally-built mapping plan.  This is the fleet's
+    /// model-parallel entry point: `fleet::shard_plan` splits one global
+    /// (virtual-core) plan into per-chip slices and each chip programs
+    /// ITS slice through here, so a layer's row segments can live on
+    /// different chips with the fleet accumulating the cross-chip
+    /// partial sums.  Identical to [`NeuRramChip::program_model`] after
+    /// the planning step: every placement programs into its own region
+    /// in placement order (which fixes the write-verify RNG draw order).
+    pub fn program_plan(
+        &mut self,
+        p: MappingPlan,
+        matrices: Vec<ConductanceMatrix>,
+        write_verify: bool,
+    ) -> Result<Vec<ProgramStats>, String> {
+        for pl in &p.placements {
+            if pl.core >= self.cores.len() {
+                return Err(format!(
+                    "placement of {} targets core {} but this chip has \
+                     {} cores",
+                    pl.segment.layer, pl.core, self.cores.len()
+                ));
+            }
+            if !matrices.iter().any(|m| m.layer == pl.segment.layer) {
+                return Err(format!(
+                    "no compiled matrix for planned layer {}",
+                    pl.segment.layer
+                ));
+            }
+        }
         // RESET-sweep every core the plan touches exactly once (and set
         // the global non-idealities up front, so each region's crossbar
         // views are built exactly once, already correct), then program
@@ -396,11 +509,35 @@ impl NeuRramChip {
         dispatches: &[ReplicaBatch],
         cfg: &NeuronConfig,
     ) -> Vec<(Vec<Vec<f64>>, Vec<f64>)> {
-        let (rows, cols, w_max, n_bias_rows) = {
+        let cols = self
+            .matrix(layer)
+            .unwrap_or_else(|| panic!("layer {layer} not programmed"))
+            .cols;
+        let batch_sizes: Vec<usize> =
+            dispatches.iter().map(|d| d.inputs.len()).collect();
+        let results = self.mvm_layer_partials_multi(layer, dispatches, cfg);
+        // placement-ordered accumulation (results arrive sorted by
+        // (dispatch, placement)): bitwise the serial partial-sum order
+        accumulate_forward(&results, &batch_sizes, cols)
+    }
+
+    /// The per-placement partials behind
+    /// [`NeuRramChip::mvm_layer_batch_multi`], returned UN-accumulated
+    /// and sorted by (dispatch, placement).  The fleet's model-parallel
+    /// dispatch collects these from every chip hosting a shard of the
+    /// layer and folds them in global placement order; everyone else
+    /// wants the accumulated wrapper above.
+    pub fn mvm_layer_partials_multi(
+        &mut self,
+        layer: &str,
+        dispatches: &[ReplicaBatch],
+        cfg: &NeuronConfig,
+    ) -> Vec<PlacementPartials> {
+        let (rows, w_max, n_bias_rows) = {
             let m = self
                 .matrix(layer)
                 .unwrap_or_else(|| panic!("layer {layer} not programmed"));
-            (m.rows, m.cols, m.w_max, m.n_bias_rows)
+            (m.rows, m.w_max, m.n_bias_rows)
         };
         let in_mag = cfg.in_mag_max();
 
@@ -413,7 +550,9 @@ impl NeuRramChip {
                     assert_eq!(x.len() + n_bias_rows, rows,
                                "input width for {layer}");
                     xf.extend_from_slice(x);
-                    xf.extend(std::iter::repeat(in_mag).take(n_bias_rows));
+                    // bias rows drive at full scale
+                    let with_bias = xf.len() + n_bias_rows;
+                    xf.resize(with_bias, in_mag);
                 }
                 xf
             })
@@ -446,38 +585,10 @@ impl NeuRramChip {
             assert!(found, "no replica {} of {layer}", dsp.replica);
         }
 
-        let results = self.dispatch_segments(
+        self.dispatch_segments(
             jobs, &x_full, rows, cfg, MvmDirection::Forward, 0.0,
             w_max as f64,
-        );
-
-        // placement-ordered accumulation (results arrive sorted by
-        // (d, p)): bitwise the serial partial-sum order
-        let mut outs: Vec<(Vec<f64>, Vec<f64>)> = dispatches
-            .iter()
-            .map(|dsp| {
-                (vec![0.0f64; dsp.inputs.len() * cols],
-                 vec![0.0f64; dsp.inputs.len()])
-            })
-            .collect();
-        for r in &results {
-            let (out, item_ns) = &mut outs[r.d];
-            for b in 0..item_ns.len() {
-                let yb = &r.partial[b * r.out_w..(b + 1) * r.out_w];
-                for (j, &v) in yb.iter().enumerate() {
-                    out[b * cols + r.out_lo + j] += v;
-                }
-                item_ns[b] += r.ns[b];
-            }
-        }
-        outs.into_iter()
-            .map(|(out, item_ns)| {
-                let outputs = (0..item_ns.len())
-                    .map(|b| out[b * cols..(b + 1) * cols].to_vec())
-                    .collect();
-                (outputs, item_ns)
-            })
-            .collect()
+        )
     }
 
     /// Run segment jobs on up to `self.threads` scoped worker threads
@@ -497,7 +608,7 @@ impl NeuRramChip {
         dir: MvmDirection,
         stoch_amp_v: f64,
         w_max: f64,
-    ) -> Vec<SegResult> {
+    ) -> Vec<PlacementPartials> {
         let n_cores = self.cores.len();
         let mut per_core: Vec<Vec<SegJob>> =
             (0..n_cores).map(|_| Vec::new()).collect();
@@ -519,7 +630,7 @@ impl NeuRramChip {
                 .push((core, std::mem::take(&mut per_core[c])));
         }
 
-        let mut results: Vec<SegResult> = if workers > 1 {
+        let mut results: Vec<PlacementPartials> = if workers > 1 {
             std::thread::scope(|s| {
                 let handles: Vec<_> = buckets
                     .into_iter()
@@ -544,7 +655,7 @@ impl NeuRramChip {
                 })
                 .collect()
         };
-        results.sort_by_key(|r| (r.d, r.p));
+        results.sort_by_key(|r| (r.dispatch, r.placement));
         results
     }
 
@@ -594,11 +705,34 @@ impl NeuRramChip {
         stoch_amp_v: f64,
         replica: usize,
     ) -> (Vec<Vec<f64>>, Vec<f64>) {
-        let (rows, cols, w_max, n_bias_rows) = {
+        let out_rows = {
             let m = self
                 .matrix(layer)
                 .unwrap_or_else(|| panic!("layer {layer} not programmed"));
-            (m.rows, m.cols, m.w_max, m.n_bias_rows)
+            m.rows - m.n_bias_rows
+        };
+        let results = self.mvm_layer_backward_partials(
+            layer, inputs, cfg, stoch_amp_v, replica);
+        accumulate_backward(&results, inputs.len(), out_rows)
+    }
+
+    /// The per-placement partials behind
+    /// [`NeuRramChip::mvm_layer_backward_batch`], sorted by placement --
+    /// the fleet's shard-group dispatch folds these in global placement
+    /// order (see [`NeuRramChip::mvm_layer_partials_multi`]).
+    pub fn mvm_layer_backward_partials(
+        &mut self,
+        layer: &str,
+        inputs: &[&[i32]],
+        cfg: &NeuronConfig,
+        stoch_amp_v: f64,
+        replica: usize,
+    ) -> Vec<PlacementPartials> {
+        let (cols, w_max) = {
+            let m = self
+                .matrix(layer)
+                .unwrap_or_else(|| panic!("layer {layer} not programmed"));
+            (m.cols, m.w_max)
         };
         let batch = inputs.len();
         let mut xf = Vec::with_capacity(batch * cols);
@@ -607,7 +741,6 @@ impl NeuRramChip {
             xf.extend_from_slice(x);
         }
         let x_full = [xf];
-        let out_rows = rows - n_bias_rows;
 
         let mut jobs: Vec<SegJob> = Vec::new();
         let mut found = false;
@@ -644,30 +777,10 @@ impl NeuRramChip {
         }
         assert!(found, "no replica {replica} of {layer}");
 
-        let results = self.dispatch_segments(
+        self.dispatch_segments(
             jobs, &x_full, cols, cfg, MvmDirection::Backward, stoch_amp_v,
             w_max as f64,
-        );
-
-        let mut out = vec![0.0f64; batch * out_rows];
-        let mut item_ns = vec![0.0f64; batch];
-        for r in &results {
-            for b in 0..batch {
-                let yb = &r.partial[b * r.out_w..(b + 1) * r.out_w];
-                for (i, &v) in yb.iter().enumerate() {
-                    let row = r.out_lo + i;
-                    // bias rows sit past the logical visible range
-                    if row < out_rows {
-                        out[b * out_rows + row] += v;
-                    }
-                }
-                item_ns[b] += r.ns[b];
-            }
-        }
-        let outputs = (0..batch)
-            .map(|b| out[b * out_rows..(b + 1) * out_rows].to_vec())
-            .collect();
-        (outputs, item_ns)
+        )
     }
 
     /// Aggregate energy counters over all cores.
@@ -714,6 +827,77 @@ impl NeuRramChip {
 
     pub fn powered_cores(&self) -> usize {
         self.cores.iter().filter(|c| c.powered_on).count()
+    }
+
+    /// Re-anchor every core's dispatch-addressed randomness at `seed`:
+    /// coupling-noise streams restart at counter 0 under `seed` (instead
+    /// of the chip's construction seed) and the sampling LFSR chains
+    /// re-seed from a `(seed, core id)`-derived word.  Programmed
+    /// weights, the programming RNG and energy counters are untouched.
+    ///
+    /// The fleet's serving runtime calls this before every batch it
+    /// dispatches, with a seed derived from the batch's position in the
+    /// request trace -- which makes a batch's outputs a pure function of
+    /// (programmed weights, batch contents, seed), independent of WHICH
+    /// replica chip runs it and of everything that chip executed before.
+    /// That is the route-invariance leg of the fleet determinism
+    /// contract; thread-invariance needs no reset (streams are already
+    /// counter-derived, see the module docs).
+    pub fn reset_dispatch_state(&mut self, seed: u64) {
+        for c in &mut self.cores {
+            c.reset_sampling(seed);
+        }
+    }
+}
+
+impl super::DispatchTarget for NeuRramChip {
+    fn matrix(&self, layer: &str) -> Option<&ConductanceMatrix> {
+        NeuRramChip::matrix(self, layer)
+    }
+
+    fn replica_count(&self, layer: &str) -> usize {
+        self.plan.replica_count(layer)
+    }
+
+    fn mvm_layer_batch_multi(
+        &mut self,
+        layer: &str,
+        dispatches: &[ReplicaBatch],
+        cfg: &NeuronConfig,
+    ) -> Vec<(Vec<Vec<f64>>, Vec<f64>)> {
+        NeuRramChip::mvm_layer_batch_multi(self, layer, dispatches, cfg)
+    }
+
+    fn mvm_layer_backward_batch(
+        &mut self,
+        layer: &str,
+        inputs: &[&[i32]],
+        cfg: &NeuronConfig,
+        stoch_amp_v: f64,
+        replica: usize,
+    ) -> (Vec<Vec<f64>>, Vec<f64>) {
+        NeuRramChip::mvm_layer_backward_batch(self, layer, inputs, cfg,
+                                              stoch_amp_v, replica)
+    }
+
+    fn mvm_layer_batch(
+        &mut self,
+        layer: &str,
+        inputs: &[&[i32]],
+        cfg: &NeuronConfig,
+        replica: usize,
+    ) -> (Vec<Vec<f64>>, Vec<f64>) {
+        NeuRramChip::mvm_layer_batch(self, layer, inputs, cfg, replica)
+    }
+
+    fn mvm_layer(
+        &mut self,
+        layer: &str,
+        x: &[i32],
+        cfg: &NeuronConfig,
+        replica: usize,
+    ) -> Vec<f64> {
+        NeuRramChip::mvm_layer(self, layer, x, cfg, replica)
     }
 }
 

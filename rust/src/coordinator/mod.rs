@@ -1,12 +1,87 @@
 //! The 48-core chip coordinator: weight-mapping strategies (paper
 //! Fig. 2a cases 1-6), the multi-core scheduler, and the chip-level
 //! inference driver with power gating and energy aggregation.
+//!
+//! [`DispatchTarget`] is the executor-facing dispatch surface: the model
+//! executors (`models/executor/*`) and the calibration helpers are
+//! generic over it, so the same CNN/LSTM/RBM code drives one
+//! [`NeuRramChip`] or a multi-chip [`crate::fleet::ChipFleet`] group
+//! that shards layers across chips and accumulates cross-chip partial
+//! sums.
 
 pub mod chip;
 pub mod mapping;
 pub mod scheduler;
 
-pub use chip::{NeuRramChip, ReplicaBatch};
+pub use chip::{NeuRramChip, PlacementPartials, ReplicaBatch, PAPER_CORES};
 pub use mapping::{merge_access, MappingPlan, MappingStrategy, MergeAccess,
                   Segment, SegmentPlacement};
-pub use scheduler::Scheduler;
+pub use scheduler::{FleetReport, Scheduler};
+
+use crate::core_sim::NeuronConfig;
+use crate::models::ConductanceMatrix;
+
+/// Everything an executor needs from "something that runs layer MVMs".
+///
+/// Implemented by [`NeuRramChip`] (delegating to its inherent methods)
+/// and by the fleet's shard-group view
+/// (`crate::fleet::GroupTarget` / [`crate::fleet::ChipFleet`]), whose
+/// implementations gather per-placement partials from every chip
+/// hosting a shard of the layer and fold them in global placement
+/// order, so single-chip and fleet execution share one f64 accumulation
+/// order (see `fleet/mod.rs`).
+pub trait DispatchTarget {
+    /// Compiled matrix of a programmed layer (run-time metadata: shape,
+    /// `w_max`, bias rows).
+    fn matrix(&self, layer: &str) -> Option<&ConductanceMatrix>;
+
+    /// Data-parallel replica count of a layer (mapping case 2).
+    fn replica_count(&self, layer: &str) -> usize;
+
+    /// Batched multi-replica forward MVM -- the contract of
+    /// [`NeuRramChip::mvm_layer_batch_multi`].
+    fn mvm_layer_batch_multi(
+        &mut self,
+        layer: &str,
+        dispatches: &[ReplicaBatch],
+        cfg: &NeuronConfig,
+    ) -> Vec<(Vec<Vec<f64>>, Vec<f64>)>;
+
+    /// Batched backward (transposed) MVM -- the contract of
+    /// [`NeuRramChip::mvm_layer_backward_batch`].
+    fn mvm_layer_backward_batch(
+        &mut self,
+        layer: &str,
+        inputs: &[&[i32]],
+        cfg: &NeuronConfig,
+        stoch_amp_v: f64,
+        replica: usize,
+    ) -> (Vec<Vec<f64>>, Vec<f64>);
+
+    /// Single-replica batched forward MVM (one-dispatch wrapper, so the
+    /// single- and multi-replica paths cannot diverge).
+    fn mvm_layer_batch(
+        &mut self,
+        layer: &str,
+        inputs: &[&[i32]],
+        cfg: &NeuronConfig,
+        replica: usize,
+    ) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let dispatches = [ReplicaBatch { replica, inputs: inputs.to_vec() }];
+        self.mvm_layer_batch_multi(layer, &dispatches, cfg)
+            .pop()
+            .expect("one result per dispatch")
+    }
+
+    /// Single-vector forward MVM (batch-of-one wrapper).
+    fn mvm_layer(
+        &mut self,
+        layer: &str,
+        x: &[i32],
+        cfg: &NeuronConfig,
+        replica: usize,
+    ) -> Vec<f64> {
+        let (mut outs, _) = self.mvm_layer_batch(layer, &[x], cfg, replica);
+        outs.pop().expect("one output per input")
+    }
+}

@@ -20,7 +20,8 @@
 //! and latency bookkeeping are identical to the per-item loop; only the
 //! wall-clock changes.
 
-use super::chip::{NeuRramChip, ReplicaBatch};
+use super::chip::ReplicaBatch;
+use super::DispatchTarget;
 use crate::core_sim::NeuronConfig;
 
 /// Work item: one input vector through one layer.
@@ -65,13 +66,17 @@ impl Scheduler {
     /// latency bookkeeping are bitwise those of the serial replica loop.
     ///
     /// Returns (outputs in input order, report).
-    pub fn run_layer_batch(
-        chip: &mut NeuRramChip,
+    ///
+    /// Generic over [`DispatchTarget`], so the same scheduling runs on
+    /// one [`super::NeuRramChip`] or on a fleet shard group that
+    /// accumulates cross-chip partial sums.
+    pub fn run_layer_batch<T: DispatchTarget>(
+        chip: &mut T,
         layer: &str,
         inputs: &[Vec<i32>],
         cfg: &NeuronConfig,
     ) -> (Vec<Vec<f64>>, ScheduleReport) {
-        let n_rep = chip.plan.replica_count(layer).max(1);
+        let n_rep = chip.replica_count(layer).max(1);
         // round-robin slices, built once per call: replica r owns items
         // r, r + n_rep, ... (the item index is recovered arithmetically
         // below, so no per-replica index vectors are allocated)
@@ -297,12 +302,61 @@ impl Scheduler {
             .sum();
         best_t + fill
     }
+
+    /// Fleet-level throughput summary over per-replica-group busy times:
+    /// replica groups (whole-model copies on disjoint chips) overlap
+    /// freely, so the fleet makespan is the max over groups and the
+    /// serial bound is their sum -- the chip-level replica model of
+    /// [`Scheduler::run_layer_batch`] lifted one level up.
+    pub fn fleet_report(group_busy_ns: &[f64], items: usize) -> FleetReport {
+        let makespan_ns = group_busy_ns
+            .iter()
+            .fold(0.0f64, |m, &b| if b.total_cmp(&m).is_gt() { b } else { m });
+        FleetReport {
+            groups: group_busy_ns.len(),
+            serial_ns: group_busy_ns.iter().sum(),
+            makespan_ns,
+            items,
+        }
+    }
+}
+
+/// Cross-chip throughput bookkeeping (see [`Scheduler::fleet_report`]).
+#[derive(Clone, Debug, Default)]
+pub struct FleetReport {
+    pub groups: usize,
+    /// Sum of all groups' busy time: the one-chip-at-a-time bound.
+    pub serial_ns: f64,
+    /// Max over groups: the modelled fleet makespan (groups overlap).
+    pub makespan_ns: f64,
+    pub items: usize,
+}
+
+impl FleetReport {
+    /// Parallel efficiency of the fleet: serial / makespan.
+    pub fn speedup(&self) -> f64 {
+        if self.makespan_ns <= 0.0 {
+            1.0
+        } else {
+            self.serial_ns / self.makespan_ns
+        }
+    }
+
+    /// Modelled items per second at the fleet makespan.
+    pub fn items_per_s(&self) -> f64 {
+        if self.makespan_ns <= 0.0 {
+            0.0
+        } else {
+            self.items as f64 * 1e9 / self.makespan_ns
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::mapping::MappingStrategy;
+    use crate::coordinator::NeuRramChip;
     use crate::models::ConductanceMatrix;
     use crate::util::rng::Rng;
 

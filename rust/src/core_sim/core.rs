@@ -155,6 +155,21 @@ impl CimCore {
         self.items_dispatched
     }
 
+    /// Re-anchor ALL of this core's dispatch-addressed randomness at
+    /// `seed`: the coupling-noise stream address becomes `(seed, id, 0)`
+    /// and the sampling LFSR chains re-seed from a `(seed, id)`-derived
+    /// word, so every post-reset draw is a pure function of `seed` and
+    /// the core's position -- the chip's construction seed and all prior
+    /// dispatch history drop out.  Programmed conductances and energy
+    /// counters are untouched.  See
+    /// `coordinator::NeuRramChip::reset_dispatch_state` for why the
+    /// fleet serving runtime needs this per-batch.
+    pub fn reset_sampling(&mut self, seed: u64) {
+        let mut s = crate::util::rng::stream(seed, self.id as u64, 0);
+        self.lfsr = LfsrChains::new(CORE_COLS, s.next_u64() as u16);
+        self.set_stream_seed(seed);
+    }
+
     pub fn power_on(&mut self) {
         self.powered_on = true;
     }

@@ -1,0 +1,149 @@
+//! Request coalescing: individual inference requests merge into batches
+//! under a max-batch / max-wait policy, as a pure function of the
+//! arrival trace.
+//!
+//! Purity is load-bearing for the fleet determinism contract: a batch
+//! closes on its own size or age, NEVER on downstream queue or chip
+//! state, so the batch compositions -- and therefore every executed
+//! MVM -- are identical whatever the chip count, thread count or router
+//! decisions (see `fleet/mod.rs`).
+
+/// Coalescing policy: a batch dispatches when it holds `max_batch`
+/// requests or when its oldest request has waited `max_wait_ns`,
+/// whichever comes first.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait_ns: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        // 8-wide batches amortize the executors' per-dispatch setup;
+        // 200 us bounds the tail latency a lone request pays for them
+        BatchPolicy { max_batch: 8, max_wait_ns: 200_000 }
+    }
+}
+
+/// One coalesced batch: request identifiers in arrival order plus the
+/// virtual time the batch became dispatchable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Batch {
+    pub requests: Vec<usize>,
+    pub ready_ns: u64,
+}
+
+/// Coalesce an arrival-ordered `(t_ns, request id)` trace into batches.
+///
+/// A batch opens at its first request's arrival `t0` and closes at the
+/// EARLIER of (a) the arrival of its `max_batch`-th request (ready
+/// immediately, at that arrival time) and (b) `t0 + max_wait_ns` (ready
+/// at the deadline, however many requests it holds).  A request
+/// arriving after an open batch's deadline first closes that batch,
+/// then opens the next one; a request arriving exactly AT the deadline
+/// still joins.  The trailing batch always waits out its full window.
+pub fn coalesce(arrivals: &[(u64, usize)], policy: &BatchPolicy)
+                -> Vec<Batch> {
+    debug_assert!(
+        arrivals.windows(2).all(|w| w[0].0 <= w[1].0),
+        "arrival trace must be time-ordered"
+    );
+    let max_batch = policy.max_batch.max(1);
+    let mut out = Vec::new();
+    let mut open: Vec<usize> = Vec::new();
+    let mut t0 = 0u64;
+    for &(t, id) in arrivals {
+        if !open.is_empty() && t > t0.saturating_add(policy.max_wait_ns) {
+            out.push(Batch {
+                requests: std::mem::take(&mut open),
+                ready_ns: t0 + policy.max_wait_ns,
+            });
+        }
+        if open.is_empty() {
+            t0 = t;
+        }
+        open.push(id);
+        if open.len() >= max_batch {
+            out.push(Batch {
+                requests: std::mem::take(&mut open),
+                ready_ns: t,
+            });
+        }
+    }
+    if !open.is_empty() {
+        out.push(Batch {
+            requests: open,
+            ready_ns: t0.saturating_add(policy.max_wait_ns),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coalesce_pins_max_batch_and_max_wait() {
+        // deterministic arrival trace against max_batch 3 / max_wait 100:
+        //  t=0   a  opens batch 1
+        //  t=10  b  joins
+        //  t=50  c  fills it         -> batch 1 = [a,b,c] ready at 50
+        //  t=120 d  opens batch 2
+        //  t=500 e  arrives past 120+100 -> batch 2 = [d] ready at 220,
+        //           e opens batch 3      -> batch 3 = [e] ready at 600
+        let policy = BatchPolicy { max_batch: 3, max_wait_ns: 100 };
+        let trace = [(0, 0), (10, 1), (50, 2), (120, 3), (500, 4)];
+        let batches = coalesce(&trace, &policy);
+        assert_eq!(
+            batches,
+            vec![
+                Batch { requests: vec![0, 1, 2], ready_ns: 50 },
+                Batch { requests: vec![3], ready_ns: 220 },
+                Batch { requests: vec![4], ready_ns: 600 },
+            ]
+        );
+    }
+
+    #[test]
+    fn arrival_exactly_at_deadline_joins() {
+        let policy = BatchPolicy { max_batch: 8, max_wait_ns: 100 };
+        let batches = coalesce(&[(0, 0), (100, 1), (101, 2)], &policy);
+        assert_eq!(
+            batches,
+            vec![
+                Batch { requests: vec![0, 1], ready_ns: 100 },
+                Batch { requests: vec![2], ready_ns: 201 },
+            ]
+        );
+    }
+
+    #[test]
+    fn burst_splits_into_full_batches() {
+        // all requests at t=0 (the closed-loop saturation trace): pure
+        // max_batch chunking, every batch ready immediately except the
+        // short tail, which waits out its window
+        let policy = BatchPolicy { max_batch: 4, max_wait_ns: 50 };
+        let trace: Vec<(u64, usize)> = (0..10).map(|i| (0, i)).collect();
+        let batches = coalesce(&trace, &policy);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].requests, vec![0, 1, 2, 3]);
+        assert_eq!(batches[0].ready_ns, 0);
+        assert_eq!(batches[1].requests, vec![4, 5, 6, 7]);
+        assert_eq!(batches[2].requests, vec![8, 9]);
+        assert_eq!(batches[2].ready_ns, 50);
+    }
+
+    #[test]
+    fn max_batch_one_degenerates_to_per_request_dispatch() {
+        let policy = BatchPolicy { max_batch: 1, max_wait_ns: 1000 };
+        let batches = coalesce(&[(0, 0), (5, 1)], &policy);
+        assert_eq!(
+            batches,
+            vec![
+                Batch { requests: vec![0], ready_ns: 0 },
+                Batch { requests: vec![1], ready_ns: 5 },
+            ]
+        );
+    }
+}

@@ -1,0 +1,518 @@
+//! Multi-chip fleet serving runtime: N `NeuRramChip`s behind one
+//! request batcher + least-loaded router, serving all four executor
+//! dataflows (CNN, LSTM, RBM) at once.
+//!
+//! The paper's 48-core TNSA is a *tile*: scaling past one chip means a
+//! runtime that (a) places models -- **data-parallel** replication of a
+//! hot model onto several chips and **model-parallel** sharding of a
+//! plan too big for one chip's cores across chips (see
+//! [`replicate`]) -- (b) coalesces individual inference requests into
+//! batches under a max-batch/max-wait policy ([`batcher`]) and (c)
+//! routes each batch to the least-loaded replica group ([`router`]).
+//!
+//! ## Determinism contract
+//!
+//! A fleet given the same request trace produces bitwise-identical
+//! outputs regardless of `NEURRAM_THREADS` *and* of the chip count
+//! (pinned by `prop_fleet_serial_equals_concurrent`):
+//!
+//! * **Batching is a pure function of the trace.**  Batches close on
+//!   max-batch/max-wait alone, never on downstream queue state, so the
+//!   batch compositions cannot depend on how many chips exist.
+//! * **Replica groups are bit-identical.**  Fleet programming uses
+//!   ideal (noise-free) loads, so every copy of a model carries exactly
+//!   the same conductances (write-verify noise would make replicas
+//!   distinguishable and routing observable).
+//! * **Per-batch noise is addressed by the batch, not the chip.**
+//!   Before executing a batch the runtime calls
+//!   [`NeuRramChip::reset_dispatch_state`] with a seed derived from the
+//!   batch's position in the trace, re-anchoring the coupling-noise
+//!   streams and sampling LFSRs -- a batch's outputs become a pure
+//!   function of (weights, batch contents, batch seed), independent of
+//!   which replica ran it and of that chip's history.
+//! * **Cross-chip partial sums fold in global placement order.**  A
+//!   sharded layer's per-placement partials are gathered from every
+//!   chip and folded through the SAME `accumulate_forward` /
+//!   `accumulate_backward` helpers the single-chip engine uses, so the
+//!   f64 addition order of a shard group matches a single chip running
+//!   the same plan bit for bit (deterministic path; per-core noise
+//!   streams are core-addressed, so *noisy* configs are shape-dependent
+//!   by design, exactly like `prop_packed_execution_equals_simple`).
+//!
+//! Queue waits (and hence end-to-end latencies) DO depend on the chip
+//! count -- that is the throughput win -- but each request's on-chip
+//! execution time (`Response::chip_ns`) does not.
+
+pub mod batcher;
+pub mod replicate;
+pub mod router;
+
+pub use batcher::{coalesce, Batch, BatchPolicy};
+pub use replicate::{shard_plan, FleetPlacement};
+pub use router::{Payload, Request, Response, ServeReport, Workload,
+                 WorkloadKind};
+
+use crate::coordinator::chip::{accumulate_backward, accumulate_forward};
+use crate::coordinator::{DispatchTarget, MappingPlan, NeuRramChip,
+                         PlacementPartials, ReplicaBatch};
+use crate::core_sim::NeuronConfig;
+use crate::models::ConductanceMatrix;
+use crate::util::rng;
+
+/// One model as placed on the fleet: compiled matrices, the global
+/// (virtual-core) plan of one copy, and the replica groups carrying the
+/// copies.
+pub(crate) struct FleetModel {
+    pub name: String,
+    pub matrices: Vec<ConductanceMatrix>,
+    /// Plan over one copy's virtual core space
+    /// (`chips_per_copy * cores_per_chip` cores).
+    pub plan: MappingPlan,
+    pub groups: Vec<ModelGroup>,
+}
+
+/// One data-parallel copy of a model: the fleet chips it shards over.
+pub(crate) struct ModelGroup {
+    /// Fleet chip indices, ascending; copy shard `s` lives on
+    /// `chips[s]`.
+    pub chips: Vec<usize>,
+    /// Global placement indices hosted per chip, in each chip's local
+    /// plan order (local placement `p` of `chips[s]` is global placement
+    /// `placements[s][p]`).
+    pub placements: Vec<Vec<usize>>,
+}
+
+impl FleetModel {
+    pub(crate) fn matrix(&self, layer: &str) -> Option<&ConductanceMatrix> {
+        self.matrices.iter().find(|m| m.layer == layer)
+    }
+}
+
+/// N chips + the models placed on them.  See the module docs for the
+/// serving architecture and determinism contract.
+pub struct ChipFleet {
+    pub chips: Vec<NeuRramChip>,
+    pub cores_per_chip: usize,
+    /// Fleet seed: chip `i` is seeded from `rng::stream(seed, i, 0)`,
+    /// and per-batch serving seeds derive from it too.
+    pub seed: u64,
+    pub(crate) models: Vec<FleetModel>,
+}
+
+impl ChipFleet {
+    /// Build `n_chips` chips of `cores_per_chip` cores each.  Chip `i`'s
+    /// own seed is drawn from the counter-derived stream
+    /// `rng::stream(seed, i, 0)`, so fleets of different sizes share
+    /// their common prefix of chips.
+    pub fn new(n_chips: usize, cores_per_chip: usize, seed: u64) -> Self {
+        assert!(n_chips > 0, "a fleet needs at least one chip");
+        let chips = (0..n_chips)
+            .map(|i| {
+                let mut s = rng::stream(seed, i as u64, 0);
+                NeuRramChip::with_cores(cores_per_chip, s.next_u64())
+            })
+            .collect();
+        ChipFleet { chips, cores_per_chip, seed, models: Vec::new() }
+    }
+
+    pub fn n_chips(&self) -> usize {
+        self.chips.len()
+    }
+
+    /// Set every chip's worker-thread knob (the CLI `--threads` mirror).
+    pub fn set_threads(&mut self, n: usize) {
+        for c in &mut self.chips {
+            c.threads = n;
+        }
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        self.models.iter().map(|m| m.name.as_str()).collect()
+    }
+
+    /// Data-parallel copies of a placed model.
+    pub fn replica_groups(&self, model: &str) -> usize {
+        self.model_index(model)
+            .map(|i| self.models[i].groups.len())
+            .unwrap_or(0)
+    }
+
+    /// Chips one copy of a placed model shards over.
+    pub fn chips_per_copy(&self, model: &str) -> usize {
+        self.model_index(model)
+            .and_then(|i| self.models[i].groups.first())
+            .map(|g| g.chips.len())
+            .unwrap_or(0)
+    }
+
+    pub(crate) fn model_index(&self, name: &str) -> Option<usize> {
+        self.models.iter().position(|m| m.name == name)
+    }
+
+    /// The unique model hosting `layer` (uniqueness enforced at
+    /// programming time, see `replicate`).
+    pub(crate) fn model_of_layer(&self, layer: &str) -> Option<usize> {
+        self.models.iter().position(|m| m.matrix(layer).is_some())
+    }
+
+    /// Chips not yet hosting any model.
+    pub(crate) fn free_chips(&self) -> Vec<usize> {
+        (0..self.chips.len())
+            .filter(|&c| {
+                !self.models.iter().any(|m| {
+                    m.groups.iter().any(|g| g.chips.contains(&c))
+                })
+            })
+            .collect()
+    }
+
+    /// Borrow one replica group as an executor-facing
+    /// [`DispatchTarget`].  Split off the chip slice first so `models`
+    /// stays borrowed immutably.
+    pub(crate) fn group_target<'a>(
+        chips: &'a mut [NeuRramChip],
+        model: &'a FleetModel,
+        group: usize,
+    ) -> GroupTarget<'a> {
+        let g = &model.groups[group];
+        let mut sel: Vec<(&'a mut NeuRramChip, &'a [usize])> = Vec::new();
+        let mut rest: &'a mut [NeuRramChip] = chips;
+        let mut base = 0usize;
+        for (s, &ci) in g.chips.iter().enumerate() {
+            debug_assert!(ci >= base, "group chips must ascend");
+            // take `rest` out before splitting so the split borrows the
+            // full 'a (a direct `rest.split_at_mut` reborrow could not
+            // outlive the loop iteration)
+            let slice = std::mem::take(&mut rest);
+            let (head, tail) = slice.split_at_mut(ci - base + 1);
+            let chip = head
+                .last_mut()
+                .expect("split_at_mut(n + 1) yields a non-empty head");
+            sel.push((chip, g.placements[s].as_slice()));
+            base = ci + 1;
+            rest = tail;
+        }
+        GroupTarget {
+            chips: sel,
+            matrices: &model.matrices,
+            plan: &model.plan,
+        }
+    }
+
+    /// Run `f` against replica group `group` of `model` -- the
+    /// executor-on-fleet entry point (calibration, ad-hoc inference).
+    pub fn with_group<R>(
+        &mut self,
+        model: &str,
+        group: usize,
+        f: impl FnOnce(&mut GroupTarget) -> R,
+    ) -> R {
+        let mi = self
+            .model_index(model)
+            .unwrap_or_else(|| panic!("model {model} not placed"));
+        let ChipFleet { ref mut chips, ref models, .. } = *self;
+        let mut t = Self::group_target(chips, &models[mi], group);
+        f(&mut t)
+    }
+}
+
+/// One replica group of one fleet model, borrowed as an executor
+/// target.  Forward/backward dispatches fan out over the group's chips
+/// (each chip runs its local shard on its own scoped-thread engine,
+/// and the chips themselves run on concurrent scoped threads), then the
+/// per-placement partials are remapped to GLOBAL placement indices and
+/// folded through the chip engine's own accumulate helpers -- the
+/// cross-chip partial-sum accumulation of a model-parallel split.
+pub struct GroupTarget<'a> {
+    /// (chip, global placement indices of its local plan), group order.
+    chips: Vec<(&'a mut NeuRramChip, &'a [usize])>,
+    matrices: &'a [ConductanceMatrix],
+    plan: &'a MappingPlan,
+}
+
+impl GroupTarget<'_> {
+    fn global_matrix(&self, layer: &str) -> &ConductanceMatrix {
+        DispatchTarget::matrix(self, layer)
+            .unwrap_or_else(|| panic!("layer {layer} not placed on fleet"))
+    }
+
+    /// Does group chip `pos` host any placement of (layer, replica)?
+    fn hosts(&self, pos: usize, layer: &str, replica: usize) -> bool {
+        hosts_replica(self.plan, self.chips[pos].1, layer, replica)
+    }
+
+    /// Total busy time of the group's chips (ns), summed in group
+    /// order.  With per-batch energy resets this is the batch's
+    /// modelled service time.
+    pub fn busy_ns(&self) -> f64 {
+        self.chips
+            .iter()
+            .map(|(c, _)| c.energy_counters().busy_ns)
+            .sum()
+    }
+}
+
+impl DispatchTarget for GroupTarget<'_> {
+    fn matrix(&self, layer: &str) -> Option<&ConductanceMatrix> {
+        // the ONE layer->matrix lookup of the group view (global_matrix
+        // and the executors both resolve through here)
+        self.matrices.iter().find(|m| m.layer == layer)
+    }
+
+    fn replica_count(&self, layer: &str) -> usize {
+        self.plan.replica_count(layer)
+    }
+
+    fn mvm_layer_batch_multi(
+        &mut self,
+        layer: &str,
+        dispatches: &[ReplicaBatch],
+        cfg: &NeuronConfig,
+    ) -> Vec<(Vec<Vec<f64>>, Vec<f64>)> {
+        let cols = self.global_matrix(layer).cols;
+        let batch_sizes: Vec<usize> =
+            dispatches.iter().map(|d| d.inputs.len()).collect();
+        // every dispatch must be hosted somewhere in the group
+        for (d, dsp) in dispatches.iter().enumerate() {
+            assert!(
+                (0..self.chips.len())
+                    .any(|pos| self.hosts(pos, layer, dsp.replica)),
+                "no replica {} of {layer} in this group (dispatch {d})"
+            );
+        }
+        // per chip: the subset of dispatches it hosts, with the global
+        // dispatch index remembered so partials can be remapped
+        let plan = self.plan;
+        let mut units: Vec<(&mut NeuRramChip, &[usize], Vec<ReplicaBatch>,
+                            Vec<usize>)> = Vec::new();
+        for (chip, gmap) in self.chips.iter_mut() {
+            let gmap = *gmap;
+            let ds: Vec<usize> = (0..dispatches.len())
+                .filter(|&d| {
+                    hosts_replica(plan, gmap, layer,
+                                  dispatches[d].replica)
+                })
+                .collect();
+            if ds.is_empty() {
+                continue;
+            }
+            let sub: Vec<ReplicaBatch> = ds
+                .iter()
+                .map(|&d| ReplicaBatch {
+                    replica: dispatches[d].replica,
+                    inputs: dispatches[d].inputs.clone(),
+                })
+                .collect();
+            units.push((&mut **chip, gmap, sub, ds));
+        }
+        let mut parts = fan_out(units, |chip, sub| {
+            chip.mvm_layer_partials_multi(layer, sub, cfg)
+        });
+        // fold in GLOBAL placement order: bitwise the single-chip fold
+        parts.sort_by_key(|r| (r.dispatch, r.placement));
+        accumulate_forward(&parts, &batch_sizes, cols)
+    }
+
+    fn mvm_layer_backward_batch(
+        &mut self,
+        layer: &str,
+        inputs: &[&[i32]],
+        cfg: &NeuronConfig,
+        stoch_amp_v: f64,
+        replica: usize,
+    ) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let out_rows = {
+            let m = self.global_matrix(layer);
+            m.rows - m.n_bias_rows
+        };
+        assert!(
+            (0..self.chips.len()).any(|pos| self.hosts(pos, layer, replica)),
+            "no replica {replica} of {layer} in this group"
+        );
+        let plan = self.plan;
+        let mut units: Vec<(&mut NeuRramChip, &[usize], Vec<ReplicaBatch>,
+                            Vec<usize>)> = Vec::new();
+        for (chip, gmap) in self.chips.iter_mut() {
+            let gmap = *gmap;
+            if hosts_replica(plan, gmap, layer, replica) {
+                units.push((&mut **chip, gmap, Vec::new(), Vec::new()));
+            }
+        }
+        let mut parts = fan_out(units, |chip, _| {
+            chip.mvm_layer_backward_partials(layer, inputs, cfg,
+                                             stoch_amp_v, replica)
+        });
+        parts.sort_by_key(|r| (r.dispatch, r.placement));
+        accumulate_backward(&parts, inputs.len(), out_rows)
+    }
+}
+
+/// THE (layer, replica)-hosting predicate: does the chip whose global
+/// placement indices are `gmap` hold any placement of the pair?  Shared
+/// by the group view's upfront assertions and both dispatch filters so
+/// the routing decision cannot drift from the check that guards it.
+fn hosts_replica(plan: &MappingPlan, gmap: &[usize], layer: &str,
+                 replica: usize) -> bool {
+    gmap.iter().any(|&gp| {
+        let p = &plan.placements[gp];
+        p.segment.layer == layer && p.replica == replica
+    })
+}
+
+/// Run one closure per chip unit, remapping each returned partial's
+/// dispatch/placement indices into the group-global space.  Chips run
+/// on concurrent scoped threads (each wholly owns its cores, so the
+/// existing per-chip determinism arguments apply unchanged); a single
+/// involved chip runs on the calling thread.
+fn fan_out<'u, F>(
+    units: Vec<(&'u mut NeuRramChip, &'u [usize], Vec<ReplicaBatch<'u>>,
+                Vec<usize>)>,
+    exec: F,
+) -> Vec<PlacementPartials>
+where
+    F: Fn(&mut NeuRramChip, &[ReplicaBatch]) -> Vec<PlacementPartials>
+        + Sync,
+{
+    fn remap(mut parts: Vec<PlacementPartials>, gmap: &[usize],
+             ds: &[usize]) -> Vec<PlacementPartials> {
+        for p in &mut parts {
+            if !ds.is_empty() {
+                p.dispatch = ds[p.dispatch];
+            }
+            p.placement = gmap[p.placement];
+        }
+        parts
+    }
+    if units.len() > 1 {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = units
+                .into_iter()
+                .map(|(chip, gmap, sub, ds)| {
+                    let exec = &exec;
+                    s.spawn(move || remap(exec(chip, &sub), gmap, &ds))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("fleet chip worker panicked"))
+                .collect()
+        })
+    } else {
+        units
+            .into_iter()
+            .flat_map(|(chip, gmap, sub, ds)| {
+                remap(exec(chip, &sub), gmap, &ds)
+            })
+            .collect()
+    }
+}
+
+/// [`DispatchTarget`] on the whole fleet: resolves the (unique) model
+/// hosting the layer and dispatches to its PRIMARY replica group.  This
+/// is the executor-on-fleet convenience surface (calibration, ad-hoc
+/// inference); the serving loop addresses specific groups through the
+/// router instead.
+impl DispatchTarget for ChipFleet {
+    fn matrix(&self, layer: &str) -> Option<&ConductanceMatrix> {
+        self.models.iter().find_map(|m| m.matrix(layer))
+    }
+
+    fn replica_count(&self, layer: &str) -> usize {
+        self.model_of_layer(layer)
+            .map(|i| self.models[i].plan.replica_count(layer))
+            .unwrap_or(1)
+    }
+
+    fn mvm_layer_batch_multi(
+        &mut self,
+        layer: &str,
+        dispatches: &[ReplicaBatch],
+        cfg: &NeuronConfig,
+    ) -> Vec<(Vec<Vec<f64>>, Vec<f64>)> {
+        let mi = self
+            .model_of_layer(layer)
+            .unwrap_or_else(|| panic!("layer {layer} not placed on fleet"));
+        let ChipFleet { ref mut chips, ref models, .. } = *self;
+        let mut t = Self::group_target(chips, &models[mi], 0);
+        t.mvm_layer_batch_multi(layer, dispatches, cfg)
+    }
+
+    fn mvm_layer_backward_batch(
+        &mut self,
+        layer: &str,
+        inputs: &[&[i32]],
+        cfg: &NeuronConfig,
+        stoch_amp_v: f64,
+        replica: usize,
+    ) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mi = self
+            .model_of_layer(layer)
+            .unwrap_or_else(|| panic!("layer {layer} not placed on fleet"));
+        let ChipFleet { ref mut chips, ref models, .. } = *self;
+        let mut t = Self::group_target(chips, &models[mi], 0);
+        t.mvm_layer_backward_batch(layer, inputs, cfg, stoch_amp_v, replica)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::mapping::MappingStrategy;
+    use crate::util::rng::Rng;
+
+    fn matrix(name: &str, rows: usize, cols: usize, seed: u64)
+              -> ConductanceMatrix {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> =
+            (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        ConductanceMatrix::compile(name, &w, None, rows, cols, 7, 40.0, 1.0,
+                                   None)
+    }
+
+    #[test]
+    fn fleet_chips_get_distinct_stream_derived_seeds() {
+        let f = ChipFleet::new(3, 2, 9);
+        // chip seeds derive from stream(seed, i, 0): chip i of a bigger
+        // fleet equals chip i of a smaller one
+        let g = ChipFleet::new(2, 2, 9);
+        for i in 0..2 {
+            let mut a = f.chips[i].rng.clone();
+            let mut b = g.chips[i].rng.clone();
+            assert_eq!(a.next_u64(), b.next_u64(), "chip {i}");
+        }
+        let mut c0 = f.chips[0].rng.clone();
+        let mut c1 = f.chips[1].rng.clone();
+        assert_ne!(c0.next_u64(), c1.next_u64());
+    }
+
+    #[test]
+    fn fleet_dispatch_matches_single_chip() {
+        // a model that fits one fleet chip, replicated onto 2 groups:
+        // the fleet's DispatchTarget surface must equal a lone chip
+        // programmed with the same plan
+        let mats = || vec![matrix("fc", 200, 24, 3)];
+        let mut fleet = ChipFleet::new(2, 4, 11);
+        fleet
+            .program_model("m", mats(), &[1.0], MappingStrategy::Simple, 2)
+            .unwrap();
+        assert_eq!(fleet.replica_groups("m"), 2);
+        assert_eq!(fleet.chips_per_copy("m"), 1);
+
+        let mut chip = NeuRramChip::with_cores(4, 77);
+        chip.program_model(mats(), &[1.0], MappingStrategy::Simple, false)
+            .unwrap();
+
+        let cfg = NeuronConfig::default();
+        let inputs: Vec<Vec<i32>> = (0..3)
+            .map(|i| (0..200).map(|r| ((r + i) % 15) as i32 - 7).collect())
+            .collect();
+        let refs: Vec<&[i32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let (yf, nf) =
+            DispatchTarget::mvm_layer_batch(&mut fleet, "fc", &refs, &cfg, 0);
+        let (yc, nc) = chip.mvm_layer_batch("fc", &refs, &cfg, 0);
+        assert_eq!(yf, yc);
+        for (a, b) in nf.iter().zip(&nc) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Model placement across fleet chips: model-parallel plan sharding and
+//! data-parallel replication.
+//!
+//! One copy of a model is planned over a VIRTUAL core space of
+//! `k * cores_per_chip` cores -- the smallest `k` the plan fits -- and
+//! [`shard_plan`] splits the global plan into per-chip slices (virtual
+//! core `c` lives on chip `c / cores_per_chip` as local core
+//! `c % cores_per_chip`), preserving global placement order within each
+//! chip so the fleet's cross-chip partial-sum fold can reproduce the
+//! single-chip f64 addition order exactly.  The copy is then replicated
+//! onto as many groups of `k` free chips as requested (data
+//! parallelism: the router spreads request batches across copies).
+//!
+//! Fleet programming always uses ideal (noise-free) loads: replica
+//! groups must be bit-identical or routing would be observable in the
+//! outputs, breaking the serving determinism contract (see the module
+//! docs in `fleet/mod.rs`).
+
+use super::{ChipFleet, FleetModel, ModelGroup};
+use crate::coordinator::mapping::{plan, MappingPlan, MappingStrategy};
+use crate::models::ConductanceMatrix;
+
+/// Placement summary returned by [`ChipFleet::program_model`].
+#[derive(Clone, Debug)]
+pub struct FleetPlacement {
+    /// Chips one copy shards over (1 = the model fits a single chip).
+    pub chips_per_copy: usize,
+    /// Data-parallel copies placed.
+    pub copies: usize,
+    /// Primary (replica-0) segment placements per copy.
+    pub segments: usize,
+    /// Placements merged at nonzero window offsets (Packed cases 3/4).
+    pub merged: usize,
+}
+
+/// Split a global (virtual-core) plan into per-chip shards.  Returns,
+/// per shard, the chip-local plan (cores rebased to
+/// `[0, cores_per_chip)`) plus the global placement index of each local
+/// placement, in local plan order.
+pub fn shard_plan(global: &MappingPlan, cores_per_chip: usize)
+                  -> Vec<(MappingPlan, Vec<usize>)> {
+    assert!(cores_per_chip > 0);
+    let n_shards = global
+        .placements
+        .iter()
+        .map(|p| p.core / cores_per_chip + 1)
+        .max()
+        .unwrap_or(0);
+    let mut shards = Vec::with_capacity(n_shards);
+    for s in 0..n_shards {
+        let mut placements = Vec::new();
+        let mut idxs = Vec::new();
+        for (gi, p) in global.placements.iter().enumerate() {
+            if p.core / cores_per_chip != s {
+                continue;
+            }
+            let mut q = p.clone();
+            q.core -= s * cores_per_chip;
+            placements.push(q);
+            idxs.push(gi);
+        }
+        let cores_used = {
+            let mut used = vec![false; cores_per_chip];
+            for p in &placements {
+                used[p.core] = true;
+            }
+            used.iter().filter(|&&u| u).count()
+        };
+        shards.push((
+            MappingPlan {
+                placements,
+                cores_used,
+                // the replica bookkeeping is global (a replica's
+                // segments may span chips); the fleet dispatches by the
+                // GLOBAL plan, so each shard just carries a copy
+                replicas: global.replicas.clone(),
+            },
+            idxs,
+        ));
+    }
+    shards
+}
+
+impl ChipFleet {
+    /// Place `matrices` on the fleet as model `name`: find the smallest
+    /// number of chips `k` one copy fits (planning over
+    /// `k * cores_per_chip` virtual cores -- `k > 1` is a model-parallel
+    /// shard), then program data-parallel copies onto groups of `k` free
+    /// chips, as many as fit the `max_chips` budget (a budget smaller
+    /// than `k` still admits ONE copy -- a model is never split below a
+    /// whole copy).  `max_chips` is a CHIP budget, not a copy count, so
+    /// callers reserving chips for a later model cannot be starved by a
+    /// copy that shards wider than expected.  At least one copy must
+    /// fit the free chips or an error is returned.  Layer names must be
+    /// unique across the whole fleet so executors can address layers
+    /// unambiguously.
+    pub fn program_model(
+        &mut self,
+        name: &str,
+        matrices: Vec<ConductanceMatrix>,
+        intensity: &[f64],
+        strategy: MappingStrategy,
+        max_chips: usize,
+    ) -> Result<FleetPlacement, String> {
+        if self.model_index(name).is_some() {
+            return Err(format!("model {name} already placed"));
+        }
+        for (i, m) in matrices.iter().enumerate() {
+            if matrices[..i].iter().any(|e| e.layer == m.layer) {
+                return Err(format!("duplicate layer {} in model {name}",
+                                   m.layer));
+            }
+            if let Some(mi) = self.model_of_layer(&m.layer) {
+                return Err(format!(
+                    "layer {} of model {name} collides with model {} -- \
+                     fleet layer names must be unique (rename the layers \
+                     or bundle the models together)",
+                    m.layer, self.models[mi].name
+                ));
+            }
+        }
+        let free = self.free_chips();
+        if free.is_empty() {
+            return Err(format!("no free chips for model {name}"));
+        }
+        // smallest k one copy fits
+        let mut fitted: Option<(usize, MappingPlan)> = None;
+        let mut last_err = String::new();
+        for k in 1..=free.len() {
+            match plan(&matrices, intensity, strategy,
+                       k * self.cores_per_chip) {
+                Ok(p) => {
+                    fitted = Some((k, p));
+                    break;
+                }
+                Err(e) => last_err = e,
+            }
+        }
+        let (k, gplan) = fitted.ok_or_else(|| {
+            format!("model {name} does not fit {} free chips of {} cores: \
+                     {last_err}",
+                    free.len(), self.cores_per_chip)
+        })?;
+        let copies = (free.len() / k).min((max_chips.max(k)) / k).max(1);
+        let shards = shard_plan(&gplan, self.cores_per_chip);
+        assert!(shards.len() <= k, "shard count exceeds the fitted k");
+        let mut groups = Vec::with_capacity(copies);
+        for c in 0..copies {
+            let chip_ids: Vec<usize> = free[c * k..(c + 1) * k].to_vec();
+            let mut placements = Vec::with_capacity(shards.len());
+            for (s, (local, idxs)) in shards.iter().enumerate() {
+                let chip = &mut self.chips[chip_ids[s]];
+                // each chip stores only the matrices of layers it
+                // hosts (a 2-of-20-layer shard does not need the other
+                // 18); the fleet keeps the canonical full set and only
+                // ever dispatches a layer to its hosting chips
+                let hosted: Vec<ConductanceMatrix> = matrices
+                    .iter()
+                    .filter(|m| {
+                        local
+                            .placements
+                            .iter()
+                            .any(|p| p.segment.layer == m.layer)
+                    })
+                    .cloned()
+                    .collect();
+                // ideal loads only -- see the module docs
+                chip.program_plan(local.clone(), hosted, false)?;
+                chip.gate_unused();
+                placements.push(idxs.clone());
+            }
+            // a copy may shard over fewer chips than k reserved (the
+            // packer can leave the tail chip empty); surplus chips stay
+            // claimed by the group so copies never interleave
+            while placements.len() < chip_ids.len() {
+                placements.push(Vec::new());
+            }
+            groups.push(ModelGroup { chips: chip_ids, placements });
+        }
+        let segments = gplan
+            .placements
+            .iter()
+            .filter(|p| p.replica == 0)
+            .count();
+        let merged = gplan.merged_placements();
+        self.models.push(FleetModel {
+            name: name.to_string(),
+            matrices,
+            plan: gplan,
+            groups,
+        });
+        Ok(FleetPlacement { chips_per_copy: k, copies, segments, merged })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn matrix(name: &str, rows: usize, cols: usize, seed: u64)
+              -> ConductanceMatrix {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> =
+            (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        ConductanceMatrix::compile(name, &w, None, rows, cols, 7, 40.0, 1.0,
+                                   None)
+    }
+
+    #[test]
+    fn shard_plan_rebases_cores_and_preserves_order() {
+        let mats = vec![matrix("tall", 500, 20, 1)]; // 4 row segments
+        let gplan = plan(&mats, &[1.0], MappingStrategy::Simple, 4).unwrap();
+        let shards = shard_plan(&gplan, 2);
+        assert_eq!(shards.len(), 2);
+        for (s, (local, idxs)) in shards.iter().enumerate() {
+            assert_eq!(local.placements.len(), 2);
+            assert_eq!(idxs, &[2 * s, 2 * s + 1]);
+            for p in &local.placements {
+                assert!(p.core < 2, "core rebased");
+            }
+        }
+        // every global placement appears exactly once
+        let mut seen: Vec<usize> =
+            shards.iter().flat_map(|(_, i)| i.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn program_model_shards_when_one_chip_is_too_small() {
+        let mut fleet = ChipFleet::new(4, 2, 5);
+        // budget of 4 CHIPS buys two 2-chip copies of a sharded model
+        let p = fleet
+            .program_model("big", vec![matrix("tall", 500, 20, 2)], &[1.0],
+                           MappingStrategy::Simple, 4)
+            .unwrap();
+        assert_eq!(p.chips_per_copy, 2, "4 segments need 2x2-core chips");
+        assert_eq!(p.copies, 2);
+        assert_eq!(p.segments, 4);
+        assert_eq!(fleet.free_chips(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn chip_budget_is_not_overrun_by_wide_copies() {
+        // a 2-chip-per-copy model under a 2-chip budget must place ONE
+        // copy, leaving the other chips free for later models (a copy
+        // count would have claimed all 4)
+        let mut fleet = ChipFleet::new(4, 2, 7);
+        let p = fleet
+            .program_model("big", vec![matrix("tall", 500, 20, 2)], &[1.0],
+                           MappingStrategy::Simple, 2)
+            .unwrap();
+        assert_eq!(p.chips_per_copy, 2);
+        assert_eq!(p.copies, 1, "2-chip budget = one 2-chip copy");
+        assert_eq!(fleet.free_chips(), vec![2, 3]);
+        // the reserved share is still available to a second model
+        fleet
+            .program_model("next", vec![matrix("fc", 64, 16, 8)], &[1.0],
+                           MappingStrategy::Simple, 2)
+            .unwrap();
+    }
+
+    #[test]
+    fn program_model_rejects_layer_collisions() {
+        let mut fleet = ChipFleet::new(3, 4, 6);
+        fleet
+            .program_model("a", vec![matrix("fc", 64, 16, 3)], &[1.0],
+                           MappingStrategy::Simple, 1)
+            .unwrap();
+        let err = fleet
+            .program_model("b", vec![matrix("fc", 32, 8, 4)], &[1.0],
+                           MappingStrategy::Simple, 1)
+            .unwrap_err();
+        assert!(err.contains("collides"), "{err}");
+        // and a model that cannot fit the remaining chips errors
+        let huge: Vec<ConductanceMatrix> = (0..9)
+            .map(|i| matrix(&format!("m{i}"), 128, 256, 10 + i as u64))
+            .collect();
+        let err = fleet
+            .program_model("huge", huge, &[1.0; 9],
+                           MappingStrategy::Simple, 1)
+            .unwrap_err();
+        assert!(err.contains("does not fit"), "{err}");
+    }
+}

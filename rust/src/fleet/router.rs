@@ -1,0 +1,649 @@
+//! Least-loaded routing and the virtual-time serving loop, plus the
+//! serving presets (workload + trace builders) shared by the
+//! `serve-bench` CLI and the `fleet_scaling` bench so the two can never
+//! drift.
+//!
+//! Serving is a deterministic discrete-event simulation: requests carry
+//! virtual arrival times, the batcher coalesces them (pure function of
+//! the trace, see `fleet/batcher.rs`), and each batch dispatches to the
+//! least-loaded replica group of its workload's model -- the group that
+//! frees up earliest, lowest index on ties.  The batch then executes
+//! for REAL on that group's chips (outputs are the actual executor
+//! outputs); only the clock is virtual, driven by the chips' modelled
+//! busy time, so latency/throughput numbers are bitwise reproducible on
+//! any host at any `NEURRAM_THREADS`.
+
+use super::batcher::{coalesce, BatchPolicy};
+use super::ChipFleet;
+use crate::coordinator::{FleetReport, Scheduler};
+use crate::models::executor::recurrent::{LstmCalib, LstmExecutor};
+use crate::models::executor::sampler::{recover_images, GibbsConfig};
+use crate::models::executor::run_cnn_batch;
+use crate::models::ModelGraph;
+use crate::util::rng;
+use crate::util::stats::percentile;
+
+/// Stream id separating per-batch serving seeds from every other use of
+/// the fleet seed.
+const SERVE_STREAM: u64 = 0xF1EE_7BA7_C4;
+
+/// One inference request's payload, matching its workload's executor.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Quantized image for a CNN workload (first layer's input range,
+    /// channel-last).
+    Image(Vec<i32>),
+    /// Quantized MFCC utterance for an LSTM workload
+    /// (`t_steps * input_dim` ints).
+    Utterance(Vec<i32>),
+    /// RBM recovery job: corrupted binary pixels + evidence mask.
+    Recovery { corrupted: Vec<f32>, known: Vec<bool> },
+}
+
+/// One inference request in the trace.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Name of the [`Workload`] serving this request.
+    pub workload: String,
+    /// Virtual arrival time (ns).
+    pub arrival_ns: u64,
+    pub payload: Payload,
+}
+
+/// How to execute one workload's batches on a chip group.
+#[derive(Clone, Debug)]
+pub enum WorkloadKind {
+    /// Feed-forward CNN inference (`run_cnn_batch`).
+    Cnn { graph: ModelGraph, shifts: Vec<f64> },
+    /// Time-stepped LSTM inference: the executor is parsed + calibrated
+    /// once at workload build time and reused for every batch.
+    Recurrent { graph: ModelGraph, exec: LstmExecutor },
+    /// RBM Gibbs recovery (`recover_images`); the per-batch serving
+    /// seed drives the sampling chain.
+    Sampler {
+        layer: String,
+        steps: usize,
+        burn_in: usize,
+        temperature: f64,
+    },
+}
+
+/// A served workload: requests named `name` execute `kind` against the
+/// fleet model `model`.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: String,
+    pub model: String,
+    pub kind: WorkloadKind,
+}
+
+/// Outcome of one request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub request: usize,
+    /// Logits (CNN/LSTM) or recovered pixel posterior means (RBM).
+    pub output: Vec<f64>,
+    /// Modelled on-chip execution time of the whole batch this request
+    /// rode (ns).  Route-invariant: identical whatever the chip count.
+    pub chip_ns: f64,
+    /// Queue + batching delay before the batch started (ns).
+    pub wait_ns: f64,
+    /// Arrival-to-completion latency (ns) -- shrinks with more chips.
+    pub latency_ns: f64,
+    /// Replica group that executed the batch.
+    pub group: usize,
+    /// Global batch sequence number.
+    pub batch: usize,
+}
+
+/// Aggregate serving metrics over one trace.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub batches: usize,
+    /// First arrival to last completion (virtual ns).
+    pub span_ns: f64,
+    /// Requests per second at the virtual span.
+    pub requests_per_s: f64,
+    pub p50_latency_ns: f64,
+    pub p99_latency_ns: f64,
+    /// Total modelled chip-busy time across all batches.
+    pub busy_ns: f64,
+    /// Per model: batches executed per replica group.
+    pub group_batches: Vec<(String, Vec<usize>)>,
+    /// Cross-group overlap bookkeeping (groups of ALL models pooled).
+    pub fleet: FleetReport,
+}
+
+struct PendingBatch {
+    wl: usize,
+    requests: Vec<usize>,
+    ready_ns: u64,
+}
+
+impl ChipFleet {
+    /// Serve a request trace: coalesce per workload under `policy`,
+    /// route each batch to the least-loaded replica group of its
+    /// workload's model, execute it for real, and assemble per-request
+    /// responses plus aggregate metrics.  Deterministic per the fleet
+    /// contract (`fleet/mod.rs`): outputs and `chip_ns` depend only on
+    /// the trace, latencies additionally on the fleet shape.
+    pub fn serve(
+        &mut self,
+        workloads: &[Workload],
+        requests: &[Request],
+        policy: &BatchPolicy,
+    ) -> Result<(Vec<Response>, ServeReport), String> {
+        for w in workloads {
+            if self.model_index(&w.model).is_none() {
+                return Err(format!(
+                    "workload {} references unplaced model {}",
+                    w.name, w.model
+                ));
+            }
+        }
+        if requests.is_empty() {
+            return Ok((Vec::new(), ServeReport::default()));
+        }
+        // arrival-ordered trace, split per workload (stable: ties keep
+        // request order)
+        let mut order: Vec<usize> = (0..requests.len()).collect();
+        order.sort_by_key(|&i| (requests[i].arrival_ns, i));
+        let mut per_wl: Vec<Vec<(u64, usize)>> =
+            vec![Vec::new(); workloads.len()];
+        for &i in &order {
+            let wi = workloads
+                .iter()
+                .position(|w| w.name == requests[i].workload)
+                .ok_or_else(|| {
+                    format!("request {i} names unknown workload {}",
+                            requests[i].workload)
+                })?;
+            per_wl[wi].push((requests[i].arrival_ns, i));
+        }
+        // batches, globally ordered by (ready, workload, lead request)
+        let mut pending: Vec<PendingBatch> = Vec::new();
+        for (wi, arr) in per_wl.iter().enumerate() {
+            for b in coalesce(arr, policy) {
+                pending.push(PendingBatch {
+                    wl: wi,
+                    requests: b.requests,
+                    ready_ns: b.ready_ns,
+                });
+            }
+        }
+        pending.sort_by_key(|p| (p.ready_ns, p.wl, p.requests[0]));
+
+        // router state: per (model, group) virtual free time + load
+        let n_models = self.models.len();
+        let mut free_at: Vec<Vec<f64>> = (0..n_models)
+            .map(|m| vec![0.0f64; self.models[m].groups.len()])
+            .collect();
+        let mut group_batches: Vec<Vec<usize>> = (0..n_models)
+            .map(|m| vec![0usize; self.models[m].groups.len()])
+            .collect();
+        let mut group_busy: Vec<Vec<f64>> = (0..n_models)
+            .map(|m| vec![0.0f64; self.models[m].groups.len()])
+            .collect();
+
+        let mut responses: Vec<Option<Response>> =
+            (0..requests.len()).map(|_| None).collect();
+        let mut total_busy = 0.0f64;
+        for (seq, pb) in pending.iter().enumerate() {
+            let wl = &workloads[pb.wl];
+            let mi = self.model_index(&wl.model).expect("validated above");
+            // least-loaded: earliest-free group, lowest index on ties
+            let g = (0..free_at[mi].len())
+                .min_by(|&a, &b| {
+                    free_at[mi][a]
+                        .total_cmp(&free_at[mi][b])
+                        .then(a.cmp(&b))
+                })
+                .expect("placed models have at least one group");
+            let ready = pb.ready_ns as f64;
+            let start = free_at[mi][g].max(ready);
+            // per-batch seed: addressed by trace position, so replica
+            // choice and chip history drop out of the outputs
+            let batch_seed =
+                rng::stream(self.seed, SERVE_STREAM, seq as u64).next_u64();
+            self.reset_group(mi, g, batch_seed);
+            let (outputs, busy) =
+                self.execute_batch(wl, mi, g, &pb.requests, requests,
+                                   batch_seed)?;
+            total_busy += busy;
+            group_busy[mi][g] += busy;
+            group_batches[mi][g] += 1;
+            let completion = start + busy;
+            free_at[mi][g] = completion;
+            for (k, &ri) in pb.requests.iter().enumerate() {
+                let arrival = requests[ri].arrival_ns as f64;
+                responses[ri] = Some(Response {
+                    request: ri,
+                    output: outputs[k].clone(),
+                    chip_ns: busy,
+                    wait_ns: start - arrival,
+                    latency_ns: completion - arrival,
+                    group: g,
+                    batch: seq,
+                });
+            }
+        }
+
+        let responses: Vec<Response> = responses
+            .into_iter()
+            .map(|r| r.expect("every request rode exactly one batch"))
+            .collect();
+        let first_arrival =
+            requests.iter().map(|r| r.arrival_ns).min().unwrap_or(0) as f64;
+        let last_completion = responses
+            .iter()
+            .map(|r| requests[r.request].arrival_ns as f64 + r.latency_ns)
+            .fold(0.0f64, f64::max);
+        let span = (last_completion - first_arrival).max(1e-9);
+        let lats: Vec<f64> =
+            responses.iter().map(|r| r.latency_ns).collect();
+        let all_group_busy: Vec<f64> =
+            group_busy.iter().flatten().copied().collect();
+        let report = ServeReport {
+            requests: requests.len(),
+            batches: pending.len(),
+            span_ns: span,
+            requests_per_s: requests.len() as f64 * 1e9 / span,
+            p50_latency_ns: percentile(&lats, 50.0),
+            p99_latency_ns: percentile(&lats, 99.0),
+            busy_ns: total_busy,
+            group_batches: (0..n_models)
+                .map(|m| {
+                    (self.models[m].name.clone(), group_batches[m].clone())
+                })
+                .collect(),
+            fleet: Scheduler::fleet_report(&all_group_busy, requests.len()),
+        };
+        Ok((responses, report))
+    }
+
+    /// Reset a group's dispatch state + energy counters ahead of one
+    /// batch: per-chip seeds derive from (batch seed, position IN the
+    /// group), never from fleet chip ids, so every replica group resets
+    /// to the identical state.
+    fn reset_group(&mut self, mi: usize, group: usize, batch_seed: u64) {
+        let chip_ids = self.models[mi].groups[group].chips.clone();
+        for (pos, &ci) in chip_ids.iter().enumerate() {
+            let mut s = rng::stream(batch_seed, pos as u64, 0);
+            self.chips[ci].reset_dispatch_state(s.next_u64());
+            self.chips[ci].reset_energy();
+        }
+    }
+
+    /// Execute one batch on one group, returning per-request outputs
+    /// plus the group's modelled busy time (fresh from the reset, so it
+    /// is the batch's service time).
+    fn execute_batch(
+        &mut self,
+        wl: &Workload,
+        mi: usize,
+        group: usize,
+        batch_reqs: &[usize],
+        all: &[Request],
+        batch_seed: u64,
+    ) -> Result<(Vec<Vec<f64>>, f64), String> {
+        let ChipFleet { ref mut chips, ref models, .. } = *self;
+        let mut target =
+            ChipFleet::group_target(chips, &models[mi], group);
+        let outputs = match &wl.kind {
+            WorkloadKind::Cnn { graph, shifts } => {
+                let imgs = gather(batch_reqs, all, |p| match p {
+                    Payload::Image(v) => Some(v.clone()),
+                    _ => None,
+                })
+                .ok_or_else(|| bad_payload(wl, "Image"))?;
+                run_cnn_batch(&mut target, graph, &imgs, shifts)
+            }
+            WorkloadKind::Recurrent { graph, exec } => {
+                let utts = gather(batch_reqs, all, |p| match p {
+                    Payload::Utterance(v) => Some(v.clone()),
+                    _ => None,
+                })
+                .ok_or_else(|| bad_payload(wl, "Utterance"))?;
+                exec.run_logits(&mut target, graph, &utts)
+            }
+            WorkloadKind::Sampler { layer, steps, burn_in, temperature } => {
+                let corrupted = gather(batch_reqs, all, |p| match p {
+                    Payload::Recovery { corrupted, .. } => {
+                        Some(corrupted.clone())
+                    }
+                    _ => None,
+                })
+                .ok_or_else(|| bad_payload(wl, "Recovery"))?;
+                let known = gather(batch_reqs, all, |p| match p {
+                    Payload::Recovery { known, .. } => Some(known.clone()),
+                    _ => None,
+                })
+                .expect("matched above");
+                // serving has no ground truth: the corrupted images
+                // stand in as `originals`, so the report's error curve
+                // is meaningless here and ignored -- only the
+                // recovered posteriors are returned
+                let rep = recover_images(
+                    &mut target,
+                    layer,
+                    &corrupted,
+                    &corrupted,
+                    &known,
+                    &GibbsConfig {
+                        steps: *steps,
+                        burn_in: *burn_in,
+                        temperature: *temperature,
+                        seed: batch_seed,
+                    },
+                );
+                rep.recovered
+                    .iter()
+                    .map(|img| img.iter().map(|&p| p as f64).collect())
+                    .collect()
+            }
+        };
+        let busy = target.busy_ns();
+        Ok((outputs, busy))
+    }
+}
+
+fn gather<T>(
+    reqs: &[usize],
+    all: &[Request],
+    pick: impl Fn(&Payload) -> Option<T>,
+) -> Option<Vec<T>> {
+    reqs.iter().map(|&ri| pick(&all[ri].payload)).collect()
+}
+
+fn bad_payload(wl: &Workload, want: &str) -> String {
+    format!("workload {} expects Payload::{want}", wl.name)
+}
+
+// ---------------------------------------------------------------------
+// Serving presets: the workload/trace builders the `serve-bench` CLI
+// and the `fleet_scaling` bench share.
+// ---------------------------------------------------------------------
+
+/// Build the workload mix + fleet placement for `serve-bench` /
+/// `fleet_scaling`.
+pub mod presets {
+    use super::super::replicate::FleetPlacement;
+    use super::*;
+    use crate::calib::calibrate::calibrate_cnn_shifts;
+    use crate::coordinator::mapping::MappingStrategy;
+    use crate::io::datasets;
+    use crate::models::executor::cnn::quantize_inputs;
+    use crate::models::executor::recurrent::quantize_utterances;
+    use crate::models::loader::{compile_random, intensities};
+    use crate::models::train::binarize_images;
+    use crate::models::{cifar_resnet, mnist_cnn7, rbm_image, speech_lstm};
+    use crate::util::rng::Rng;
+
+    /// Workload names the presets know how to build.
+    pub const KNOWN: [&str; 4] = ["mnist", "cifar", "speech", "rbm"];
+
+    /// Parse a `--mix` spec: colon-separated workload names with
+    /// optional `=weight` (e.g. `mnist=4:cifar=1:speech`).  Weights set
+    /// each workload's share of the request trace.
+    pub fn parse_mix(spec: &str) -> Result<Vec<(String, usize)>, String> {
+        let mut mix = Vec::new();
+        for part in spec.split(':').filter(|p| !p.is_empty()) {
+            let (name, weight) = match part.split_once('=') {
+                Some((n, w)) => (
+                    n.to_string(),
+                    w.parse::<usize>().map_err(|_| {
+                        format!("bad weight in mix entry {part}")
+                    })?,
+                ),
+                None => (part.to_string(), 1),
+            };
+            if !KNOWN.contains(&name.as_str()) {
+                return Err(format!(
+                    "unknown workload {name}; known: {}",
+                    KNOWN.join(", ")
+                ));
+            }
+            if weight == 0 || mix.iter().any(|(n, _)| *n == name) {
+                return Err(format!("bad or duplicate mix entry {part}"));
+            }
+            mix.push((name, weight));
+        }
+        if mix.is_empty() {
+            return Err("empty --mix".to_string());
+        }
+        Ok(mix)
+    }
+
+    /// A built serving fleet: chips programmed, workloads wired.
+    pub struct ServingFleet {
+        pub fleet: ChipFleet,
+        pub workloads: Vec<Workload>,
+        /// (model name, placement) per programmed bundle.
+        pub placements: Vec<(String, FleetPlacement)>,
+    }
+
+    /// Program a fleet of `n_chips` paper-geometry chips for `mix`:
+    /// the small workloads (mnist + speech + rbm) bundle onto one chip
+    /// set and CIFAR (whose layer names collide with MNIST's, and whose
+    /// Packed plan wants a whole chip) gets its own; each bundle then
+    /// replicates data-parallel over its chip share.  Weights are
+    /// random-init and MNIST's requantization shifts are calibrated
+    /// through the fleet's own `DispatchTarget` surface -- this is a
+    /// LOAD generator, measuring latency/throughput, not accuracy
+    /// (CIFAR runs zero shifts: same MVM count, chance-level logits).
+    pub fn build_serving_fleet(
+        n_chips: usize,
+        cores_per_chip: usize,
+        mix: &[(String, usize)],
+        seed: u64,
+        quick: bool,
+    ) -> Result<ServingFleet, String> {
+        let has = |n: &str| mix.iter().any(|(m, _)| m == n);
+        let has_cifar = has("cifar");
+        let has_edge = has("mnist") || has("speech") || has("rbm");
+        let n_cifar = match (has_cifar, has_edge) {
+            (false, _) => 0,
+            (true, false) => n_chips,
+            (true, true) => (n_chips / 2).max(1),
+        };
+        let n_edge = n_chips - n_cifar;
+        if has_edge && n_edge == 0 {
+            return Err(format!(
+                "{n_chips} chip(s) cannot host CIFAR and the mnist/speech/\
+                 rbm bundle side by side; use --chips 2 or trim --mix"
+            ));
+        }
+
+        let mut fleet = ChipFleet::new(n_chips, cores_per_chip, seed);
+        let mut workloads = Vec::new();
+        let mut placements = Vec::new();
+
+        if has_edge {
+            let mut mats = Vec::new();
+            let mut intens = Vec::new();
+            let mnist_graph = mnist_cnn7(8);
+            let speech_graph = speech_lstm(32, 1);
+            let rbm_graph = rbm_image();
+            if has("mnist") {
+                mats.extend(compile_random(&mnist_graph, seed + 1));
+                intens.extend(intensities(&mnist_graph));
+            }
+            if has("speech") {
+                mats.extend(compile_random(&speech_graph, seed + 2));
+                intens.extend(intensities(&speech_graph));
+            }
+            if has("rbm") {
+                mats.extend(compile_random(&rbm_graph, seed + 3));
+                intens.extend(intensities(&rbm_graph));
+            }
+            let p = fleet.program_model("edge", mats, &intens,
+                                        MappingStrategy::Packed, n_edge)?;
+            placements.push(("edge".to_string(), p));
+            if has("mnist") {
+                // shifts calibrated THROUGH the fleet's DispatchTarget
+                // surface (resolves to the primary replica group;
+                // identical on every group: ideal loads)
+                let (probe, _) = datasets::digits28(2, seed + 4, 0.15);
+                let shifts =
+                    calibrate_cnn_shifts(&mut fleet, &mnist_graph, &probe);
+                workloads.push(Workload {
+                    name: "mnist".to_string(),
+                    model: "edge".to_string(),
+                    kind: WorkloadKind::Cnn { graph: mnist_graph, shifts },
+                });
+            }
+            if has("speech") {
+                let mut exec = LstmExecutor::new(&speech_graph)?;
+                // fixed serving-scale preset (the reservoir is random;
+                // a 2-pass calibration would only re-derive numbers of
+                // this magnitude)
+                exec.calib = LstmCalib {
+                    gate_v_per_unit: 0.05,
+                    cell_v_per_unit: 0.3,
+                };
+                workloads.push(Workload {
+                    name: "speech".to_string(),
+                    model: "edge".to_string(),
+                    kind: WorkloadKind::Recurrent {
+                        graph: speech_graph,
+                        exec,
+                    },
+                });
+            }
+            if has("rbm") {
+                workloads.push(Workload {
+                    name: "rbm".to_string(),
+                    model: "edge".to_string(),
+                    kind: WorkloadKind::Sampler {
+                        layer: "rbm".to_string(),
+                        steps: if quick { 4 } else { 8 },
+                        burn_in: if quick { 1 } else { 2 },
+                        temperature: 0.5,
+                    },
+                });
+            }
+        }
+        if has_cifar {
+            let mut graph = cifar_resnet(if quick { 8 } else { 16 }, 3);
+            // fleet layer names must be unique and the ResNet's
+            // conv1../fc names collide with MNIST's; the CNN executor
+            // only addresses layers through the graph, so a prefix
+            // renames both sides consistently
+            for l in &mut graph.layers {
+                l.name = format!("cifar.{}", l.name);
+            }
+            let mats = compile_random(&graph, seed + 5);
+            let intens = intensities(&graph);
+            let p = fleet.program_model("cifar", mats, &intens,
+                                        MappingStrategy::Packed, n_cifar)?;
+            placements.push(("cifar".to_string(), p));
+            let shifts = vec![0.0; graph.layers.len()];
+            workloads.push(Workload {
+                name: "cifar".to_string(),
+                model: "cifar".to_string(),
+                kind: WorkloadKind::Cnn { graph, shifts },
+            });
+        }
+        Ok(ServingFleet { fleet, workloads, placements })
+    }
+
+    /// Deterministic request trace: `n` requests assigned to workloads
+    /// by weighted round-robin over `mix`, arriving every `interval_ns`
+    /// (0 = a closed-loop burst at t=0: the fleet saturates and
+    /// throughput measures capacity).  Payload data cycles small
+    /// per-workload pools of the synthetic datasets.
+    pub fn request_trace(
+        workloads: &[Workload],
+        mix: &[(String, usize)],
+        n: usize,
+        interval_ns: u64,
+        seed: u64,
+    ) -> Result<Vec<Request>, String> {
+        // weighted round-robin pattern
+        let mut pattern: Vec<&str> = Vec::new();
+        for (name, w) in mix {
+            for _ in 0..*w {
+                pattern.push(name.as_str());
+            }
+        }
+        // per-workload payload pools
+        let mut pools: Vec<(String, Vec<Payload>)> = Vec::new();
+        for w in workloads {
+            let pool: Vec<Payload> = match &w.kind {
+                WorkloadKind::Cnn { graph, .. } => {
+                    let (imgs, _) = if graph.input_hw == 28 {
+                        datasets::digits28(6, seed + 10, 0.15)
+                    } else {
+                        datasets::textures32(4, seed + 11, 0.1)
+                    };
+                    quantize_inputs(graph, &imgs)
+                        .into_iter()
+                        .map(Payload::Image)
+                        .collect()
+                }
+                WorkloadKind::Recurrent { graph, .. } => {
+                    let (xs, _) = datasets::mfcc_cmds(4, seed + 12, 0.35);
+                    quantize_utterances(graph, &xs)
+                        .into_iter()
+                        .map(Payload::Utterance)
+                        .collect()
+                }
+                WorkloadKind::Sampler { .. } => {
+                    let (imgs, _) = datasets::digits28(4, seed + 13, 0.0);
+                    let binary = binarize_images(&imgs);
+                    let mut rng = Rng::new(seed + 14);
+                    binary
+                        .iter()
+                        .map(|img| {
+                            let (corrupted, known) =
+                                datasets::corrupt_flip(img, 0.2, &mut rng);
+                            Payload::Recovery { corrupted, known }
+                        })
+                        .collect()
+                }
+            };
+            pools.push((w.name.clone(), pool));
+        }
+        let mut counts: Vec<usize> = vec![0; pools.len()];
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let name = pattern[i % pattern.len()];
+            let wi = pools
+                .iter()
+                .position(|(n, _)| n == name)
+                .ok_or_else(|| format!("mix names unbuilt workload {name}"))?;
+            let pool = &pools[wi].1;
+            let payload = pool[counts[wi] % pool.len()].clone();
+            counts[wi] += 1;
+            out.push(Request {
+                workload: name.to_string(),
+                arrival_ns: i as u64 * interval_ns,
+                payload,
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_parser_accepts_names_and_weights() {
+        let mix = presets::parse_mix("mnist=4:cifar=1:speech").unwrap();
+        assert_eq!(
+            mix,
+            vec![
+                ("mnist".to_string(), 4),
+                ("cifar".to_string(), 1),
+                ("speech".to_string(), 1)
+            ]
+        );
+        assert!(presets::parse_mix("mnist:warp").is_err());
+        assert!(presets::parse_mix("mnist=0").is_err());
+        assert!(presets::parse_mix("mnist:mnist").is_err());
+        assert!(presets::parse_mix("").is_err());
+    }
+}

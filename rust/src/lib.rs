@@ -13,6 +13,8 @@
 //! * [`core_sim`]    -- one CIM core: TNSA, voltage-mode neuron, crossbar
 //! * [`energy`]      -- energy/latency accounting, EDP, tech scaling
 //! * [`coordinator`] -- the 48-core chip: mapping, scheduling, dataflow
+//! * [`fleet`]       -- multi-chip serving: replication/sharding,
+//!   request batcher, least-loaded router
 //! * [`models`]      -- layer graphs, conductance compilation, model zoo
 //! * [`runtime`]     -- PJRT client: load + execute HLO artifacts
 //! * [`calib`]       -- model-driven chip calibration
@@ -37,12 +39,34 @@
 //! `models/executor/` hosts one executor per Table-1 dataflow -- `cnn`
 //! (feed-forward), `recurrent` (time-stepped LSTM), `sampler`
 //! (bidirectional RBM Gibbs) -- sharing one quantize/dispatch core.
+//! Executors are generic over [`coordinator::DispatchTarget`], so the
+//! same code drives one chip or a [`fleet::ChipFleet`]: N chips behind
+//! a request batcher and least-loaded router, with data-parallel model
+//! replication, model-parallel plan sharding (cross-chip partial sums)
+//! and a trace-deterministic serving loop -- see `fleet/mod.rs` and
+//! README.md ("Fleet serving").
+
+// Clippy runs as a BLOCKING CI step (`cargo clippy -- -D warnings`).
+// The simulator is written in an explicit index-loop style on purpose:
+// loop order IS the documented contract for RNG draw sequences,
+// partial-sum accumulation and energy-counter folds (the equivalence
+// property tests pin them bitwise), so the rewrites these style lints
+// suggest would obscure exactly the orders the tests pin.  They are
+// allowed once here (and in main.rs for the bin target) rather than
+// per site; everything else clippy flags is fixed at the source.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::type_complexity)]
+#![allow(clippy::manual_memcpy)]
+#![allow(clippy::new_without_default)]
+#![allow(clippy::comparison_chain)]
 
 pub mod calib;
 pub mod coordinator;
 pub mod core_sim;
 pub mod device;
 pub mod energy;
+pub mod fleet;
 pub mod io;
 pub mod models;
 pub mod runtime;

@@ -11,8 +11,20 @@
 //!                       Forward dataflow, batched across utterances)
 //!   recover-image       RBM Gibbs image recovery (Forward + Backward
 //!                       dataflow, stochastic neurons)
+//!   serve-bench         multi-chip fleet load generator (batching +
+//!                       routing; p50/p99 latency, requests/s)
 //!   runtime-check       load + execute PJRT artifacts against golden
 //!   config-dump         print the effective chip configuration
+
+// Same blocking-clippy gate as the library crate root (lib.rs): the
+// explicit index-loop style is the documented draw/accumulation-order
+// contract, allowed once here for the bin target.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::type_complexity)]
+#![allow(clippy::manual_memcpy)]
+#![allow(clippy::new_without_default)]
+#![allow(clippy::comparison_chain)]
 
 use neurram::util::cli::Args;
 
@@ -24,6 +36,7 @@ mod commands {
     pub mod info;
     pub mod recover;
     pub mod runtime_check;
+    pub mod serve_bench;
     pub mod writeverify;
 }
 
@@ -37,6 +50,7 @@ fn main() {
         Some("infer-cifar") => commands::infer_cifar::run(&args),
         Some("infer-speech") => commands::infer_speech::run(&args),
         Some("recover-image") => commands::recover::run(&args),
+        Some("serve-bench") => commands::serve_bench::run(&args),
         Some("runtime-check") => commands::runtime_check::run(&args),
         Some("config-dump") => {
             let cfg = match args.get("config") {
@@ -47,7 +61,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: neurram <info|edp|writeverify|infer-mnist|infer-cifar|infer-speech|recover-image|runtime-check> [--opts]\n\
+                "usage: neurram <info|edp|writeverify|infer-mnist|infer-cifar|infer-speech|recover-image|serve-bench|runtime-check> [--opts]\n\
                  \n\
                  info           chip configuration + artifact inventory\n\
                  edp            EDP/TOPS-W sweep over input/output bits (Fig. 1d)\n\
@@ -56,6 +70,8 @@ fn main() {
                  infer-cifar    ResNet-20 inference via Packed merged mapping\n\
                  infer-speech   LSTM voice-command inference (recurrent dataflow)\n\
                  recover-image  RBM Gibbs image recovery (bidirectional dataflow)\n\
+                 serve-bench    multi-chip fleet load generator (--chips N\n\
+                                --requests M --mix mnist:cifar:speech)\n\
                  runtime-check  PJRT artifact execution vs golden vectors\n\
                  config-dump    print the effective chip configuration\n\
                  \n\

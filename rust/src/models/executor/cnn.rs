@@ -19,7 +19,7 @@
 
 use super::linear_mvm_cfg;
 use crate::coordinator::scheduler::ScheduleReport;
-use crate::coordinator::{NeuRramChip, ReplicaBatch};
+use crate::coordinator::{DispatchTarget, ReplicaBatch};
 use crate::core_sim::Activation;
 use crate::models::graph::{LayerKind, ModelGraph};
 use crate::models::quant::requantize_unsigned;
@@ -181,8 +181,8 @@ fn layer_inputs_from(st: &CnnState, graph: &ModelGraph, li: usize)
 /// Run layers `[0, upto)` of the graph on the chip (conv layers and
 /// non-final dense layers), returning the feature maps entering layer
 /// `upto` plus per-layer latency reports.
-fn forward_layers(
-    chip: &mut NeuRramChip,
+fn forward_layers<T: DispatchTarget>(
+    chip: &mut T,
     graph: &ModelGraph,
     imgs_q: &[Vec<i32>],
     shifts: &[f64],
@@ -197,8 +197,8 @@ fn forward_layers(
 
 /// Execute ONE non-final layer, advancing the state in place
 /// (`shift` is that layer's requantization shift).
-fn step_layer(
-    chip: &mut NeuRramChip,
+fn step_layer<T: DispatchTarget>(
+    chip: &mut T,
     graph: &ModelGraph,
     st: &mut CnnState,
     li: usize,
@@ -225,7 +225,7 @@ fn step_layer(
                 let (h, w) = (st.fms[0].h, st.fms[0].w);
                 let px = h * w;
                 let oc = layer.out_features;
-                let n_rep = chip.plan.replica_count(&layer.name).max(1);
+                let n_rep = chip.replica_count(&layer.name).max(1);
 
                 // im2col patches of every image, image-major -- the ONE
                 // input-gather calibration probes ride too
@@ -357,8 +357,8 @@ fn dense_report(layer: &str, item_ns: &[f64]) -> ScheduleReport {
 /// flattened feature maps for a dense layer.  This is the calibration
 /// probe path -- it rides the REAL executor (residual skips included),
 /// so shifts are calibrated against exactly the features inference sees.
-pub fn collect_layer_inputs(
-    chip: &mut NeuRramChip,
+pub fn collect_layer_inputs<T: DispatchTarget>(
+    chip: &mut T,
     graph: &ModelGraph,
     imgs_q: &[Vec<i32>],
     shifts: &[f64],
@@ -374,11 +374,11 @@ pub fn collect_layer_inputs(
 /// returns that layer's shift; the state then advances one layer with
 /// it.  Replaces re-running the whole prefix per layer -- O(L) layer
 /// executions instead of O(L^2) over a 20-layer ResNet.
-pub fn calibrate_shifts_progressive(
-    chip: &mut NeuRramChip,
+pub fn calibrate_shifts_progressive<T: DispatchTarget>(
+    chip: &mut T,
     graph: &ModelGraph,
     imgs_q: &[Vec<i32>],
-    mut pick: impl FnMut(&mut NeuRramChip, usize, Vec<Vec<i32>>) -> f64,
+    mut pick: impl FnMut(&mut T, usize, Vec<Vec<i32>>) -> f64,
 ) -> Vec<f64> {
     let mut shifts = vec![0.0f64; graph.layers.len()];
     if imgs_q.is_empty() {
@@ -402,8 +402,8 @@ pub fn calibrate_shifts_progressive(
 /// requantization shift.  Returns the logits (de-normalized floats).
 ///
 /// Thin wrapper over [`run_cnn_batch`] with a batch of one.
-pub fn run_cnn(
-    chip: &mut NeuRramChip,
+pub fn run_cnn<T: DispatchTarget>(
+    chip: &mut T,
     graph: &ModelGraph,
     img_q: &[i32],
     shifts: &[f64],
@@ -417,8 +417,8 @@ pub fn run_cnn(
 ///
 /// Thin wrapper over [`run_cnn_batch_traced`], discarding the latency
 /// reports.
-pub fn run_cnn_batch(
-    chip: &mut NeuRramChip,
+pub fn run_cnn_batch<T: DispatchTarget>(
+    chip: &mut T,
     graph: &ModelGraph,
     imgs_q: &[Vec<i32>],
     shifts: &[f64],
@@ -438,8 +438,8 @@ pub fn run_cnn_batch(
 /// `NeuRramChip::mvm_layer_batch_multi` call.  The dense head runs as
 /// one batch over the images.  Outputs are identical to calling
 /// [`run_cnn`] image by image.
-pub fn run_cnn_batch_traced(
-    chip: &mut NeuRramChip,
+pub fn run_cnn_batch_traced<T: DispatchTarget>(
+    chip: &mut T,
     graph: &ModelGraph,
     imgs_q: &[Vec<i32>],
     shifts: &[f64],

@@ -27,7 +27,7 @@ pub use cnn::{calibrate_shifts_progressive, collect_layer_inputs,
 pub use recurrent::{LstmCalib, LstmExecutor, LstmSpec};
 pub use sampler::{recover_images, GibbsConfig, RecoveryReport};
 
-use crate::coordinator::NeuRramChip;
+use crate::coordinator::DispatchTarget;
 use crate::core_sim::{Activation, NeuronConfig};
 use crate::models::graph::{LayerKind, LayerSpec};
 
@@ -67,8 +67,8 @@ pub fn linear_mvm_cfg(layer: &LayerSpec) -> NeuronConfig {
 
 /// Shared batched dispatch: one `mvm_layer_batch` call over owned input
 /// vectors (the executors keep state as `Vec<Vec<i32>>`).
-pub fn dispatch_batch(
-    chip: &mut NeuRramChip,
+pub fn dispatch_batch<T: DispatchTarget>(
+    chip: &mut T,
     layer: &str,
     inputs: &[Vec<i32>],
     cfg: &NeuronConfig,

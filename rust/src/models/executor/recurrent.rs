@@ -15,7 +15,7 @@
 //! (input, forget, candidate, output), sigmoid/sigmoid/tanh/sigmoid.
 
 use super::{linear_mvm_cfg, LSB_FRAC_RECURRENT};
-use crate::coordinator::{NeuRramChip, Scheduler};
+use crate::coordinator::{DispatchTarget, Scheduler};
 use crate::core_sim::neuron::{convert, pwl_compress};
 use crate::core_sim::{Activation, NeuronConfig};
 use crate::models::graph::{LayerKind, ModelGraph};
@@ -130,6 +130,7 @@ pub fn quantize_utterances(graph: &ModelGraph, series: &[Vec<f32>]) -> Vec<Vec<i
 
 /// The recurrent executor: owns the parsed shape and calibrated scales;
 /// the chip and graph are passed per call.
+#[derive(Clone, Debug)]
 pub struct LstmExecutor {
     pub spec: LstmSpec,
     pub calib: LstmCalib,
@@ -173,9 +174,9 @@ impl LstmExecutor {
     /// calibration rule, applied to the recurrent dataflow).  The first
     /// pass runs with saturating default scales; the second refines on
     /// the trajectory the calibrated scales produce.
-    pub fn calibrate(
+    pub fn calibrate<T: DispatchTarget>(
         &mut self,
-        chip: &mut NeuRramChip,
+        chip: &mut T,
         graph: &ModelGraph,
         probes: &[Vec<i32>],
     ) {
@@ -197,9 +198,9 @@ impl LstmExecutor {
     /// hidden state per cell (`[cell][utterance][hidden]`) plus, when
     /// `collect_stats`, the |gate| and |cell-state| samples the
     /// calibration percentiles are computed from.
-    pub fn run_hidden(
+    pub fn run_hidden<T: DispatchTarget>(
         &self,
-        chip: &mut NeuRramChip,
+        chip: &mut T,
         graph: &ModelGraph,
         utts: &[Vec<i32>],
         collect_stats: bool,
@@ -274,9 +275,9 @@ impl LstmExecutor {
 
     /// End-to-end inference: recurrent stack + per-cell output matrices
     /// on the chip, logits summed across cells.
-    pub fn run_logits(
+    pub fn run_logits<T: DispatchTarget>(
         &self,
-        chip: &mut NeuRramChip,
+        chip: &mut T,
         graph: &ModelGraph,
         utts: &[Vec<i32>],
     ) -> Vec<Vec<f64>> {

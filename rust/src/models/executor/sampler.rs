@@ -23,7 +23,7 @@
 //! samples.
 
 use super::{dispatch_batch, LSB_FRAC_SAMPLER};
-use crate::coordinator::NeuRramChip;
+use crate::coordinator::DispatchTarget;
 use crate::core_sim::neuron::convert;
 use crate::core_sim::{Activation, NeuronConfig};
 use crate::io::metrics::l2_error;
@@ -127,8 +127,8 @@ fn median_backward_voltage(
 ///
 /// `originals`/`corrupted` are {0,1} pixel images; `known[i]` marks
 /// pixels that survived corruption and are clamped as evidence.
-pub fn recover_images(
-    chip: &mut NeuRramChip,
+pub fn recover_images<T: DispatchTarget>(
+    chip: &mut T,
     layer: &str,
     originals: &[Vec<f32>],
     corrupted: &[Vec<f32>],
@@ -299,6 +299,7 @@ fn estimate(acc: &[f64], v: &[i32], n_px: usize, cnt: usize) -> Vec<f32> {
 mod tests {
     use super::*;
     use crate::coordinator::mapping::MappingStrategy;
+    use crate::coordinator::NeuRramChip;
 
     #[test]
     fn recovery_runs_and_clamps_known_pixels() {

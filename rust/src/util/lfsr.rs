@@ -17,7 +17,7 @@ impl Lfsr16 {
     #[inline]
     pub fn step(&mut self) -> u16 {
         let s = self.state;
-        let bit = ((s >> 0) ^ (s >> 2) ^ (s >> 3) ^ (s >> 5)) & 1;
+        let bit = (s ^ (s >> 2) ^ (s >> 3) ^ (s >> 5)) & 1;
         self.state = (s >> 1) | (bit << 15);
         self.state
     }

@@ -1,0 +1,266 @@
+//! Fleet serving determinism tests: the multi-chip runtime must be a
+//! pure function of the request trace -- bitwise across chip counts
+//! (outputs + per-request on-chip service time) and across
+//! `NEURRAM_THREADS` settings (everything, latencies included).
+
+use neurram::coordinator::mapping::MappingStrategy;
+use neurram::coordinator::{DispatchTarget, NeuRramChip};
+use neurram::core_sim::{Activation, NeuronConfig};
+use neurram::fleet::{BatchPolicy, ChipFleet, Payload, Request, Response,
+                     Workload, WorkloadKind};
+use neurram::models::graph::{LayerSpec, ModelGraph};
+use neurram::models::ConductanceMatrix;
+use neurram::util::rng::Rng;
+
+fn matrix(name: &str, rows: usize, cols: usize, seed: u64)
+          -> ConductanceMatrix {
+    let mut rng = Rng::new(seed);
+    let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+    ConductanceMatrix::compile(name, &w, None, rows, cols, 7, 40.0, 1.0,
+                               None)
+}
+
+/// Tiny dense-readout "CNN": one 64 -> 10 head over an 8x8x1 input.
+fn head_graph() -> ModelGraph {
+    let mut fc = LayerSpec::dense("head", 64, 10);
+    fc.input_bits = 4;
+    ModelGraph {
+        name: "tiny_head".into(),
+        layers: vec![fc],
+        input_hw: 8,
+        input_ch: 1,
+        n_classes: 10,
+        dataflow: "Forward",
+    }
+}
+
+/// Test fixture: a CNN head + a split RBM bundled on small chips, so a
+/// short mixed trace exercises the deterministic forward path AND the
+/// stochastic bidirectional sampler.
+fn build_fleet(chips: usize, threads: usize) -> (ChipFleet, Vec<Workload>) {
+    let mats = vec![
+        matrix("head", 64, 10, 3),
+        matrix("rbm", 150, 12, 4), // 2 row segments: split sampler
+    ];
+    let mut fleet = ChipFleet::new(chips, 8, 21);
+    fleet.set_threads(threads);
+    fleet
+        .program_model("bundle", mats, &[1.0, 1.0],
+                       MappingStrategy::Packed, chips)
+        .unwrap();
+    let workloads = vec![
+        Workload {
+            name: "cnn".into(),
+            model: "bundle".into(),
+            kind: WorkloadKind::Cnn {
+                graph: head_graph(),
+                shifts: vec![0.0],
+            },
+        },
+        Workload {
+            name: "rbm".into(),
+            model: "bundle".into(),
+            kind: WorkloadKind::Sampler {
+                layer: "rbm".into(),
+                steps: 3,
+                burn_in: 1,
+                temperature: 0.5,
+            },
+        },
+    ];
+    (fleet, workloads)
+}
+
+fn trace() -> Vec<Request> {
+    let mut rng = Rng::new(9);
+    let mut reqs = Vec::new();
+    for i in 0..10usize {
+        let arrival_ns = i as u64 * 5_000;
+        if i % 3 == 2 {
+            // rbm recovery job on 90 binary pixels (rbm has 150 visible
+            // units: the tail runs free, evidence clamps the rest)
+            let corrupted: Vec<f32> = (0..90)
+                .map(|_| if rng.uniform() < 0.5 { 1.0 } else { 0.0 })
+                .collect();
+            let known: Vec<bool> =
+                (0..90).map(|_| rng.uniform() < 0.7).collect();
+            reqs.push(Request {
+                workload: "rbm".into(),
+                arrival_ns,
+                payload: Payload::Recovery { corrupted, known },
+            });
+        } else {
+            let img: Vec<i32> =
+                (0..64).map(|_| rng.below(8) as i32).collect();
+            reqs.push(Request {
+                workload: "cnn".into(),
+                arrival_ns,
+                payload: Payload::Image(img),
+            });
+        }
+    }
+    reqs
+}
+
+fn serve(chips: usize, threads: usize) -> Vec<Response> {
+    let (mut fleet, workloads) = build_fleet(chips, threads);
+    let policy = BatchPolicy { max_batch: 3, max_wait_ns: 20_000 };
+    let (responses, rep) =
+        fleet.serve(&workloads, &trace(), &policy).unwrap();
+    assert_eq!(rep.requests, 10);
+    assert!(rep.batches >= 4, "trace must coalesce into several batches");
+    responses
+}
+
+fn assert_vec_bits_eq(a: &[f64], b: &[f64], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: len");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: element {i}");
+    }
+}
+
+#[test]
+fn prop_fleet_serial_equals_concurrent() {
+    // The fleet determinism contract: same trace -> bitwise-identical
+    // outputs and per-request on-chip service times, whatever the chip
+    // count (1 vs 3: routing spreads batches across bit-identical
+    // replica groups with batch-addressed noise) and whatever the
+    // thread count (1 vs 4: the scoped-thread engine's counter-derived
+    // streams).  At a FIXED chip count the full latency bookkeeping
+    // (queue waits included) must also be bitwise thread-invariant.
+    let base = serve(1, 1);
+    for (chips, threads) in [(1usize, 4usize), (3, 1), (3, 4)] {
+        let got = serve(chips, threads);
+        let ctx = format!("{chips} chips @ {threads} threads");
+        assert_eq!(got.len(), base.len(), "{ctx}");
+        for (r, r0) in got.iter().zip(&base) {
+            assert_vec_bits_eq(&r.output, &r0.output,
+                               &format!("{ctx}: request {}", r.request));
+            assert_eq!(r.chip_ns.to_bits(), r0.chip_ns.to_bits(),
+                       "{ctx}: request {} service time", r.request);
+            assert_eq!(r.batch, r0.batch,
+                       "{ctx}: request {} batch assignment", r.request);
+        }
+    }
+    // thread-invariance of the FULL latency numbers at fixed shape
+    let multi_1t = serve(3, 1);
+    let multi_4t = serve(3, 4);
+    for (a, b) in multi_1t.iter().zip(&multi_4t) {
+        assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits(),
+                   "latency must be thread-invariant");
+        assert_eq!(a.wait_ns.to_bits(), b.wait_ns.to_bits());
+        assert_eq!(a.group, b.group, "routing must be thread-invariant");
+    }
+    // with 3 chips the router must actually spread load
+    let groups: std::collections::BTreeSet<usize> =
+        multi_1t.iter().map(|r| r.group).collect();
+    assert!(groups.len() > 1, "3 replica groups never shared the load");
+}
+
+#[test]
+fn fleet_shard_execution_matches_single_chip_bitwise() {
+    // Model-parallel contract: a layer sharded over 2 chips (2x4-core)
+    // must produce BITWISE the outputs and per-item latencies of one
+    // 8-core chip running the identical global plan -- the cross-chip
+    // fold reuses the chip engine's accumulation order.  (Deterministic
+    // path: ideal loads, no coupling noise -- noise streams are
+    // core-addressed, so noisy configs are shape-dependent by design.)
+    let mats = || vec![matrix("tall", 700, 20, 5)]; // 6 row segments
+    let mut sharded = ChipFleet::new(2, 4, 31);
+    sharded
+        .program_model("m", mats(), &[1.0], MappingStrategy::Simple, 1)
+        .unwrap();
+    assert_eq!(sharded.chips_per_copy("m"), 2, "must shard over 2 chips");
+
+    let mut whole = ChipFleet::new(1, 8, 33);
+    whole
+        .program_model("m", mats(), &[1.0], MappingStrategy::Simple, 1)
+        .unwrap();
+    assert_eq!(whole.chips_per_copy("m"), 1);
+
+    let cfg = NeuronConfig::default();
+    let inputs: Vec<Vec<i32>> = (0..3)
+        .map(|i| (0..700).map(|r| ((r * 3 + i) % 15) as i32 - 7).collect())
+        .collect();
+    let refs: Vec<&[i32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let (ys, ns) =
+        DispatchTarget::mvm_layer_batch(&mut sharded, "tall", &refs, &cfg, 0);
+    let (yw, nw) =
+        DispatchTarget::mvm_layer_batch(&mut whole, "tall", &refs, &cfg, 0);
+    for (b, (a, w)) in ys.iter().zip(&yw).enumerate() {
+        assert_eq!(a.len(), w.len());
+        for (j, (u, v)) in a.iter().zip(w).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "item {b} col {j}");
+        }
+    }
+    for (a, w) in ns.iter().zip(&nw) {
+        assert_eq!(a.to_bits(), w.to_bits(), "per-item latency");
+    }
+
+    // backward path rides the same cross-chip fold (linear neurons:
+    // stochastic sampling is core-addressed and shape-dependent)
+    let bcfg = NeuronConfig {
+        input_bits: 2,
+        activation: Activation::None,
+        ..Default::default()
+    };
+    let hidden: Vec<Vec<i32>> = (0..2)
+        .map(|i| (0..20).map(|c| ((c + i) % 3) as i32 - 1).collect())
+        .collect();
+    let hrefs: Vec<&[i32]> = hidden.iter().map(|v| v.as_slice()).collect();
+    let (bs, bns) =
+        sharded.mvm_layer_backward_batch("tall", &hrefs, &bcfg, 0.0, 0);
+    let (bw, bnw) =
+        whole.mvm_layer_backward_batch("tall", &hrefs, &bcfg, 0.0, 0);
+    for (a, w) in bs.iter().zip(&bw) {
+        assert_vec_bits_eq(a, w, "backward outputs");
+    }
+    for (a, w) in bns.iter().zip(&bnw) {
+        assert_eq!(a.to_bits(), w.to_bits(), "backward latency");
+    }
+}
+
+#[test]
+fn reset_dispatch_state_makes_batches_history_invariant() {
+    // the serving runtime's per-batch reset: running a batch after
+    // arbitrary prior traffic must equal running it on a fresh chip,
+    // even for stochastic sampling (LFSR draws) -- the chip's history
+    // and construction seed drop out
+    let mk = |seed: u64| {
+        let m = matrix("rbm", 150, 12, 6);
+        let mut chip = NeuRramChip::with_cores(4, seed);
+        chip.program_model(vec![m], &[1.0], MappingStrategy::Simple, false)
+            .unwrap();
+        chip
+    };
+    let cfg = NeuronConfig {
+        input_bits: 2,
+        activation: Activation::Stochastic,
+        ..Default::default()
+    };
+    let hidden: Vec<Vec<i32>> = (0..3)
+        .map(|i| (0..12).map(|c| if (c + i) % 2 == 0 { 1 } else { -1 })
+            .collect())
+        .collect();
+    let refs: Vec<&[i32]> = hidden.iter().map(|v| v.as_slice()).collect();
+
+    // chip A: fresh, different construction seed; chip B: same plan,
+    // polluted by prior stochastic traffic
+    let mut a = mk(71);
+    let mut b = mk(72);
+    b.mvm_layer_backward_batch("rbm", &refs, &cfg, 0.05, 0); // history
+    a.reset_dispatch_state(12345);
+    b.reset_dispatch_state(12345);
+    let (ya, _) = a.mvm_layer_backward_batch("rbm", &refs, &cfg, 0.05, 0);
+    let (yb, _) = b.mvm_layer_backward_batch("rbm", &refs, &cfg, 0.05, 0);
+    for (x, y) in ya.iter().zip(&yb) {
+        assert_vec_bits_eq(x, y, "post-reset stochastic sampling");
+    }
+    // and the draws DO depend on the reset seed (the sampler samples)
+    a.reset_dispatch_state(12345);
+    let (y1, _) = a.mvm_layer_backward_batch("rbm", &refs, &cfg, 0.05, 0);
+    a.reset_dispatch_state(54321);
+    let (y2, _) = a.mvm_layer_backward_batch("rbm", &refs, &cfg, 0.05, 0);
+    assert_eq!(y1, ya, "same seed -> same draws");
+    assert_ne!(y1, y2, "different seed -> different draws");
+}

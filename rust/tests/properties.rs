@@ -2,7 +2,7 @@
 //! offline): randomized sweeps over the core invariants.
 
 use neurram::coordinator::mapping::{plan, split_matrix, MappingStrategy};
-use neurram::coordinator::{NeuRramChip, Scheduler};
+use neurram::coordinator::{NeuRramChip, Scheduler, PAPER_CORES};
 use neurram::core_sim::neuron::{convert, NeuronConfig};
 use neurram::core_sim::tnsa::Tnsa;
 use neurram::core_sim::{
@@ -49,7 +49,8 @@ fn prop_mapping_places_every_segment_once() {
             })
             .collect();
         let intensity = vec![1.0; n_mats];
-        if let Ok(p) = plan(&mats, &intensity, MappingStrategy::Packed, 48) {
+        if let Ok(p) = plan(&mats, &intensity, MappingStrategy::Packed,
+                            PAPER_CORES) {
             for m in &mats {
                 let segs = split_matrix(&m.layer, m.rows, m.cols);
                 let placed = p
