@@ -1,0 +1,239 @@
+//! Structured diagnostics for the static plan/graph verifier.
+//!
+//! Every invariant the runtime used to enforce by panicking mid-program
+//! maps to one [`DiagCode`].  A failed verification returns a
+//! [`PlanError`] carrying the full diagnostic list, so a caller (or the
+//! `neurram check` CLI) sees EVERY problem with a plan in one pass
+//! instead of the first panic's backtrace.
+
+use std::fmt;
+
+/// Diagnostic severity: errors block programming, warnings do not.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+/// Stable diagnostic codes, one per verified invariant.  `Exxx` codes
+/// are errors (the plan must not program), `Wxxx` are warnings (legal
+/// but probably not what the caller wanted).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DiagCode {
+    /// Two co-resident placements share physical cells on one core.
+    E001RegionOverlap,
+    /// A placement's window exceeds the 128 pair-row x 256 column array.
+    E002RegionBounds,
+    /// A placement targets a core the chip does not have.
+    E003CoreRange,
+    /// A planned layer has no compiled conductance matrix.
+    E004MissingMatrix,
+    /// A replica's segments do not tile its matrix exactly once.
+    E005SegmentCoverage,
+    /// The plan's replica counts disagree with its placements.
+    E006ReplicaBookkeeping,
+    /// A shard set drops, duplicates or mis-rebases a global placement.
+    E007ShardCoverage,
+    /// Duplicate layer name within a model or across the fleet.
+    E008DuplicateLayer,
+    /// Stochastic sampling on a column-split layer (the backward
+    /// dataflow must threshold the full pre-activation once).
+    E009StochasticSplit,
+    /// Input/output bit precision outside the chip's ADC range, or an
+    /// LSTM gate pair quantized at different precisions.
+    E010AdcPrecision,
+    /// Residual open/close flags unbalanced or shape-incompatible.
+    E011ResidualShape,
+    /// The model does not fit the chip/fleet budget.
+    E012ChipBudget,
+    /// Matrices and intensity vectors have different lengths.
+    E013InputArity,
+    /// Replicas of one layer share a core (legal but serializes the
+    /// data parallelism they exist to provide).
+    W101ReplicaSharedCore,
+    /// A compiled matrix has no placement in the plan.
+    W102UnplacedMatrix,
+}
+
+impl DiagCode {
+    /// The stable textual code (what `neurram check` prints and what
+    /// waiver discussions reference).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DiagCode::E001RegionOverlap => "E001_REGION_OVERLAP",
+            DiagCode::E002RegionBounds => "E002_REGION_BOUNDS",
+            DiagCode::E003CoreRange => "E003_CORE_RANGE",
+            DiagCode::E004MissingMatrix => "E004_MISSING_MATRIX",
+            DiagCode::E005SegmentCoverage => "E005_SEGMENT_COVERAGE",
+            DiagCode::E006ReplicaBookkeeping => "E006_REPLICA_BOOKKEEPING",
+            DiagCode::E007ShardCoverage => "E007_SHARD_COVERAGE",
+            DiagCode::E008DuplicateLayer => "E008_DUPLICATE_LAYER",
+            DiagCode::E009StochasticSplit => "E009_STOCHASTIC_SPLIT",
+            DiagCode::E010AdcPrecision => "E010_ADC_PRECISION",
+            DiagCode::E011ResidualShape => "E011_RESIDUAL_SHAPE",
+            DiagCode::E012ChipBudget => "E012_CHIP_BUDGET",
+            DiagCode::E013InputArity => "E013_INPUT_ARITY",
+            DiagCode::W101ReplicaSharedCore => "W101_REPLICA_SHARED_CORE",
+            DiagCode::W102UnplacedMatrix => "W102_UNPLACED_MATRIX",
+        }
+    }
+
+    pub fn severity(&self) -> Severity {
+        match self {
+            DiagCode::W101ReplicaSharedCore
+            | DiagCode::W102UnplacedMatrix => Severity::Warning,
+            _ => Severity::Error,
+        }
+    }
+}
+
+impl fmt::Display for DiagCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One verifier finding: a code, its severity, the layer/placement it
+/// anchors to, and a human-readable message.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub code: DiagCode,
+    pub severity: Severity,
+    /// Layer name or placement span the finding anchors to (empty =
+    /// whole plan / whole graph).
+    pub span: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(code: DiagCode, span: impl Into<String>,
+               message: impl Into<String>) -> Diagnostic {
+        Diagnostic {
+            code,
+            severity: code.severity(),
+            span: span.into(),
+            message: message.into(),
+        }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let kind = match self.severity {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        };
+        if self.span.is_empty() {
+            write!(f, "{kind}[{}]: {}", self.code, self.message)
+        } else {
+            write!(f, "{kind}[{}] {}: {}", self.code, self.span,
+                   self.message)
+        }
+    }
+}
+
+/// A failed verification: every diagnostic the pass produced (at least
+/// one of severity [`Severity::Error`]).
+///
+/// Implements `std::error::Error`, so `?` converts it into the vendored
+/// `anyhow::Error` at CLI boundaries, and provides a
+/// [`PlanError::contains`] substring probe over the rendered text so
+/// message-matching callers keep working across the panic-to-diagnostic
+/// conversion.
+pub struct PlanError {
+    pub diags: Vec<Diagnostic>,
+}
+
+impl PlanError {
+    pub fn new(diags: Vec<Diagnostic>) -> PlanError {
+        PlanError { diags }
+    }
+
+    /// Shorthand for a single-diagnostic error.
+    pub fn single(code: DiagCode, span: impl Into<String>,
+                  message: impl Into<String>) -> PlanError {
+        PlanError { diags: vec![Diagnostic::new(code, span, message)] }
+    }
+
+    /// All codes, in diagnostic order.
+    pub fn codes(&self) -> Vec<DiagCode> {
+        self.diags.iter().map(|d| d.code).collect()
+    }
+
+    pub fn has(&self, code: DiagCode) -> bool {
+        self.diags.iter().any(|d| d.code == code)
+    }
+
+    /// Substring probe over the rendered diagnostics (the migration
+    /// shim for callers that used to match on `String` errors).
+    pub fn contains(&self, needle: &str) -> bool {
+        self.to_string().contains(needle)
+    }
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, d) in self.diags.iter().enumerate() {
+            if i > 0 {
+                write!(f, "; ")?;
+            }
+            write!(f, "{d}")?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+impl From<Diagnostic> for PlanError {
+    fn from(d: Diagnostic) -> PlanError {
+        PlanError { diags: vec![d] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_render_stably() {
+        assert_eq!(DiagCode::E001RegionOverlap.as_str(),
+                   "E001_REGION_OVERLAP");
+        assert_eq!(DiagCode::W102UnplacedMatrix.severity(),
+                   Severity::Warning);
+        assert_eq!(DiagCode::E012ChipBudget.severity(), Severity::Error);
+    }
+
+    #[test]
+    fn plan_error_renders_and_probes() {
+        let e = PlanError::new(vec![
+            Diagnostic::new(DiagCode::E003CoreRange, "fc",
+                            "targets core 9 of 4"),
+            Diagnostic::new(DiagCode::W102UnplacedMatrix, "aux",
+                            "no placement"),
+        ]);
+        let s = e.to_string();
+        assert!(s.contains("error[E003_CORE_RANGE] fc"), "{s}");
+        assert!(s.contains("warning[W102_UNPLACED_MATRIX]"), "{s}");
+        assert!(e.contains("core 9"));
+        assert!(e.has(DiagCode::E003CoreRange));
+        assert_eq!(e.codes().len(), 2);
+    }
+
+    #[test]
+    fn plan_error_converts_into_anyhow() {
+        fn boundary() -> anyhow::Result<()> {
+            Err(PlanError::single(DiagCode::E012ChipBudget, "",
+                                  "model does not fit on chip"))?;
+            Ok(())
+        }
+        let e = boundary().unwrap_err();
+        assert!(e.to_string().contains("does not fit"));
+    }
+}

@@ -1,0 +1,17 @@
+//! Static analysis: validate mapping plans, shard plans and layer
+//! graphs BEFORE any cell is programmed, and report structured
+//! diagnostics instead of runtime panics.
+//!
+//! * [`diagnostics`] -- [`DiagCode`]/[`Diagnostic`]/[`PlanError`], the
+//!   structured finding types.
+//! * [`verify`] -- the verifier passes; gated inside
+//!   `NeuRramChip::program_model`/`program_plan` and
+//!   `ChipFleet::program_model`, and exposed as `neurram check`.
+
+pub mod diagnostics;
+pub mod verify;
+
+pub use diagnostics::{DiagCode, Diagnostic, PlanError, Severity};
+pub use verify::{
+    fail_on_errors, verify_graph, verify_local, verify_model, verify_shards,
+};

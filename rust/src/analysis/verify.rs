@@ -1,0 +1,875 @@
+//! The plan/graph verifier: a pure, side-effect-free pass over a
+//! compiled model graph + mapping plan + chip/fleet geometry that checks
+//! every invariant the runtime enforces by panicking -- BEFORE a single
+//! cell is programmed (on the real chip a bad plan burns write-verify
+//! pulses out of finite RRAM endurance).
+//!
+//! Four entry points, by how much of the world each can see:
+//!
+//! * [`verify_local`]  -- one chip's slice of a plan (what
+//!   `NeuRramChip::program_plan` gates on).  Fleet shards are PARTIAL
+//!   plans carrying global replica bookkeeping, so only per-placement
+//!   checks run here: window bounds, cell overlap, core range, matrix
+//!   presence.
+//! * [`verify_model`]  -- a COMPLETE plan for one model (what
+//!   `NeuRramChip::program_model` and the fleet's planning step gate
+//!   on): local checks plus exact segment coverage, replica
+//!   bookkeeping and duplicate layer names.
+//! * [`verify_graph`]  -- dataflow invariants of the layer graph
+//!   itself, independent of any mapping: stochastic-sampling splits,
+//!   ADC bit precisions, residual open/close shape matching.
+//! * [`verify_shards`] -- a sharded fleet plan: every global placement
+//!   rebased onto exactly one chip, in global order.
+//!
+//! Each check emits a structured [`Diagnostic`]; [`fail_on_errors`]
+//! turns error-severity findings into a [`PlanError`] gate.
+
+use super::diagnostics::{DiagCode, Diagnostic, PlanError, Severity};
+use crate::coordinator::mapping::{MappingPlan, SegmentPlacement};
+use crate::core_sim::Activation;
+use crate::models::graph::{LayerKind, ModelGraph};
+use crate::models::ConductanceMatrix;
+use crate::{CORE_COLS, CORE_WEIGHT_ROWS};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Gate helper: `Err(PlanError)` carrying ALL diagnostics if any has
+/// error severity; warnings alone pass.
+pub fn fail_on_errors(diags: Vec<Diagnostic>) -> Result<(), PlanError> {
+    if diags.iter().any(|d| d.severity == Severity::Error) {
+        Err(PlanError::new(diags))
+    } else {
+        Ok(())
+    }
+}
+
+/// Per-placement checks valid on ANY plan slice, including fleet shards:
+/// E001 (cell overlap), E002 (window bounds), E003 (core range), E004
+/// (missing matrix), E005 (segment exceeds its matrix), W102 (matrix
+/// with no placement).
+pub fn verify_local(
+    plan: &MappingPlan,
+    matrices: &[ConductanceMatrix],
+    num_cores: usize,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for (i, p) in plan.placements.iter().enumerate() {
+        let s = &p.segment;
+        let span = format!("{}[{i}]", s.layer);
+        if s.row_hi <= s.row_lo || s.col_hi <= s.col_lo {
+            diags.push(Diagnostic::new(
+                DiagCode::E002RegionBounds,
+                span,
+                format!(
+                    "degenerate segment window rows [{}, {}) cols [{}, {})",
+                    s.row_lo, s.row_hi, s.col_lo, s.col_hi
+                ),
+            ));
+            continue;
+        }
+        if p.core >= num_cores {
+            diags.push(Diagnostic::new(
+                DiagCode::E003CoreRange,
+                span.clone(),
+                format!("targets core {} but the chip has {} cores",
+                        p.core, num_cores),
+            ));
+        }
+        if p.core_row_off + s.rows() > CORE_WEIGHT_ROWS
+            || p.core_col_off + s.cols() > CORE_COLS
+        {
+            diags.push(Diagnostic::new(
+                DiagCode::E002RegionBounds,
+                span.clone(),
+                format!(
+                    "window ({}+{} pair rows, {}+{} cols) exceeds the \
+                     {CORE_WEIGHT_ROWS}x{CORE_COLS} core array",
+                    p.core_row_off,
+                    s.rows(),
+                    p.core_col_off,
+                    s.cols()
+                ),
+            ));
+        }
+        match matrices.iter().find(|m| m.layer == s.layer) {
+            None => diags.push(Diagnostic::new(
+                DiagCode::E004MissingMatrix,
+                span,
+                "no compiled matrix for planned layer",
+            )),
+            Some(m) => {
+                if s.row_hi > m.rows || s.col_hi > m.cols {
+                    diags.push(Diagnostic::new(
+                        DiagCode::E005SegmentCoverage,
+                        span,
+                        format!(
+                            "segment rows [{}, {}) cols [{}, {}) exceeds \
+                             the compiled {}x{} matrix",
+                            s.row_lo, s.row_hi, s.col_lo, s.col_hi, m.rows,
+                            m.cols
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    // E001: co-resident placements must never share a physical cell
+    for (i, a) in plan.placements.iter().enumerate() {
+        for (j, b) in plan.placements.iter().enumerate().skip(i + 1) {
+            if a.core != b.core || degenerate(a) || degenerate(b) {
+                continue;
+            }
+            let rows_dj = a.phys_rows().end <= b.phys_rows().start
+                || b.phys_rows().end <= a.phys_rows().start;
+            let cols_dj = a.phys_cols().end <= b.phys_cols().start
+                || b.phys_cols().end <= a.phys_cols().start;
+            if !rows_dj && !cols_dj {
+                diags.push(Diagnostic::new(
+                    DiagCode::E001RegionOverlap,
+                    format!("{}[{i}] vs {}[{j}]", a.segment.layer,
+                            b.segment.layer),
+                    format!(
+                        "windows overlap on core {}: pair rows {:?}/{:?}, \
+                         cols {:?}/{:?}",
+                        a.core,
+                        a.phys_rows(),
+                        b.phys_rows(),
+                        a.phys_cols(),
+                        b.phys_cols()
+                    ),
+                ));
+            }
+        }
+    }
+    for m in matrices {
+        if !plan.placements.iter().any(|p| p.segment.layer == m.layer) {
+            diags.push(Diagnostic::new(
+                DiagCode::W102UnplacedMatrix,
+                m.layer.clone(),
+                "compiled matrix has no placement in this plan",
+            ));
+        }
+    }
+    diags
+}
+
+fn degenerate(p: &SegmentPlacement) -> bool {
+    p.segment.row_hi <= p.segment.row_lo || p.segment.col_hi <= p.segment.col_lo
+}
+
+/// Whole-model checks on a COMPLETE plan: [`verify_local`] plus exact
+/// tiling per replica (E005), replica bookkeeping (E006), duplicate
+/// compiled layer names (E008) and replicas sharing a core (W101).
+///
+/// Do NOT run this on a fleet shard -- shards host a subset of the
+/// placements against GLOBAL replica bookkeeping, so coverage and
+/// bookkeeping checks would misfire; use [`verify_local`] there.
+pub fn verify_model(
+    plan: &MappingPlan,
+    matrices: &[ConductanceMatrix],
+    num_cores: usize,
+) -> Vec<Diagnostic> {
+    let mut diags = verify_local(plan, matrices, num_cores);
+    for (i, m) in matrices.iter().enumerate() {
+        if matrices[..i].iter().any(|e| e.layer == m.layer) {
+            diags.push(Diagnostic::new(
+                DiagCode::E008DuplicateLayer,
+                m.layer.clone(),
+                "duplicate compiled matrix for layer",
+            ));
+        }
+    }
+    // E005: every replica's segments tile its matrix exactly once
+    let mut groups: BTreeMap<(&str, usize), Vec<&SegmentPlacement>> =
+        BTreeMap::new();
+    for p in &plan.placements {
+        groups
+            .entry((p.segment.layer.as_str(), p.replica))
+            .or_default()
+            .push(p);
+    }
+    for ((layer, rep), ps) in &groups {
+        let Some(m) = matrices.iter().find(|m| m.layer == *layer) else {
+            continue; // E004 already reported
+        };
+        // segments already flagged degenerate / out of matrix bounds
+        // cannot be rasterized meaningfully
+        if ps.iter().any(|p| {
+            degenerate(p) || p.segment.row_hi > m.rows
+                || p.segment.col_hi > m.cols
+        }) {
+            continue;
+        }
+        let mut cover = vec![0u8; m.rows * m.cols];
+        for p in ps {
+            for r in p.segment.row_lo..p.segment.row_hi {
+                for c in p.segment.col_lo..p.segment.col_hi {
+                    let cell = &mut cover[r * m.cols + c];
+                    *cell = cell.saturating_add(1);
+                }
+            }
+        }
+        let uncovered = cover.iter().filter(|&&n| n == 0).count();
+        let multi = cover.iter().filter(|&&n| n > 1).count();
+        if uncovered > 0 || multi > 0 {
+            diags.push(Diagnostic::new(
+                DiagCode::E005SegmentCoverage,
+                format!("{layer} replica {rep}"),
+                format!(
+                    "segments do not tile the {}x{} matrix exactly once \
+                     ({uncovered} cells uncovered, {multi} covered more \
+                     than once)",
+                    m.rows, m.cols
+                ),
+            ));
+        }
+    }
+    // E006: declared replica counts must match placed replica indices
+    for m in matrices {
+        let reps: BTreeSet<usize> = plan
+            .placements
+            .iter()
+            .filter(|p| p.segment.layer == m.layer)
+            .map(|p| p.replica)
+            .collect();
+        if reps.is_empty() {
+            continue; // W102 already reported
+        }
+        let n = reps.len();
+        if *reps.iter().next().unwrap() != 0
+            || *reps.iter().next_back().unwrap() != n - 1
+        {
+            diags.push(Diagnostic::new(
+                DiagCode::E006ReplicaBookkeeping,
+                m.layer.clone(),
+                format!("replica indices {reps:?} are not contiguous from 0"),
+            ));
+        }
+        let declared = plan.replica_count(&m.layer);
+        if declared != n {
+            diags.push(Diagnostic::new(
+                DiagCode::E006ReplicaBookkeeping,
+                m.layer.clone(),
+                format!("plan declares {declared} replicas but {n} distinct \
+                         replica indices are placed"),
+            ));
+        }
+    }
+    for (l, _) in &plan.replicas {
+        if !matrices.iter().any(|m| &m.layer == l) {
+            diags.push(Diagnostic::new(
+                DiagCode::E006ReplicaBookkeeping,
+                l.clone(),
+                "replica bookkeeping for a layer with no compiled matrix",
+            ));
+        }
+    }
+    // W101: replicas of one layer sharing a core serialize the data
+    // parallelism they exist to provide (the packer never does this)
+    for m in matrices {
+        let mut by_core: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+        for p in plan.placements.iter()
+            .filter(|p| p.segment.layer == m.layer)
+        {
+            by_core.entry(p.core).or_default().insert(p.replica);
+        }
+        for (core, reps) in &by_core {
+            if reps.len() > 1 {
+                diags.push(Diagnostic::new(
+                    DiagCode::W101ReplicaSharedCore,
+                    m.layer.clone(),
+                    format!("replicas {reps:?} share core {core}"),
+                ));
+            }
+        }
+    }
+    diags
+}
+
+/// Dataflow invariants of the layer graph itself, independent of any
+/// mapping: duplicate names (E008), stochastic sampling on column-split
+/// layers (E009), ADC bit precisions and LSTM gate-pair consistency
+/// (E010), residual open/close shape matching (E011).
+pub fn verify_graph(graph: &ModelGraph) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for (i, l) in graph.layers.iter().enumerate() {
+        if graph.layers[..i].iter().any(|e| e.name == l.name) {
+            diags.push(Diagnostic::new(
+                DiagCode::E008DuplicateLayer,
+                l.name.clone(),
+                "duplicate layer name in graph",
+            ));
+        }
+        if l.activation == Activation::Stochastic
+            && l.out_features > CORE_COLS
+        {
+            diags.push(Diagnostic::new(
+                DiagCode::E009StochasticSplit,
+                l.name.clone(),
+                format!(
+                    "stochastic sampling on a column-split layer ({} \
+                     outputs > {CORE_COLS} columns): the backward dataflow \
+                     must threshold each full pre-activation once, which \
+                     per-segment partial sums cannot do",
+                    l.out_features
+                ),
+            ));
+        }
+        if !(1..=8).contains(&l.input_bits) {
+            diags.push(Diagnostic::new(
+                DiagCode::E010AdcPrecision,
+                l.name.clone(),
+                format!("input_bits {} outside the chip's 1..=8 bit-serial \
+                         pulse range", l.input_bits),
+            ));
+        }
+        if !(1..=8).contains(&l.output_bits) {
+            diags.push(Diagnostic::new(
+                DiagCode::E010AdcPrecision,
+                l.name.clone(),
+                format!("output_bits {} outside the chip's 1..=8 ADC range",
+                        l.output_bits),
+            ));
+        }
+    }
+    // E010: an LSTM cell's wx/wh gate matrices feed one accumulation,
+    // so their pre-activations must share input and ADC precision (the
+    // digital LSB alignment assumes it)
+    for l in &graph.layers {
+        if l.kind != LayerKind::LstmGate {
+            continue;
+        }
+        let Some(prefix) = l.name.strip_suffix(".wx") else { continue };
+        let wh_name = format!("{prefix}.wh");
+        if let Some(h) = graph.layers.iter().find(|e| e.name == wh_name) {
+            if h.input_bits != l.input_bits || h.output_bits != l.output_bits
+            {
+                diags.push(Diagnostic::new(
+                    DiagCode::E010AdcPrecision,
+                    l.name.clone(),
+                    format!(
+                        "LSTM gate pair {}/{} quantized at different \
+                         precisions ({}b vs {}b in, {}b vs {}b out)",
+                        l.name, wh_name, l.input_bits, h.input_bits,
+                        l.output_bits, h.output_bits
+                    ),
+                ));
+            }
+        }
+    }
+    // E011: residual open/close walk, tracking channel and spatial
+    // geometry so the close's skip add is shape-compatible with the tap
+    let mut hw = graph.input_hw;
+    let mut open: Option<(String, usize, usize)> = None;
+    for l in &graph.layers {
+        if l.kind != LayerKind::Conv {
+            if l.res_open || l.res_close {
+                diags.push(Diagnostic::new(
+                    DiagCode::E011ResidualShape,
+                    l.name.clone(),
+                    "residual open/close flags on a non-Conv layer are \
+                     ignored by the executor",
+                ));
+            }
+            continue;
+        }
+        if l.res_open {
+            if open.is_some() {
+                diags.push(Diagnostic::new(
+                    DiagCode::E011ResidualShape,
+                    l.name.clone(),
+                    "res_open while a residual block is already open \
+                     (nesting is unsupported)",
+                ));
+            } else {
+                // the executor snapshots this layer's INPUT feature map
+                open = Some((l.name.clone(), l.in_channels, hw));
+            }
+        }
+        let out_hw = hw / l.stride.max(1) / l.pool.max(1);
+        if l.res_close {
+            match open.take() {
+                None => diags.push(Diagnostic::new(
+                    DiagCode::E011ResidualShape,
+                    l.name.clone(),
+                    "res_close without a matching res_open",
+                )),
+                Some((oname, tap_c, tap_hw)) => {
+                    if l.out_channels < tap_c {
+                        diags.push(Diagnostic::new(
+                            DiagCode::E011ResidualShape,
+                            l.name.clone(),
+                            format!(
+                                "close output has {} channels but the tap \
+                                 at {oname} carries {tap_c}: the zero-pad \
+                                 shortcut cannot shrink channels",
+                                l.out_channels
+                            ),
+                        ));
+                    }
+                    if out_hw == 0 || tap_hw < out_hw
+                        || tap_hw % out_hw != 0
+                    {
+                        diags.push(Diagnostic::new(
+                            DiagCode::E011ResidualShape,
+                            l.name.clone(),
+                            format!(
+                                "tap spatial size {tap_hw} at {oname} is \
+                                 not an integer downsample of the close \
+                                 output size {out_hw}"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        hw = out_hw;
+    }
+    if let Some((oname, _, _)) = open {
+        diags.push(Diagnostic::new(
+            DiagCode::E011ResidualShape,
+            oname,
+            "res_open never closed before the end of the graph",
+        ));
+    }
+    diags
+}
+
+/// E007: a sharded fleet plan must cover every global placement exactly
+/// once, preserve global order within each shard, and rebase each
+/// placement onto chip `core / cores_per_chip` at local core
+/// `core % cores_per_chip` without mutating the placement itself.
+pub fn verify_shards(
+    global: &MappingPlan,
+    shards: &[(MappingPlan, Vec<usize>)],
+    cores_per_chip: usize,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    if cores_per_chip == 0 {
+        diags.push(Diagnostic::new(
+            DiagCode::E007ShardCoverage,
+            "",
+            "cores_per_chip is zero",
+        ));
+        return diags;
+    }
+    let mut seen = vec![0u32; global.placements.len()];
+    for (chip, (local, idxs)) in shards.iter().enumerate() {
+        let span = format!("shard {chip}");
+        if local.placements.len() != idxs.len() {
+            diags.push(Diagnostic::new(
+                DiagCode::E007ShardCoverage,
+                span,
+                format!("{} placements but {} global indices",
+                        local.placements.len(), idxs.len()),
+            ));
+            continue;
+        }
+        let mut last_gi: Option<usize> = None;
+        for (q, &gi) in local.placements.iter().zip(idxs) {
+            if gi >= global.placements.len() {
+                diags.push(Diagnostic::new(
+                    DiagCode::E007ShardCoverage,
+                    span.clone(),
+                    format!("global index {gi} out of range ({} placements)",
+                            global.placements.len()),
+                ));
+                continue;
+            }
+            seen[gi] += 1;
+            if let Some(prev) = last_gi {
+                if gi <= prev {
+                    diags.push(Diagnostic::new(
+                        DiagCode::E007ShardCoverage,
+                        span.clone(),
+                        format!("global order not preserved ({gi} after \
+                                 {prev})"),
+                    ));
+                }
+            }
+            last_gi = Some(gi);
+            let g = &global.placements[gi];
+            if g.core / cores_per_chip != chip
+                || g.core % cores_per_chip != q.core
+            {
+                diags.push(Diagnostic::new(
+                    DiagCode::E007ShardCoverage,
+                    format!("{}[{gi}]", g.segment.layer),
+                    format!(
+                        "global core {} should rebase to chip {} local \
+                         core {}, shard {chip} hosts it at local core {}",
+                        g.core,
+                        g.core / cores_per_chip,
+                        g.core % cores_per_chip,
+                        q.core
+                    ),
+                ));
+            }
+            if q.segment != g.segment
+                || q.core_row_off != g.core_row_off
+                || q.core_col_off != g.core_col_off
+                || q.replica != g.replica
+            {
+                diags.push(Diagnostic::new(
+                    DiagCode::E007ShardCoverage,
+                    format!("{}[{gi}]", g.segment.layer),
+                    "shard mutated the placement (segment, window offsets \
+                     and replica must be preserved verbatim)",
+                ));
+            }
+        }
+    }
+    for (gi, &n) in seen.iter().enumerate() {
+        if n != 1 {
+            let layer = &global.placements[gi].segment.layer;
+            diags.push(Diagnostic::new(
+                DiagCode::E007ShardCoverage,
+                format!("{layer}[{gi}]"),
+                if n == 0 {
+                    "global placement hosted by no shard".to_string()
+                } else {
+                    format!("global placement hosted by {n} shards")
+                },
+            ));
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::mapping::{
+        plan, split_matrix, MappingStrategy, Segment,
+    };
+    use crate::models::builtin;
+    use crate::NUM_CORES;
+
+    fn matrix(name: &str, rows: usize, cols: usize) -> ConductanceMatrix {
+        let w = vec![0.1f32; rows * cols];
+        ConductanceMatrix::compile(name, &w, None, rows, cols, 7, 40.0, 1.0,
+                                   None)
+    }
+
+    fn place(layer: &str, rows: usize, cols: usize, core: usize)
+             -> SegmentPlacement {
+        SegmentPlacement {
+            segment: Segment {
+                layer: layer.into(),
+                row_lo: 0,
+                row_hi: rows,
+                col_lo: 0,
+                col_hi: cols,
+            },
+            core,
+            core_row_off: 0,
+            core_col_off: 0,
+            replica: 0,
+        }
+    }
+
+    fn plan_of(placements: Vec<SegmentPlacement>) -> MappingPlan {
+        let cores: BTreeSet<usize> =
+            placements.iter().map(|p| p.core).collect();
+        MappingPlan {
+            placements,
+            cores_used: cores.len(),
+            replicas: Vec::new(),
+        }
+    }
+
+    fn codes(diags: &[Diagnostic]) -> Vec<DiagCode> {
+        diags.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn clean_plan_verifies_clean() {
+        let ms = [matrix("a", 64, 64), matrix("b", 300, 100)];
+        let p = plan(&ms, &[1.0, 1.0], MappingStrategy::Simple, NUM_CORES)
+            .unwrap();
+        let diags = verify_model(&p, &ms, NUM_CORES);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn e001_region_overlap() {
+        let ms = [matrix("a", 64, 64), matrix("b", 32, 32)];
+        let mut pl = vec![place("a", 64, 64, 0), place("b", 32, 32, 0)];
+        pl[1].core_row_off = 32; // rows [32,64) x cols [0,32) overlap "a"
+        let diags = verify_local(&plan_of(pl), &ms, NUM_CORES);
+        assert_eq!(codes(&diags), vec![DiagCode::E001RegionOverlap],
+                   "{diags:?}");
+    }
+
+    #[test]
+    fn e002_region_bounds() {
+        let ms = [matrix("a", 64, 64)];
+        let mut pl = vec![place("a", 64, 64, 0)];
+        pl[0].core_row_off = 100; // 100 + 64 > 128 pair rows
+        let diags = verify_local(&plan_of(pl), &ms, NUM_CORES);
+        assert_eq!(codes(&diags), vec![DiagCode::E002RegionBounds],
+                   "{diags:?}");
+        // degenerate (inverted) windows are also E002, without underflow
+        let mut pl = vec![place("a", 64, 64, 0)];
+        pl[0].segment.row_hi = 0;
+        let diags = verify_local(&plan_of(pl), &ms, NUM_CORES);
+        assert_eq!(codes(&diags), vec![DiagCode::E002RegionBounds],
+                   "{diags:?}");
+    }
+
+    #[test]
+    fn e003_core_range() {
+        let ms = [matrix("a", 64, 64)];
+        let pl = vec![place("a", 64, 64, 4)];
+        let diags = verify_local(&plan_of(pl), &ms, 4);
+        assert_eq!(codes(&diags), vec![DiagCode::E003CoreRange], "{diags:?}");
+    }
+
+    #[test]
+    fn e004_missing_matrix() {
+        let ms = [matrix("a", 64, 64)];
+        let pl = vec![place("a", 64, 64, 0), place("ghost", 32, 32, 1)];
+        let diags = verify_local(&plan_of(pl), &ms, NUM_CORES);
+        assert_eq!(codes(&diags), vec![DiagCode::E004MissingMatrix],
+                   "{diags:?}");
+    }
+
+    #[test]
+    fn e005_segment_coverage() {
+        // half-covered matrix: rows [0,32) placed, [32,64) missing
+        let ms = [matrix("a", 64, 64)];
+        let mut pl = vec![place("a", 64, 64, 0)];
+        pl[0].segment.row_hi = 32;
+        let diags = verify_model(&plan_of(pl), &ms, NUM_CORES);
+        assert_eq!(codes(&diags), vec![DiagCode::E005SegmentCoverage],
+                   "{diags:?}");
+        // a segment exceeding the compiled matrix is also E005 (local)
+        let pl = vec![place("a", 64, 100, 0)];
+        let diags = verify_local(&plan_of(pl), &ms, NUM_CORES);
+        assert_eq!(codes(&diags), vec![DiagCode::E005SegmentCoverage],
+                   "{diags:?}");
+    }
+
+    #[test]
+    fn e006_replica_bookkeeping() {
+        let ms = [matrix("a", 64, 64)];
+        // declared 2 replicas, only replica 0 placed
+        let mut p = plan_of(vec![place("a", 64, 64, 0)]);
+        p.replicas = vec![("a".into(), 2)];
+        let diags = verify_model(&p, &ms, NUM_CORES);
+        assert_eq!(codes(&diags), vec![DiagCode::E006ReplicaBookkeeping],
+                   "{diags:?}");
+        // bookkeeping for a layer that has no compiled matrix
+        let mut p = plan_of(vec![place("a", 64, 64, 0)]);
+        p.replicas = vec![("a".into(), 1), ("ghost".into(), 2)];
+        let diags = verify_model(&p, &ms, NUM_CORES);
+        assert_eq!(codes(&diags), vec![DiagCode::E006ReplicaBookkeeping],
+                   "{diags:?}");
+        // non-contiguous replica indices
+        let mut pl = vec![place("a", 64, 64, 0), place("a", 64, 64, 1)];
+        pl[1].replica = 2; // should be 1
+        let mut p = plan_of(pl);
+        p.replicas = vec![("a".into(), 2)];
+        let diags = verify_model(&p, &ms, NUM_CORES);
+        assert_eq!(codes(&diags), vec![DiagCode::E006ReplicaBookkeeping],
+                   "{diags:?}");
+    }
+
+    #[test]
+    fn e007_shard_coverage() {
+        let g = plan_of(vec![place("a", 64, 64, 0), place("b", 64, 64, 1),
+                             place("c", 64, 64, 2)]);
+        let shard = |cores: &[usize], idxs: &[usize]| {
+            let pl: Vec<SegmentPlacement> = idxs
+                .iter()
+                .zip(cores)
+                .map(|(&gi, &core)| {
+                    let mut q = g.placements[gi].clone();
+                    q.core = core;
+                    q
+                })
+                .collect();
+            (plan_of(pl), idxs.to_vec())
+        };
+        // correct 2-chip sharding at cores_per_chip = 2 verifies clean
+        let ok = vec![shard(&[0, 1], &[0, 1]), shard(&[0], &[2])];
+        assert!(verify_shards(&g, &ok, 2).is_empty());
+        // dropped placement
+        let bad = vec![shard(&[0, 1], &[0, 1])];
+        let diags = verify_shards(&g, &bad, 2);
+        assert_eq!(codes(&diags), vec![DiagCode::E007ShardCoverage],
+                   "{diags:?}");
+        // duplicated placement
+        let bad = vec![shard(&[0, 1], &[0, 1]),
+                       shard(&[0, 1], &[1, 2])];
+        let diags = verify_shards(&g, &bad, 2);
+        assert!(codes(&diags).contains(&DiagCode::E007ShardCoverage),
+                "{diags:?}");
+        // mis-rebased local core
+        let bad = vec![shard(&[0, 0], &[0, 1]), shard(&[0], &[2])];
+        let diags = verify_shards(&g, &bad, 2);
+        assert!(diags.iter().any(|d| d.code == DiagCode::E007ShardCoverage
+                                  && d.message.contains("local core")),
+                "{diags:?}");
+    }
+
+    #[test]
+    fn e008_duplicate_layer() {
+        let ms = [matrix("a", 64, 64), matrix("a", 64, 64)];
+        let pl = vec![place("a", 64, 64, 0)];
+        let diags = verify_model(&plan_of(pl), &ms, NUM_CORES);
+        assert!(codes(&diags).contains(&DiagCode::E008DuplicateLayer),
+                "{diags:?}");
+        // and in the graph
+        let mut g = builtin::mnist_cnn7(8);
+        let dup = g.layers[0].clone();
+        g.layers.push(dup);
+        let diags = verify_graph(&g);
+        assert!(codes(&diags).contains(&DiagCode::E008DuplicateLayer),
+                "{diags:?}");
+    }
+
+    #[test]
+    fn e009_stochastic_split() {
+        let mut g = builtin::rbm_image();
+        // widen the hidden layer past one core's columns
+        g.layers[0].out_features = CORE_COLS + 1;
+        let diags = verify_graph(&g);
+        assert_eq!(codes(&diags), vec![DiagCode::E009StochasticSplit],
+                   "{diags:?}");
+        // the shipped RBM (120 hidden) is fine
+        assert!(verify_graph(&builtin::rbm_image()).is_empty());
+    }
+
+    #[test]
+    fn e010_adc_precision() {
+        let mut g = builtin::mnist_cnn7(8);
+        g.layers[0].input_bits = 9;
+        g.layers[1].output_bits = 0;
+        let diags = verify_graph(&g);
+        assert_eq!(codes(&diags), vec![DiagCode::E010AdcPrecision,
+                                       DiagCode::E010AdcPrecision],
+                   "{diags:?}");
+        // LSTM gate pair quantized differently
+        let mut g = builtin::speech_lstm(32, 1);
+        g.layers[1].input_bits = 6; // cell0.wh diverges from cell0.wx
+        let diags = verify_graph(&g);
+        assert_eq!(codes(&diags), vec![DiagCode::E010AdcPrecision],
+                   "{diags:?}");
+    }
+
+    #[test]
+    fn e011_residual_shape() {
+        // open without close
+        let mut g = builtin::cifar_resnet(8, 1);
+        for l in g.layers.iter_mut() {
+            l.res_close = false;
+        }
+        let diags = verify_graph(&g);
+        assert!(codes(&diags).contains(&DiagCode::E011ResidualShape),
+                "{diags:?}");
+        // close without open
+        let mut g = builtin::cifar_resnet(8, 1);
+        for l in g.layers.iter_mut() {
+            l.res_open = false;
+        }
+        let diags = verify_graph(&g);
+        assert!(codes(&diags).contains(&DiagCode::E011ResidualShape),
+                "{diags:?}");
+        // channel-shrinking close
+        let mut g = builtin::cifar_resnet(8, 1);
+        for l in g.layers.iter_mut() {
+            if l.res_close {
+                l.out_channels = 1;
+            }
+        }
+        let diags = verify_graph(&g);
+        assert!(diags.iter().any(|d| d.code == DiagCode::E011ResidualShape
+                                  && d.message.contains("channels")),
+                "{diags:?}");
+        // residual flags on a dense layer
+        let mut g = builtin::mnist_cnn7(8);
+        g.layers.last_mut().unwrap().res_open = true;
+        let diags = verify_graph(&g);
+        assert!(codes(&diags).contains(&DiagCode::E011ResidualShape),
+                "{diags:?}");
+        // the shipped ResNet is fine
+        assert!(verify_graph(&builtin::cifar_resnet(16, 3)).is_empty());
+    }
+
+    #[test]
+    fn e012_chip_budget() {
+        let ms: Vec<ConductanceMatrix> =
+            (0..4).map(|i| matrix(&format!("m{i}"), 128, 256)).collect();
+        let err = plan(&ms, &[1.0; 4], MappingStrategy::Packed, 2)
+            .unwrap_err();
+        assert!(err.has(DiagCode::E012ChipBudget), "{err}");
+        let err = plan(&ms, &[1.0; 4], MappingStrategy::Simple, 2)
+            .unwrap_err();
+        assert!(err.has(DiagCode::E012ChipBudget), "{err}");
+    }
+
+    #[test]
+    fn e013_input_arity() {
+        let ms = [matrix("a", 64, 64)];
+        let err = plan(&ms, &[1.0, 2.0], MappingStrategy::Simple, NUM_CORES)
+            .unwrap_err();
+        assert_eq!(err.codes(), vec![DiagCode::E013InputArity], "{err}");
+    }
+
+    #[test]
+    fn w101_replica_shared_core() {
+        let ms = [matrix("a", 64, 64)];
+        let mut pl = vec![place("a", 64, 64, 0), place("a", 64, 64, 0)];
+        pl[1].replica = 1;
+        pl[1].core_col_off = 64; // no cell overlap, same core
+        let mut p = plan_of(pl);
+        p.replicas = vec![("a".into(), 2)];
+        let diags = verify_model(&p, &ms, NUM_CORES);
+        assert_eq!(codes(&diags), vec![DiagCode::W101ReplicaSharedCore],
+                   "{diags:?}");
+        // warnings alone pass the gate
+        assert!(fail_on_errors(diags).is_ok());
+    }
+
+    #[test]
+    fn w102_unplaced_matrix() {
+        let ms = [matrix("a", 64, 64), matrix("aux", 32, 32)];
+        let pl = vec![place("a", 64, 64, 0)];
+        let diags = verify_local(&plan_of(pl), &ms, NUM_CORES);
+        assert_eq!(codes(&diags), vec![DiagCode::W102UnplacedMatrix],
+                   "{diags:?}");
+    }
+
+    #[test]
+    fn split_matrix_plans_verify_clean() {
+        // split segments placed one per core reproduce plan() shapes
+        let ms = [matrix("tall", 300, 400)];
+        let segs = split_matrix("tall", 300, 400);
+        let pl: Vec<SegmentPlacement> = segs
+            .into_iter()
+            .enumerate()
+            .map(|(core, segment)| SegmentPlacement {
+                segment,
+                core,
+                core_row_off: 0,
+                core_col_off: 0,
+                replica: 0,
+            })
+            .collect();
+        let p = plan_of(pl);
+        assert!(verify_model(&p, &ms, NUM_CORES).is_empty());
+    }
+
+    #[test]
+    fn builtin_graphs_verify_clean() {
+        for g in [
+            builtin::mnist_cnn7(8),
+            builtin::cifar_resnet(16, 3),
+            builtin::speech_lstm(64, 2),
+            builtin::rbm_image(),
+        ] {
+            let diags = verify_graph(&g);
+            assert!(diags.is_empty(), "{}: {diags:?}", g.name);
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! `neurram check`: run the static plan/graph verifier over the
+//! built-in model bundles WITHOUT programming a single cell.
+//!
+//! For each bundle the graph is verified (`verify_graph`), then a
+//! mapping plan is built and verified (`verify_model`) at every chip
+//! count `k` in `1..=--chips` where the model fits `k * 48` virtual
+//! cores, together with its fleet sharding (`verify_shards`).  Every
+//! diagnostic is printed; any error-severity finding makes the command
+//! exit nonzero, so CI can gate on it.
+
+use anyhow::{anyhow, Result};
+use neurram::analysis::{
+    verify_graph, verify_model, verify_shards, Diagnostic, Severity,
+};
+use neurram::coordinator::mapping::plan;
+use neurram::coordinator::{MappingStrategy, PAPER_CORES};
+use neurram::fleet::shard_plan;
+use neurram::models::loader::{compile_random, intensities};
+use neurram::models::ModelGraph;
+use neurram::models::{cifar_resnet, mnist_cnn7, rbm_image, speech_lstm};
+use neurram::util::cli::Args;
+
+/// The bundles the CLI workloads actually run, with their strategies:
+/// `infer-mnist` (Balanced), `infer-cifar` (Packed), `infer-speech`
+/// (Balanced), `recover-image` (Simple).
+fn bundles() -> Vec<(&'static str, ModelGraph, MappingStrategy)> {
+    vec![
+        ("mnist", mnist_cnn7(8), MappingStrategy::Balanced),
+        ("cifar", cifar_resnet(16, 3), MappingStrategy::Packed),
+        ("speech", speech_lstm(64, 2), MappingStrategy::Balanced),
+        ("rbm", rbm_image(), MappingStrategy::Simple),
+    ]
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let which = args.get_or("model", "all").to_string();
+    let chips = args.usize_or("chips", 1)?.max(1);
+    let seed = args.u64_or("seed", 0)?;
+    let all = bundles();
+    let known: Vec<&str> = all.iter().map(|(n, _, _)| *n).collect();
+    let selected: Vec<_> = all
+        .into_iter()
+        .filter(|(n, _, _)| which == "all" || *n == which)
+        .collect();
+    if selected.is_empty() {
+        return Err(anyhow!(
+            "unknown model {which:?}; known: all, {}",
+            known.join(", ")
+        ));
+    }
+
+    let mut total_errors = 0usize;
+    let mut total_warnings = 0usize;
+    for (name, graph, strategy) in &selected {
+        let mut diags: Vec<Diagnostic> = verify_graph(graph);
+        let mats = compile_random(graph, seed);
+        let intens = intensities(graph);
+        // verify the plan at EVERY fleet size up to --chips, so a
+        // 2-chip check genuinely exercises the 2-chip sharding
+        let mut fitted = 0usize;
+        for k in 1..=chips {
+            let cores = k * PAPER_CORES;
+            match plan(&mats, &intens, *strategy, cores) {
+                Ok(p) => {
+                    fitted += 1;
+                    diags.extend(verify_model(&p, &mats, cores));
+                    match shard_plan(&p, PAPER_CORES) {
+                        Ok(shards) => diags.extend(verify_shards(
+                            &p, &shards, PAPER_CORES,
+                        )),
+                        Err(e) => diags.extend(e.diags),
+                    }
+                }
+                // a model too big for k chips is only a finding if it
+                // fits NO size in budget
+                Err(e) => {
+                    if k == chips && fitted == 0 {
+                        diags.extend(e.diags);
+                    }
+                }
+            }
+        }
+        let errors = diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .count();
+        let warnings = diags.len() - errors;
+        for d in &diags {
+            println!("{name}: {d}");
+        }
+        println!(
+            "check {name} [{strategy:?}] at --chips {chips}: {} plan \
+             size(s) verified, {errors} error(s), {warnings} warning(s)",
+            fitted
+        );
+        total_errors += errors;
+        total_warnings += warnings;
+    }
+    if total_errors > 0 {
+        return Err(anyhow!(
+            "{total_errors} error(s), {total_warnings} warning(s) across \
+             {} bundle(s)",
+            selected.len()
+        ));
+    }
+    Ok(())
+}

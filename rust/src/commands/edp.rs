@@ -57,9 +57,9 @@ pub fn edp_point(in_bits: u32, out_bits: u32, mvms: usize, seed: u64,
 }
 
 pub fn run(args: &Args) -> Result<()> {
-    let mvms = args.usize_or("mvms", 4);
+    let mvms = args.usize_or("mvms", 4)?;
     // --threads n overrides NEURRAM_THREADS / available_parallelism
-    let threads = args.usize_or("threads", 0);
+    let threads = args.usize_or("threads", 0)?;
     println!("Fig. 1d sweep: 1024x1024 MVM x{mvms}, voltage-mode, 48 cores\n");
     let mut rows = Vec::new();
     for (ib, ob) in [(1u32, 3u32), (2, 4), (4, 6), (6, 8)] {

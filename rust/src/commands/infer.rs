@@ -18,10 +18,10 @@ use neurram::util::cli::Args;
 use neurram::util::config::ChipConfig;
 
 pub fn run_mnist(args: &Args) -> Result<()> {
-    let n_test = args.usize_or("samples", 50);
-    let width = args.usize_or("width", 8);
-    let seed = args.u64_or("seed", 5);
-    let batch = args.usize_or("batch", 8).max(1);
+    let n_test = args.usize_or("samples", 50)?;
+    let width = args.usize_or("width", 8)?;
+    let seed = args.u64_or("seed", 5)?;
+    let batch = args.usize_or("batch", 8)?.max(1);
     let write_verify = args.flag("write-verify");
 
     let graph = mnist_cnn7(width);
@@ -46,14 +46,13 @@ pub fn run_mnist(args: &Args) -> Result<()> {
     };
     // --threads n overrides NEURRAM_THREADS; 0/absent keeps the chip's
     // resolved default (available_parallelism), same as the env knob
-    match args.usize_or("threads", 0) {
+    match args.usize_or("threads", 0)? {
         0 => {}
         n => chip.threads = n,
     }
     let stats = chip
         .program_model(matrices, &intensities(&graph),
-                       MappingStrategy::Balanced, write_verify)
-        .map_err(anyhow::Error::msg)?;
+                       MappingStrategy::Balanced, write_verify)?;
     chip.gate_unused();
     println!(
         "mapped {} layers onto {} cores ({} powered); replicas: {:?}",
@@ -76,6 +75,8 @@ pub fn run_mnist(args: &Args) -> Result<()> {
     chip.reset_energy();
     let (imgs, labels) = datasets::digits28(n_test, seed + 3, 0.15);
     let quantized = neurram::models::executor::quantize_inputs(&graph, &imgs);
+    // lint-allow(wall-clock): reported wall time of the run, not part
+    // of the simulated latency model
     let t0 = std::time::Instant::now();
     let mut logits = Vec::with_capacity(quantized.len());
     for chunk in quantized.chunks(batch) {

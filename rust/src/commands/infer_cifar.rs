@@ -22,21 +22,21 @@ pub fn run(args: &Args) -> Result<()> {
     } else {
         CifarRecipe::default()
     };
-    r.width = args.usize_or("width", r.width);
-    r.blocks = args.usize_or("blocks", r.blocks);
-    r.n_train = args.usize_or("train", r.n_train);
-    r.n_test = args.usize_or("samples", r.n_test);
-    r.epochs = args.usize_or("epochs", r.epochs);
-    r.calib_probes = args.usize_or("probes", r.calib_probes).max(1);
-    r.batch = args.usize_or("batch", r.batch).max(1);
-    r.noise = args.f64_or("noise", r.noise);
-    r.seed = args.u64_or("seed", r.seed);
+    r.width = args.usize_or("width", r.width)?;
+    r.blocks = args.usize_or("blocks", r.blocks)?;
+    r.n_train = args.usize_or("train", r.n_train)?;
+    r.n_test = args.usize_or("samples", r.n_test)?;
+    r.epochs = args.usize_or("epochs", r.epochs)?;
+    r.calib_probes = args.usize_or("probes", r.calib_probes)?.max(1);
+    r.batch = args.usize_or("batch", r.batch)?.max(1);
+    r.noise = args.f64_or("noise", r.noise)?;
+    r.seed = args.u64_or("seed", r.seed)?;
     r.write_verify = r.write_verify || args.flag("write-verify");
 
     let mut chip = neurram::coordinator::NeuRramChip::new(r.seed + 11);
     // --threads n overrides NEURRAM_THREADS; 0/absent keeps the chip's
     // resolved default (available_parallelism), same as the env knob
-    match args.usize_or("threads", 0) {
+    match args.usize_or("threads", 0)? {
         0 => {}
         n => chip.threads = n,
     }

@@ -23,16 +23,16 @@ use neurram::util::cli::Args;
 use neurram::util::rng::Rng;
 
 pub fn run(args: &Args) -> Result<()> {
-    let n_train = args.usize_or("train", 400);
-    let n_test = args.usize_or("samples", 24);
-    let epochs = args.usize_or("epochs", 40);
-    let steps = args.usize_or("steps", 60);
-    let burn_in = args.usize_or("burn-in", 20);
-    let flip_frac = args.f64_or("flip", 0.2);
-    let occlude_rows = args.usize_or("occlude-rows", 9);
-    let temperature = args.f64_or("temperature", 0.5);
-    let clip_sigma = args.f64_or("clip-sigma", 2.5);
-    let seed = args.u64_or("seed", 21);
+    let n_train = args.usize_or("train", 400)?;
+    let n_test = args.usize_or("samples", 24)?;
+    let epochs = args.usize_or("epochs", 40)?;
+    let steps = args.usize_or("steps", 60)?;
+    let burn_in = args.usize_or("burn-in", 20)?;
+    let flip_frac = args.f64_or("flip", 0.2)?;
+    let occlude_rows = args.usize_or("occlude-rows", 9)?;
+    let temperature = args.f64_or("temperature", 0.5)?;
+    let clip_sigma = args.f64_or("clip-sigma", 2.5)?;
+    let seed = args.u64_or("seed", 21)?;
 
     let graph = rbm_image();
     let n_labels = graph.n_classes;
@@ -62,13 +62,12 @@ pub fn run(args: &Args) -> Result<()> {
     let mut chip = NeuRramChip::new(seed + 2);
     // --threads n overrides NEURRAM_THREADS; 0/absent keeps the chip's
     // resolved default (available_parallelism), same as the env knob
-    match args.usize_or("threads", 0) {
+    match args.usize_or("threads", 0)? {
         0 => {}
         n => chip.threads = n,
     }
     chip.program_model(vec![matrix], &intensities(&graph),
-                       MappingStrategy::Simple, false)
-        .map_err(anyhow::Error::msg)?;
+                       MappingStrategy::Simple, false)?;
     chip.gate_unused();
     println!(
         "mapped onto {} cores (vertical split; backward half-steps run \

@@ -27,15 +27,15 @@ use neurram::util::cli::Args;
 
 pub fn run(args: &Args) -> Result<()> {
     let quick = args.flag("quick");
-    let chips = args.usize_or("chips", 2).max(1);
-    let requests = args.usize_or("requests", if quick { 24 } else { 96 });
+    let chips = args.usize_or("chips", 2)?.max(1);
+    let requests = args.usize_or("requests", if quick { 24 } else { 96 })?;
     let mix_spec = args.get_or("mix", "mnist:cifar:speech");
-    let seed = args.u64_or("seed", 7);
+    let seed = args.u64_or("seed", 7)?;
     let policy = BatchPolicy {
-        max_batch: args.usize_or("max-batch", 8).max(1),
-        max_wait_ns: args.u64_or("max-wait-us", 200) * 1000,
+        max_batch: args.usize_or("max-batch", 8)?.max(1),
+        max_wait_ns: args.u64_or("max-wait-us", 200)? * 1000,
     };
-    let interval_ns = args.u64_or("interval-us", 0) * 1000;
+    let interval_ns = args.u64_or("interval-us", 0)? * 1000;
 
     let mix = presets::parse_mix(mix_spec).map_err(anyhow::Error::msg)?;
     let mut sf = presets::build_serving_fleet(chips, PAPER_CORES, &mix,
@@ -43,7 +43,7 @@ pub fn run(args: &Args) -> Result<()> {
         .map_err(anyhow::Error::msg)?;
     // --threads n overrides NEURRAM_THREADS on every chip; 0/absent
     // keeps the resolved default (outputs identical either way)
-    match args.usize_or("threads", 0) {
+    match args.usize_or("threads", 0)? {
         0 => {}
         n => sf.fleet.set_threads(n),
     }
@@ -75,6 +75,8 @@ pub fn run(args: &Args) -> Result<()> {
         },
     );
 
+    // lint-allow(wall-clock): reported wall time of the serve loop, not
+    // part of the simulated latency model
     let t0 = std::time::Instant::now();
     let (_responses, rep) = sf
         .fleet

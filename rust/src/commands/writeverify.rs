@@ -7,9 +7,9 @@ use neurram::util::rng::Rng;
 use neurram::util::stats::{histogram, mean, sparkline, std_dev};
 
 pub fn run(args: &Args) -> Result<()> {
-    let cells = args.usize_or("cells", 4096);
-    let iters = args.usize_or("iterations", 3) as u32;
-    let seed = args.u64_or("seed", 7);
+    let cells = args.usize_or("cells", 4096)?;
+    let iters = args.usize_or("iterations", 3)? as u32;
+    let seed = args.u64_or("seed", 7)?;
     let side = (cells as f64).sqrt().ceil() as usize;
 
     let mut rng = Rng::new(seed);

@@ -38,6 +38,7 @@
 //!   counts).
 
 use super::mapping::{plan, MappingPlan, MappingStrategy};
+use crate::analysis::{fail_on_errors, verify_local, verify_model, PlanError};
 use crate::core_sim::{Activation, CimCore, MvmDirection, NeuronConfig};
 use crate::device::{DeviceParams, ProgramStats, WriteVerifyConfig};
 use crate::energy::{EnergyCounters, EnergyParams, MvmCost};
@@ -278,8 +279,11 @@ impl NeuRramChip {
         intensity: &[f64],
         strategy: MappingStrategy,
         write_verify: bool,
-    ) -> Result<Vec<ProgramStats>, String> {
+    ) -> Result<Vec<ProgramStats>, PlanError> {
         let p = plan(&matrices, intensity, strategy, self.cores.len())?;
+        // mandatory static gate: a complete single-chip plan must verify
+        // before any cell is programmed
+        fail_on_errors(verify_model(&p, &matrices, self.cores.len()))?;
         self.program_plan(p, matrices, write_verify)
     }
 
@@ -296,22 +300,12 @@ impl NeuRramChip {
         p: MappingPlan,
         matrices: Vec<ConductanceMatrix>,
         write_verify: bool,
-    ) -> Result<Vec<ProgramStats>, String> {
-        for pl in &p.placements {
-            if pl.core >= self.cores.len() {
-                return Err(format!(
-                    "placement of {} targets core {} but this chip has \
-                     {} cores",
-                    pl.segment.layer, pl.core, self.cores.len()
-                ));
-            }
-            if !matrices.iter().any(|m| m.layer == pl.segment.layer) {
-                return Err(format!(
-                    "no compiled matrix for planned layer {}",
-                    pl.segment.layer
-                ));
-            }
-        }
+    ) -> Result<Vec<ProgramStats>, PlanError> {
+        // mandatory static gate.  Only the LOCAL checks run here: a
+        // fleet shard is a partial plan carrying global replica
+        // bookkeeping, so whole-model coverage checks would misfire
+        // (program_model layers verify_model on top of this).
+        fail_on_errors(verify_local(&p, &matrices, self.cores.len()))?;
         // RESET-sweep every core the plan touches exactly once (and set
         // the global non-idealities up front, so each region's crossbar
         // views are built exactly once, already correct), then program

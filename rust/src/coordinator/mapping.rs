@@ -37,6 +37,7 @@
 //! during inference), then balance compute intensity, then respect the
 //! IR-drop split rule for wide matrices.
 
+use crate::analysis::diagnostics::{DiagCode, PlanError};
 use crate::models::ConductanceMatrix;
 use crate::{CORE_COLS, CORE_WEIGHT_ROWS};
 #[cfg(test)]
@@ -281,8 +282,15 @@ pub fn plan(
     intensity: &[f64],
     strategy: MappingStrategy,
     num_cores: usize,
-) -> Result<MappingPlan, String> {
-    assert_eq!(matrices.len(), intensity.len());
+) -> Result<MappingPlan, PlanError> {
+    if matrices.len() != intensity.len() {
+        return Err(PlanError::single(
+            DiagCode::E013InputArity,
+            "",
+            format!("{} matrices but {} intensity entries",
+                    matrices.len(), intensity.len()),
+        ));
+    }
     // 1) split everything
     let mut all_segs: Vec<(usize, Segment)> = Vec::new();
     for (i, m) in matrices.iter().enumerate() {
@@ -296,10 +304,15 @@ pub fn plan(
 
     if all_segs.len() <= num_cores || strategy != MappingStrategy::Packed {
         if all_segs.len() > num_cores {
-            return Err(format!(
-                "{} segments exceed {} cores; use MappingStrategy::Packed",
-                all_segs.len(),
-                num_cores
+            return Err(PlanError::single(
+                DiagCode::E012ChipBudget,
+                "",
+                format!(
+                    "{} segments exceed {} cores; use \
+                     MappingStrategy::Packed",
+                    all_segs.len(),
+                    num_cores
+                ),
             ));
         }
         // cases 1/5/6: one segment per core, whole-array window
@@ -339,7 +352,13 @@ pub fn plan(
                         replica: 0,
                     });
                 }
-                None => return Err("model does not fit on chip".into()),
+                None => {
+                    return Err(PlanError::single(
+                        DiagCode::E012ChipBudget,
+                        "",
+                        "model does not fit on chip",
+                    ))
+                }
             }
         }
     }

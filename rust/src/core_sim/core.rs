@@ -798,7 +798,11 @@ mod tests {
         }
         let v = 0.5 * num / den;
         let mag = (v.abs() / cfg.v_decr()).floor().min(127.0) as i32;
-        let want = if v > 0.0 { mag } else if v < 0.0 { -mag } else { 0 };
+        let want = match v.partial_cmp(&0.0) {
+            Some(std::cmp::Ordering::Greater) => mag,
+            Some(std::cmp::Ordering::Less) => -mag,
+            _ => 0,
+        };
         assert_eq!(y[0], want);
     }
 

@@ -129,12 +129,12 @@ pub fn convert(v: f64, cfg: &NeuronConfig, noise_v: f64) -> (i32, AdcCycles) {
         return ((v > 0.0) as i32, cyc);
     }
 
-    let sign = if v > 0.0 {
-        1
-    } else if v < 0.0 {
-        -1
-    } else {
-        0
+    // NaN and both zeroes map to sign 0 (partial_cmp None / Equal;
+    // total_cmp would give -0.0 the sign -1 and change outputs)
+    let sign = match v.partial_cmp(&0.0) {
+        Some(std::cmp::Ordering::Greater) => 1,
+        Some(std::cmp::Ordering::Less) => -1,
+        _ => 0,
     };
 
     if cfg.activation == Activation::Relu && sign <= 0 {

@@ -17,6 +17,9 @@
 //! docs in `fleet/mod.rs`).
 
 use super::{ChipFleet, FleetModel, ModelGroup};
+use crate::analysis::{
+    fail_on_errors, verify_model, verify_shards, DiagCode, PlanError,
+};
 use crate::coordinator::mapping::{plan, MappingPlan, MappingStrategy};
 use crate::models::ConductanceMatrix;
 
@@ -38,8 +41,14 @@ pub struct FleetPlacement {
 /// `[0, cores_per_chip)`) plus the global placement index of each local
 /// placement, in local plan order.
 pub fn shard_plan(global: &MappingPlan, cores_per_chip: usize)
-                  -> Vec<(MappingPlan, Vec<usize>)> {
-    assert!(cores_per_chip > 0);
+                  -> Result<Vec<(MappingPlan, Vec<usize>)>, PlanError> {
+    if cores_per_chip == 0 {
+        return Err(PlanError::single(
+            DiagCode::E012ChipBudget,
+            "",
+            "cannot shard a plan over chips with zero cores",
+        ));
+    }
     let n_shards = global
         .placements
         .iter()
@@ -78,7 +87,7 @@ pub fn shard_plan(global: &MappingPlan, cores_per_chip: usize)
             idxs,
         ));
     }
-    shards
+    Ok(shards)
 }
 
 impl ChipFleet {
@@ -101,31 +110,46 @@ impl ChipFleet {
         intensity: &[f64],
         strategy: MappingStrategy,
         max_chips: usize,
-    ) -> Result<FleetPlacement, String> {
+    ) -> Result<FleetPlacement, PlanError> {
         if self.model_index(name).is_some() {
-            return Err(format!("model {name} already placed"));
+            return Err(PlanError::single(
+                DiagCode::E008DuplicateLayer,
+                name,
+                format!("model {name} already placed"),
+            ));
         }
         for (i, m) in matrices.iter().enumerate() {
             if matrices[..i].iter().any(|e| e.layer == m.layer) {
-                return Err(format!("duplicate layer {} in model {name}",
-                                   m.layer));
+                return Err(PlanError::single(
+                    DiagCode::E008DuplicateLayer,
+                    m.layer.clone(),
+                    format!("duplicate layer {} in model {name}", m.layer),
+                ));
             }
             if let Some(mi) = self.model_of_layer(&m.layer) {
-                return Err(format!(
-                    "layer {} of model {name} collides with model {} -- \
-                     fleet layer names must be unique (rename the layers \
-                     or bundle the models together)",
-                    m.layer, self.models[mi].name
+                return Err(PlanError::single(
+                    DiagCode::E008DuplicateLayer,
+                    m.layer.clone(),
+                    format!(
+                        "layer {} of model {name} collides with model {} \
+                         -- fleet layer names must be unique (rename the \
+                         layers or bundle the models together)",
+                        m.layer, self.models[mi].name
+                    ),
                 ));
             }
         }
         let free = self.free_chips();
         if free.is_empty() {
-            return Err(format!("no free chips for model {name}"));
+            return Err(PlanError::single(
+                DiagCode::E012ChipBudget,
+                name,
+                format!("no free chips for model {name}"),
+            ));
         }
         // smallest k one copy fits
         let mut fitted: Option<(usize, MappingPlan)> = None;
-        let mut last_err = String::new();
+        let mut last_err: Option<PlanError> = None;
         for k in 1..=free.len() {
             match plan(&matrices, intensity, strategy,
                        k * self.cores_per_chip) {
@@ -133,16 +157,28 @@ impl ChipFleet {
                     fitted = Some((k, p));
                     break;
                 }
-                Err(e) => last_err = e,
+                Err(e) => last_err = Some(e),
             }
         }
         let (k, gplan) = fitted.ok_or_else(|| {
-            format!("model {name} does not fit {} free chips of {} cores: \
-                     {last_err}",
-                    free.len(), self.cores_per_chip)
+            let last = last_err
+                .map(|e| e.to_string())
+                .unwrap_or_default();
+            PlanError::single(
+                DiagCode::E012ChipBudget,
+                name,
+                format!("model {name} does not fit {} free chips of {} \
+                         cores: {last}",
+                        free.len(), self.cores_per_chip),
+            )
         })?;
+        // mandatory static gates: the global virtual-core plan, then
+        // the sharding, must verify before any chip programs
+        fail_on_errors(verify_model(&gplan, &matrices,
+                                    k * self.cores_per_chip))?;
         let copies = (free.len() / k).min((max_chips.max(k)) / k).max(1);
-        let shards = shard_plan(&gplan, self.cores_per_chip);
+        let shards = shard_plan(&gplan, self.cores_per_chip)?;
+        fail_on_errors(verify_shards(&gplan, &shards, self.cores_per_chip))?;
         assert!(shards.len() <= k, "shard count exceeds the fitted k");
         let mut groups = Vec::with_capacity(copies);
         for c in 0..copies {
@@ -211,7 +247,7 @@ mod tests {
     fn shard_plan_rebases_cores_and_preserves_order() {
         let mats = vec![matrix("tall", 500, 20, 1)]; // 4 row segments
         let gplan = plan(&mats, &[1.0], MappingStrategy::Simple, 4).unwrap();
-        let shards = shard_plan(&gplan, 2);
+        let shards = shard_plan(&gplan, 2).unwrap();
         assert_eq!(shards.len(), 2);
         for (s, (local, idxs)) in shards.iter().enumerate() {
             assert_eq!(local.placements.len(), 2);

@@ -477,8 +477,10 @@ pub mod presets {
                 mats.extend(compile_random(&rbm_graph, seed + 3));
                 intens.extend(intensities(&rbm_graph));
             }
-            let p = fleet.program_model("edge", mats, &intens,
-                                        MappingStrategy::Packed, n_edge)?;
+            let p = fleet
+                .program_model("edge", mats, &intens,
+                               MappingStrategy::Packed, n_edge)
+                .map_err(|e| e.to_string())?;
             placements.push(("edge".to_string(), p));
             if has("mnist") {
                 // shifts calibrated THROUGH the fleet's DispatchTarget
@@ -535,8 +537,10 @@ pub mod presets {
             }
             let mats = compile_random(&graph, seed + 5);
             let intens = intensities(&graph);
-            let p = fleet.program_model("cifar", mats, &intens,
-                                        MappingStrategy::Packed, n_cifar)?;
+            let p = fleet
+                .program_model("cifar", mats, &intens,
+                               MappingStrategy::Packed, n_cifar)
+                .map_err(|e| e.to_string())?;
             placements.push(("cifar".to_string(), p));
             let shifts = vec![0.0; graph.layers.len()];
             workloads.push(Workload {

@@ -71,9 +71,8 @@ pub fn digit28(rng: &mut Rng, noise: f64) -> (Vec<f32>, usize) {
     let ox = rng.below(28 - w + 1);
     let mut img = vec![0.0f32; 28 * 28];
     for y in 0..h {
-        for x in 0..w {
-            img[(oy + y) * 28 + ox + x] = up[y * w + x];
-        }
+        let dst = (oy + y) * 28 + ox;
+        img[dst..dst + w].copy_from_slice(&up[y * w..(y + 1) * w]);
     }
     for p in img.iter_mut() {
         *p = (*p + (noise * rng.normal()) as f32).clamp(0.0, 1.0);

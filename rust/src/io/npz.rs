@@ -262,7 +262,8 @@ fn npy_bytes(t: &Tensor) -> Vec<u8> {
 /// Write named f32 tensors to an .npz file (stored zip of .npy members).
 pub fn save_npz<P: AsRef<Path>>(path: P, tensors: &[(String, Tensor)]) -> Result<()> {
     use std::io::Write;
-    let f = std::fs::File::create(path.as_ref())?;
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
     let mut w = std::io::BufWriter::new(f);
 
     struct Entry {

@@ -9,6 +9,8 @@
 //! Module map (see DESIGN.md for the full system inventory):
 //!
 //! * [`util`]        -- PRNG/LFSR, JSON, CLI, stats, bench harness
+//! * [`analysis`]    -- static plan/graph verifier: structured
+//!   diagnostics (`DiagCode`) for bad placements before programming
 //! * [`device`]      -- RRAM cell physics + write-verify programming
 //! * [`core_sim`]    -- one CIM core: TNSA, voltage-mode neuron, crossbar
 //! * [`energy`]      -- energy/latency accounting, EDP, tech scaling
@@ -57,10 +59,9 @@
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::type_complexity)]
-#![allow(clippy::manual_memcpy)]
 #![allow(clippy::new_without_default)]
-#![allow(clippy::comparison_chain)]
 
+pub mod analysis;
 pub mod calib;
 pub mod coordinator;
 pub mod core_sim;

@@ -2,6 +2,8 @@
 //!
 //! Subcommands (one per demonstrated dataflow + diagnostics):
 //!   info                chip + artifact summary
+//!   check               static plan/graph verifier over the built-in
+//!                       bundles (exit nonzero on any error diagnostic)
 //!   edp                 Fig. 1d-style EDP sweep over bit precisions
 //!   writeverify         ED Fig. 3 programming statistics
 //!   infer-mnist         end-to-end CNN inference (Forward dataflow)
@@ -22,13 +24,12 @@
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::type_complexity)]
-#![allow(clippy::manual_memcpy)]
 #![allow(clippy::new_without_default)]
-#![allow(clippy::comparison_chain)]
 
 use neurram::util::cli::Args;
 
 mod commands {
+    pub mod check;
     pub mod edp;
     pub mod infer;
     pub mod infer_cifar;
@@ -44,6 +45,7 @@ fn main() {
     let args = Args::from_env();
     let result = match args.subcommand.as_deref() {
         Some("info") => commands::info::run(&args),
+        Some("check") => commands::check::run(&args),
         Some("edp") => commands::edp::run(&args),
         Some("writeverify") => commands::writeverify::run(&args),
         Some("infer-mnist") => commands::infer::run_mnist(&args),
@@ -61,9 +63,11 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: neurram <info|edp|writeverify|infer-mnist|infer-cifar|infer-speech|recover-image|serve-bench|runtime-check> [--opts]\n\
+                "usage: neurram <info|check|edp|writeverify|infer-mnist|infer-cifar|infer-speech|recover-image|serve-bench|runtime-check> [--opts]\n\
                  \n\
                  info           chip configuration + artifact inventory\n\
+                 check          static plan/graph verifier (--model NAME|all\n\
+                                --chips N; exit nonzero on any error)\n\
                  edp            EDP/TOPS-W sweep over input/output bits (Fig. 1d)\n\
                  writeverify    write-verify programming statistics (ED Fig. 3)\n\
                  infer-mnist    CNN inference on the 48-core chip simulator\n\

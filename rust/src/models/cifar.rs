@@ -139,7 +139,8 @@ pub fn prepare_cifar_chip(
     let graph = cifar_resnet(r.width, r.blocks);
     let mut matrices = compile_random(&graph, r.seed);
     chip.program_model(matrices.clone(), &intensities(&graph),
-                       MappingStrategy::Packed, r.write_verify)?;
+                       MappingStrategy::Packed, r.write_verify)
+        .map_err(|e| e.to_string())?;
     chip.gate_unused();
     // fail in seconds, not after the whole train/calibrate/infer
     // pipeline: this workload exists to exercise merged placements
@@ -194,6 +195,8 @@ pub fn run_cifar(chip: &mut NeuRramChip, r: &CifarRecipe)
     let (te_imgs, te_labels) =
         datasets::textures32(r.n_test, r.seed + 3, r.noise);
     let q_te = quantize_inputs(&graph, &te_imgs);
+    // lint-allow(wall-clock): reported wall time of the quick run, not
+    // part of the simulated latency model
     let t0 = std::time::Instant::now();
     let mut logits = Vec::with_capacity(q_te.len());
     let mut merged: Vec<(String, ScheduleReport)> = graph

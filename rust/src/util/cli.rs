@@ -1,8 +1,17 @@
 //! Tiny CLI argument parser (clap is not available offline).
 //!
 //! Grammar: `binary <subcommand> [--flag] [--key value] ...`
+//!
+//! Typed accessors return `anyhow::Result`: an ABSENT option yields its
+//! default, but a PRESENT option that fails to parse is a user error
+//! and reports which flag and value were rejected instead of silently
+//! falling back to the default (the old behaviour turned typos like
+//! `--batch 3O` into surprise defaults).
 
+use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
+use std::fmt::Display;
+use std::str::FromStr;
 
 #[derive(Debug, Default)]
 pub struct Args {
@@ -26,12 +35,9 @@ impl Args {
                 // --key=value | --key value | --flag
                 if let Some((k, v)) = name.split_once('=') {
                     a.options.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
+                } else if let Some(v) =
+                    it.next_if(|n| !n.starts_with("--"))
                 {
-                    let v = it.next().unwrap();
                     a.options.insert(name.to_string(), v);
                 } else {
                     a.flags.push(name.to_string());
@@ -57,22 +63,30 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    pub fn usize_or(&self, name: &str, default: usize) -> usize {
-        self.get(name)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
+    /// Typed option: `default` when absent, `Err` naming the flag and
+    /// offending value when present but unparsable.
+    fn parsed<T: FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| {
+                anyhow!("--{name} {v}: {e}")
+            }),
+        }
     }
 
-    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
-        self.get(name)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        self.parsed(name, default)
     }
 
-    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
-        self.get(name)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        self.parsed(name, default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        self.parsed(name, default)
     }
 }
 
@@ -89,7 +103,7 @@ mod tests {
         let a = parse("infer extra --model mnist --batch 32 --verbose");
         assert_eq!(a.subcommand.as_deref(), Some("infer"));
         assert_eq!(a.get("model"), Some("mnist"));
-        assert_eq!(a.usize_or("batch", 0), 32);
+        assert_eq!(a.usize_or("batch", 0).unwrap(), 32);
         assert!(a.flag("verbose"));
         assert_eq!(a.positional, vec!["extra".to_string()]);
     }
@@ -97,15 +111,24 @@ mod tests {
     #[test]
     fn eq_form() {
         let a = parse("bench --in-bits=4 --scale=0.5");
-        assert_eq!(a.usize_or("in-bits", 0), 4);
-        assert!((a.f64_or("scale", 0.0) - 0.5).abs() < 1e-12);
+        assert_eq!(a.usize_or("in-bits", 0).unwrap(), 4);
+        assert!((a.f64_or("scale", 0.0).unwrap() - 0.5).abs() < 1e-12);
     }
 
     #[test]
     fn defaults() {
         let a = parse("x");
-        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
         assert_eq!(a.get_or("missing", "d"), "d");
         assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn unparsable_present_value_is_an_error() {
+        let a = parse("x --batch 3O --scale nope");
+        let e = a.usize_or("batch", 1).unwrap_err().to_string();
+        assert!(e.contains("--batch 3O"), "{e}");
+        assert!(a.f64_or("scale", 1.0).is_err());
+        assert!(a.u64_or("seed", 1).is_ok());
     }
 }

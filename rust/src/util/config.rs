@@ -8,7 +8,7 @@ use crate::core_sim::CrossbarNonIdealities;
 use crate::device::{DeviceParams, WriteVerifyConfig};
 use crate::energy::EnergyParams;
 use crate::util::json::Json;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 #[derive(Clone, Debug)]
 pub struct ChipConfig {
@@ -47,8 +47,10 @@ fn get_usize(j: &Json, key: &str, out: &mut usize) {
 
 impl ChipConfig {
     pub fn from_file(path: &str) -> Result<ChipConfig> {
-        let text = std::fs::read_to_string(path)?;
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading chip config {path}"))?;
         Self::from_json(&text)
+            .with_context(|| format!("parsing chip config {path}"))
     }
 
     pub fn from_json(text: &str) -> Result<ChipConfig> {

@@ -710,6 +710,137 @@ fn prop_parallel_dispatch_bitwise_equals_serial() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Static plan verifier: every packer plan for the built-in models must
+// verify clean under every strategy, and targeted corruptions of a
+// clean plan must surface the exact diagnostic the runtime would
+// otherwise only catch by panicking mid-programming.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_builtin_plans_verify_clean_under_every_strategy() {
+    use neurram::analysis::{verify_graph, verify_model, verify_shards,
+                            Severity};
+    use neurram::models::loader::{compile_random, intensities};
+    use neurram::models::{cifar_resnet, mnist_cnn7, rbm_image, speech_lstm};
+
+    let graphs =
+        [mnist_cnn7(8), cifar_resnet(16, 3), speech_lstm(64, 2), rbm_image()];
+    for graph in &graphs {
+        let graph_errs: Vec<_> = verify_graph(graph)
+            .into_iter()
+            .filter(|d| d.severity == Severity::Error)
+            .collect();
+        assert!(graph_errs.is_empty(), "{}: {graph_errs:?}", graph.name);
+
+        let mats = compile_random(graph, 40);
+        let intens = intensities(graph);
+        for strategy in [MappingStrategy::Simple, MappingStrategy::Balanced,
+                         MappingStrategy::Packed] {
+            // smallest chip count the plan fits (fleet-style virtual cores)
+            let mut fitted = false;
+            for k in 1..=4usize {
+                let p = match plan(&mats, &intens, strategy, k * PAPER_CORES) {
+                    Ok(p) => p,
+                    Err(_) => continue,
+                };
+                fitted = true;
+                let errs: Vec<_> = verify_model(&p, &mats, k * PAPER_CORES)
+                    .into_iter()
+                    .filter(|d| d.severity == Severity::Error)
+                    .collect();
+                assert!(errs.is_empty(),
+                        "{} {strategy:?} @{k} chips: {errs:?}", graph.name);
+                let shards = neurram::fleet::shard_plan(&p, PAPER_CORES)
+                    .unwrap_or_else(|e| {
+                        panic!("{} {strategy:?} @{k}: {e}", graph.name)
+                    });
+                let errs: Vec<_> = verify_shards(&p, &shards, PAPER_CORES)
+                    .into_iter()
+                    .filter(|d| d.severity == Severity::Error)
+                    .collect();
+                assert!(errs.is_empty(),
+                        "{} {strategy:?} @{k} shards: {errs:?}", graph.name);
+                break;
+            }
+            assert!(fitted,
+                    "{} never fit under {strategy:?} within 4 chips",
+                    graph.name);
+        }
+    }
+}
+
+#[test]
+fn prop_corrupted_plans_surface_exact_diagnostics() {
+    use neurram::analysis::{verify_model, verify_shards, DiagCode, Severity};
+    use neurram::models::loader::{compile_random, intensities};
+    use neurram::models::mnist_cnn7;
+    use neurram::CORE_WEIGHT_ROWS;
+
+    let graph = mnist_cnn7(8);
+    let mats = compile_random(&graph, 40);
+    let intens = intensities(&graph);
+    let base =
+        plan(&mats, &intens, MappingStrategy::Balanced, PAPER_CORES).unwrap();
+    let errs_of = |p: &neurram::coordinator::MappingPlan,
+                   mats: &[ConductanceMatrix]| {
+        verify_model(p, mats, PAPER_CORES)
+            .into_iter()
+            .filter(|d| d.severity == Severity::Error)
+            .map(|d| d.code)
+            .collect::<Vec<_>>()
+    };
+    assert!(errs_of(&base, &mats).is_empty(), "baseline not clean");
+
+    // E001: the same window occupied twice on one core
+    let mut p = base.clone();
+    let dup = p.placements[0].clone();
+    p.placements.push(dup);
+    assert!(errs_of(&p, &mats).contains(&DiagCode::E001RegionOverlap));
+
+    // E002: window pushed past the weight-row budget
+    let mut p = base.clone();
+    p.placements[0].core_row_off = CORE_WEIGHT_ROWS;
+    assert!(errs_of(&p, &mats).contains(&DiagCode::E002RegionBounds));
+
+    // E003: core index beyond the chip
+    let mut p = base.clone();
+    p.placements[0].core += PAPER_CORES;
+    assert!(errs_of(&p, &mats).contains(&DiagCode::E003CoreRange));
+
+    // E004: a placement whose matrix was never compiled
+    let missing: Vec<ConductanceMatrix> = mats[1..].to_vec();
+    assert!(errs_of(&base, &missing).contains(&DiagCode::E004MissingMatrix));
+
+    // E005: segment window reaching outside its matrix
+    let mut p = base.clone();
+    p.placements[0].segment.row_hi = mats[0].rows + 7;
+    assert!(errs_of(&p, &mats).contains(&DiagCode::E005SegmentCoverage));
+
+    // E006: replica bookkeeping disagreeing with the placements
+    let mut p = base.clone();
+    let layer = p.placements[0].segment.layer.clone();
+    p.replicas.retain(|(l, _)| *l != layer);
+    p.replicas.push((layer, 9));
+    assert!(errs_of(&p, &mats).contains(&DiagCode::E006ReplicaBookkeeping));
+
+    // E007: a shard dropping one of its placements
+    let shards = neurram::fleet::shard_plan(&base, 16).unwrap();
+    let mut bad = shards.clone();
+    bad[0].0.placements.remove(0);
+    bad[0].1.remove(0);
+    let codes: Vec<_> = verify_shards(&base, &bad, 16)
+        .into_iter()
+        .map(|d| d.code)
+        .collect();
+    assert!(codes.contains(&DiagCode::E007ShardCoverage), "{codes:?}");
+
+    // E008: the same layer compiled twice
+    let mut twice = mats.clone();
+    twice.push(mats[0].clone());
+    assert!(errs_of(&base, &twice).contains(&DiagCode::E008DuplicateLayer));
+}
+
 #[test]
 fn prop_parallel_backward_stochastic_equals_serial() {
     // backward path: split rows on distinct cores, on-chip stochastic

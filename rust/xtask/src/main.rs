@@ -1,0 +1,316 @@
+//! Repo automation tasks, invoked as `cargo xtask <task>`.
+//!
+//! `lint-determinism` scans `rust/src/**` for source patterns that break
+//! the crate's bit-reproducibility contract (seeded runs must produce
+//! identical outputs regardless of host, thread count or wall time):
+//!
+//! * `hash-collections` -- `HashMap`/`HashSet` iteration order is seeded
+//!   per-process; the house rule is `BTreeMap`/`BTreeSet`.
+//! * `wall-clock` -- `Instant::now`/`SystemTime` reads outside the bench
+//!   harness (`util/bench.rs`) leak timing into simulated results.
+//! * `partial-cmp-sort` -- `sort_by(.. partial_cmp ..)` panics or gives
+//!   unstable order on NaN; use `total_cmp`.
+//! * `thread-count` -- `available_parallelism` outside `util/threads.rs`
+//!   makes behaviour depend on host core count.
+//!
+//! A hit is waived by a comment on the offending line or in the comment
+//! block immediately above it: `// lint-allow(<rule>): <reason>` -- the
+//! reason is mandatory. Only the code before the first `//` of each line
+//! is matched, so comments never trigger the rules.
+
+use std::path::{Path, PathBuf};
+
+struct Rule {
+    name: &'static str,
+    matcher: fn(&str) -> bool,
+    /// Path suffixes (repo-relative, `/`-separated) where the pattern is
+    /// legitimate and the whole file is exempt.
+    allowed_paths: &'static [&'static str],
+    why: &'static str,
+}
+
+const RULES: &[Rule] = &[
+    Rule {
+        name: "hash-collections",
+        matcher: |code| code.contains("HashMap") || code.contains("HashSet"),
+        allowed_paths: &[],
+        why: "hashed iteration order is seeded per-process; \
+              use BTreeMap/BTreeSet",
+    },
+    Rule {
+        name: "wall-clock",
+        matcher: |code| {
+            code.contains("Instant::now") || code.contains("SystemTime")
+        },
+        allowed_paths: &["util/bench.rs"],
+        why: "wall-clock reads make output time-dependent; keep them in \
+              util/bench.rs or waive reporting-only uses",
+    },
+    Rule {
+        name: "partial-cmp-sort",
+        matcher: |code| {
+            (code.contains("sort_by") || code.contains("sort_unstable_by"))
+                && code.contains("partial_cmp")
+        },
+        allowed_paths: &[],
+        why: "partial_cmp sorts panic or reorder on NaN; use total_cmp",
+    },
+    Rule {
+        name: "thread-count",
+        matcher: |code| code.contains("available_parallelism"),
+        allowed_paths: &["util/threads.rs"],
+        why: "host core count must only be read through util::threads \
+              (NEURRAM_THREADS override point)",
+    },
+];
+
+/// The code part of a line: everything before the first `//`.
+///
+/// A `//` inside a string literal false-positively ends the code part;
+/// that only ever hides code *after* a URL-bearing literal, which is
+/// acceptable for a deny-list lint.
+fn code_part(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// Does this comment text carry `lint-allow(<rule>): <reason>`?
+fn has_waiver(comment: &str, tag: &str) -> bool {
+    if let Some(p) = comment.find(tag) {
+        if let Some(rest) = comment[p + tag.len()..].strip_prefix(':') {
+            return !rest.trim().is_empty();
+        }
+    }
+    false
+}
+
+/// A waiver counts on the offending line's trailing comment or anywhere
+/// in the contiguous `//` comment block immediately above it.
+fn waived(lines: &[&str], idx: usize, rule: &str) -> bool {
+    let tag = format!("lint-allow({rule})");
+    if let Some(c) = lines[idx].find("//") {
+        if has_waiver(&lines[idx][c..], &tag) {
+            return true;
+        }
+    }
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let t = lines[i].trim_start();
+        if !t.starts_with("//") {
+            break;
+        }
+        if has_waiver(t, &tag) {
+            return true;
+        }
+    }
+    false
+}
+
+struct Violation {
+    line: usize,
+    rule: &'static str,
+    snippet: String,
+}
+
+fn scan_source(rel_path: &str, text: &str) -> Vec<Violation> {
+    let lines: Vec<&str> = text.lines().collect();
+    let mut out = Vec::new();
+    for rule in RULES {
+        if rule.allowed_paths.iter().any(|p| rel_path.ends_with(p)) {
+            continue;
+        }
+        for (i, raw) in lines.iter().enumerate() {
+            if !(rule.matcher)(code_part(raw)) {
+                continue;
+            }
+            if waived(&lines, i, rule.name) {
+                continue;
+            }
+            out.push(Violation {
+                line: i + 1,
+                rule: rule.name,
+                snippet: raw.trim().to_string(),
+            });
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let mut entries: Vec<PathBuf> = match std::fs::read_dir(dir) {
+        Ok(rd) => rd.filter_map(|e| e.ok()).map(|e| e.path()).collect(),
+        Err(e) => {
+            eprintln!("xtask: cannot read {}: {e}", dir.display());
+            std::process::exit(2);
+        }
+    };
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            rs_files(&p, out);
+        } else if p.extension().map_or(false, |e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn lint_determinism(repo_root: &Path) -> i32 {
+    let src = repo_root.join("rust/src");
+    let mut files = Vec::new();
+    rs_files(&src, &mut files);
+    let mut total = 0usize;
+    let mut rules_hit: Vec<&'static str> = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(repo_root)
+            .unwrap_or(f)
+            .display()
+            .to_string();
+        let text = match std::fs::read_to_string(f) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("xtask: cannot read {rel}: {e}");
+                return 2;
+            }
+        };
+        for v in scan_source(&rel, &text) {
+            println!("{rel}:{}: [{}] {}", v.line, v.rule, v.snippet);
+            if !rules_hit.contains(&v.rule) {
+                rules_hit.push(v.rule);
+            }
+            total += 1;
+        }
+    }
+    if total == 0 {
+        println!("lint-determinism: OK ({} files scanned)", files.len());
+        0
+    } else {
+        for rule in RULES.iter().filter(|r| rules_hit.contains(&r.name)) {
+            println!("  [{}] {}", rule.name, rule.why);
+        }
+        println!(
+            "lint-determinism: {total} violation(s); waive with \
+             `// lint-allow(<rule>): <reason>` on or above the line"
+        );
+        1
+    }
+}
+
+fn main() {
+    let task = std::env::args().nth(1);
+    match task.as_deref() {
+        Some("lint-determinism") => {
+            let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+            let root = root.canonicalize().unwrap_or(root);
+            std::process::exit(lint_determinism(&root));
+        }
+        other => {
+            eprintln!(
+                "usage: cargo xtask <task>\n\ntasks:\n  lint-determinism  \
+                 deny nondeterminism-prone patterns in rust/src"
+            );
+            if let Some(t) = other {
+                eprintln!("\nunknown task: {t}");
+            }
+            std::process::exit(2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(violations: &[Violation]) -> Vec<&'static str> {
+        violations.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn code_part_strips_comments() {
+        assert_eq!(code_part("let x = 1; // HashMap note"), "let x = 1; ");
+        assert_eq!(code_part("// all comment"), "");
+        assert_eq!(code_part("no comment"), "no comment");
+    }
+
+    #[test]
+    fn comment_mentions_do_not_fire() {
+        let src = "// a HashMap would be wrong here\nlet m = BTreeMap::new();\n";
+        assert!(scan_source("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn each_rule_fires() {
+        let src = "use std::collections::HashMap;\n\
+                   let t = Instant::now();\n\
+                   v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+                   let n = std::thread::available_parallelism();\n";
+        let got = scan_source("rust/src/x.rs", src);
+        assert_eq!(
+            rules_of(&got),
+            vec![
+                "hash-collections",
+                "wall-clock",
+                "partial-cmp-sort",
+                "thread-count"
+            ]
+        );
+        assert_eq!(got[0].line, 1);
+        assert_eq!(got[3].line, 4);
+    }
+
+    #[test]
+    fn sort_without_partial_cmp_is_fine() {
+        let src = "v.sort_by(|a, b| a.total_cmp(b));\n\
+                   w.sort_unstable_by(|a, b| a.cmp(b));\n";
+        assert!(scan_source("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allowed_paths_exempt_whole_file() {
+        let src = "let t = Instant::now();\n";
+        assert!(scan_source("rust/src/util/bench.rs", src).is_empty());
+        assert_eq!(rules_of(&scan_source("rust/src/x.rs", src)),
+                   vec!["wall-clock"]);
+        let src = "let n = available_parallelism();\n";
+        assert!(scan_source("rust/src/util/threads.rs", src).is_empty());
+    }
+
+    #[test]
+    fn same_line_waiver() {
+        let src =
+            "let t = Instant::now(); // lint-allow(wall-clock): report only\n";
+        assert!(scan_source("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn preceding_block_waiver_spans_lines() {
+        let src = "// lint-allow(wall-clock): reported wall time only,\n\
+                   // not part of the simulated latency model\n\
+                   let t = Instant::now();\n";
+        assert!(scan_source("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn waiver_requires_reason_and_matching_rule() {
+        let src = "// lint-allow(wall-clock):\nlet t = Instant::now();\n";
+        assert_eq!(rules_of(&scan_source("rust/src/x.rs", src)),
+                   vec!["wall-clock"]);
+        let src = "// lint-allow(hash-collections): wrong rule\n\
+                   let t = Instant::now();\n";
+        assert_eq!(rules_of(&scan_source("rust/src/x.rs", src)),
+                   vec!["wall-clock"]);
+    }
+
+    #[test]
+    fn waiver_does_not_reach_past_code() {
+        let src = "// lint-allow(wall-clock): only covers the next block\n\
+                   let a = 1;\n\
+                   let t = Instant::now();\n";
+        assert_eq!(rules_of(&scan_source("rust/src/x.rs", src)),
+                   vec!["wall-clock"]);
+    }
+}
