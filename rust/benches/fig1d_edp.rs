@@ -15,7 +15,7 @@ use neurram::coordinator::{NeuRramChip, PAPER_CORES};
 use neurram::energy::{EnergyParams, MvmCost};
 use neurram::models::ConductanceMatrix;
 use neurram::util::bench::{section, table};
-use neurram::util::benchjson::BenchJson;
+use neurram::util::benchjson::{BenchJson, RunMeta};
 use neurram::util::rng::Rng;
 
 fn neurram_point(in_bits: u32, out_bits: u32, mvms: usize) -> MvmCost {
@@ -153,6 +153,7 @@ fn main() {
     record.num("edp_ratio_vs_current_mode", cm.edp() / nr.edp());
     record.num("throughput_ratio_vs_current_mode", nr.gops() / cm.gops());
     record.num("neurram_4b8b_tops_per_watt", nr.tops_per_watt());
+    RunMeta::capture(1, 7).stamp(&mut record);
     if let Err(e) = record.write("BENCH_edp.json") {
         println!("(could not write BENCH_edp.json: {e})");
     }

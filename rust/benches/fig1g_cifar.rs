@@ -15,7 +15,7 @@ use neurram::coordinator::NeuRramChip;
 use neurram::energy::EnergyParams;
 use neurram::models::cifar::{run_cifar, CifarRecipe};
 use neurram::util::bench::{section, table};
-use neurram::util::benchjson::BenchJson;
+use neurram::util::benchjson::{BenchJson, RunMeta};
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -78,5 +78,6 @@ fn main() {
         .num("images_per_s", run.images_per_s)
         .num("energy_pj", cost.energy_pj)
         .num("fj_per_op", cost.femtojoule_per_op());
+    RunMeta::capture(1, recipe.seed).stamp(&mut b);
     b.write("BENCH_cifar.json").expect("write BENCH_cifar.json");
 }

@@ -18,7 +18,7 @@
 use neurram::coordinator::PAPER_CORES;
 use neurram::fleet::router::presets;
 use neurram::fleet::BatchPolicy;
-use neurram::util::benchjson::BenchJson;
+use neurram::util::benchjson::{BenchJson, RunMeta};
 
 fn serve_mnist(chips: usize, requests: usize, policy: &BatchPolicy,
                seed: u64) -> neurram::fleet::ServeReport {
@@ -113,6 +113,7 @@ fn main() {
     record.nums("policy_requests_per_s", &pol_req_s);
     record.nums("policy_p99_latency_ns", &pol_p99);
 
+    RunMeta::capture(*chip_counts.last().unwrap(), seed).stamp(&mut record);
     record
         .write("BENCH_fleet.json")
         .expect("write BENCH_fleet.json");

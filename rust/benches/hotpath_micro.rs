@@ -21,7 +21,7 @@ use neurram::io::npz::Tensor;
 use neurram::models::ConductanceMatrix;
 use neurram::runtime::Runtime;
 use neurram::util::bench::{bench, black_box, section};
-use neurram::util::benchjson::BenchJson;
+use neurram::util::benchjson::{BenchJson, RunMeta};
 use neurram::util::rng::Rng;
 
 fn main() {
@@ -46,7 +46,7 @@ fn main() {
     let xb = Crossbar::from_conductances(&gp, &gn, rows, cols, 40.0, 0.5);
     let x: Vec<i32> = (0..rows).map(|_| rng.below(15) as i32 - 7).collect();
     let mut dv = vec![0.0f32; cols];
-    bench("crossbar::settle_int 128x256", budget(300), || {
+    let r_settle = bench("crossbar::settle_int 128x256", budget(300), || {
         xb.settle_int(black_box(&x), &mut dv);
         black_box(&dv);
     });
@@ -215,7 +215,31 @@ fn main() {
         Err(e) => println!("(skipping PJRT bench: {e})"),
     }
 
+    section("telemetry: disabled-recorder overhead on the settle path");
+    // a dispatch pays two is_enabled() guard reads (snapshot + record);
+    // the acceptance budget is < 1% of ONE crossbar settle
+    let rec = neurram::telemetry::Recorder::new();
+    let r_check =
+        bench("Recorder::is_enabled x1000 (disabled)", budget(200), || {
+            for _ in 0..1000 {
+                black_box(black_box(&rec).is_enabled());
+            }
+        });
+    let guard_ns = r_check.median_ns / 1000.0;
+    let overhead = 2.0 * guard_ns / r_settle.median_ns;
+    println!("  guard read: {guard_ns:.3} ns; 2 reads per dispatch = \
+              {:.4}% of one settle (budget < 1%)",
+             overhead * 100.0);
+    assert!(
+        overhead < 0.01,
+        "telemetry-off overhead is {:.4}% of a settle (budget < 1%)",
+        overhead * 100.0
+    );
+    record.num("telemetry_guard_ns", guard_ns);
+    record.num("telemetry_off_overhead_frac", overhead);
+
     section("perf trajectory record");
+    RunMeta::capture(1, 99).stamp(&mut record);
     if let Err(e) = record.write("BENCH_hotpath.json") {
         println!("(could not write BENCH_hotpath.json: {e})");
     }

@@ -41,9 +41,21 @@ pub fn calibrate_layer_shift<T: DispatchTarget>(
         }
     }
     let p99 = percentile(&vals, 99.0);
+    let shift = calibrate_shift(p99, next_bits);
+    // one chip-lane Calibrate marker per calibrated layer (zero width:
+    // the probe MVMs already recorded their own spans)
+    if let Some(rec) = chip.telemetry() {
+        if rec.is_enabled() {
+            let lid = rec.intern(layer);
+            rec.record_tiled(
+                0.0,
+                crate::telemetry::EventKind::Calibrate { layer: lid, shift },
+            );
+        }
+    }
     CalibReport {
         layer: layer.to_string(),
-        shift: calibrate_shift(p99, next_bits),
+        shift,
         p99,
         samples: vals.len(),
     }

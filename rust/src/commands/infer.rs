@@ -23,6 +23,8 @@ pub fn run_mnist(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 5)?;
     let batch = args.usize_or("batch", 8)?.max(1);
     let write_verify = args.flag("write-verify");
+    let trace_path = args.get("trace");
+    let metrics_path = args.get("metrics");
 
     let graph = mnist_cnn7(width);
     let matrices = match args.get("weights") {
@@ -49,6 +51,9 @@ pub fn run_mnist(args: &Args) -> Result<()> {
     match args.usize_or("threads", 0)? {
         0 => {}
         n => chip.threads = n,
+    }
+    if trace_path.is_some() || metrics_path.is_some() {
+        chip.telemetry.enable();
     }
     let stats = chip
         .program_model(matrices, &intensities(&graph),
@@ -97,5 +102,11 @@ pub fn run_mnist(args: &Args) -> Result<()> {
         cost.femtojoule_per_op(),
         cost.tops_per_watt()
     );
+    neurram::telemetry::export_recorder(
+        &mut chip.telemetry, trace_path, metrics_path,
+        &neurram::util::benchjson::RunMeta::capture(1, seed), "mnist")?;
+    if let Some(path) = trace_path {
+        println!("  wrote {path}");
+    }
     Ok(())
 }

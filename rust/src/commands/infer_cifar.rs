@@ -33,12 +33,18 @@ pub fn run(args: &Args) -> Result<()> {
     r.seed = args.u64_or("seed", r.seed)?;
     r.write_verify = r.write_verify || args.flag("write-verify");
 
+    let trace_path = args.get("trace");
+    let metrics_path = args.get("metrics");
+
     let mut chip = neurram::coordinator::NeuRramChip::new(r.seed + 11);
     // --threads n overrides NEURRAM_THREADS; 0/absent keeps the chip's
     // resolved default (available_parallelism), same as the env knob
     match args.usize_or("threads", 0)? {
         0 => {}
         n => chip.threads = n,
+    }
+    if trace_path.is_some() || metrics_path.is_some() {
+        chip.telemetry.enable();
     }
 
     let run = run_cifar(&mut chip, &r).map_err(anyhow::Error::msg)?;
@@ -82,5 +88,11 @@ pub fn run(args: &Args) -> Result<()> {
         cost.femtojoule_per_op(),
         cost.tops_per_watt()
     );
+    neurram::telemetry::export_recorder(
+        &mut chip.telemetry, trace_path, metrics_path,
+        &neurram::util::benchjson::RunMeta::capture(1, r.seed), "cifar")?;
+    if let Some(path) = trace_path {
+        println!("  wrote {path}");
+    }
     Ok(())
 }

@@ -39,6 +39,11 @@ pub fn run(args: &Args) -> Result<()> {
         0 => {}
         n => chip.threads = n,
     }
+    let trace_path = args.get("trace");
+    let metrics_path = args.get("metrics");
+    if trace_path.is_some() || metrics_path.is_some() {
+        chip.telemetry.enable();
+    }
     chip.program_model(matrices.clone(), &intensities(&graph),
                        MappingStrategy::Balanced, false)?;
     chip.gate_unused();
@@ -99,5 +104,11 @@ pub fn run(args: &Args) -> Result<()> {
         cost.femtojoule_per_op(),
         cost.tops_per_watt()
     );
+    neurram::telemetry::export_recorder(
+        &mut chip.telemetry, trace_path, metrics_path,
+        &neurram::util::benchjson::RunMeta::capture(1, seed), "speech")?;
+    if let Some(path) = trace_path {
+        println!("  wrote {path}");
+    }
     Ok(())
 }

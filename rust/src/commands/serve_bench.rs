@@ -18,16 +18,26 @@
 //! CIFAR).  All serving time is VIRTUAL (modelled chip ns), so the
 //! numbers are bitwise reproducible on any host at any thread count;
 //! wall-clock is printed separately.
+//!
+//! `--trace out.json` exports the run as Chrome trace-event JSON
+//! (pid = chip, tid = core, virtual time; byte-identical across
+//! `NEURRAM_THREADS`); `--metrics out.json` writes the aggregated
+//! metrics-registry snapshot.  See `neurram trace-summary`.
 
 use anyhow::Result;
 use neurram::coordinator::PAPER_CORES;
 use neurram::fleet::router::presets;
 use neurram::fleet::BatchPolicy;
+use neurram::telemetry::chrome::write_chrome_trace;
+use neurram::telemetry::metrics::MetricsRegistry;
+use neurram::util::benchjson::RunMeta;
 use neurram::util::cli::Args;
 
 pub fn run(args: &Args) -> Result<()> {
     let quick = args.flag("quick");
     let chips = args.usize_or("chips", 2)?.max(1);
+    let trace_path = args.get("trace");
+    let metrics_path = args.get("metrics");
     let requests = args.usize_or("requests", if quick { 24 } else { 96 })?;
     let mix_spec = args.get_or("mix", "mnist:cifar:speech");
     let seed = args.u64_or("seed", 7)?;
@@ -46,6 +56,9 @@ pub fn run(args: &Args) -> Result<()> {
     match args.usize_or("threads", 0)? {
         0 => {}
         n => sf.fleet.set_threads(n),
+    }
+    if trace_path.is_some() || metrics_path.is_some() {
+        sf.fleet.enable_telemetry();
     }
     for (name, p) in &sf.placements {
         println!(
@@ -78,11 +91,27 @@ pub fn run(args: &Args) -> Result<()> {
     // lint-allow(wall-clock): reported wall time of the serve loop, not
     // part of the simulated latency model
     let t0 = std::time::Instant::now();
-    let (_responses, rep) = sf
+    let (_responses, rep, telemetry) = sf
         .fleet
-        .serve(&sf.workloads, &trace, &policy)
+        .serve_traced(&sf.workloads, &trace, &policy)
         .map_err(anyhow::Error::msg)?;
     let wall = t0.elapsed().as_secs_f64();
+
+    if trace_path.is_some() || metrics_path.is_some() {
+        let meta = RunMeta::capture(chips, seed);
+        if let Some(path) = trace_path {
+            write_chrome_trace(path, &telemetry, &sf.fleet.chip_labels(),
+                               &meta.trace_meta())?;
+            println!("  wrote {path} ({} span event(s))",
+                     telemetry.events.len());
+        }
+        if let Some(path) = metrics_path {
+            let mut snap =
+                MetricsRegistry::from_trace(&telemetry).snapshot("serve");
+            meta.stamp(&mut snap);
+            snap.write(path)?;
+        }
+    }
 
     println!(
         "served {} request(s) in {} batch(es): {:.1} requests/s modelled \

@@ -1,0 +1,83 @@
+//! `neurram trace-summary <file>`: digest an exported Chrome trace.
+//!
+//! Parses a `--trace out.json` export (from serve-bench or any infer
+//! command) and prints the top-N slowest layers, per-core utilization
+//! imbalance, and the queueing-vs-service latency breakdown -- the
+//! quick triage view before loading the file into Perfetto.
+//!
+//!   neurram trace-summary trace.json --top 10
+
+use anyhow::Result;
+use neurram::telemetry::summary;
+use neurram::util::bench::{section, table};
+use neurram::util::json::Json;
+
+pub fn run(args: &neurram::util::cli::Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: neurram trace-summary <trace.json> [--top N]"))?;
+    let top_n = args.usize_or("top", 10)?.max(1);
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{path}: not JSON: {e}"))?;
+    let rep = summary::analyze(&doc, top_n).map_err(anyhow::Error::msg)?;
+
+    println!("{path}: {} span event(s) over {:.3} ms virtual",
+             rep.events, rep.span_us / 1e3);
+
+    section(&format!("top {} layer(s) by MVM time", rep.slowest_layers.len()));
+    let rows: Vec<Vec<String>> = rep
+        .slowest_layers
+        .iter()
+        .map(|l| {
+            vec![
+                l.name.clone(),
+                format!("{:.3}", l.total_us / 1e3),
+                l.spans.to_string(),
+            ]
+        })
+        .collect();
+    table(&["layer", "mvm ms", "spans"], &rows);
+
+    section("core utilization (busiest first)");
+    let rows: Vec<Vec<String>> = rep
+        .lanes
+        .iter()
+        .take(top_n)
+        .map(|l| {
+            vec![
+                l.label.clone(),
+                format!("{:.3}", l.busy_us / 1e3),
+                format!("{:.1}%", l.utilization * 100.0),
+            ]
+        })
+        .collect();
+    table(&["lane", "busy ms", "of span"], &rows);
+    println!("imbalance: {:.2}x max-over-mean busy across {} lane(s)",
+             rep.imbalance, rep.lanes.len());
+
+    if rep.requests > 0 {
+        section("latency breakdown");
+        let total = rep.wait_us + rep.service_us;
+        let pct = |v: f64| if total > 0.0 { v / total * 100.0 } else { 0.0 };
+        table(
+            &["component", "total ms", "share"],
+            &[
+                vec![
+                    "queueing".to_string(),
+                    format!("{:.3}", rep.wait_us / 1e3),
+                    format!("{:.1}%", pct(rep.wait_us)),
+                ],
+                vec![
+                    "service".to_string(),
+                    format!("{:.3}", rep.service_us / 1e3),
+                    format!("{:.1}%", pct(rep.service_us)),
+                ],
+            ],
+        );
+        println!("{} request(s) traced", rep.requests);
+    }
+    Ok(())
+}

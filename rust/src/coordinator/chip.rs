@@ -41,8 +41,9 @@ use super::mapping::{plan, MappingPlan, MappingStrategy};
 use crate::analysis::{fail_on_errors, verify_local, verify_model, PlanError};
 use crate::core_sim::{Activation, CimCore, MvmDirection, NeuronConfig};
 use crate::device::{DeviceParams, ProgramStats, WriteVerifyConfig};
-use crate::energy::{EnergyCounters, EnergyParams, MvmCost};
+use crate::energy::{EnergyCounters, EnergyModel, EnergyParams, MvmCost};
 use crate::models::ConductanceMatrix;
+use crate::telemetry::{EventKind, Recorder, CHIP_LANE};
 use crate::util::rng::Rng;
 use crate::NUM_CORES;
 
@@ -233,6 +234,13 @@ pub struct NeuRramChip {
     /// oracle; resolved from `NEURRAM_THREADS` at construction, see
     /// `util::threads`).  Outputs are bitwise identical at any setting.
     pub threads: usize,
+    /// Virtual-time span recorder (off by default; see
+    /// `telemetry::Recorder`).  Events are recorded POST-JOIN on the
+    /// issuing thread from the sorted dispatch results, with per-core
+    /// timestamps reconstructed from busy-ns snapshots -- worker
+    /// threads never touch it, so traces are identical at any
+    /// `threads` setting.
+    pub telemetry: Recorder,
 }
 
 impl NeuRramChip {
@@ -257,6 +265,7 @@ impl NeuRramChip {
             rng,
             ir_alpha: 0.0,
             threads: crate::util::threads::resolve(),
+            telemetry: Recorder::new(),
         }
     }
 
@@ -325,8 +334,9 @@ impl NeuRramChip {
                 cleared[pl.core] = true;
             }
         }
+        let record = self.telemetry.is_enabled();
         let mut stats = Vec::new();
-        for pl in &p.placements {
+        for (pi, pl) in p.placements.iter().enumerate() {
             let m = matrices
                 .iter()
                 .find(|m| m.layer == pl.segment.layer)
@@ -334,9 +344,10 @@ impl NeuRramChip {
             let sub = m
                 .row_slice(pl.segment.row_lo, pl.segment.row_hi)
                 .col_slice(pl.segment.col_lo, pl.segment.col_hi);
+            let cells = (2 * sub.rows * sub.cols) as u64;
             let core = &mut self.cores[pl.core];
             core.power_on();
-            if write_verify {
+            let pulses = if write_verify {
                 let s = core.program_region(
                     &sub.g_pos,
                     &sub.g_neg,
@@ -348,7 +359,9 @@ impl NeuRramChip {
                     WriteVerifyConfig::default(),
                     &mut self.rng,
                 );
+                let n = s.total_pulses;
                 stats.push(s);
+                n
             } else {
                 core.load_ideal_region(
                     &sub.g_pos,
@@ -358,6 +371,21 @@ impl NeuRramChip {
                     pl.core_row_off,
                     pl.core_col_off,
                     m.g_max_us,
+                );
+                0
+            };
+            if record {
+                let layer = self.telemetry.intern(&pl.segment.layer);
+                self.telemetry.record(
+                    0.0,
+                    0.0,
+                    pl.core as u32,
+                    EventKind::Program {
+                        layer,
+                        placement: pi as u32,
+                        cells,
+                        pulses,
+                    },
                 );
             }
         }
@@ -579,10 +607,100 @@ impl NeuRramChip {
             assert!(found, "no replica {} of {layer}", dsp.replica);
         }
 
-        self.dispatch_segments(
+        let snap = self.telemetry_snapshot();
+        let results = self.dispatch_segments(
             jobs, &x_full, rows, cfg, MvmDirection::Forward, 0.0,
             w_max as f64,
-        )
+        );
+        if let Some((busy_before, counters_before)) = snap {
+            self.record_layer_events(layer, &results, &busy_before,
+                                     &counters_before, false);
+        }
+        results
+    }
+
+    /// When the recorder is on, snapshot what the per-core timestamp
+    /// reconstruction needs BEFORE a fan-out: each core's busy-ns
+    /// cursor and the chip-wide energy counters (the post-dispatch
+    /// delta prices the layer).  `None` when recording is off, so the
+    /// hot path pays one branch and no allocation.
+    fn telemetry_snapshot(&self) -> Option<(Vec<f64>, EnergyCounters)> {
+        if !self.telemetry.is_enabled() {
+            return None;
+        }
+        let busy: Vec<f64> =
+            self.cores.iter().map(|c| c.busy_ns()).collect();
+        Some((busy, self.energy_counters()))
+    }
+
+    /// Emit one `MvmSegment` span per (dispatch, placement) result and
+    /// one chip-lane `LayerDispatch` roll-up for a finished fan-out.
+    ///
+    /// Runs on the issuing thread AFTER `dispatch_segments` sorted the
+    /// results by (dispatch, placement), so the event order -- and with
+    /// it the exported trace bytes -- is a pure function of the plan
+    /// and the inputs, never of worker interleaving.  Each segment's
+    /// timestamp is its core's busy-ns cursor (virtual time: a core
+    /// executes its jobs back to back), which reproduces the serial
+    /// schedule at any thread count.
+    fn record_layer_events(
+        &mut self,
+        layer: &str,
+        parts: &[PlacementPartials],
+        busy_before: &[f64],
+        counters_before: &EnergyCounters,
+        backward: bool,
+    ) {
+        let lid = self.telemetry.intern(layer);
+        let mut cursor = busy_before.to_vec();
+        let mut t_lo = f64::INFINITY;
+        let mut t_hi = f64::NEG_INFINITY;
+        let mut dispatches = 0u32;
+        let mut items = 0u32;
+        let mut last_d = usize::MAX;
+        for r in parts {
+            let pl = &self.plan.placements[r.placement];
+            let dur: f64 = r.ns.iter().sum();
+            let ts = cursor[pl.core];
+            cursor[pl.core] += dur;
+            t_lo = t_lo.min(ts);
+            t_hi = t_hi.max(ts + dur);
+            if r.dispatch != last_d {
+                last_d = r.dispatch;
+                dispatches += 1;
+                items += r.ns.len() as u32;
+            }
+            self.telemetry.record(
+                ts,
+                dur,
+                pl.core as u32,
+                EventKind::MvmSegment {
+                    layer: lid,
+                    replica: pl.replica as u32,
+                    backward,
+                    items: r.ns.len() as u32,
+                },
+            );
+        }
+        let energy_pj = EnergyModel {
+            counters: self.energy_counters().delta(counters_before),
+        }
+        .cost(&EnergyParams::default())
+        .energy_pj;
+        let (ts, dur) =
+            if t_hi >= t_lo { (t_lo, t_hi - t_lo) } else { (0.0, 0.0) };
+        self.telemetry.record(
+            ts,
+            dur,
+            CHIP_LANE,
+            EventKind::LayerDispatch {
+                layer: lid,
+                dispatches,
+                items,
+                energy_pj,
+                backward,
+            },
+        );
     }
 
     /// Run segment jobs on up to `self.threads` scoped worker threads
@@ -771,10 +889,16 @@ impl NeuRramChip {
         }
         assert!(found, "no replica {replica} of {layer}");
 
-        self.dispatch_segments(
+        let snap = self.telemetry_snapshot();
+        let results = self.dispatch_segments(
             jobs, &x_full, cols, cfg, MvmDirection::Backward, stoch_amp_v,
             w_max as f64,
-        )
+        );
+        if let Some((busy_before, counters_before)) = snap {
+            self.record_layer_events(layer, &results, &busy_before,
+                                     &counters_before, true);
+        }
+        results
     }
 
     /// Aggregate energy counters over all cores.
@@ -851,6 +975,10 @@ impl super::DispatchTarget for NeuRramChip {
 
     fn replica_count(&self, layer: &str) -> usize {
         self.plan.replica_count(layer)
+    }
+
+    fn telemetry(&mut self) -> Option<&mut Recorder> {
+        Some(&mut self.telemetry)
     }
 
     fn mvm_layer_batch_multi(

@@ -35,6 +35,14 @@ pub trait DispatchTarget {
     /// `w_max`, bias rows).
     fn matrix(&self, layer: &str) -> Option<&ConductanceMatrix>;
 
+    /// The target's telemetry recorder, if it has one (the chip's own,
+    /// or the first group chip's for a fleet view).  Generic emit sites
+    /// (scheduler rounds, calibration) record through this hook; the
+    /// default `None` keeps mock/test targets recorder-free.
+    fn telemetry(&mut self) -> Option<&mut crate::telemetry::Recorder> {
+        None
+    }
+
     /// Data-parallel replica count of a layer (mapping case 2).
     fn replica_count(&self, layer: &str) -> usize;
 

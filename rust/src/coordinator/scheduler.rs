@@ -114,6 +114,22 @@ impl Scheduler {
             }
         }
         let makespan = rep_busy.iter().cloned().fold(0.0f64, f64::max);
+        // one chip-lane Schedule span per scheduler round (tiled on the
+        // recorder's virtual cursor so consecutive rounds abut)
+        if let Some(rec) = chip.telemetry() {
+            if rec.is_enabled() {
+                let lid = rec.intern(layer);
+                rec.record_tiled(
+                    makespan,
+                    crate::telemetry::EventKind::Schedule {
+                        layer: lid,
+                        replicas: n_rep as u32,
+                        items: inputs.len() as u32,
+                        makespan_ns: makespan,
+                    },
+                );
+            }
+        }
         (
             outputs,
             ScheduleReport {

@@ -170,6 +170,14 @@ impl CimCore {
         self.set_stream_seed(seed);
     }
 
+    /// This core's accumulated busy time (modelled ns).  The chip's
+    /// telemetry layer snapshots these before a fan-out and replays the
+    /// sorted results against them to reconstruct per-core span
+    /// timestamps on the virtual timeline.
+    pub fn busy_ns(&self) -> f64 {
+        self.energy.counters.busy_ns
+    }
+
     pub fn power_on(&mut self) {
         self.powered_on = true;
     }

@@ -32,6 +32,24 @@ impl EnergyCounters {
         self.busy_ns += o.busy_ns;
         self.macs += o.macs;
     }
+
+    /// Field-wise `self - before`: what one stretch of work added to a
+    /// monotone counter snapshot (used by the telemetry layer to price
+    /// a single layer dispatch).
+    pub fn delta(&self, before: &EnergyCounters) -> EnergyCounters {
+        EnergyCounters {
+            wl_toggles: self.wl_toggles - before.wl_toggles,
+            input_wire_phases: self.input_wire_phases
+                - before.input_wire_phases,
+            sample_cycles: self.sample_cycles - before.sample_cycles,
+            comparisons: self.comparisons - before.comparisons,
+            decrement_steps: self.decrement_steps - before.decrement_steps,
+            ctrl_phases: self.ctrl_phases - before.ctrl_phases,
+            reg_writes: self.reg_writes - before.reg_writes,
+            busy_ns: self.busy_ns - before.busy_ns,
+            macs: self.macs - before.macs,
+        }
+    }
 }
 
 /// Itemized energy (pJ), the paper's ED Fig. 10c breakdown.
@@ -159,6 +177,17 @@ mod tests {
         a.add(&b);
         assert_eq!(a.wl_toggles, 2 * 256 * 3);
         assert!((a.busy_ns - 4200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delta_inverts_add() {
+        let before = sample_counters();
+        let mut after = before;
+        after.add(&sample_counters());
+        let d = after.delta(&before);
+        assert_eq!(d.wl_toggles, before.wl_toggles);
+        assert_eq!(d.macs, before.macs);
+        assert!((d.busy_ns - before.busy_ns).abs() < 1e-9);
     }
 
     #[test]

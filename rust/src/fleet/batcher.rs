@@ -79,6 +79,21 @@ pub fn coalesce(arrivals: &[(u64, usize)], policy: &BatchPolicy)
     out
 }
 
+/// Queue depth of one workload at the instant batch `k` became ready:
+/// requests arrived by `batches[k].ready_ns` minus requests already
+/// drained by the earlier batches.  A pure function of the arrival
+/// trace and the coalescing (never of chip state), so the telemetry
+/// layer can stamp `Batch` events with it without breaking the fleet
+/// determinism contract.
+pub fn queue_depth_at(arrivals: &[(u64, usize)], batches: &[Batch],
+                      k: usize) -> usize {
+    let ready = batches[k].ready_ns;
+    let arrived = arrivals.iter().filter(|&&(t, _)| t <= ready).count();
+    let drained: usize =
+        batches[..k].iter().map(|b| b.requests.len()).sum();
+    arrived.saturating_sub(drained)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,6 +147,19 @@ mod tests {
         assert_eq!(batches[1].requests, vec![4, 5, 6, 7]);
         assert_eq!(batches[2].requests, vec![8, 9]);
         assert_eq!(batches[2].ready_ns, 50);
+    }
+
+    #[test]
+    fn queue_depth_counts_arrived_minus_drained() {
+        let policy = BatchPolicy { max_batch: 3, max_wait_ns: 100 };
+        let trace = [(0, 0), (10, 1), (50, 2), (120, 3), (500, 4)];
+        let batches = coalesce(&trace, &policy);
+        // batch 0 ready at 50: 3 arrived, none drained yet
+        assert_eq!(queue_depth_at(&trace, &batches, 0), 3);
+        // batch 1 ready at 220: 4 arrived, 3 drained by batch 0
+        assert_eq!(queue_depth_at(&trace, &batches, 1), 1);
+        // batch 2 ready at 600: all 5 arrived, 4 drained
+        assert_eq!(queue_depth_at(&trace, &batches, 2), 1);
     }
 
     #[test]

@@ -126,6 +126,19 @@ impl ChipFleet {
         }
     }
 
+    /// Turn span recording on for every chip.  Do this BEFORE
+    /// programming/serving; the serving loop drains each chip's
+    /// recorder into the fleet trace after every batch.
+    pub fn enable_telemetry(&mut self) {
+        for c in &mut self.chips {
+            c.telemetry.enable();
+        }
+    }
+
+    pub fn telemetry_enabled(&self) -> bool {
+        self.chips.iter().any(|c| c.telemetry.is_enabled())
+    }
+
     pub fn model_names(&self) -> Vec<&str> {
         self.models.iter().map(|m| m.name.as_str()).collect()
     }
@@ -261,6 +274,13 @@ impl DispatchTarget for GroupTarget<'_> {
 
     fn replica_count(&self, layer: &str) -> usize {
         self.plan.replica_count(layer)
+    }
+
+    /// Generic emit sites (scheduler rounds, calibration markers) record
+    /// into the group's FIRST chip; per-segment spans land on each
+    /// executing chip's own recorder regardless.
+    fn telemetry(&mut self) -> Option<&mut crate::telemetry::Recorder> {
+        self.chips.first_mut().map(|(c, _)| &mut c.telemetry)
     }
 
     fn mvm_layer_batch_multi(
@@ -421,6 +441,10 @@ impl DispatchTarget for ChipFleet {
         self.model_of_layer(layer)
             .map(|i| self.models[i].plan.replica_count(layer))
             .unwrap_or(1)
+    }
+
+    fn telemetry(&mut self) -> Option<&mut crate::telemetry::Recorder> {
+        self.chips.first_mut().map(|c| &mut c.telemetry)
     }
 
     fn mvm_layer_batch_multi(

@@ -227,6 +227,22 @@ impl ChipFleet {
         });
         Ok(FleetPlacement { chips_per_copy: k, copies, segments, merged })
     }
+
+    /// Human label per fleet chip for trace exports: free chips keep
+    /// the bare index, hosting chips gain the model and replica group
+    /// they serve ("chip 2 (mnist/g1)").
+    pub fn chip_labels(&self) -> Vec<String> {
+        let mut labels: Vec<String> =
+            (0..self.chips.len()).map(|c| format!("chip {c}")).collect();
+        for m in &self.models {
+            for (g, group) in m.groups.iter().enumerate() {
+                for &c in &group.chips {
+                    labels[c] = format!("chip {c} ({}/g{g})", m.name);
+                }
+            }
+        }
+        labels
+    }
 }
 
 #[cfg(test)]

@@ -13,9 +13,10 @@
 //! busy time, so latency/throughput numbers are bitwise reproducible on
 //! any host at any `NEURRAM_THREADS`.
 
-use super::batcher::{coalesce, BatchPolicy};
+use super::batcher::{coalesce, queue_depth_at, BatchPolicy};
 use super::ChipFleet;
 use crate::coordinator::{FleetReport, Scheduler};
+use crate::telemetry::{Event, EventKind, Trace, CHIP_LANE, ROUTER_CHIP};
 use crate::models::executor::recurrent::{LstmCalib, LstmExecutor};
 use crate::models::executor::sampler::{recover_images, GibbsConfig};
 use crate::models::executor::run_cnn_batch;
@@ -119,6 +120,9 @@ struct PendingBatch {
     wl: usize,
     requests: Vec<usize>,
     ready_ns: u64,
+    /// Workload queue depth when the batch became ready (pure function
+    /// of the trace; stamps the telemetry `Batch` event).
+    depth: usize,
 }
 
 impl ChipFleet {
@@ -134,6 +138,26 @@ impl ChipFleet {
         requests: &[Request],
         policy: &BatchPolicy,
     ) -> Result<(Vec<Response>, ServeReport), String> {
+        self.serve_traced(workloads, requests, policy)
+            .map(|(responses, report, _)| (responses, report))
+    }
+
+    /// [`ChipFleet::serve`] plus the fleet-wide telemetry [`Trace`] of
+    /// the run (empty unless [`ChipFleet::enable_telemetry`] was called
+    /// first).  After each batch executes, every group chip's recorder
+    /// is drained into the trace at the batch's virtual start time --
+    /// chips reset their energy (and so their span clocks) to zero per
+    /// batch, so the offset rebuilds the fleet timeline -- followed by a
+    /// router-lane `Batch` span; `Request` spans land after the loop in
+    /// request-index order.  Every event is recorded or absorbed on the
+    /// serving thread from post-join results, so the trace is BITWISE
+    /// identical at any `NEURRAM_THREADS` setting and on any host.
+    pub fn serve_traced(
+        &mut self,
+        workloads: &[Workload],
+        requests: &[Request],
+        policy: &BatchPolicy,
+    ) -> Result<(Vec<Response>, ServeReport, Trace), String> {
         for w in workloads {
             if self.model_index(&w.model).is_none() {
                 return Err(format!(
@@ -143,7 +167,17 @@ impl ChipFleet {
             }
         }
         if requests.is_empty() {
-            return Ok((Vec::new(), ServeReport::default()));
+            return Ok((Vec::new(), ServeReport::default(), Trace::new()));
+        }
+        let tracing = self.telemetry_enabled();
+        let mut trace = Trace::new();
+        if tracing {
+            // the serving trace covers THIS call: drop anything recorded
+            // between enable_telemetry and here (programming spans etc.
+            // belong to the single-chip infer flows)
+            for c in &mut self.chips {
+                c.telemetry.drain();
+            }
         }
         // arrival-ordered trace, split per workload (stable: ties keep
         // request order)
@@ -164,11 +198,13 @@ impl ChipFleet {
         // batches, globally ordered by (ready, workload, lead request)
         let mut pending: Vec<PendingBatch> = Vec::new();
         for (wi, arr) in per_wl.iter().enumerate() {
-            for b in coalesce(arr, policy) {
+            let batches = coalesce(arr, policy);
+            for (k, b) in batches.iter().enumerate() {
                 pending.push(PendingBatch {
                     wl: wi,
-                    requests: b.requests,
+                    requests: b.requests.clone(),
                     ready_ns: b.ready_ns,
+                    depth: queue_depth_at(arr, &batches, k),
                 });
             }
         }
@@ -215,6 +251,29 @@ impl ChipFleet {
             group_batches[mi][g] += 1;
             let completion = start + busy;
             free_at[mi][g] = completion;
+            if tracing {
+                // drain the group chips' recorders (group order) into
+                // the fleet timeline at the batch's virtual start, then
+                // stamp the router-lane Batch span
+                let chip_ids = self.models[mi].groups[g].chips.clone();
+                for &ci in &chip_ids {
+                    trace.absorb(&mut self.chips[ci].telemetry, start,
+                                 ci as u32);
+                }
+                let wlid = trace.intern(&wl.name);
+                trace.push(Event {
+                    ts_ns: start,
+                    dur_ns: busy,
+                    chip: ROUTER_CHIP,
+                    core: CHIP_LANE,
+                    kind: EventKind::Batch {
+                        workload: wlid,
+                        requests: pb.requests.len() as u32,
+                        seq: seq as u32,
+                        depth: pb.depth as u32,
+                    },
+                });
+            }
             for (k, &ri) in pb.requests.iter().enumerate() {
                 let arrival = requests[ri].arrival_ns as f64;
                 responses[ri] = Some(Response {
@@ -233,6 +292,24 @@ impl ChipFleet {
             .into_iter()
             .map(|r| r.expect("every request rode exactly one batch"))
             .collect();
+        if tracing {
+            // request-lifecycle spans in request-index order (arrival ->
+            // completion, queueing share in the args)
+            for r in &responses {
+                let wlid = trace.intern(&requests[r.request].workload);
+                trace.push(Event {
+                    ts_ns: requests[r.request].arrival_ns as f64,
+                    dur_ns: r.latency_ns,
+                    chip: ROUTER_CHIP,
+                    core: CHIP_LANE,
+                    kind: EventKind::Request {
+                        workload: wlid,
+                        request: r.request as u32,
+                        wait_ns: r.wait_ns,
+                    },
+                });
+            }
+        }
         let first_arrival =
             requests.iter().map(|r| r.arrival_ns).min().unwrap_or(0) as f64;
         let last_completion = responses
@@ -259,7 +336,7 @@ impl ChipFleet {
                 .collect(),
             fleet: Scheduler::fleet_report(&all_group_busy, requests.len()),
         };
-        Ok((responses, report))
+        Ok((responses, report, trace))
     }
 
     /// Reset a group's dispatch state + energy counters ahead of one

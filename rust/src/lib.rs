@@ -21,6 +21,8 @@
 //! * [`runtime`]     -- PJRT client: load + execute HLO artifacts
 //! * [`calib`]       -- model-driven chip calibration
 //! * [`io`]          -- datasets (synthetic substrates), metrics, npz I/O
+//! * [`telemetry`]   -- deterministic virtual-time tracing + metrics:
+//!   span recorder, Chrome-trace/metrics exporters, trace summary
 //!
 //! The MVM hot path is batched end to end: `Crossbar::settle_batch`
 //! streams the conductance matrix once per `[batch x rows]` input
@@ -71,6 +73,7 @@ pub mod fleet;
 pub mod io;
 pub mod models;
 pub mod runtime;
+pub mod telemetry;
 pub mod util;
 
 /// Physical array size of one CIM core (256x256 1T1R cells).

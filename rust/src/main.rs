@@ -15,6 +15,9 @@
 //!                       dataflow, stochastic neurons)
 //!   serve-bench         multi-chip fleet load generator (batching +
 //!                       routing; p50/p99 latency, requests/s)
+//!   trace-summary       digest a `--trace` Chrome-trace export into
+//!                       human tables (slowest layers, utilization,
+//!                       queueing-vs-service breakdown)
 //!   runtime-check       load + execute PJRT artifacts against golden
 //!   config-dump         print the effective chip configuration
 
@@ -38,6 +41,7 @@ mod commands {
     pub mod recover;
     pub mod runtime_check;
     pub mod serve_bench;
+    pub mod trace_summary;
     pub mod writeverify;
 }
 
@@ -53,6 +57,7 @@ fn main() {
         Some("infer-speech") => commands::infer_speech::run(&args),
         Some("recover-image") => commands::recover::run(&args),
         Some("serve-bench") => commands::serve_bench::run(&args),
+        Some("trace-summary") => commands::trace_summary::run(&args),
         Some("runtime-check") => commands::runtime_check::run(&args),
         Some("config-dump") => {
             let cfg = match args.get("config") {
@@ -63,7 +68,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: neurram <info|check|edp|writeverify|infer-mnist|infer-cifar|infer-speech|recover-image|serve-bench|runtime-check> [--opts]\n\
+                "usage: neurram <info|check|edp|writeverify|infer-mnist|infer-cifar|infer-speech|recover-image|serve-bench|trace-summary|runtime-check> [--opts]\n\
                  \n\
                  info           chip configuration + artifact inventory\n\
                  check          static plan/graph verifier (--model NAME|all\n\
@@ -76,10 +81,14 @@ fn main() {
                  recover-image  RBM Gibbs image recovery (bidirectional dataflow)\n\
                  serve-bench    multi-chip fleet load generator (--chips N\n\
                                 --requests M --mix mnist:cifar:speech)\n\
+                 trace-summary  digest a --trace export (slowest layers,\n\
+                                utilization, queueing-vs-service)\n\
                  runtime-check  PJRT artifact execution vs golden vectors\n\
                  config-dump    print the effective chip configuration\n\
                  \n\
                  --config chip.json overrides device/write-verify/energy params\n\
+                 --trace t.json / --metrics m.json on serve-bench and infer-*\n\
+                 export a Chrome trace / metrics snapshot of the run\n\
                  --threads n sets the dispatch worker threads (default: \
                  NEURRAM_THREADS or all cores; 1 = serial; outputs identical)"
             );

@@ -1,0 +1,254 @@
+//! Chrome trace-event JSON exporter (`chrome://tracing` / Perfetto).
+//!
+//! Renders a [`Trace`] as the object-form trace-event format: process
+//! = chip (pid 0 is the fleet router), thread = core (tid 0 is the
+//! chip-level lane), every span a `ph: "X"` complete event with `ts` /
+//! `dur` in microseconds of VIRTUAL time.  `ph: "M"` metadata events
+//! name the lanes.  The rendered string is a pure function of the
+//! trace (BTreeMap key order inside `util::json`), so equal traces
+//! export to equal bytes -- the property `rust/tests/telemetry.rs`
+//! pins across thread counts.
+
+use super::{Event, EventKind, Trace, CHIP_LANE, ROUTER_CHIP};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Chrome pid of a `chip` lane id: the router sentinel maps to 0,
+/// chip `c` to `c + 1`.
+fn pid_of(chip: u32) -> f64 {
+    if chip == ROUTER_CHIP { 0.0 } else { (chip + 1) as f64 }
+}
+
+/// Chrome tid of a `core` lane id: the chip-level sentinel maps to 0,
+/// core `c` to `c + 1`.
+fn tid_of(core: u32) -> f64 {
+    if core == CHIP_LANE { 0.0 } else { (core + 1) as f64 }
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// (category, display name, args) of one event.
+fn describe(trace: &Trace, e: &Event) -> (&'static str, String, Json) {
+    match e.kind {
+        EventKind::MvmSegment { layer, replica, backward, items } => (
+            "mvm",
+            format!("mvm:{}", trace.name(layer)),
+            obj(vec![
+                ("replica", Json::Num(replica as f64)),
+                ("items", Json::Num(items as f64)),
+                ("backward", Json::Bool(backward)),
+            ]),
+        ),
+        EventKind::LayerDispatch {
+            layer, dispatches, items, energy_pj, backward,
+        } => (
+            "dispatch",
+            format!("dispatch:{}", trace.name(layer)),
+            obj(vec![
+                ("dispatches", Json::Num(dispatches as f64)),
+                ("items", Json::Num(items as f64)),
+                ("energy_pj", Json::Num(energy_pj)),
+                ("backward", Json::Bool(backward)),
+            ]),
+        ),
+        EventKind::Program { layer, placement, cells, pulses } => (
+            "program",
+            format!("program:{}", trace.name(layer)),
+            obj(vec![
+                ("placement", Json::Num(placement as f64)),
+                ("cells", Json::Num(cells as f64)),
+                ("pulses", Json::Num(pulses as f64)),
+            ]),
+        ),
+        EventKind::Calibrate { layer, shift } => (
+            "calibrate",
+            format!("calibrate:{}", trace.name(layer)),
+            obj(vec![("shift", Json::Num(shift))]),
+        ),
+        EventKind::Schedule { layer, replicas, items, makespan_ns } => (
+            "schedule",
+            format!("schedule:{}", trace.name(layer)),
+            obj(vec![
+                ("replicas", Json::Num(replicas as f64)),
+                ("items", Json::Num(items as f64)),
+                ("makespan_ns", Json::Num(makespan_ns)),
+            ]),
+        ),
+        EventKind::Batch { workload, requests, seq, depth } => (
+            "batch",
+            format!("batch:{}", trace.name(workload)),
+            obj(vec![
+                ("requests", Json::Num(requests as f64)),
+                ("seq", Json::Num(seq as f64)),
+                ("queue_depth", Json::Num(depth as f64)),
+            ]),
+        ),
+        EventKind::Request { workload, request, wait_ns } => (
+            "request",
+            format!("request:{}", trace.name(workload)),
+            obj(vec![
+                ("request", Json::Num(request as f64)),
+                ("wait_ns", Json::Num(wait_ns)),
+            ]),
+        ),
+    }
+}
+
+/// Render `trace` as Chrome trace-event JSON.
+///
+/// `chip_labels[c]` names chip `c`'s process (fall back: `chip c`);
+/// `meta` key/value pairs land under a top-level `"metadata"` object
+/// (run attribution -- commit, chip count, seed; NOT the thread count,
+/// which must not influence the exported bytes).
+pub fn chrome_trace(trace: &Trace, chip_labels: &[String],
+                    meta: &[(&str, Json)]) -> Json {
+    // lane inventory, sorted: pid list + (pid, tid) pairs
+    let mut pids: Vec<u32> = Vec::new();
+    let mut lanes: Vec<(u32, u32)> = Vec::new();
+    for e in &trace.events {
+        if !pids.contains(&e.chip) {
+            pids.push(e.chip);
+        }
+        if !lanes.contains(&(e.chip, e.core)) {
+            lanes.push((e.chip, e.core));
+        }
+    }
+    pids.sort_by_key(|&c| pid_of(c) as u64);
+    lanes.sort_by_key(|&(c, t)| (pid_of(c) as u64, tid_of(t) as u64));
+
+    let mut events: Vec<Json> = Vec::new();
+    for &chip in &pids {
+        let label = if chip == ROUTER_CHIP {
+            "router".to_string()
+        } else {
+            match chip_labels.get(chip as usize) {
+                Some(l) => l.clone(),
+                None => format!("chip {chip}"),
+            }
+        };
+        events.push(obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("name", Json::Str("process_name".into())),
+            ("pid", Json::Num(pid_of(chip))),
+            ("tid", Json::Num(0.0)),
+            ("args", obj(vec![("name", Json::Str(label))])),
+        ]));
+    }
+    for &(chip, core) in &lanes {
+        let label = if core == CHIP_LANE {
+            if chip == ROUTER_CHIP { "serve loop" } else { "chip" }
+                .to_string()
+        } else {
+            format!("core {core}")
+        };
+        events.push(obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("name", Json::Str("thread_name".into())),
+            ("pid", Json::Num(pid_of(chip))),
+            ("tid", Json::Num(tid_of(core))),
+            ("args", obj(vec![("name", Json::Str(label))])),
+        ]));
+    }
+    for e in &trace.events {
+        let (cat, name, args) = describe(trace, e);
+        events.push(obj(vec![
+            ("ph", Json::Str("X".into())),
+            ("name", Json::Str(name)),
+            ("cat", Json::Str(cat.into())),
+            ("pid", Json::Num(pid_of(e.chip))),
+            ("tid", Json::Num(tid_of(e.core))),
+            // trace-event ts/dur are microseconds
+            ("ts", Json::Num(e.ts_ns / 1000.0)),
+            ("dur", Json::Num(e.dur_ns / 1000.0)),
+            ("args", args),
+        ]));
+    }
+
+    let mut meta_obj = BTreeMap::new();
+    for (k, v) in meta {
+        meta_obj.insert(k.to_string(), v.clone());
+    }
+    meta_obj.insert("dropped_events".to_string(),
+                    Json::Num(trace.dropped as f64));
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ns".into())),
+        ("metadata", Json::Obj(meta_obj)),
+    ])
+}
+
+/// Serialize + write a Chrome trace to `path`.
+pub fn write_chrome_trace(path: &str, trace: &Trace, chip_labels: &[String],
+                          meta: &[(&str, Json)]) -> std::io::Result<()> {
+    let mut s = chrome_trace(trace, chip_labels, meta).to_string_pretty();
+    s.push('\n');
+    std::fs::write(path, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Recorder;
+
+    #[test]
+    fn exports_metadata_then_complete_events() {
+        let mut r = Recorder::new();
+        r.enable();
+        let fc = r.intern("fc");
+        r.record(2000.0, 1000.0, 5,
+                 EventKind::MvmSegment {
+                     layer: fc, replica: 0, backward: false, items: 2,
+                 });
+        let mut t = Trace::from_recorder(&mut r);
+        let wl = t.intern("mnist");
+        t.push(Event {
+            ts_ns: 0.0,
+            dur_ns: 3000.0,
+            chip: ROUTER_CHIP,
+            core: CHIP_LANE,
+            kind: EventKind::Batch { workload: wl, requests: 3, seq: 0,
+                                     depth: 3 },
+        });
+        let j = chrome_trace(&t, &[], &[("seed", Json::Num(7.0))]);
+        let evs = j["traceEvents"].as_arr().unwrap();
+        // 2 process_name + 2 thread_name + 2 X events
+        assert_eq!(evs.len(), 6);
+        assert_eq!(evs[0]["ph"].as_str(), Some("M"));
+        let xs: Vec<&Json> =
+            evs.iter().filter(|e| e["ph"].as_str() == Some("X")).collect();
+        assert_eq!(xs.len(), 2);
+        // chip 0 -> pid 1, core 5 -> tid 6; us conversion
+        assert_eq!(xs[0]["pid"].as_f64(), Some(1.0));
+        assert_eq!(xs[0]["tid"].as_f64(), Some(6.0));
+        assert_eq!(xs[0]["ts"].as_f64(), Some(2.0));
+        assert_eq!(xs[0]["dur"].as_f64(), Some(1.0));
+        assert_eq!(xs[0]["name"].as_str(), Some("mvm:fc"));
+        // router event lands on pid 0 / tid 0
+        assert_eq!(xs[1]["pid"].as_f64(), Some(0.0));
+        assert_eq!(xs[1]["tid"].as_f64(), Some(0.0));
+        assert_eq!(xs[1]["args"]["queue_depth"].as_f64(), Some(3.0));
+        assert_eq!(j["metadata"]["seed"].as_f64(), Some(7.0));
+    }
+
+    #[test]
+    fn roundtrips_through_the_parser() {
+        let mut r = Recorder::new();
+        r.enable();
+        let l = r.intern("head");
+        r.record(0.0, 500.0, 0,
+                 EventKind::LayerDispatch {
+                     layer: l, dispatches: 1, items: 4, energy_pj: 12.5,
+                     backward: false,
+                 });
+        let t = Trace::from_recorder(&mut r);
+        let s = chrome_trace(&t, &[], &[]).to_string_pretty();
+        let back = Json::parse(&s).unwrap();
+        assert!(back["traceEvents"].as_arr().unwrap().len() >= 2);
+    }
+}

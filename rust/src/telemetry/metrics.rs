@@ -1,0 +1,287 @@
+//! Metrics registry: counters + fixed-bucket histograms aggregated
+//! from a [`Trace`]'s event stream, exported as a JSON snapshot via
+//! `util::benchjson` (flat keys, stable `BTreeMap` order).
+//!
+//! All numbers are virtual-time/energy quantities, so a snapshot of a
+//! seeded run is host- and thread-invariant like the trace it came
+//! from.
+
+use super::{EventKind, Trace};
+use crate::telemetry::Event;
+use crate::util::benchjson::BenchJson;
+use crate::util::stats::percentile;
+use std::collections::BTreeMap;
+
+/// Fixed-bound histogram: `counts[i]` holds observations `v <=
+/// bounds[i]` (first matching bound), the last bucket is the overflow.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub bounds: Vec<f64>,
+    /// `bounds.len() + 1` buckets (last = overflow).
+    pub counts: Vec<u64>,
+    pub sum: f64,
+    pub count: u64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Self {
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let mut b = self.bounds.len();
+        for (i, &hi) in self.bounds.iter().enumerate() {
+            if v <= hi {
+                b = i;
+                break;
+            }
+        }
+        self.counts[b] += 1;
+        self.sum += v;
+        self.count += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+}
+
+/// Per-core busy accounting (one entry per (chip, core) lane that ran
+/// at least one MVM segment).
+#[derive(Clone, Debug, Default)]
+pub struct CoreBusy {
+    pub chip: u32,
+    pub core: u32,
+    pub busy_ns: f64,
+    pub segments: u64,
+}
+
+/// The aggregated view of one trace.
+#[derive(Debug)]
+pub struct MetricsRegistry {
+    pub requests: u64,
+    pub batches: u64,
+    /// Coalesced batch sizes (requests per batch).
+    pub batch_size: Histogram,
+    /// Workload queue depth sampled at each batch's ready time.
+    pub queue_depth: Histogram,
+    /// Request latency samples per workload, arrival order.
+    pub latency_ns: BTreeMap<String, Vec<f64>>,
+    /// Queueing share of each request's latency, summed.
+    pub wait_ns_total: f64,
+    pub latency_ns_total: f64,
+    /// Busy ns + segment count per (chip, core), sorted by key.
+    pub core_busy: Vec<CoreBusy>,
+    /// Energy per layer (pJ, from LayerDispatch events).
+    pub energy_pj_layer: BTreeMap<String, f64>,
+    pub energy_pj_total: f64,
+    /// Trace span: max(ts + dur) - min(ts) over all events.
+    pub span_ns: f64,
+}
+
+const SIZE_BOUNDS: [f64; 6] = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+
+impl MetricsRegistry {
+    /// Aggregate `trace` into counters and histograms.
+    pub fn from_trace(trace: &Trace) -> Self {
+        let mut m = MetricsRegistry {
+            requests: 0,
+            batches: 0,
+            batch_size: Histogram::new(&SIZE_BOUNDS),
+            queue_depth: Histogram::new(&SIZE_BOUNDS),
+            latency_ns: BTreeMap::new(),
+            wait_ns_total: 0.0,
+            latency_ns_total: 0.0,
+            core_busy: Vec::new(),
+            energy_pj_layer: BTreeMap::new(),
+            energy_pj_total: 0.0,
+            span_ns: 0.0,
+        };
+        let mut busy: BTreeMap<(u32, u32), (f64, u64)> = BTreeMap::new();
+        let mut t_lo = f64::INFINITY;
+        let mut t_hi = f64::NEG_INFINITY;
+        for e in &trace.events {
+            t_lo = t_lo.min(e.ts_ns);
+            t_hi = t_hi.max(e.ts_ns + e.dur_ns);
+            match e.kind {
+                EventKind::Batch { requests, depth, .. } => {
+                    m.batches += 1;
+                    m.batch_size.observe(requests as f64);
+                    m.queue_depth.observe(depth as f64);
+                }
+                EventKind::Request { workload, wait_ns, .. } => {
+                    m.requests += 1;
+                    m.wait_ns_total += wait_ns;
+                    m.latency_ns_total += e.dur_ns;
+                    m.latency_ns
+                        .entry(trace.name(workload).to_string())
+                        .or_default()
+                        .push(e.dur_ns);
+                }
+                EventKind::MvmSegment { .. } => {
+                    let slot = busy.entry((e.chip, e.core)).or_default();
+                    slot.0 += e.dur_ns;
+                    slot.1 += 1;
+                }
+                EventKind::LayerDispatch { layer, energy_pj, .. } => {
+                    *m.energy_pj_layer
+                        .entry(trace.name(layer).to_string())
+                        .or_default() += energy_pj;
+                    m.energy_pj_total += energy_pj;
+                }
+                _ => {}
+            }
+        }
+        m.core_busy = busy
+            .into_iter()
+            .map(|((chip, core), (busy_ns, segments))| CoreBusy {
+                chip, core, busy_ns, segments,
+            })
+            .collect();
+        if t_hi > t_lo {
+            m.span_ns = t_hi - t_lo;
+        }
+        m
+    }
+
+    /// Max-over-mean busy-ns imbalance across the active cores (1.0 =
+    /// perfectly balanced; 0.0 when no core ran).
+    pub fn utilization_imbalance(&self) -> f64 {
+        if self.core_busy.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = self.core_busy.iter().map(|c| c.busy_ns).sum();
+        let mean = total / self.core_busy.len() as f64;
+        let max = self.core_busy.iter().map(|c| c.busy_ns).fold(0.0, f64::max);
+        if mean > 0.0 { max / mean } else { 0.0 }
+    }
+
+    /// Flat JSON snapshot (one `BENCH_*`-style record named
+    /// `telemetry_<source>`).
+    pub fn snapshot(&self, source: &str) -> BenchJson {
+        let mut b = BenchJson::new(&format!("telemetry_{source}"));
+        b.num("requests", self.requests as f64)
+            .num("batches", self.batches as f64)
+            .num("span_ns", self.span_ns)
+            .num("batch_size_mean", self.batch_size.mean())
+            .num("queue_depth_mean", self.queue_depth.mean())
+            .num("wait_ns_total", self.wait_ns_total)
+            .num("latency_ns_total", self.latency_ns_total)
+            .num("energy_pj_total", self.energy_pj_total)
+            .num("utilization_imbalance", self.utilization_imbalance());
+        b.nums("histogram_bounds", &SIZE_BOUNDS);
+        let to_f64 = |cs: &[u64]| -> Vec<f64> {
+            cs.iter().map(|&c| c as f64).collect()
+        };
+        b.nums("batch_size_counts", &to_f64(&self.batch_size.counts));
+        b.nums("queue_depth_counts", &to_f64(&self.queue_depth.counts));
+        if self.requests > 0 {
+            b.num("energy_pj_per_request",
+                  self.energy_pj_total / self.requests as f64);
+        }
+        for (wl, lats) in &self.latency_ns {
+            b.num(&format!("latency_p50_ns_{wl}"), percentile(lats, 50.0));
+            b.num(&format!("latency_p99_ns_{wl}"), percentile(lats, 99.0));
+            b.num(&format!("requests_{wl}"), lats.len() as f64);
+        }
+        for (layer, pj) in &self.energy_pj_layer {
+            b.num(&format!("energy_pj_layer_{layer}"), *pj);
+        }
+        let busy: Vec<f64> =
+            self.core_busy.iter().map(|c| c.busy_ns).collect();
+        b.nums("core_busy_ns", &busy);
+        b.num("active_cores", self.core_busy.len() as f64);
+        b
+    }
+}
+
+/// Convenience: re-export the event type for registry consumers.
+pub type TraceEvent = Event;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{Recorder, CHIP_LANE, ROUTER_CHIP};
+
+    fn sample_trace() -> Trace {
+        let mut r = Recorder::new();
+        r.enable();
+        let fc = r.intern("fc");
+        r.record(0.0, 100.0, 0,
+                 EventKind::MvmSegment {
+                     layer: fc, replica: 0, backward: false, items: 2,
+                 });
+        r.record(0.0, 300.0, 1,
+                 EventKind::MvmSegment {
+                     layer: fc, replica: 1, backward: false, items: 2,
+                 });
+        r.record(0.0, 300.0, CHIP_LANE,
+                 EventKind::LayerDispatch {
+                     layer: fc, dispatches: 2, items: 4, energy_pj: 50.0,
+                     backward: false,
+                 });
+        let mut t = Trace::from_recorder(&mut r);
+        let wl = t.intern("mnist");
+        t.push(Event {
+            ts_ns: 0.0, dur_ns: 300.0, chip: ROUTER_CHIP, core: CHIP_LANE,
+            kind: EventKind::Batch { workload: wl, requests: 2, seq: 0,
+                                     depth: 2 },
+        });
+        for i in 0..2 {
+            t.push(Event {
+                ts_ns: 0.0, dur_ns: 400.0 + i as f64, chip: ROUTER_CHIP,
+                core: CHIP_LANE,
+                kind: EventKind::Request { workload: wl, request: i,
+                                           wait_ns: 100.0 },
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let mut h = Histogram::new(&[1.0, 2.0, 4.0]);
+        for v in [1.0, 2.0, 3.0, 100.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.counts, vec![1, 1, 1, 1]);
+        assert_eq!(h.count, 4);
+        assert_eq!(h.max, 100.0);
+    }
+
+    #[test]
+    fn registry_aggregates_the_stream() {
+        let m = MetricsRegistry::from_trace(&sample_trace());
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.batches, 1);
+        assert_eq!(m.core_busy.len(), 2);
+        assert_eq!(m.energy_pj_total, 50.0);
+        // core 1 did 3x the work of core 0: max/mean = 300/200
+        assert!((m.utilization_imbalance() - 1.5).abs() < 1e-12);
+        assert_eq!(m.latency_ns["mnist"].len(), 2);
+        // span covers the longest request
+        assert_eq!(m.span_ns, 401.0);
+    }
+
+    #[test]
+    fn snapshot_exports_flat_keys() {
+        let m = MetricsRegistry::from_trace(&sample_trace());
+        let j = m.snapshot("test").to_json();
+        assert_eq!(j["bench"].as_str(), Some("telemetry_test"));
+        assert_eq!(j["requests"].as_f64(), Some(2.0));
+        assert_eq!(j["latency_p50_ns_mnist"].as_f64(), Some(400.5));
+        assert_eq!(j["energy_pj_layer_fc"].as_f64(), Some(50.0));
+        assert_eq!(j["energy_pj_per_request"].as_f64(), Some(25.0));
+    }
+}

@@ -1,0 +1,427 @@
+//! Deterministic tracing + metrics for the simulator stack.
+//!
+//! Every layer of the stack -- chip dispatch engine, scheduler,
+//! calibration, fleet batcher and router -- emits *virtual-time* span
+//! events into a [`Recorder`]: timestamps and durations are modelled
+//! nanoseconds (the same `busy_ns` accounting the energy model keeps),
+//! never wall-clock reads, and every ID derives from placement/trace
+//! order.  A trace of the same seeded workload is therefore **bitwise
+//! identical** on any host at any `NEURRAM_THREADS` setting --
+//! observability inherits the repo's determinism guarantee instead of
+//! fighting it (pinned by `rust/tests/telemetry.rs`).
+//!
+//! Design constraints, in force throughout this module tree:
+//!
+//! * **No `HashMap`** (the `lint-determinism` house rule): events are a
+//!   plain enum in a fixed-capacity ring buffer; strings are interned
+//!   into a `Vec` by first-seen order (a pure function of the dispatch
+//!   sequence).
+//! * **Near-zero cost when disabled** (the default): every emit site
+//!   guards on [`Recorder::is_enabled`], a single inlined bool read,
+//!   and a disabled recorder never allocates
+//!   (`disabled_recorder_allocates_nothing` pins buffer capacity 0).
+//!   The MVM settle kernels themselves are untouched -- recording
+//!   happens at the dispatch layer, after the parallel fan-out joins,
+//!   from the placement-ordered results.
+//! * **Post-join recording**: worker threads never touch a recorder.
+//!   The chip reconstructs per-core span timestamps from each core's
+//!   `busy_ns` cursor after `dispatch_segments` returns its sorted
+//!   results, so the event order is the placement order, not the
+//!   thread-completion order.
+//!
+//! Exporters: [`chrome::chrome_trace`] renders a [`Trace`] as Chrome
+//! `chrome://tracing` trace-event JSON (pid = chip, tid = core),
+//! [`metrics::MetricsRegistry`] aggregates the event stream into
+//! counters/histograms exported via `util::benchjson`, and
+//! [`summary::analyze`] digests an exported trace back into the human
+//! tables `neurram trace-summary` prints.
+
+pub mod chrome;
+pub mod metrics;
+pub mod summary;
+
+/// Index into a recorder's (or trace's) interned name table.
+pub type NameId = u32;
+
+/// Sentinel `chip` id for router-level (fleet) events.
+pub const ROUTER_CHIP: u32 = u32::MAX;
+
+/// Sentinel `core` id for chip-level events not tied to one core
+/// (layer dispatches, scheduler spans, calibration, programming).
+pub const CHIP_LANE: u32 = u32::MAX;
+
+/// Ring-buffer capacity an enabled recorder grows to at most.
+pub const DEFAULT_CAP: usize = 1 << 16;
+
+/// What happened during a span.  Strings are interned ([`NameId`]) so
+/// events stay small, `Copy`, and heap-free on the record path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EventKind {
+    /// One row-segment placement executing its slice of a dispatch on
+    /// its core (finest-grained MVM span).
+    MvmSegment { layer: NameId, replica: u32, backward: bool, items: u32 },
+    /// One whole `mvm_layer_*_multi` call: every dispatch x placement
+    /// of a layer, with the energy the chip spent on it.
+    LayerDispatch {
+        layer: NameId,
+        dispatches: u32,
+        items: u32,
+        energy_pj: f64,
+        backward: bool,
+    },
+    /// Write-verify (or ideal-load) programming of one placement.
+    Program { layer: NameId, placement: u32, cells: u64, pulses: u64 },
+    /// Requantization-shift calibration of one layer.
+    Calibrate { layer: NameId, shift: f64 },
+    /// One scheduler round (replica round-robin over a batch).
+    Schedule { layer: NameId, replicas: u32, items: u32, makespan_ns: f64 },
+    /// One coalesced batch served by a replica group (router event;
+    /// `depth` is the workload's queue depth at the batch's ready
+    /// time).
+    Batch { workload: NameId, requests: u32, seq: u32, depth: u32 },
+    /// One request's lifecycle: span = arrival -> completion, with the
+    /// queueing share in `wait_ns`.
+    Request { workload: NameId, request: u32, wait_ns: f64 },
+}
+
+/// One span on the virtual timeline.  `chip`/`core` address the lane
+/// ([`ROUTER_CHIP`]/[`CHIP_LANE`] sentinels for the aggregate lanes).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Event {
+    pub ts_ns: f64,
+    pub dur_ns: f64,
+    pub chip: u32,
+    pub core: u32,
+    pub kind: EventKind,
+}
+
+/// Per-chip event sink: enum events in a bounded ring buffer plus an
+/// interned name table.  Off by default; [`Recorder::record`] is a
+/// guarded early return until [`Recorder::enable`] is called, and the
+/// event vector is only allocated by the first recorded event.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    enabled: bool,
+    cap: usize,
+    /// Ring head: index of the OLDEST event once the buffer wrapped.
+    head: usize,
+    dropped: u64,
+    events: Vec<Event>,
+    names: Vec<String>,
+    /// Virtual cursor for [`Recorder::record_tiled`] bookkeeping spans.
+    cursor_ns: f64,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder { cap: DEFAULT_CAP, ..Default::default() }
+    }
+
+    /// The hot-path guard: a single bool read, inlined at every emit
+    /// site.  All recording work sits behind it.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn enable(&mut self) {
+        self.enabled = true;
+    }
+
+    pub fn disable(&mut self) {
+        self.enabled = false;
+    }
+
+    /// Allocated capacity of the event buffer (0 until something is
+    /// recorded -- the disabled recorder's pinned invariant).
+    pub fn buffer_capacity(&self) -> usize {
+        self.events.capacity()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events overwritten because the ring filled.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Intern a name by first-seen order (linear scan: the table holds
+    /// layer/workload names, a handful of entries).
+    pub fn intern(&mut self, name: &str) -> NameId {
+        match self.names.iter().position(|n| n == name) {
+            Some(i) => i as NameId,
+            None => {
+                self.names.push(name.to_string());
+                (self.names.len() - 1) as NameId
+            }
+        }
+    }
+
+    pub fn name(&self, id: NameId) -> &str {
+        &self.names[id as usize]
+    }
+
+    /// Record one span.  No-op when disabled; overwrites the oldest
+    /// event (counting `dropped`) once the ring is full.
+    pub fn record(&mut self, ts_ns: f64, dur_ns: f64, core: u32,
+                  kind: EventKind) {
+        if !self.enabled {
+            return;
+        }
+        let e = Event { ts_ns, dur_ns, chip: 0, core, kind };
+        if self.events.len() < self.cap {
+            self.events.push(e);
+        } else {
+            self.events[self.head] = e;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Record a chip-lane bookkeeping span (scheduler rounds,
+    /// calibration) tiled after the previous tiled span: these spans
+    /// have a duration but no natural anchor on the per-core busy
+    /// timeline, so they get their own left-to-right cursor (reset by
+    /// [`Recorder::drain`]).
+    pub fn record_tiled(&mut self, dur_ns: f64, kind: EventKind) {
+        if !self.enabled {
+            return;
+        }
+        let ts = self.cursor_ns;
+        self.cursor_ns += dur_ns;
+        self.record(ts, dur_ns, CHIP_LANE, kind);
+    }
+
+    /// Take the buffered events in recording order (oldest first) and
+    /// reset the ring + tiled cursor.  The name table persists (ids
+    /// stay valid across drains).
+    pub fn drain(&mut self) -> Vec<Event> {
+        let head = self.head;
+        self.head = 0;
+        self.cursor_ns = 0.0;
+        let mut v = std::mem::take(&mut self.events);
+        v.rotate_left(head);
+        v
+    }
+}
+
+/// Rewrite the interned ids of one event kind through `map`.
+fn remap(kind: EventKind, map: &[NameId]) -> EventKind {
+    match kind {
+        EventKind::MvmSegment { layer, replica, backward, items } => {
+            EventKind::MvmSegment {
+                layer: map[layer as usize], replica, backward, items,
+            }
+        }
+        EventKind::LayerDispatch {
+            layer, dispatches, items, energy_pj, backward,
+        } => EventKind::LayerDispatch {
+            layer: map[layer as usize], dispatches, items, energy_pj,
+            backward,
+        },
+        EventKind::Program { layer, placement, cells, pulses } => {
+            EventKind::Program {
+                layer: map[layer as usize], placement, cells, pulses,
+            }
+        }
+        EventKind::Calibrate { layer, shift } => {
+            EventKind::Calibrate { layer: map[layer as usize], shift }
+        }
+        EventKind::Schedule { layer, replicas, items, makespan_ns } => {
+            EventKind::Schedule {
+                layer: map[layer as usize], replicas, items, makespan_ns,
+            }
+        }
+        EventKind::Batch { workload, requests, seq, depth } => {
+            EventKind::Batch {
+                workload: map[workload as usize], requests, seq, depth,
+            }
+        }
+        EventKind::Request { workload, request, wait_ns } => {
+            EventKind::Request {
+                workload: map[workload as usize], request, wait_ns,
+            }
+        }
+    }
+}
+
+/// A fully assembled multi-chip trace: the fleet serving loop absorbs
+/// each chip's recorder after every batch (offsetting the chip-local
+/// timeline by the batch's virtual start time) and appends its own
+/// router-level batch/request events.
+#[derive(Debug, Default)]
+pub struct Trace {
+    pub events: Vec<Event>,
+    pub names: Vec<String>,
+    pub dropped: u64,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace::default()
+    }
+
+    pub fn intern(&mut self, name: &str) -> NameId {
+        match self.names.iter().position(|n| n == name) {
+            Some(i) => i as NameId,
+            None => {
+                self.names.push(name.to_string());
+                (self.names.len() - 1) as NameId
+            }
+        }
+    }
+
+    pub fn name(&self, id: NameId) -> &str {
+        &self.names[id as usize]
+    }
+
+    /// Append a router-level event directly (names already interned
+    /// into THIS trace's table).
+    pub fn push(&mut self, e: Event) {
+        self.events.push(e);
+    }
+
+    /// Drain `rec` into this trace: chip-local timestamps shift by
+    /// `ts_offset` (the batch's virtual start time on the fleet
+    /// timeline), the `chip` lane is stamped, and interned ids are
+    /// rewritten into this trace's table.
+    pub fn absorb(&mut self, rec: &mut Recorder, ts_offset: f64, chip: u32) {
+        let mut map = Vec::with_capacity(rec.names.len());
+        for i in 0..rec.names.len() {
+            let n = rec.names[i].clone();
+            map.push(self.intern(&n));
+        }
+        self.dropped += rec.dropped;
+        rec.dropped = 0;
+        for mut e in rec.drain() {
+            e.ts_ns += ts_offset;
+            e.chip = chip;
+            e.kind = remap(e.kind, &map);
+            self.events.push(e);
+        }
+    }
+
+    /// Single-chip convenience: the whole recorder becomes a trace on
+    /// chip lane 0 with no time offset.
+    pub fn from_recorder(rec: &mut Recorder) -> Trace {
+        let mut t = Trace::new();
+        t.absorb(rec, 0.0, 0);
+        t
+    }
+}
+
+/// Shared `--trace` / `--metrics` export path for the single-chip CLI
+/// commands: drain `rec` into a [`Trace`] and write the requested
+/// Chrome trace and/or metrics-registry snapshot, both stamped with
+/// `meta` (which omits the thread count -- trace bytes stay identical
+/// across `NEURRAM_THREADS`).
+pub fn export_recorder(rec: &mut Recorder, trace_path: Option<&str>,
+                       metrics_path: Option<&str>,
+                       meta: &crate::util::benchjson::RunMeta,
+                       source: &str) -> std::io::Result<()> {
+    if trace_path.is_none() && metrics_path.is_none() {
+        return Ok(());
+    }
+    let trace = Trace::from_recorder(rec);
+    if let Some(path) = trace_path {
+        chrome::write_chrome_trace(path, &trace, &[], &meta.trace_meta())?;
+    }
+    if let Some(path) = metrics_path {
+        let mut snap =
+            metrics::MetricsRegistry::from_trace(&trace).snapshot(source);
+        meta.stamp(&mut snap);
+        snap.write(path)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_inert_and_unallocated() {
+        let mut r = Recorder::new();
+        assert!(!r.is_enabled());
+        r.record(1.0, 2.0, 0, EventKind::Calibrate { layer: 0, shift: 1.0 });
+        r.record_tiled(5.0, EventKind::Calibrate { layer: 0, shift: 1.0 });
+        assert_eq!(r.len(), 0);
+        assert_eq!(r.buffer_capacity(), 0);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut r = Recorder { cap: 3, enabled: true, ..Default::default() };
+        for i in 0..5 {
+            r.record(i as f64, 1.0, 0,
+                     EventKind::Calibrate { layer: 0, shift: i as f64 });
+        }
+        assert_eq!(r.dropped(), 2);
+        let evs = r.drain();
+        // oldest-first after the ring wrapped: ts 2, 3, 4 survive
+        let ts: Vec<f64> = evs.iter().map(|e| e.ts_ns).collect();
+        assert_eq!(ts, vec![2.0, 3.0, 4.0]);
+        // drained recorder starts over
+        assert_eq!(r.len(), 0);
+    }
+
+    #[test]
+    fn intern_is_first_seen_order() {
+        let mut r = Recorder::new();
+        assert_eq!(r.intern("conv1"), 0);
+        assert_eq!(r.intern("fc"), 1);
+        assert_eq!(r.intern("conv1"), 0);
+        assert_eq!(r.name(1), "fc");
+    }
+
+    #[test]
+    fn tiled_spans_tile_and_reset_on_drain() {
+        let mut r = Recorder::new();
+        r.enable();
+        r.record_tiled(10.0, EventKind::Calibrate { layer: 0, shift: 0.0 });
+        r.record_tiled(5.0, EventKind::Calibrate { layer: 0, shift: 0.0 });
+        let evs = r.drain();
+        assert_eq!(evs[0].ts_ns, 0.0);
+        assert_eq!(evs[1].ts_ns, 10.0);
+        assert_eq!(evs[1].core, CHIP_LANE);
+        r.record_tiled(3.0, EventKind::Calibrate { layer: 0, shift: 0.0 });
+        assert_eq!(r.drain()[0].ts_ns, 0.0, "cursor resets on drain");
+    }
+
+    #[test]
+    fn absorb_offsets_stamps_and_remaps() {
+        let mut r = Recorder::new();
+        r.enable();
+        let fc = r.intern("fc");
+        r.record(100.0, 50.0, 3,
+                 EventKind::MvmSegment {
+                     layer: fc, replica: 1, backward: false, items: 4,
+                 });
+        let mut t = Trace::new();
+        // pre-seed the trace's table so the remap is nontrivial
+        t.intern("other");
+        t.absorb(&mut r, 1000.0, 2);
+        assert_eq!(t.events.len(), 1);
+        let e = &t.events[0];
+        assert_eq!(e.ts_ns, 1100.0);
+        assert_eq!(e.chip, 2);
+        assert_eq!(e.core, 3);
+        match e.kind {
+            EventKind::MvmSegment { layer, replica, .. } => {
+                assert_eq!(t.name(layer), "fc");
+                assert_eq!(replica, 1);
+            }
+            _ => panic!("wrong kind"),
+        }
+        // the recorder keeps its name table but no events
+        assert!(r.is_empty());
+        assert_eq!(r.intern("fc"), fc);
+    }
+}

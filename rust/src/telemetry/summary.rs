@@ -1,0 +1,225 @@
+//! Digest an exported Chrome trace back into the human-readable
+//! tables `neurram trace-summary <file>` prints: top-N slowest layers,
+//! per-core utilization imbalance, and the queueing-vs-service latency
+//! breakdown.
+//!
+//! This module is data-only (the determinism lint denies `println!` in
+//! library code): the CLI command renders the returned
+//! [`SummaryReport`] through `util::bench::{section, table}`.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One layer's aggregate MVM time across the trace.
+#[derive(Clone, Debug)]
+pub struct LayerRow {
+    pub name: String,
+    pub total_us: f64,
+    pub spans: u64,
+}
+
+/// One (process, thread) lane's busy share.
+#[derive(Clone, Debug)]
+pub struct LaneRow {
+    pub label: String,
+    pub busy_us: f64,
+    /// Busy time over the trace span.
+    pub utilization: f64,
+}
+
+/// The digested trace.
+#[derive(Debug, Default)]
+pub struct SummaryReport {
+    pub events: usize,
+    pub span_us: f64,
+    /// Layers by total MVM time, descending.
+    pub slowest_layers: Vec<LayerRow>,
+    /// Core lanes by busy time, descending.
+    pub lanes: Vec<LaneRow>,
+    /// Max-over-mean lane busy time (1.0 = perfectly balanced).
+    pub imbalance: f64,
+    pub requests: u64,
+    /// Total queueing time across requests (us).
+    pub wait_us: f64,
+    /// Total on-chip service time across requests (us).
+    pub service_us: f64,
+}
+
+fn num(j: &Json, k: &str) -> f64 {
+    j[k].as_f64().unwrap_or(0.0)
+}
+
+/// Analyze a parsed Chrome trace-event document.  `top_n` caps the
+/// slowest-layers table.  Errors on documents without a `traceEvents`
+/// array.
+pub fn analyze(doc: &Json, top_n: usize) -> Result<SummaryReport, String> {
+    let events = doc["traceEvents"].as_arr().ok_or_else(|| {
+        "not a Chrome trace: missing traceEvents array".to_string()
+    })?;
+    // lane labels from the metadata events
+    let mut proc_names: BTreeMap<i64, String> = BTreeMap::new();
+    let mut thread_names: BTreeMap<(i64, i64), String> = BTreeMap::new();
+    for e in events {
+        if e["ph"].as_str() != Some("M") {
+            continue;
+        }
+        let pid = num(e, "pid") as i64;
+        let tid = num(e, "tid") as i64;
+        let name = e["args"]["name"].as_str().unwrap_or("").to_string();
+        match e["name"].as_str() {
+            Some("process_name") => {
+                proc_names.insert(pid, name);
+            }
+            Some("thread_name") => {
+                thread_names.insert((pid, tid), name);
+            }
+            _ => {}
+        }
+    }
+
+    let mut layer_us: BTreeMap<String, (f64, u64)> = BTreeMap::new();
+    let mut lane_us: BTreeMap<(i64, i64), f64> = BTreeMap::new();
+    let mut t_lo = f64::INFINITY;
+    let mut t_hi = f64::NEG_INFINITY;
+    let mut n_x = 0usize;
+    let mut requests = 0u64;
+    let mut wait_us = 0.0;
+    let mut latency_us = 0.0;
+    for e in events {
+        if e["ph"].as_str() != Some("X") {
+            continue;
+        }
+        n_x += 1;
+        let (ts, dur) = (num(e, "ts"), num(e, "dur"));
+        t_lo = t_lo.min(ts);
+        t_hi = t_hi.max(ts + dur);
+        match e["cat"].as_str() {
+            Some("mvm") => {
+                let name = e["name"]
+                    .as_str()
+                    .unwrap_or("?")
+                    .trim_start_matches("mvm:")
+                    .to_string();
+                let slot = layer_us.entry(name).or_insert((0.0, 0));
+                slot.0 += dur;
+                slot.1 += 1;
+                let pid = num(e, "pid") as i64;
+                let tid = num(e, "tid") as i64;
+                *lane_us.entry((pid, tid)).or_insert(0.0) += dur;
+            }
+            Some("request") => {
+                requests += 1;
+                wait_us += num(&e["args"], "wait_ns") / 1000.0;
+                latency_us += dur;
+            }
+            _ => {}
+        }
+    }
+
+    let mut slowest: Vec<LayerRow> = layer_us
+        .into_iter()
+        .map(|(name, (total_us, spans))| LayerRow { name, total_us, spans })
+        .collect();
+    slowest.sort_by(|a, b| {
+        b.total_us.total_cmp(&a.total_us).then(a.name.cmp(&b.name))
+    });
+    slowest.truncate(top_n);
+
+    let span_us = if t_hi > t_lo { t_hi - t_lo } else { 0.0 };
+    let mut lanes: Vec<LaneRow> = lane_us
+        .iter()
+        .map(|(&(pid, tid), &busy_us)| {
+            let proc = proc_names
+                .get(&pid)
+                .cloned()
+                .unwrap_or_else(|| format!("pid {pid}"));
+            let thread = thread_names
+                .get(&(pid, tid))
+                .cloned()
+                .unwrap_or_else(|| format!("tid {tid}"));
+            LaneRow {
+                label: format!("{proc} / {thread}"),
+                busy_us,
+                utilization: if span_us > 0.0 { busy_us / span_us } else { 0.0 },
+            }
+        })
+        .collect();
+    lanes.sort_by(|a, b| {
+        b.busy_us.total_cmp(&a.busy_us).then(a.label.cmp(&b.label))
+    });
+    let imbalance = if lanes.is_empty() {
+        0.0
+    } else {
+        let total: f64 = lanes.iter().map(|l| l.busy_us).sum();
+        let mean = total / lanes.len() as f64;
+        if mean > 0.0 { lanes[0].busy_us / mean } else { 0.0 }
+    };
+
+    Ok(SummaryReport {
+        events: n_x,
+        span_us,
+        slowest_layers: slowest,
+        lanes,
+        imbalance,
+        requests,
+        wait_us,
+        service_us: (latency_us - wait_us).max(0.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::chrome::chrome_trace;
+    use crate::telemetry::{Event, EventKind, Recorder, Trace, CHIP_LANE,
+                           ROUTER_CHIP};
+
+    fn doc() -> Json {
+        let mut r = Recorder::new();
+        r.enable();
+        let a = r.intern("conv1");
+        let b = r.intern("fc");
+        r.record(0.0, 9000.0, 0,
+                 EventKind::MvmSegment {
+                     layer: a, replica: 0, backward: false, items: 1,
+                 });
+        r.record(0.0, 1000.0, 1,
+                 EventKind::MvmSegment {
+                     layer: b, replica: 0, backward: false, items: 1,
+                 });
+        let mut t = Trace::from_recorder(&mut r);
+        let wl = t.intern("mnist");
+        t.push(Event {
+            ts_ns: 0.0, dur_ns: 10_000.0, chip: ROUTER_CHIP,
+            core: CHIP_LANE,
+            kind: EventKind::Request { workload: wl, request: 0,
+                                       wait_ns: 4000.0 },
+        });
+        chrome_trace(&t, &[], &[])
+    }
+
+    #[test]
+    fn digests_layers_lanes_and_queueing() {
+        let rep = analyze(&doc(), 10).unwrap();
+        assert_eq!(rep.events, 3);
+        assert_eq!(rep.slowest_layers[0].name, "conv1");
+        assert_eq!(rep.slowest_layers[0].total_us, 9.0);
+        assert_eq!(rep.lanes.len(), 2);
+        // 9 vs 1 us busy: max/mean = 9/5
+        assert!((rep.imbalance - 1.8).abs() < 1e-12);
+        assert_eq!(rep.requests, 1);
+        assert!((rep.wait_us - 4.0).abs() < 1e-12);
+        assert!((rep.service_us - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn top_n_truncates() {
+        let rep = analyze(&doc(), 1).unwrap();
+        assert_eq!(rep.slowest_layers.len(), 1);
+    }
+
+    #[test]
+    fn rejects_non_traces() {
+        assert!(analyze(&Json::Num(3.0), 5).is_err());
+    }
+}

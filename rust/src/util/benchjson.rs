@@ -56,9 +56,90 @@ impl BenchJson {
     }
 }
 
+/// Run metadata stamped onto every emitted `BENCH_*.json` record (and,
+/// minus the thread count, onto trace exports): enough provenance to
+/// line artifacts up across CI runs when ratcheting the perf
+/// trajectory.
+#[derive(Clone, Debug)]
+pub struct RunMeta {
+    /// Short git commit, `NEURRAM_GIT_COMMIT` override first (CI sets
+    /// it), `git rev-parse` fallback, `"unknown"` when neither works.
+    pub commit: String,
+    pub threads: usize,
+    pub chips: usize,
+    pub seed: u64,
+}
+
+impl RunMeta {
+    pub fn capture(chips: usize, seed: u64) -> Self {
+        let commit = std::env::var("NEURRAM_GIT_COMMIT")
+            .ok()
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .or_else(|| {
+                std::process::Command::new("git")
+                    .args(["rev-parse", "--short", "HEAD"])
+                    .output()
+                    .ok()
+                    .filter(|o| o.status.success())
+                    .map(|o| {
+                        String::from_utf8_lossy(&o.stdout).trim().to_string()
+                    })
+                    .filter(|s| !s.is_empty())
+            })
+            .unwrap_or_else(|| "unknown".to_string());
+        RunMeta {
+            commit,
+            threads: crate::util::threads::resolve(),
+            chips,
+            seed,
+        }
+    }
+
+    /// Stamp the provenance fields onto a bench record.
+    pub fn stamp(&self, b: &mut BenchJson) {
+        b.text("run_commit", &self.commit)
+            .num("run_threads", self.threads as f64)
+            .num("run_chips", self.chips as f64)
+            .num("run_seed", self.seed as f64);
+    }
+
+    /// Metadata pairs for a Chrome trace export.  Deliberately OMITS
+    /// the thread count: trace bytes are pinned identical across
+    /// `NEURRAM_THREADS` settings, and a thread stamp would break that
+    /// by construction.
+    pub fn trace_meta(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("commit", Json::Str(self.commit.clone())),
+            ("chips", Json::Num(self.chips as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn run_meta_stamps_provenance_keys() {
+        let meta = RunMeta {
+            commit: "abc1234".to_string(),
+            threads: 4,
+            chips: 2,
+            seed: 21,
+        };
+        let mut b = BenchJson::new("x");
+        meta.stamp(&mut b);
+        let j = b.to_json();
+        assert_eq!(j["run_commit"].as_str(), Some("abc1234"));
+        assert_eq!(j["run_threads"].as_f64(), Some(4.0));
+        assert_eq!(j["run_chips"].as_f64(), Some(2.0));
+        assert_eq!(j["run_seed"].as_f64(), Some(21.0));
+        // trace metadata must not leak the thread count (byte-identity
+        // across NEURRAM_THREADS)
+        assert!(meta.trace_meta().iter().all(|(k, _)| *k != "threads"));
+    }
 
     #[test]
     fn record_roundtrips_through_json() {

@@ -1,0 +1,241 @@
+//! Telemetry determinism + export-shape tests.
+//!
+//! The tentpole property: a trace of a seeded serve is **bitwise
+//! identical** at any `NEURRAM_THREADS` setting -- the exported Chrome
+//! JSON string is compared byte-for-byte at 1 vs 4 threads.  Across
+//! CHIP counts the routing (and so span placement) legitimately
+//! differs, but the batcher is a pure function of the trace, so the
+//! router-lane `Batch` events must agree on composition and modelled
+//! busy time bit-for-bit.  Plus: the disabled recorder allocates
+//! nothing on a real inference path, and the Chrome trace-event shape
+//! is pinned on a small crafted run.
+
+use neurram::coordinator::mapping::MappingStrategy;
+use neurram::coordinator::NeuRramChip;
+use neurram::core_sim::NeuronConfig;
+use neurram::fleet::{BatchPolicy, ChipFleet, Payload, Request, Workload,
+                     WorkloadKind};
+use neurram::models::graph::{LayerSpec, ModelGraph};
+use neurram::models::ConductanceMatrix;
+use neurram::telemetry::chrome::chrome_trace;
+use neurram::telemetry::{EventKind, Trace};
+use neurram::util::json::Json;
+use neurram::util::rng::Rng;
+
+fn matrix(name: &str, rows: usize, cols: usize, seed: u64)
+          -> ConductanceMatrix {
+    let mut rng = Rng::new(seed);
+    let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+    ConductanceMatrix::compile(name, &w, None, rows, cols, 7, 40.0, 1.0,
+                               None)
+}
+
+fn head_graph() -> ModelGraph {
+    let mut fc = LayerSpec::dense("head", 64, 10);
+    fc.input_bits = 4;
+    ModelGraph {
+        name: "tiny_head".into(),
+        layers: vec![fc],
+        input_hw: 8,
+        input_ch: 1,
+        n_classes: 10,
+        dataflow: "Forward",
+    }
+}
+
+/// Same mixed CNN + RBM fixture as `rust/tests/fleet.rs`: the forward
+/// path and the stochastic bidirectional sampler both emit spans.
+fn build_fleet(chips: usize, threads: usize) -> (ChipFleet, Vec<Workload>) {
+    let mats = vec![
+        matrix("head", 64, 10, 3),
+        matrix("rbm", 150, 12, 4),
+    ];
+    let mut fleet = ChipFleet::new(chips, 8, 21);
+    fleet.set_threads(threads);
+    fleet
+        .program_model("bundle", mats, &[1.0, 1.0],
+                       MappingStrategy::Packed, chips)
+        .unwrap();
+    let workloads = vec![
+        Workload {
+            name: "cnn".into(),
+            model: "bundle".into(),
+            kind: WorkloadKind::Cnn {
+                graph: head_graph(),
+                shifts: vec![0.0],
+            },
+        },
+        Workload {
+            name: "rbm".into(),
+            model: "bundle".into(),
+            kind: WorkloadKind::Sampler {
+                layer: "rbm".into(),
+                steps: 3,
+                burn_in: 1,
+                temperature: 0.5,
+            },
+        },
+    ];
+    (fleet, workloads)
+}
+
+fn request_trace(n: usize) -> Vec<Request> {
+    let mut rng = Rng::new(9);
+    let mut reqs = Vec::new();
+    for i in 0..n {
+        let arrival_ns = i as u64 * 5_000;
+        if i % 3 == 2 {
+            let corrupted: Vec<f32> = (0..90)
+                .map(|_| if rng.uniform() < 0.5 { 1.0 } else { 0.0 })
+                .collect();
+            let known: Vec<bool> =
+                (0..90).map(|_| rng.uniform() < 0.7).collect();
+            reqs.push(Request {
+                workload: "rbm".into(),
+                arrival_ns,
+                payload: Payload::Recovery { corrupted, known },
+            });
+        } else {
+            let img: Vec<i32> =
+                (0..64).map(|_| rng.below(8) as i32).collect();
+            reqs.push(Request {
+                workload: "cnn".into(),
+                arrival_ns,
+                payload: Payload::Image(img),
+            });
+        }
+    }
+    reqs
+}
+
+fn serve_traced(chips: usize, threads: usize, n: usize)
+                -> (Trace, Vec<String>) {
+    let (mut fleet, workloads) = build_fleet(chips, threads);
+    fleet.enable_telemetry();
+    let policy = BatchPolicy { max_batch: 3, max_wait_ns: 20_000 };
+    let (_responses, rep, trace) = fleet
+        .serve_traced(&workloads, &request_trace(n), &policy)
+        .unwrap();
+    assert_eq!(rep.requests, n);
+    (trace, fleet.chip_labels())
+}
+
+#[test]
+fn prop_trace_bytes_thread_invariant() {
+    // the tentpole acceptance property: the EXPORTED BYTES at
+    // NEURRAM_THREADS=1 and =4 are identical, not merely equivalent
+    let (t1, l1) = serve_traced(3, 1, 10);
+    let (t4, l4) = serve_traced(3, 4, 10);
+    assert!(!t1.events.is_empty(), "serve must emit events");
+    assert_eq!(t1.dropped, 0, "fixture must fit the ring buffer");
+    assert_eq!(l1, l4, "chip labels are a pure function of placement");
+    let meta = [("seed", Json::Num(21.0))];
+    let s1 = chrome_trace(&t1, &l1, &meta).to_string_pretty();
+    let s4 = chrome_trace(&t4, &l4, &meta).to_string_pretty();
+    assert!(s1 == s4, "trace bytes diverged across thread counts");
+}
+
+#[test]
+fn batch_spans_are_chip_count_invariant() {
+    // routing (span placement, chip lanes) legitimately changes with
+    // the fleet size, but batching is a pure function of the request
+    // trace: the router-lane Batch events must agree on sequence,
+    // workload, composition, queue depth, and bit-exact busy time
+    let batches = |t: &Trace| -> Vec<(u32, String, u32, u32, u64)> {
+        t.events
+            .iter()
+            .filter_map(|e| match e.kind {
+                EventKind::Batch { workload, requests, seq, depth } => {
+                    Some((seq, t.name(workload).to_string(), requests,
+                          depth, e.dur_ns.to_bits()))
+                }
+                _ => None,
+            })
+            .collect()
+    };
+    let (t1, _) = serve_traced(1, 1, 10);
+    let (t3, _) = serve_traced(3, 4, 10);
+    let (b1, b3) = (batches(&t1), batches(&t3));
+    assert!(b1.len() >= 4, "trace must coalesce into several batches");
+    assert_eq!(b1, b3, "batch spans diverged across chip counts");
+}
+
+#[test]
+fn disabled_recorder_allocates_nothing_on_real_inference() {
+    let mut chip = NeuRramChip::with_cores(4, 7);
+    chip.program_model(vec![matrix("head", 64, 10, 3)], &[1.0],
+                       MappingStrategy::Simple, false)
+        .unwrap();
+    let cfg = NeuronConfig::default();
+    let x: Vec<i32> = (0..64).map(|i| (i % 15) as i32 - 7).collect();
+    for _ in 0..3 {
+        chip.mvm_layer("head", &x, &cfg, 0);
+    }
+    assert!(!chip.telemetry.is_enabled(), "recording is opt-in");
+    assert!(chip.telemetry.is_empty(), "no events recorded while off");
+    assert_eq!(chip.telemetry.buffer_capacity(), 0,
+               "a disabled recorder never allocates its event buffer");
+}
+
+#[test]
+fn chrome_export_shape_is_pinned() {
+    // a crafted two-request run through one chip, re-parsed and checked
+    // against the Chrome trace-event contract the exporters promise
+    let (trace, labels) = serve_traced(1, 1, 2);
+    let meta = [("seed", Json::Num(21.0))];
+    let s = chrome_trace(&trace, &labels, &meta).to_string_pretty();
+    let j = Json::parse(&s).expect("export must be valid JSON");
+
+    assert_eq!(j["displayTimeUnit"].as_str(), Some("ns"));
+    assert_eq!(j["metadata"]["seed"].as_f64(), Some(21.0));
+    assert_eq!(j["metadata"]["dropped_events"].as_f64(), Some(0.0));
+
+    let evs = j["traceEvents"].as_arr().expect("traceEvents array");
+    // metadata (M) events name every lane and precede all X events
+    let first_x = evs
+        .iter()
+        .position(|e| e["ph"].as_str() == Some("X"))
+        .expect("at least one span");
+    assert!(evs[..first_x]
+                .iter()
+                .all(|e| e["ph"].as_str() == Some("M")));
+    assert!(evs[..first_x].iter().any(|e| {
+        e["name"].as_str() == Some("process_name")
+            && e["args"]["name"].as_str() == Some("router")
+    }));
+
+    let mut cats = std::collections::BTreeSet::new();
+    let mut request_ids = Vec::new();
+    for e in &evs[first_x..] {
+        assert_eq!(e["ph"].as_str(), Some("X"), "M after X");
+        for key in ["pid", "tid", "ts", "dur"] {
+            assert!(e[key].as_f64().is_some(), "missing {key}: {e:?}");
+        }
+        assert!(e["name"].as_str().is_some());
+        let cat = e["cat"].as_str().expect("every span has a category");
+        cats.insert(cat.to_string());
+        match cat {
+            "batch" | "request" => {
+                // router spans live on pid 0 / tid 0
+                assert_eq!(e["pid"].as_f64(), Some(0.0));
+                assert_eq!(e["tid"].as_f64(), Some(0.0));
+                if cat == "request" {
+                    request_ids
+                        .push(e["args"]["request"].as_f64().unwrap());
+                }
+            }
+            "mvm" => {
+                // single-chip run: chip 0 exports as pid 1, cores as
+                // tid >= 1
+                assert_eq!(e["pid"].as_f64(), Some(1.0));
+                assert!(e["tid"].as_f64().unwrap() >= 1.0);
+            }
+            _ => {}
+        }
+    }
+    for want in ["mvm", "dispatch", "schedule", "batch", "request"] {
+        assert!(cats.contains(want), "missing category {want}: {cats:?}");
+    }
+    assert_eq!(request_ids, vec![0.0, 1.0],
+               "one request span per request, in request order");
+}

@@ -12,11 +12,21 @@
 //!   unstable order on NaN; use `total_cmp`.
 //! * `thread-count` -- `available_parallelism` outside `util/threads.rs`
 //!   makes behaviour depend on host core count.
+//! * `println` -- `println!`/`eprintln!` in library code; printing
+//!   belongs to the CLI layer (`commands/`, `main.rs`) and the bench
+//!   harness (`util/`), library modules return data.
 //!
 //! A hit is waived by a comment on the offending line or in the comment
 //! block immediately above it: `// lint-allow(<rule>): <reason>` -- the
 //! reason is mandatory. Only the code before the first `//` of each line
 //! is matched, so comments never trigger the rules.
+//!
+//! `bench-compare <prev-dir> [cur-dir]` ratchets the perf trajectory:
+//! it reads the previous CI run's `BENCH_hotpath.json` /
+//! `BENCH_fleet.json` artifacts from `<prev-dir>` and fails (exit 1) if
+//! the current run's throughput dropped more than 10% on any ratcheted
+//! metric.  A missing previous artifact (first run, expired retention)
+//! or a quick/full mode mismatch passes with a notice.
 
 use std::path::{Path, PathBuf};
 
@@ -26,6 +36,9 @@ struct Rule {
     /// Path suffixes (repo-relative, `/`-separated) where the pattern is
     /// legitimate and the whole file is exempt.
     allowed_paths: &'static [&'static str],
+    /// Directory substrings (repo-relative, `/`-separated) under which
+    /// every file is exempt.
+    allowed_dirs: &'static [&'static str],
     why: &'static str,
 }
 
@@ -34,6 +47,7 @@ const RULES: &[Rule] = &[
         name: "hash-collections",
         matcher: |code| code.contains("HashMap") || code.contains("HashSet"),
         allowed_paths: &[],
+        allowed_dirs: &[],
         why: "hashed iteration order is seeded per-process; \
               use BTreeMap/BTreeSet",
     },
@@ -43,6 +57,7 @@ const RULES: &[Rule] = &[
             code.contains("Instant::now") || code.contains("SystemTime")
         },
         allowed_paths: &["util/bench.rs"],
+        allowed_dirs: &[],
         why: "wall-clock reads make output time-dependent; keep them in \
               util/bench.rs or waive reporting-only uses",
     },
@@ -53,14 +68,26 @@ const RULES: &[Rule] = &[
                 && code.contains("partial_cmp")
         },
         allowed_paths: &[],
+        allowed_dirs: &[],
         why: "partial_cmp sorts panic or reorder on NaN; use total_cmp",
     },
     Rule {
         name: "thread-count",
         matcher: |code| code.contains("available_parallelism"),
         allowed_paths: &["util/threads.rs"],
+        allowed_dirs: &[],
         why: "host core count must only be read through util::threads \
               (NEURRAM_THREADS override point)",
+    },
+    Rule {
+        name: "println",
+        // "println!" is a substring of "eprintln!", so one pattern
+        // covers both macros
+        matcher: |code| code.contains("println!"),
+        allowed_paths: &["src/main.rs"],
+        allowed_dirs: &["rust/src/commands/", "rust/src/util/"],
+        why: "library modules return data; printing belongs to the CLI \
+              layer (commands/, main.rs) and util's bench/json writers",
     },
 ];
 
@@ -119,7 +146,9 @@ fn scan_source(rel_path: &str, text: &str) -> Vec<Violation> {
     let lines: Vec<&str> = text.lines().collect();
     let mut out = Vec::new();
     for rule in RULES {
-        if rule.allowed_paths.iter().any(|p| rel_path.ends_with(p)) {
+        if rule.allowed_paths.iter().any(|p| rel_path.ends_with(p))
+            || rule.allowed_dirs.iter().any(|d| rel_path.contains(d))
+        {
             continue;
         }
         for (i, raw) in lines.iter().enumerate() {
@@ -200,6 +229,202 @@ fn lint_determinism(repo_root: &Path) -> i32 {
     }
 }
 
+// ---- bench-compare: perf-trajectory ratchet over BENCH_*.json ----
+
+/// One ratcheted metric: higher is better; a drop beyond
+/// [`RATCHET_TOLERANCE`] against the previous run fails.
+struct Ratchet {
+    file: &'static str,
+    key: &'static str,
+    /// Scalar key or element-wise numeric array.
+    array: bool,
+}
+
+const RATCHETS: &[Ratchet] = &[
+    Ratchet {
+        file: "BENCH_hotpath.json",
+        key: "chip_batch32_items_per_s_best",
+        array: false,
+    },
+    Ratchet {
+        file: "BENCH_fleet.json",
+        key: "requests_per_s",
+        array: true,
+    },
+];
+
+/// Allowed fractional drop before a metric counts as a regression
+/// (bench noise on shared CI runners is real; 10% is well above it).
+const RATCHET_TOLERANCE: f64 = 0.10;
+
+fn regressed(old: f64, new: f64) -> bool {
+    new < old * (1.0 - RATCHET_TOLERANCE)
+}
+
+/// The raw text of `"key": <value>` in a flat pretty-printed JSON
+/// object (the repo's own `util::benchjson` output: one key per line,
+/// no nesting).  NOT a general JSON parser -- xtask stays
+/// dependency-free -- but exact for the files it ratchets.
+fn json_field<'a>(text: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\": ");
+    let start = text.find(&pat)? + pat.len();
+    let rest = &text[start..];
+    if let Some(inner) = rest.strip_prefix('[') {
+        Some(&inner[..inner.find(']')?])
+    } else {
+        let end = rest.find(|c| c == '\n' || c == '}')?;
+        Some(rest[..end].trim_end_matches(','))
+    }
+}
+
+fn json_number(text: &str, key: &str) -> Option<f64> {
+    json_field(text, key)?.trim().parse().ok()
+}
+
+fn json_string(text: &str, key: &str) -> Option<String> {
+    let v = json_field(text, key)?.trim();
+    Some(v.strip_prefix('"')?.strip_suffix('"')?.to_string())
+}
+
+fn json_numbers(text: &str, key: &str) -> Option<Vec<f64>> {
+    let body = json_field(text, key)?;
+    let mut out = Vec::new();
+    for tok in body.split(',') {
+        let t = tok.trim();
+        if t.is_empty() {
+            continue;
+        }
+        out.push(t.parse().ok()?);
+    }
+    Some(out)
+}
+
+/// Compare one previous/current record pair on one ratcheted metric.
+/// Returns the report lines and the number of regressions; absent
+/// keys and quick/full mode mismatches report and pass (count 0).
+fn compare_record(file: &str, key: &str, array: bool, prev: &str,
+                  cur: &str) -> (Vec<String>, usize) {
+    let mut lines = Vec::new();
+    let (pm, cm) = (json_string(prev, "mode"), json_string(cur, "mode"));
+    if pm != cm {
+        lines.push(format!(
+            "  {file}: mode changed ({}/{}), not comparable; skipping",
+            pm.as_deref().unwrap_or("?"),
+            cm.as_deref().unwrap_or("?")
+        ));
+        return (lines, 0);
+    }
+    let mut pairs: Vec<(String, f64, f64)> = Vec::new();
+    if array {
+        match (json_numbers(prev, key), json_numbers(cur, key)) {
+            (Some(old), Some(new)) => {
+                if old.len() != new.len() {
+                    lines.push(format!(
+                        "  {file}: {key} length changed \
+                         ({} -> {}), not comparable; skipping",
+                        old.len(),
+                        new.len()
+                    ));
+                    return (lines, 0);
+                }
+                for (i, (&o, &n)) in old.iter().zip(&new).enumerate() {
+                    pairs.push((format!("{key}[{i}]"), o, n));
+                }
+            }
+            _ => {
+                lines.push(format!(
+                    "  {file}: {key} absent in one run; skipping"
+                ));
+                return (lines, 0);
+            }
+        }
+    } else {
+        match (json_number(prev, key), json_number(cur, key)) {
+            (Some(o), Some(n)) => pairs.push((key.to_string(), o, n)),
+            _ => {
+                lines.push(format!(
+                    "  {file}: {key} absent in one run; skipping"
+                ));
+                return (lines, 0);
+            }
+        }
+    }
+    let mut bad = 0usize;
+    for (label, o, n) in pairs {
+        let pct = if o > 0.0 { (n / o - 1.0) * 100.0 } else { 0.0 };
+        if regressed(o, n) {
+            bad += 1;
+            lines.push(format!(
+                "  {file}: REGRESSION {label}: {o:.1} -> {n:.1} \
+                 ({pct:+.1}%, tolerance -{:.0}%)",
+                RATCHET_TOLERANCE * 100.0
+            ));
+        } else {
+            lines.push(format!(
+                "  {file}: {label}: {o:.1} -> {n:.1} ({pct:+.1}%) ok"
+            ));
+        }
+    }
+    (lines, bad)
+}
+
+fn bench_compare(prev_dir: &Path, cur_dir: &Path) -> i32 {
+    println!(
+        "bench-compare: {} (previous) vs {} (current)",
+        prev_dir.display(),
+        cur_dir.display()
+    );
+    if !prev_dir.is_dir() {
+        println!(
+            "  no previous bench artifacts at {} (first run or expired \
+             retention); passing",
+            prev_dir.display()
+        );
+        return 0;
+    }
+    let mut violations = 0usize;
+    for r in RATCHETS {
+        let cur_path = cur_dir.join(r.file);
+        let cur = match std::fs::read_to_string(&cur_path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!(
+                    "  {}: cannot read current run's record: {e}",
+                    cur_path.display()
+                );
+                return 2;
+            }
+        };
+        let prev = match std::fs::read_to_string(prev_dir.join(r.file)) {
+            Ok(t) => t,
+            Err(_) => {
+                println!("  {}: no previous record; skipping", r.file);
+                continue;
+            }
+        };
+        if let Some(c) = json_string(&prev, "run_commit") {
+            println!("  {}: previous run at commit {c}", r.file);
+        }
+        let (lines, bad) =
+            compare_record(r.file, r.key, r.array, &prev, &cur);
+        for l in lines {
+            println!("{l}");
+        }
+        violations += bad;
+    }
+    if violations == 0 {
+        println!("bench-compare: OK");
+        0
+    } else {
+        println!(
+            "bench-compare: {violations} regression(s) beyond {:.0}% \
+             tolerance",
+            RATCHET_TOLERANCE * 100.0
+        );
+        1
+    }
+}
+
 fn main() {
     let task = std::env::args().nth(1);
     match task.as_deref() {
@@ -208,10 +433,23 @@ fn main() {
             let root = root.canonicalize().unwrap_or(root);
             std::process::exit(lint_determinism(&root));
         }
+        Some("bench-compare") => {
+            let prev = std::env::args().nth(2).unwrap_or_else(|| {
+                eprintln!("usage: cargo xtask bench-compare <prev-dir> \
+                           [cur-dir]");
+                std::process::exit(2);
+            });
+            let cur =
+                std::env::args().nth(3).unwrap_or_else(|| ".".to_string());
+            std::process::exit(bench_compare(Path::new(&prev),
+                                             Path::new(&cur)));
+        }
         other => {
             eprintln!(
                 "usage: cargo xtask <task>\n\ntasks:\n  lint-determinism  \
-                 deny nondeterminism-prone patterns in rust/src"
+                 deny nondeterminism-prone patterns in rust/src\n  \
+                 bench-compare     ratchet BENCH_*.json against a previous \
+                 run's artifacts"
             );
             if let Some(t) = other {
                 eprintln!("\nunknown task: {t}");
@@ -247,7 +485,8 @@ mod tests {
         let src = "use std::collections::HashMap;\n\
                    let t = Instant::now();\n\
                    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
-                   let n = std::thread::available_parallelism();\n";
+                   let n = std::thread::available_parallelism();\n\
+                   println!(\"chatty library\");\n";
         let got = scan_source("rust/src/x.rs", src);
         assert_eq!(
             rules_of(&got),
@@ -255,11 +494,26 @@ mod tests {
                 "hash-collections",
                 "wall-clock",
                 "partial-cmp-sort",
-                "thread-count"
+                "thread-count",
+                "println"
             ]
         );
         assert_eq!(got[0].line, 1);
-        assert_eq!(got[3].line, 4);
+        assert_eq!(got[4].line, 5);
+    }
+
+    #[test]
+    fn println_rule_spares_cli_and_util_layers() {
+        let src = "println!(\"hi\");\neprintln!(\"err\");\n";
+        assert_eq!(rules_of(&scan_source("rust/src/telemetry/mod.rs", src)),
+                   vec!["println", "println"]);
+        assert!(scan_source("rust/src/commands/infer.rs", src).is_empty());
+        assert!(scan_source("rust/src/util/bench.rs", src).is_empty());
+        assert!(scan_source("rust/src/main.rs", src).is_empty());
+        // ends_with("src/main.rs") must not catch files merely ending
+        // in "main.rs"-like names
+        assert_eq!(rules_of(&scan_source("rust/src/fleet/domain.rs", src)),
+                   vec!["println", "println"]);
     }
 
     #[test]
@@ -312,5 +566,62 @@ mod tests {
                    let t = Instant::now();\n";
         assert_eq!(rules_of(&scan_source("rust/src/x.rs", src)),
                    vec!["wall-clock"]);
+    }
+
+    // ---- bench-compare ----
+
+    const PREV: &str = "{\n  \"bench\": \"hotpath_micro\",\n  \
+                        \"chip_batch32_items_per_s_best\": 1000.5,\n  \
+                        \"mode\": \"quick\",\n  \
+                        \"requests_per_s\": [\n    100,\n    250.5\n  ],\n  \
+                        \"run_commit\": \"abc1234\"\n}\n";
+
+    #[test]
+    fn json_extractors_read_benchjson_output() {
+        assert_eq!(json_number(PREV, "chip_batch32_items_per_s_best"),
+                   Some(1000.5));
+        assert_eq!(json_string(PREV, "mode"), Some("quick".to_string()));
+        assert_eq!(json_numbers(PREV, "requests_per_s"),
+                   Some(vec![100.0, 250.5]));
+        assert_eq!(json_number(PREV, "missing"), None);
+        assert_eq!(json_string(PREV, "run_commit"),
+                   Some("abc1234".to_string()));
+    }
+
+    #[test]
+    fn ratchet_trips_only_past_tolerance() {
+        assert!(!regressed(1000.0, 1000.0));
+        assert!(!regressed(1000.0, 901.0), "within 10% tolerance");
+        assert!(regressed(1000.0, 899.0), "beyond 10% tolerance");
+        assert!(!regressed(1000.0, 1500.0), "improvement always passes");
+    }
+
+    #[test]
+    fn compare_record_flags_scalar_and_array_regressions() {
+        let cur = PREV
+            .replace("1000.5", "850.0")
+            .replace("250.5", "100");
+        let (_, bad) = compare_record(
+            "BENCH_hotpath.json", "chip_batch32_items_per_s_best", false,
+            PREV, &cur);
+        assert_eq!(bad, 1, "scalar drop 1000.5 -> 850 trips");
+        let (lines, bad) = compare_record(
+            "BENCH_fleet.json", "requests_per_s", true, PREV, &cur);
+        assert_eq!(bad, 1, "only element [1] dropped");
+        assert!(lines.iter().any(|l| l.contains("REGRESSION")), "{lines:?}");
+    }
+
+    #[test]
+    fn compare_record_passes_on_mode_mismatch_or_missing_key() {
+        let cur = PREV.replace("\"quick\"", "\"full\"");
+        let (lines, bad) = compare_record(
+            "BENCH_hotpath.json", "chip_batch32_items_per_s_best", false,
+            PREV, &cur);
+        assert_eq!(bad, 0);
+        assert!(lines[0].contains("mode changed"), "{lines:?}");
+        let (lines, bad) = compare_record(
+            "BENCH_fleet.json", "nonexistent_key", true, PREV, PREV);
+        assert_eq!(bad, 0);
+        assert!(lines[0].contains("absent"), "{lines:?}");
     }
 }
