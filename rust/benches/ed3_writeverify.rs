@@ -38,7 +38,7 @@ fn main() {
     let n = 8000;
     for i in 0..n {
         let target = 1.0 + 39.0 * (i as f64 / n as f64);
-        let mut cell = neurram::device::RramCell { g_us: 1.0 };
+        let mut cell = neurram::device::RramCell::at(1.0);
         let (np, ok) = wv.program_cell(&mut cell, target, &p, &mut rng);
         pulses.push(np as f64);
         converged += ok as usize;

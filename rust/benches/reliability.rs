@@ -1,0 +1,242 @@
+//! Reliability bench: fault-tolerant serving under chip loss, plus
+//! device aging and online repair.  Emits `BENCH_reliability.json`.
+//!
+//!   cargo bench --bench reliability            # full sweep
+//!   cargo bench --bench reliability -- --quick # CI smoke + JSON
+//!
+//! Section 1 serves an open-loop MNIST trace over a 3-chip fleet and
+//! kills chip 1 halfway through the arrival span (`chip:1@50%` with
+//! online repair): every request still completes (in-flight batches
+//! fail over to the surviving replica groups), and the bench windows
+//! requests/s and p99 latency BEFORE the loss, DURING the outage
+//! (detach -> repair complete) and AFTER repair -- the availability
+//! dip and the post-repair recovery, in one JSON record.  Section 2
+//! measures classification accuracy of a trained dense readout as the
+//! fleet's conductances age (retention drift at 1 s .. 1 h virtual
+//! time), then write-verify repairs ONE replica group and asserts the
+//! aged-then-repaired replica lands within one accuracy point of the
+//! fresh measurement.  All times are virtual (modelled chip ns):
+//! bitwise reproducible on any host at any `NEURRAM_THREADS`.
+
+use neurram::coordinator::mapping::MappingStrategy;
+use neurram::coordinator::{DispatchTarget, PAPER_CORES};
+use neurram::core_sim::NeuronConfig;
+use neurram::fleet::router::presets;
+use neurram::fleet::{BatchPolicy, ChipFleet, FaultConfig, FaultPlan};
+use neurram::io::{datasets, metrics};
+use neurram::models::train::train_softmax_readout;
+use neurram::models::{quant, ConductanceMatrix};
+use neurram::util::benchjson::{BenchJson, RunMeta};
+
+/// p99 of a latency sample (ns); 0 for an empty window.
+fn p99(mut v: Vec<f64>) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(f64::total_cmp);
+    v[(v.len() - 1) * 99 / 100]
+}
+
+/// Section 1: requests/s + p99 before/during/after a mid-trace chip
+/// loss with online repair.
+fn serve_through_chip_loss(record: &mut BenchJson, quick: bool, seed: u64) {
+    let chips = 3usize;
+    let requests = if quick { 48 } else { 96 };
+    let interval_ns: u64 = if quick { 200_000 } else { 400_000 };
+    let mix = presets::parse_mix("mnist").expect("static mix");
+    let mut sf = presets::build_serving_fleet(chips, PAPER_CORES, &mix,
+                                              seed, true)
+        .expect("mnist fleet builds");
+    let trace = presets::request_trace(&sf.workloads, &mix, requests,
+                                       interval_ns, seed)
+        .expect("trace builds");
+    let faults = FaultConfig {
+        plan: FaultPlan::parse("chip:1@50%").expect("static fault spec"),
+        repair: true,
+    };
+    let policy = BatchPolicy::default();
+    let (responses, rep) = sf
+        .fleet
+        .serve_with_faults(&sf.workloads, &trace, &policy, &faults)
+        .expect("faulted serve completes");
+
+    // hard guarantees: the loss is absorbed, not dropped
+    assert_eq!(responses.len(), trace.len(),
+               "every request must complete through the chip loss");
+    assert_eq!(rep.faults_injected, 1);
+    assert_eq!(rep.repairs, 1, "repair must run");
+    assert!(rep.repair_ns > 0.0);
+    assert!(rep.availability < 1.0,
+            "a chip loss must dent availability: {}", rep.availability);
+
+    // window the trace around the outage: the fault fires at 50% of
+    // the arrival span; the group is back once its write-verify repair
+    // completes (repair starts at the detach -- the group's virtual
+    // free time never precedes it on this open-loop trace)
+    let span_arrival = trace.iter().map(|r| r.arrival_ns).max().unwrap();
+    let t_fault = faults.plan.resolve(span_arrival)[0].0 as f64;
+    let t_repaired = t_fault + rep.repair_ns;
+    let mut windows: [(Vec<f64>, f64); 3] =
+        [(Vec::new(), 0.0), (Vec::new(), 0.0), (Vec::new(), 0.0)];
+    let mut last_completion = 0.0f64;
+    for r in &responses {
+        let completion = trace[r.request].arrival_ns as f64 + r.latency_ns;
+        last_completion = last_completion.max(completion);
+        let w = if completion <= t_fault {
+            0
+        } else if completion <= t_repaired {
+            1
+        } else {
+            2
+        };
+        windows[w].0.push(r.latency_ns);
+    }
+    windows[0].1 = t_fault;
+    windows[1].1 = (t_repaired.min(last_completion) - t_fault).max(0.0);
+    windows[2].1 = (last_completion - t_repaired).max(0.0);
+    assert!(!windows[0].0.is_empty(),
+            "pre-fault window must serve requests");
+
+    println!("== chip loss mid-trace: {requests} requests over {chips} \
+              chips, chip:1@50% with online repair ==");
+    println!("  fault at {:.3} ms, repaired by {:.3} ms ({:.3} ms \
+              write-verify repair); availability {:.4}",
+             t_fault / 1e6, t_repaired / 1e6, rep.repair_ns / 1e6,
+             rep.availability);
+    let names = ["before", "during", "after"];
+    let mut req_s = [0.0f64; 3];
+    let mut p99s = [0.0f64; 3];
+    for (i, (lat, dur)) in windows.iter().enumerate() {
+        req_s[i] = if *dur > 0.0 {
+            lat.len() as f64 / (dur / 1e9)
+        } else {
+            0.0
+        };
+        p99s[i] = p99(lat.clone());
+        println!("  {:>6}: {:>3} request(s), {:>9.1} requests/s, p99 \
+                  {:.3} ms",
+                 names[i], lat.len(), req_s[i], p99s[i] / 1e6);
+    }
+    println!("  {} failover(s) re-routed in-flight batches", rep.failovers);
+
+    record.num("serve_chips", chips as f64)
+        .num("serve_requests", requests as f64)
+        .num("fault_at_ns", t_fault)
+        .num("repair_ns", rep.repair_ns)
+        .num("failovers", rep.failovers as f64)
+        .num("availability", rep.availability);
+    record.nums("window_requests_per_s", &req_s);
+    record.nums("window_p99_latency_ns", &p99s);
+    record.nums("window_requests",
+                &windows.iter().map(|(l, _)| l.len() as f64)
+                    .collect::<Vec<_>>());
+}
+
+/// Section 2: accuracy of a trained dense readout vs conductance age,
+/// then accuracy of the write-verify-repaired replica vs fresh.
+fn accuracy_vs_age(record: &mut BenchJson, quick: bool, seed: u64) {
+    const IN_BITS: u32 = 3;
+    let n_train = 240usize;
+    let n_test = 200usize;
+    let quantize = |imgs: &[Vec<f32>]| -> Vec<Vec<i32>> {
+        imgs.iter()
+            .map(|img| {
+                img.iter()
+                    .map(|&p| quant::quantize_unit_unsigned(p, IN_BITS))
+                    .collect()
+            })
+            .collect()
+    };
+    let (train_imgs, train_labels) =
+        datasets::digits28(n_train, seed + 20, 0.15);
+    let (test_imgs, test_labels) =
+        datasets::digits28(n_test, seed + 21, 0.15);
+    let train_q = quantize(&train_imgs);
+    let test_q = quantize(&test_imgs);
+    // software-trained softmax readout on the SAME integer pixels the
+    // chip sees, compiled to conductances and replicated over 2 groups
+    let (w, b) = train_softmax_readout(&train_q, &train_labels, 10,
+                                       if quick { 30 } else { 60 },
+                                       0.05, 1e-4, seed + 22);
+    let m = ConductanceMatrix::compile("readout", &w, Some(&b), 28 * 28,
+                                       10, (1 << IN_BITS) - 1, 40.0, 1.0,
+                                       None);
+    let mut fleet = ChipFleet::new(2, PAPER_CORES, seed + 23);
+    fleet
+        .program_model("digits", vec![m], &[1.0], MappingStrategy::Simple,
+                       2)
+        .expect("readout fits one chip per copy");
+
+    let eval = |fleet: &mut ChipFleet, group: usize| -> f64 {
+        let cfg = NeuronConfig::default();
+        let logits: Vec<Vec<f64>> = test_q
+            .iter()
+            .map(|x| {
+                fleet.with_group("digits", group, |t| {
+                    t.mvm_layer("readout", x, &cfg, 0)
+                })
+            })
+            .collect();
+        metrics::accuracy(&logits, &test_labels)
+    };
+
+    println!("== accuracy vs conductance age (dense readout, {n_test} \
+              digits28 samples) ==");
+    let fresh = eval(&mut fleet, 0);
+    println!("  fresh (ideal load):       {:.2}%", 100.0 * fresh);
+    // retention drift checkpoints up to retention_tau (1 h of virtual
+    // time); deterministic aging, uniform over the fleet
+    let checkpoints_s: &[f64] = if quick {
+        &[60.0, 3600.0]
+    } else {
+        &[1.0, 60.0, 900.0, 3600.0]
+    };
+    let mut aged_acc = Vec::new();
+    for &t_s in checkpoints_s {
+        fleet.age_to((t_s * 1e9) as u64);
+        let acc = eval(&mut fleet, 0);
+        println!("  aged to {:>6.0} s:         {:.2}%", t_s, 100.0 * acc);
+        aged_acc.push(acc);
+    }
+    // repair replica group 0: write-verify reprogram from the canonical
+    // matrices (group 1 stays aged for contrast)
+    let rep = fleet.repair_group("digits", 0).expect("repair succeeds");
+    let repaired = eval(&mut fleet, 0);
+    let aged_unrepaired = eval(&mut fleet, 1);
+    println!("  repaired group 0:         {:.2}%  ({} pulses, {:.3} ms, \
+              {:.1} nJ)",
+             100.0 * repaired, rep.pulses, rep.repair_ns / 1e6,
+             rep.energy_pj / 1e3);
+    println!("  aged group 1 (no repair): {:.2}%", 100.0 * aged_unrepaired);
+
+    // the acceptance gate: an aged-then-repaired replica serves within
+    // one accuracy point of fresh
+    assert!(rep.pulses > 0);
+    assert!((fresh - repaired).abs() <= 0.010 + 1e-12,
+            "aged-then-repaired accuracy {repaired} strays more than one \
+             point from fresh {fresh}");
+
+    record.num("acc_fresh", fresh)
+        .num("acc_repaired", repaired)
+        .num("acc_aged_unrepaired", aged_unrepaired)
+        .num("readout_repair_ns", rep.repair_ns)
+        .num("readout_repair_pulses", rep.pulses as f64)
+        .num("readout_repair_energy_pj", rep.energy_pj);
+    record.nums("age_checkpoints_s", checkpoints_s);
+    record.nums("acc_vs_age", &aged_acc);
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let seed = 7u64;
+    let mut record = BenchJson::new("reliability");
+    record.text("mode", if quick { "quick" } else { "full" });
+
+    serve_through_chip_loss(&mut record, quick, seed);
+    accuracy_vs_age(&mut record, quick, seed);
+
+    RunMeta::capture(3, seed).stamp(&mut record);
+    record
+        .write("BENCH_reliability.json")
+        .expect("write BENCH_reliability.json");
+}

@@ -48,6 +48,9 @@ pub enum DiagCode {
     E012ChipBudget,
     /// Matrices and intensity vectors have different lengths.
     E013InputArity,
+    /// Routing state references a detached or unhealthy replica group
+    /// (fault injection detached it and no repair re-attached it).
+    E014GroupDetached,
     /// Replicas of one layer share a core (legal but serializes the
     /// data parallelism they exist to provide).
     W101ReplicaSharedCore,
@@ -73,6 +76,7 @@ impl DiagCode {
             DiagCode::E011ResidualShape => "E011_RESIDUAL_SHAPE",
             DiagCode::E012ChipBudget => "E012_CHIP_BUDGET",
             DiagCode::E013InputArity => "E013_INPUT_ARITY",
+            DiagCode::E014GroupDetached => "E014_GROUP_DETACHED",
             DiagCode::W101ReplicaSharedCore => "W101_REPLICA_SHARED_CORE",
             DiagCode::W102UnplacedMatrix => "W102_UNPLACED_MATRIX",
         }
@@ -208,6 +212,9 @@ mod tests {
         assert_eq!(DiagCode::W102UnplacedMatrix.severity(),
                    Severity::Warning);
         assert_eq!(DiagCode::E012ChipBudget.severity(), Severity::Error);
+        assert_eq!(DiagCode::E014GroupDetached.as_str(),
+                   "E014_GROUP_DETACHED");
+        assert_eq!(DiagCode::E014GroupDetached.severity(), Severity::Error);
     }
 
     #[test]

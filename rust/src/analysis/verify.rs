@@ -26,6 +26,7 @@
 
 use super::diagnostics::{DiagCode, Diagnostic, PlanError, Severity};
 use crate::coordinator::mapping::{MappingPlan, SegmentPlacement};
+use crate::coordinator::TargetHealth;
 use crate::core_sim::Activation;
 use crate::models::graph::{LayerKind, ModelGraph};
 use crate::models::ConductanceMatrix;
@@ -535,6 +536,45 @@ pub fn verify_shards(
     diags
 }
 
+/// E014: a routing decision must reference an attached, healthy replica
+/// group.  The fleet router gates every dispatch through this check:
+/// `detached` marks a group the router took out of rotation after a
+/// fault (and that no online repair re-attached), and `health` is the
+/// fold of the group's member chips' fault state.  Stuck-at columns
+/// alone leave the group routable (degraded accuracy, still serving).
+pub fn verify_route(
+    model: &str,
+    group: usize,
+    detached: bool,
+    health: &TargetHealth,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let span = format!("{model}/g{group}");
+    if detached {
+        diags.push(Diagnostic::new(
+            DiagCode::E014GroupDetached,
+            span.clone(),
+            "routing state references a detached replica group",
+        ));
+    }
+    if health.failed {
+        diags.push(Diagnostic::new(
+            DiagCode::E014GroupDetached,
+            span.clone(),
+            "replica group has a failed (offline) chip",
+        ));
+    }
+    if !health.failed_cores.is_empty() {
+        diags.push(Diagnostic::new(
+            DiagCode::E014GroupDetached,
+            span,
+            format!("replica group has {} dead core(s)",
+                    health.failed_cores.len()),
+        ));
+    }
+    diags
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -871,5 +911,33 @@ mod tests {
             let diags = verify_graph(&g);
             assert!(diags.is_empty(), "{}: {diags:?}", g.name);
         }
+    }
+
+    #[test]
+    fn e014_rejects_detached_or_unhealthy_routes() {
+        // healthy + attached: routable
+        let ok = TargetHealth::default();
+        assert!(verify_route("edge", 0, false, &ok).is_empty());
+        // stuck-at columns degrade accuracy but do NOT detach
+        let stuck = TargetHealth { stuck_columns: 2, ..Default::default() };
+        assert!(verify_route("edge", 0, false, &stuck).is_empty());
+        // detached by the router
+        let d = verify_route("edge", 1, true, &ok);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].code, DiagCode::E014GroupDetached);
+        assert_eq!(d[0].span, "edge/g1");
+        assert!(fail_on_errors(d).is_err());
+        // failed chip and dead cores each flag
+        let down = TargetHealth { failed: true, ..Default::default() };
+        assert!(verify_route("edge", 0, false, &down)
+            .iter()
+            .all(|x| x.code == DiagCode::E014GroupDetached));
+        let dead = TargetHealth {
+            failed_cores: vec![3],
+            ..Default::default()
+        };
+        let d = verify_route("edge", 2, false, &dead);
+        assert_eq!(d.len(), 1);
+        assert!(d[0].message.contains("dead core"));
     }
 }

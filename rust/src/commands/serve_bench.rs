@@ -23,11 +23,24 @@
 //! (pid = chip, tid = core, virtual time; byte-identical across
 //! `NEURRAM_THREADS`); `--metrics out.json` writes the aggregated
 //! metrics-registry snapshot.  See `neurram trace-summary`.
+//!
+//! Fault tolerance knobs (see `fleet/fault.rs` for the grammar):
+//!
+//!   --faults chip:1@50%,col:0.2.7:max@2000   inject faults at virtual
+//!       timestamps (`NN%` = fraction of the trace's arrival span);
+//!       chip/core losses detach the replica group and in-flight
+//!       batches fail over to the survivors
+//!   --repair                                 repair detached groups
+//!       online (write-verify reprogram, charged into the virtual
+//!       clock) instead of leaving them down
+//!   --age NS                                 pre-age every chip's
+//!       conductances to virtual time NS before serving (retention
+//!       drift; deterministic)
 
 use anyhow::Result;
 use neurram::coordinator::PAPER_CORES;
 use neurram::fleet::router::presets;
-use neurram::fleet::BatchPolicy;
+use neurram::fleet::{BatchPolicy, FaultConfig, FaultPlan};
 use neurram::telemetry::chrome::write_chrome_trace;
 use neurram::telemetry::metrics::MetricsRegistry;
 use neurram::util::benchjson::RunMeta;
@@ -46,6 +59,16 @@ pub fn run(args: &Args) -> Result<()> {
         max_wait_ns: args.u64_or("max-wait-us", 200)? * 1000,
     };
     let interval_ns = args.u64_or("interval-us", 0)? * 1000;
+    let faults = FaultConfig {
+        plan: match args.get("faults") {
+            Some(spec) => {
+                FaultPlan::parse(spec).map_err(anyhow::Error::msg)?
+            }
+            None => FaultPlan::default(),
+        },
+        repair: args.flag("repair"),
+    };
+    let age_ns = args.u64_or("age", 0)?;
 
     let mix = presets::parse_mix(mix_spec).map_err(anyhow::Error::msg)?;
     let mut sf = presets::build_serving_fleet(chips, PAPER_CORES, &mix,
@@ -72,6 +95,12 @@ pub fn run(args: &Args) -> Result<()> {
         );
     }
 
+    if age_ns > 0 {
+        sf.fleet.age_to(age_ns);
+        println!("aged fleet conductances to t = {age_ns} ns \
+                  (retention drift applied before serving)");
+    }
+
     let trace = presets::request_trace(&sf.workloads, &mix, requests,
                                        interval_ns, seed)
         .map_err(anyhow::Error::msg)?;
@@ -93,7 +122,7 @@ pub fn run(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let (_responses, rep, telemetry) = sf
         .fleet
-        .serve_traced(&sf.workloads, &trace, &policy)
+        .serve_traced_with_faults(&sf.workloads, &trace, &policy, &faults)
         .map_err(anyhow::Error::msg)?;
     let wall = t0.elapsed().as_secs_f64();
 
@@ -136,6 +165,17 @@ pub fn run(args: &Args) -> Result<()> {
     );
     for (model, counts) in &rep.group_batches {
         println!("  {model}: batches per replica group {counts:?}");
+    }
+    if !faults.plan.is_empty() {
+        println!(
+            "faults: {} injected, {} batch failover(s), {} repair(s) \
+             ({:.3} ms repair time), availability {:.4}",
+            rep.faults_injected,
+            rep.failovers,
+            rep.repairs,
+            rep.repair_ns / 1e6,
+            rep.availability
+        );
     }
     println!("wall-clock: {wall:.2} s ({:.1} requests/s host throughput)",
              rep.requests as f64 / wall.max(1e-9));

@@ -225,6 +225,14 @@ pub struct NeuRramChip {
     pub plan: MappingPlan,
     /// Compiled matrices by layer name (w_max etc. needed at run time).
     pub matrices: Vec<ConductanceMatrix>,
+    /// Construction seed (per-core noise streams separate from it; the
+    /// deterministic aging path keys drift draws on it too).
+    pub seed: u64,
+    /// Whole-chip loss latch ([`NeuRramChip::fail`]): the fleet router
+    /// detaches a failed chip's replica group until repair clears it.
+    failed: bool,
+    /// Stuck-at column faults applied so far (health reporting).
+    stuck_columns: u32,
     /// Programming-path RNG (write-verify).  MVM-path noise comes from
     /// the cores' counter-derived streams instead -- see the module docs.
     pub rng: Rng,
@@ -262,6 +270,9 @@ impl NeuRramChip {
             cores,
             plan: MappingPlan::default(),
             matrices: Vec::new(),
+            seed,
+            failed: false,
+            stuck_columns: 0,
             rng,
             ir_alpha: 0.0,
             threads: crate::util::threads::resolve(),
@@ -947,6 +958,72 @@ impl NeuRramChip {
         self.cores.iter().filter(|c| c.powered_on).count()
     }
 
+    // ------------------------------------------------------------------
+    // Faults, health and aging
+    // ------------------------------------------------------------------
+
+    /// Latch a whole-chip loss: every core fails (stays off through
+    /// power gating) and the chip reports unhealthy until
+    /// [`NeuRramChip::clear_faults`].
+    pub fn fail(&mut self) {
+        self.failed = true;
+        for c in &mut self.cores {
+            c.fail();
+        }
+    }
+
+    pub fn is_failed(&self) -> bool {
+        self.failed
+    }
+
+    /// Latch a dead-core fault on one core.
+    pub fn fail_core(&mut self, core: usize) {
+        self.cores[core].fail();
+    }
+
+    /// Pin one physical column of one core to g_min/g_max (a silent
+    /// data-corruption fault: the chip keeps serving, accuracy degrades).
+    pub fn stick_column(&mut self, core: usize, col: usize, high: bool) {
+        self.cores[core].stick_column(col, high);
+        self.stuck_columns += 1;
+    }
+
+    /// Clear every latched fault (chip loss + dead cores) and power the
+    /// plan's cores back on.  The online-repair path calls this before
+    /// re-running write-verify; clearing alone does not restore
+    /// conductances corrupted by stuck-at faults or drift.
+    pub fn clear_faults(&mut self) {
+        self.failed = false;
+        self.stuck_columns = 0;
+        for c in &mut self.cores {
+            c.repair();
+        }
+        self.gate_unused();
+    }
+
+    /// Health snapshot surfaced through `DispatchTarget::health`.
+    pub fn health(&self) -> super::TargetHealth {
+        super::TargetHealth {
+            failed: self.failed,
+            failed_cores: self
+                .cores
+                .iter()
+                .filter(|c| c.is_failed())
+                .map(|c| c.id as u32)
+                .collect(),
+            stuck_columns: self.stuck_columns,
+        }
+    }
+
+    /// Advance every core's drift state to virtual timestamp `now_ns`
+    /// (see [`CimCore::age_to`]); drift draws key on the chip seed, so
+    /// an aged chip is a pure function of (seed, virtual time).
+    pub fn age_to(&mut self, now_ns: u64) {
+        for c in &mut self.cores {
+            c.age_to(now_ns, self.seed);
+        }
+    }
+
     /// Re-anchor every core's dispatch-addressed randomness at `seed`:
     /// coupling-noise streams restart at counter 0 under `seed` (instead
     /// of the chip's construction seed) and the sampling LFSR chains
@@ -979,6 +1056,10 @@ impl super::DispatchTarget for NeuRramChip {
 
     fn telemetry(&mut self) -> Option<&mut Recorder> {
         Some(&mut self.telemetry)
+    }
+
+    fn health(&self) -> super::TargetHealth {
+        NeuRramChip::health(self)
     }
 
     fn mvm_layer_batch_multi(

@@ -21,6 +21,36 @@ pub use scheduler::{FleetReport, Scheduler};
 use crate::core_sim::NeuronConfig;
 use crate::models::ConductanceMatrix;
 
+/// Health snapshot of a dispatch target (fault-injection state).  The
+/// fleet router reads this to decide whether a replica group may keep
+/// serving: a whole-target loss or any dead core detaches the group,
+/// while stuck-at columns degrade accuracy silently (the target still
+/// serves; repair restores it).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TargetHealth {
+    /// Whole-target loss (chip offline): nothing can be dispatched.
+    pub failed: bool,
+    /// Core ids latched dead by fault injection.
+    pub failed_cores: Vec<u32>,
+    /// Stuck-at column faults applied (data corruption, still serving).
+    pub stuck_columns: u32,
+}
+
+impl TargetHealth {
+    /// Can this target execute dispatches at all?
+    pub fn healthy(&self) -> bool {
+        !self.failed && self.failed_cores.is_empty()
+    }
+
+    /// Fold another target's health into this one (a fleet group is as
+    /// healthy as its least healthy chip).
+    pub fn absorb(&mut self, other: &TargetHealth) {
+        self.failed |= other.failed;
+        self.failed_cores.extend_from_slice(&other.failed_cores);
+        self.stuck_columns += other.stuck_columns;
+    }
+}
+
 /// Everything an executor needs from "something that runs layer MVMs".
 ///
 /// Implemented by [`NeuRramChip`] (delegating to its inherent methods)
@@ -41,6 +71,12 @@ pub trait DispatchTarget {
     /// default `None` keeps mock/test targets recorder-free.
     fn telemetry(&mut self) -> Option<&mut crate::telemetry::Recorder> {
         None
+    }
+
+    /// Fault-injection health of the target.  Defaults to healthy so
+    /// mock/test targets need no fault plumbing.
+    fn health(&self) -> TargetHealth {
+        TargetHealth::default()
     }
 
     /// Data-parallel replica count of a layer (mapping case 2).

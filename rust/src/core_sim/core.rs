@@ -112,6 +112,9 @@ pub struct CimCore {
     /// Power gating (paper: idle cores are clock/power gated; RRAM state
     /// is non-volatile and survives).
     pub powered_on: bool,
+    /// Hard fault latch ([`CimCore::fail`]): a failed core stays off --
+    /// [`CimCore::power_on`] becomes a no-op -- until repair clears it.
+    failed: bool,
     pub g_max_us: f64,
     pub v_read: f64,
 }
@@ -136,6 +139,7 @@ impl CimCore {
             stream_seed: 0,
             items_dispatched: 0,
             powered_on: false,
+            failed: false,
             g_max_us: g_max,
             v_read: 0.5,
         }
@@ -179,11 +183,64 @@ impl CimCore {
     }
 
     pub fn power_on(&mut self) {
+        if self.failed {
+            return; // a failed core cannot be revived by power gating
+        }
         self.powered_on = true;
     }
 
     pub fn power_off(&mut self) {
         self.powered_on = false; // RRAM weights retained (non-volatile)
+    }
+
+    /// Latch a dead-core fault: the core powers off and stays off
+    /// (`power_on` is a no-op) until [`CimCore::repair`] clears it.
+    pub fn fail(&mut self) {
+        self.failed = true;
+        self.powered_on = false;
+    }
+
+    pub fn is_failed(&self) -> bool {
+        self.failed
+    }
+
+    /// Clear a latched fault (the online-repair path re-programs the
+    /// array afterwards; clearing alone does not restore conductances).
+    pub fn repair(&mut self) {
+        self.failed = false;
+    }
+
+    /// Stuck-at fault on one physical column: every cell in column
+    /// `col` pins to g_min (`high = false`) or g_max (`high = true`)
+    /// and all mapped crossbar views are rebuilt so MVMs see the
+    /// corrupted conductances immediately.
+    pub fn stick_column(&mut self, col: usize, high: bool) {
+        assert!(col < self.array.cols, "column {col} out of range");
+        let g = if high {
+            self.array.params.g_max_us
+        } else {
+            self.array.params.g_min_us
+        } as f32;
+        for r in 0..self.array.rows {
+            self.array.g_us[r * self.array.cols + col] = g;
+        }
+        self.rebuild_regions();
+    }
+
+    /// Advance this core's array drift state to virtual timestamp
+    /// `now_ns` (see [`RramArray::age_to`]) and rebuild the mapped
+    /// crossbar views from the drifted conductances.
+    pub fn age_to(&mut self, now_ns: u64, seed: u64) {
+        if now_ns <= self.array.aged_to_ns {
+            return;
+        }
+        // separate drift streams per core: (seed, AGE_STREAM, id) derives
+        // this core's drift seed, the array keys draws on the timestamp
+        let core_seed = crate::util::rng::stream(
+            seed, crate::device::AGE_STREAM, self.id as u64)
+            .next_u64();
+        self.array.age_to(now_ns, core_seed);
+        self.rebuild_regions();
     }
 
     // ------------------------------------------------------------------
@@ -270,8 +327,11 @@ impl CimCore {
             RramArray::new(2 * rows, cols, self.array.params.clone());
         for r in 0..2 * rows {
             for c in 0..cols {
-                win.g_us[r * cols + c] = self.array.g_us
-                    [(2 * row_off + r) * CORE_COLS + col_off + c];
+                let src = (2 * row_off + r) * CORE_COLS + col_off + c;
+                win.g_us[r * cols + c] = self.array.g_us[src];
+                // carry the cells' wear history into the window so
+                // repeated reprogramming keeps charging endurance
+                win.write_counts[r * cols + c] = self.array.write_counts[src];
             }
         }
         let mut targets = vec![0.0f32; 2 * rows * cols];
@@ -286,9 +346,9 @@ impl CimCore {
         self.stats.programming_pulses += stats.total_pulses;
         for r in 0..2 * rows {
             for c in 0..cols {
-                self.array.g_us
-                    [(2 * row_off + r) * CORE_COLS + col_off + c] =
-                    win.g_us[r * cols + c];
+                let dst = (2 * row_off + r) * CORE_COLS + col_off + c;
+                self.array.g_us[dst] = win.g_us[r * cols + c];
+                self.array.write_counts[dst] = win.write_counts[r * cols + c];
             }
         }
         stats
@@ -493,6 +553,13 @@ impl CimCore {
     /// are rebuilt from the array state.
     pub fn set_nonidealities(&mut self, n: CrossbarNonIdealities) {
         self.nonideal = n;
+        self.rebuild_regions();
+    }
+
+    /// Rebuild every mapped region's crossbar views from the current
+    /// array state (after non-ideality changes, drift, or a stuck-at
+    /// fault mutated conductances under the cached views).
+    fn rebuild_regions(&mut self) {
         let specs: Vec<(usize, usize, usize, usize, f64)> = self
             .regions
             .iter()
@@ -937,6 +1004,53 @@ mod tests {
         // distinct core ids draw distinct streams from the same seed
         assert_ne!(ya1[0], yb1[0],
                    "cores must not share a noise stream");
+    }
+
+    #[test]
+    fn failed_core_stays_off_until_repaired() {
+        let (mut core, _, _) = programmed_core(4, 4, 50);
+        core.fail();
+        assert!(core.is_failed());
+        assert!(!core.powered_on);
+        core.power_on(); // no-op while failed
+        assert!(!core.powered_on);
+        core.repair();
+        core.power_on();
+        assert!(core.powered_on && !core.is_failed());
+    }
+
+    #[test]
+    fn stuck_column_corrupts_that_output_only() {
+        let (mut core, _, _) = programmed_core(16, 8, 51);
+        let cfg = NeuronConfig::default();
+        let x: Vec<i32> = (0..16).map(|i| (i % 15) as i32 - 7).collect();
+        let clean = core.mvm(&x, &cfg, Dataflow::Forward, 0.0);
+        // pin physical column 3 high: the differential pair at logical
+        // column 3 sees g+ = g- = g_max, so its output collapses to 0
+        core.stick_column(3, true);
+        let faulty = core.mvm(&x, &cfg, Dataflow::Forward, 0.0);
+        assert_eq!(faulty[3], 0, "stuck column should zero its output");
+        for j in [0usize, 1, 2, 4, 5, 6, 7] {
+            assert_eq!(faulty[j], clean[j], "column {j} unaffected");
+        }
+    }
+
+    #[test]
+    fn core_aging_rebuilds_views_and_changes_outputs() {
+        let mk = || programmed_core(16, 8, 52).0;
+        let cfg = NeuronConfig::default();
+        let x: Vec<i32> = (0..16).map(|i| (i % 15) as i32 - 7).collect();
+        let mut fresh = mk();
+        let clean = fresh.mvm(&x, &cfg, Dataflow::Forward, 0.0);
+        // age two identical cores to the same virtual time: outputs
+        // drift away from fresh but identically to each other
+        let (mut a, mut b) = (mk(), mk());
+        a.age_to(3_600_000_000_000, 9); // 1 h of virtual time
+        b.age_to(3_600_000_000_000, 9);
+        let ya = a.mvm(&x, &cfg, Dataflow::Forward, 0.0);
+        let yb = b.mvm(&x, &cfg, Dataflow::Forward, 0.0);
+        assert_eq!(ya, yb, "aging must be deterministic");
+        assert_ne!(ya, clean, "1 h drift should perturb outputs");
     }
 
     #[test]

@@ -5,5 +5,5 @@
 pub mod rram;
 pub mod write_verify;
 
-pub use rram::{DeviceParams, RramArray, RramCell};
+pub use rram::{DeviceParams, RramArray, RramCell, AGE_STREAM};
 pub use write_verify::{ProgramStats, WriteVerify, WriteVerifyConfig};

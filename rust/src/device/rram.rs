@@ -13,9 +13,20 @@
 //!   programming, state-dependent sigma peaking at ~3.87 uS near 12 uS
 //!   and small near g_min (ED Fig. 3d); iterative programming narrows the
 //!   post-relaxation distribution to sigma ~2 uS (a 29% reduction);
-//! * read noise: small zero-mean Gaussian on every read.
+//! * read noise: small zero-mean Gaussian on every read;
+//! * retention/endurance aging: as the (virtual) clock advances,
+//!   conductances random-walk with a sigma that grows as
+//!   sqrt(t / retention_tau) and is amplified by accumulated write
+//!   wear (`write_count / endurance_cycles`).  Drift draws come from
+//!   counter-derived [`crate::util::rng::stream`] seeds keyed on the
+//!   target virtual timestamp -- never wall-clock -- so an aged array
+//!   is a pure function of (seed, virtual time).
 
-use crate::util::rng::Rng;
+use crate::util::rng::{stream, Rng};
+
+/// Dedicated rng-stream id for retention/endurance drift draws, so
+/// aging never collides with programming or sampling streams.
+pub const AGE_STREAM: u64 = 0xA6E0_D21F;
 
 /// Device-level constants. Mirrors `python/compile/cimcfg.py`; the
 /// integration test cross-checks against the artifact manifest.
@@ -41,6 +52,12 @@ pub struct DeviceParams {
     pub relax_width_us: f64,
     /// Read noise sigma (uS).
     pub read_sigma_us: f64,
+    /// Retention time constant (s): drift sigma reaches the full
+    /// relaxation profile once a cell has sat unprogrammed this long.
+    pub retention_tau_s: f64,
+    /// Endurance budget (write pulses): wear amplifies drift by
+    /// `1 + write_count / endurance_cycles`.
+    pub endurance_cycles: f64,
 }
 
 impl Default for DeviceParams {
@@ -59,6 +76,8 @@ impl Default for DeviceParams {
             relax_peak_g_us: 12.0,
             relax_width_us: 14.0,
             read_sigma_us: 0.15,
+            retention_tau_s: 3600.0,
+            endurance_cycles: 1.0e6,
         }
     }
 }
@@ -86,12 +105,20 @@ impl DeviceParams {
 pub struct RramCell {
     /// Conductance right after the last programming pulse (uS).
     pub g_us: f64,
+    /// Lifetime SET/RESET pulses fired into this cell (endurance wear).
+    pub write_count: u32,
 }
 
 impl RramCell {
+    /// Cell at conductance `g_us` with a fresh (zero) write history.
+    pub fn at(g_us: f64) -> Self {
+        RramCell { g_us, write_count: 0 }
+    }
+
     /// Apply a SET pulse (increases conductance). Returns the new value.
     pub fn set_pulse(&mut self, v: f64, p: &DeviceParams, rng: &mut Rng) -> f64 {
         if v > p.set_vth {
+            self.write_count = self.write_count.saturating_add(1);
             let drive = p.set_gain * (v - p.set_vth);
             // saturating response: harder to push when already high
             let headroom = ((p.g_ceil_us - self.g_us) / p.g_ceil_us).max(0.0);
@@ -107,6 +134,7 @@ impl RramCell {
     /// Apply a RESET pulse (decreases conductance).
     pub fn reset_pulse(&mut self, v: f64, p: &DeviceParams, rng: &mut Rng) -> f64 {
         if v > p.reset_vth {
+            self.write_count = self.write_count.saturating_add(1);
             let drive = p.reset_gain * (v - p.reset_vth);
             let headroom = (self.g_us / p.g_ceil_us).max(0.0);
             let mut dg = drive * headroom * (1.0 + p.pulse_sigma * rng.normal());
@@ -136,6 +164,22 @@ impl RramCell {
         self.g_us = (self.g_us + sigma * rng.normal())
             .clamp(p.g_floor_us, p.g_ceil_us);
     }
+
+    /// Retention/endurance drift over `dt_s` seconds of (virtual) time:
+    /// the long-tail continuation of the post-programming relaxation.
+    /// Sigma follows the same state-dependent profile, scaled by a
+    /// sqrt-law retention factor (saturating at 1 after
+    /// `retention_tau_s`) and amplified by accumulated write wear.
+    pub fn drift(&mut self, dt_s: f64, p: &DeviceParams, rng: &mut Rng) {
+        if dt_s <= 0.0 {
+            return;
+        }
+        let retention = (dt_s / p.retention_tau_s).sqrt().min(1.0);
+        let wear = 1.0 + self.write_count as f64 / p.endurance_cycles;
+        let sigma = p.relax_sigma(self.g_us) * retention * wear;
+        self.g_us = (self.g_us + sigma * rng.normal())
+            .clamp(p.g_floor_us, p.g_ceil_us);
+    }
 }
 
 /// A dense array of RRAM cells (one CIM core holds a 256x256 array).
@@ -145,12 +189,23 @@ pub struct RramArray {
     pub cols: usize,
     /// Row-major conductances (uS). f32 for the MVM hot path.
     pub g_us: Vec<f32>,
+    /// Per-cell lifetime write pulses (endurance wear), row-major.
+    pub write_counts: Vec<u32>,
+    /// Virtual timestamp the array was last aged to ([`RramArray::age_to`]).
+    pub aged_to_ns: u64,
     pub params: DeviceParams,
 }
 
 impl RramArray {
     pub fn new(rows: usize, cols: usize, params: DeviceParams) -> Self {
-        RramArray { rows, cols, g_us: vec![params.g_min_us as f32; rows * cols], params }
+        RramArray {
+            rows,
+            cols,
+            g_us: vec![params.g_min_us as f32; rows * cols],
+            write_counts: vec![0; rows * cols],
+            aged_to_ns: 0,
+            params,
+        }
     }
 
     #[inline]
@@ -180,10 +235,34 @@ impl RramArray {
     pub fn relax_all(&mut self, iterations: u32, rng: &mut Rng) {
         let p = self.params.clone();
         for g in self.g_us.iter_mut() {
-            let mut cell = RramCell { g_us: *g as f64 };
+            let mut cell = RramCell::at(*g as f64);
             cell.relax(&p, iterations, rng);
             *g = cell.g_us as f32;
         }
+    }
+
+    /// Advance the array's drift state to virtual timestamp `now_ns`.
+    ///
+    /// Deterministic by construction: the drift rng is
+    /// `stream(seed, AGE_STREAM, now_ns)` -- a pure function of the
+    /// owner's seed and the *target* timestamp -- and cells are walked
+    /// in row-major order on one serial stream, so the aged state is
+    /// independent of thread count and of how many intermediate
+    /// checkpoints the caller took (each interval draws fresh).
+    /// Idempotent for `now_ns <= aged_to_ns` (time never runs backward).
+    pub fn age_to(&mut self, now_ns: u64, seed: u64) {
+        if now_ns <= self.aged_to_ns {
+            return;
+        }
+        let dt_s = (now_ns - self.aged_to_ns) as f64 * 1e-9;
+        let p = self.params.clone();
+        let mut rng = stream(seed, AGE_STREAM, now_ns);
+        for (g, wc) in self.g_us.iter_mut().zip(&self.write_counts) {
+            let mut cell = RramCell { g_us: *g as f64, write_count: *wc };
+            cell.drift(dt_s, &p, &mut rng);
+            *g = cell.g_us as f32;
+        }
+        self.aged_to_ns = now_ns;
     }
 }
 
@@ -195,7 +274,7 @@ mod tests {
     fn set_increases_reset_decreases() {
         let p = DeviceParams::default();
         let mut rng = Rng::new(1);
-        let mut c = RramCell { g_us: 10.0 };
+        let mut c = RramCell::at(10.0);
         let before = c.g_us;
         c.set_pulse(1.5, &p, &mut rng);
         assert!(c.g_us >= before);
@@ -208,7 +287,7 @@ mod tests {
     fn below_threshold_no_change() {
         let p = DeviceParams::default();
         let mut rng = Rng::new(2);
-        let mut c = RramCell { g_us: 10.0 };
+        let mut c = RramCell::at(10.0);
         c.set_pulse(0.5, &p, &mut rng);
         c.reset_pulse(0.5, &p, &mut rng);
         assert_eq!(c.g_us, 10.0);
@@ -218,7 +297,7 @@ mod tests {
     fn bounds_respected() {
         let p = DeviceParams::default();
         let mut rng = Rng::new(3);
-        let mut c = RramCell { g_us: 44.0 };
+        let mut c = RramCell::at(44.0);
         for _ in 0..100 {
             c.set_pulse(3.0, &p, &mut rng);
         }
@@ -249,7 +328,7 @@ mod tests {
         let spread = |iters: u32, rng: &mut Rng| {
             let mut devs = Vec::new();
             for _ in 0..4000 {
-                let mut c = RramCell { g_us: 12.0 };
+                let mut c = RramCell::at(12.0);
                 c.relax(&p, iters, rng);
                 devs.push(c.g_us - 12.0);
             }
@@ -272,10 +351,76 @@ mod tests {
     }
 
     #[test]
+    fn aging_is_deterministic_monotonic_and_idempotent() {
+        let mk = || {
+            let mut a = RramArray::new(8, 8, DeviceParams::default());
+            for i in 0..64 {
+                a.g_us[i] = 4.0 + (i % 32) as f32;
+            }
+            a
+        };
+        // pure function of (seed, virtual time)
+        let mut a = mk();
+        let mut b = mk();
+        a.age_to(5_000_000_000, 42);
+        b.age_to(5_000_000_000, 42);
+        assert_eq!(a.g_us, b.g_us);
+        // time never runs backward: re-aging to the past is a no-op
+        let snap = a.g_us.clone();
+        a.age_to(1_000_000_000, 42);
+        assert_eq!(a.g_us, snap);
+        assert_eq!(a.aged_to_ns, 5_000_000_000);
+        // longer intervals drift further (statistically)
+        let spread = |ns: u64| {
+            let mut a = mk();
+            a.age_to(ns, 7);
+            let devs: Vec<f64> = (0..64)
+                .map(|i| (a.g_us[i] - (4.0 + (i % 32) as f32)) as f64)
+                .collect();
+            crate::util::stats::std_dev(&devs)
+        };
+        let short = spread(1_000_000_000); // 1 s
+        let long = spread(3_600_000_000_000); // 1 h = retention_tau
+        assert!(short < 0.5, "1 s drift sigma {short}");
+        assert!(long > 4.0 * short, "1 h drift sigma {long} vs {short}");
+    }
+
+    #[test]
+    fn write_wear_amplifies_drift() {
+        let p = DeviceParams::default();
+        let spread = |wc: u32, seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut devs = Vec::new();
+            for _ in 0..4000 {
+                let mut c = RramCell { g_us: 12.0, write_count: wc };
+                c.drift(p.retention_tau_s / 4.0, &p, &mut rng);
+                devs.push(c.g_us - 12.0);
+            }
+            crate::util::stats::std_dev(&devs)
+        };
+        let fresh = spread(0, 8);
+        let worn = spread(1_000_000, 9); // wear factor 2
+        assert!((worn / fresh - 2.0).abs() < 0.25, "wear ratio {}", worn / fresh);
+    }
+
+    #[test]
+    fn pulses_charge_write_count() {
+        let p = DeviceParams::default();
+        let mut rng = Rng::new(6);
+        let mut c = RramCell::at(10.0);
+        c.set_pulse(1.5, &p, &mut rng);
+        c.reset_pulse(1.8, &p, &mut rng);
+        assert_eq!(c.write_count, 2);
+        // sub-threshold pulses don't wear the cell
+        c.set_pulse(0.5, &p, &mut rng);
+        assert_eq!(c.write_count, 2);
+    }
+
+    #[test]
     fn read_noise_small() {
         let p = DeviceParams::default();
         let mut rng = Rng::new(5);
-        let c = RramCell { g_us: 20.0 };
+        let c = RramCell::at(20.0);
         let reads: Vec<f64> = (0..2000).map(|_| c.read(&p, &mut rng)).collect();
         let m = crate::util::stats::mean(&reads);
         assert!((m - 20.0).abs() < 0.05);

@@ -57,6 +57,11 @@ pub struct ProgramStats {
     pub pulse_counts: Vec<u32>,
     /// |final - target| per cell right after write-verify (uS).
     pub residual_us: Vec<f64>,
+    /// Pulse totals per programmed region: [`WriteVerify::program_array`]
+    /// reports one entry per call, and [`ProgramStats::merge`] appends,
+    /// so multi-region repair cost accounting reads these directly
+    /// instead of re-deriving totals from trace events.
+    pub region_pulse_totals: Vec<u64>,
 }
 
 impl ProgramStats {
@@ -80,6 +85,17 @@ impl ProgramStats {
         self.total_pulses += pulses as u64;
         self.pulse_counts.push(pulses);
         self.residual_us.push(residual);
+    }
+
+    /// Fold another region's stats into this one (repair accounting
+    /// aggregates per-placement programming results).
+    pub fn merge(&mut self, other: &ProgramStats) {
+        self.cells += other.cells;
+        self.converged += other.converged;
+        self.total_pulses += other.total_pulses;
+        self.pulse_counts.extend_from_slice(&other.pulse_counts);
+        self.residual_us.extend_from_slice(&other.residual_us);
+        self.region_pulse_totals.extend_from_slice(&other.region_pulse_totals);
     }
 }
 
@@ -158,7 +174,10 @@ impl WriteVerify {
         let n = targets_us.len();
         let mut converged = vec![false; n];
         for i in 0..n {
-            let mut cell = RramCell { g_us: array.g_us[i] as f64 };
+            let mut cell = RramCell {
+                g_us: array.g_us[i] as f64,
+                write_count: array.write_counts[i],
+            };
             let (pulses, ok) =
                 self.program_cell(&mut cell, targets_us[i] as f64, &p, rng);
             let resid = (cell.g_us - targets_us[i] as f64).abs();
@@ -166,6 +185,7 @@ impl WriteVerify {
             converged[i] = ok;
             cell.relax(&p, 1, rng);
             array.g_us[i] = cell.g_us as f32;
+            array.write_counts[i] = cell.write_count;
         }
 
         // Refresh rounds: re-program relaxed-out cells only.
@@ -177,17 +197,22 @@ impl WriteVerify {
                 if !drifted {
                     continue;
                 }
-                let mut cell = RramCell { g_us: array.g_us[i] as f64 };
+                let mut cell = RramCell {
+                    g_us: array.g_us[i] as f64,
+                    write_count: array.write_counts[i],
+                };
                 let (pulses, ok) =
                     self.program_cell(&mut cell, targets_us[i] as f64, &p, rng);
                 stats.total_pulses += pulses as u64;
                 converged[i] = ok;
                 cell.relax(&p, round, rng);
                 array.g_us[i] = cell.g_us as f32;
+                array.write_counts[i] = cell.write_count;
             }
         }
         stats.converged = converged.iter().filter(|&&c| c).count();
         stats.cells = n;
+        stats.region_pulse_totals = vec![stats.total_pulses];
         stats
     }
 }
@@ -202,7 +227,7 @@ mod tests {
         let wv = WriteVerify::new(WriteVerifyConfig::default());
         let mut rng = Rng::new(10);
         for target in [2.0, 10.0, 25.0, 38.0] {
-            let mut cell = RramCell { g_us: 1.0 };
+            let mut cell = RramCell::at(1.0);
             let (_, ok) = wv.program_cell(&mut cell, target, &p, &mut rng);
             assert!(ok, "target {target}");
             assert!((cell.g_us - target).abs() <= 1.0 + 3.0 * p.read_sigma_us);
@@ -218,7 +243,7 @@ mod tests {
         let mut stats = ProgramStats::default();
         for i in 0..2000 {
             let target = 1.0 + 39.0 * (i as f64 / 2000.0);
-            let mut cell = RramCell { g_us: 1.0 };
+            let mut cell = RramCell::at(1.0);
             let (pulses, ok) = wv.program_cell(&mut cell, target, &p, &mut rng);
             stats.absorb(pulses, ok, (cell.g_us - target).abs());
         }
@@ -244,6 +269,29 @@ mod tests {
         }
         let sd = crate::util::stats::std_dev(&devs);
         assert!(sd < 4.0, "post-relax residual sigma {sd}");
+    }
+
+    #[test]
+    fn array_programming_charges_wear_and_reports_region_totals() {
+        let p = DeviceParams::default();
+        let mut array = RramArray::new(8, 8, p);
+        let mut rng = Rng::new(13);
+        let targets: Vec<f32> = (0..64).map(|i| 2.0 + (i % 36) as f32).collect();
+        let wv = WriteVerify::new(WriteVerifyConfig::default());
+        let stats = wv.program_array(&mut array, &targets, &mut rng);
+        // per-cell wear sums to the reported pulse total
+        let wear: u64 = array.write_counts.iter().map(|&w| w as u64).sum();
+        assert_eq!(wear, stats.total_pulses);
+        assert!(wear > 0);
+        // one region entry per program_array call, covering all pulses
+        assert_eq!(stats.region_pulse_totals, vec![stats.total_pulses]);
+        // merge appends region totals and sums scalars
+        let mut acc = ProgramStats::default();
+        acc.merge(&stats);
+        acc.merge(&stats);
+        assert_eq!(acc.total_pulses, 2 * stats.total_pulses);
+        assert_eq!(acc.region_pulse_totals.len(), 2);
+        assert_eq!(acc.cells, 2 * stats.cells);
     }
 
     #[test]

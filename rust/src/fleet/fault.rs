@@ -1,0 +1,363 @@
+//! Deterministic fault-injection plans for fleet serving.
+//!
+//! A [`FaultPlan`] is parsed from the `serve-bench --faults` spec: a
+//! comma-separated list of faults, each pinned to a VIRTUAL timestamp
+//! (absolute nanoseconds, or a percentage of the request trace's
+//! arrival span).  The serving loop injects each fault when the virtual
+//! clock passes its timestamp -- never from wall-clock -- so a faulted
+//! run is exactly as reproducible as a clean one.
+//!
+//! Grammar (`<t>` = integer ns or `NN%` of the arrival span):
+//!
+//! ```text
+//! chip:<c>@<t>                whole-chip loss (power/communication)
+//! core:<c>.<k>@<t>            dead core k of chip c
+//! col:<c>.<k>.<j>:min@<t>     column j of core k stuck at g_min
+//! col:<c>.<k>.<j>:max@<t>     column j of core k stuck at g_max
+//! ```
+//!
+//! Chip and core losses make the owning replica group unhealthy (the
+//! router detaches it and fails over); stuck-at columns silently
+//! corrupt that column's outputs while the group keeps serving --
+//! repair restores them.
+
+use super::ChipFleet;
+use crate::coordinator::TargetHealth;
+
+/// One injectable hardware fault.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Whole chip goes dark: every core latched off.
+    ChipLoss { chip: usize },
+    /// One core latched off (stays off through `power_on` until
+    /// repaired).
+    DeadCore { chip: usize, core: usize },
+    /// One physical column of one core pinned to a conductance rail
+    /// (`high` = g_max, else g_min).  Silent data corruption: the chip
+    /// keeps serving.
+    StuckColumn { chip: usize, core: usize, col: usize, high: bool },
+}
+
+impl FaultKind {
+    /// Fleet chip the fault lands on.
+    pub fn chip(&self) -> usize {
+        match *self {
+            FaultKind::ChipLoss { chip }
+            | FaultKind::DeadCore { chip, .. }
+            | FaultKind::StuckColumn { chip, .. } => chip,
+        }
+    }
+
+    /// Canonical spec form (telemetry `FaultInject` description).
+    pub fn describe(&self) -> String {
+        match *self {
+            FaultKind::ChipLoss { chip } => format!("chip:{chip}"),
+            FaultKind::DeadCore { chip, core } => {
+                format!("core:{chip}.{core}")
+            }
+            FaultKind::StuckColumn { chip, core, col, high } => {
+                let rail = if high { "max" } else { "min" };
+                format!("col:{chip}.{core}.{col}:{rail}")
+            }
+        }
+    }
+}
+
+/// When a fault fires, in virtual time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultTime {
+    /// Absolute virtual nanoseconds.
+    Ns(u64),
+    /// Fraction of the request trace's arrival span (0.5 = `50%`).
+    Fraction(f64),
+}
+
+/// One scheduled fault.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub at: FaultTime,
+    pub kind: FaultKind,
+}
+
+/// A parsed `--faults` spec: the full injection schedule of one run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+/// Fault handling the serving loop applies on top of a plan.
+#[derive(Clone, Debug, Default)]
+pub struct FaultConfig {
+    pub plan: FaultPlan,
+    /// Online repair: when a fault detaches a replica group, reprogram
+    /// its chips (write-verify) and re-attach it once the modelled
+    /// repair time has elapsed, instead of leaving it detached for the
+    /// rest of the trace.  Repaired conductances carry write-verify
+    /// noise, so replicas are no longer bit-identical afterwards --
+    /// routing becomes observable in the outputs (see `fleet/repair.rs`).
+    pub repair: bool,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse a `--faults` spec (comma-separated entries, grammar in the
+    /// module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for entry in spec.split(',').filter(|e| !e.is_empty()) {
+            let (body, t) = entry.rsplit_once('@').ok_or_else(|| {
+                format!("fault {entry}: missing @<time>")
+            })?;
+            let at = parse_time(t)
+                .map_err(|e| format!("fault {entry}: {e}"))?;
+            let kind = parse_kind(body)
+                .map_err(|e| format!("fault {entry}: {e}"))?;
+            events.push(FaultEvent { at, kind });
+        }
+        if events.is_empty() {
+            return Err("empty --faults spec".to_string());
+        }
+        Ok(FaultPlan { events })
+    }
+
+    /// Check every fault addresses a chip/core the fleet actually has.
+    pub fn validate(&self, n_chips: usize, cores_per_chip: usize)
+                    -> Result<(), String> {
+        for e in &self.events {
+            let chip = e.kind.chip();
+            if chip >= n_chips {
+                return Err(format!(
+                    "fault {} targets chip {chip} of a {n_chips}-chip \
+                     fleet",
+                    e.kind.describe()
+                ));
+            }
+            let core = match e.kind {
+                FaultKind::DeadCore { core, .. }
+                | FaultKind::StuckColumn { core, .. } => Some(core),
+                FaultKind::ChipLoss { .. } => None,
+            };
+            if let Some(core) = core {
+                if core >= cores_per_chip {
+                    return Err(format!(
+                        "fault {} targets core {core} of \
+                         {cores_per_chip}-core chips",
+                        e.kind.describe()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pin every fault to absolute virtual nanoseconds against the
+    /// request trace's arrival span, sorted by (time, spec order).
+    pub fn resolve(&self, span_ns: u64) -> Vec<(u64, FaultKind)> {
+        let mut out: Vec<(u64, usize, FaultKind)> = self
+            .events
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                let t = match e.at {
+                    FaultTime::Ns(t) => t,
+                    FaultTime::Fraction(f) => {
+                        (f * span_ns as f64).round() as u64
+                    }
+                };
+                (t, i, e.kind.clone())
+            })
+            .collect();
+        out.sort_by_key(|&(t, i, _)| (t, i));
+        out.into_iter().map(|(t, _, k)| (t, k)).collect()
+    }
+}
+
+fn parse_time(t: &str) -> Result<FaultTime, String> {
+    if let Some(pct) = t.strip_suffix('%') {
+        let p: f64 = pct
+            .parse()
+            .map_err(|_| format!("bad percentage {t}"))?;
+        if !(0.0..=100.0).contains(&p) {
+            return Err(format!("percentage {t} outside 0-100"));
+        }
+        Ok(FaultTime::Fraction(p / 100.0))
+    } else {
+        t.parse::<u64>()
+            .map(FaultTime::Ns)
+            .map_err(|_| format!("bad time {t} (want ns or NN%)"))
+    }
+}
+
+fn parse_kind(body: &str) -> Result<FaultKind, String> {
+    let (tag, rest) = body
+        .split_once(':')
+        .ok_or_else(|| format!("bad fault {body}"))?;
+    let idx = |s: &str| -> Result<usize, String> {
+        s.parse().map_err(|_| format!("bad index {s} in {body}"))
+    };
+    match tag {
+        "chip" => Ok(FaultKind::ChipLoss { chip: idx(rest)? }),
+        "core" => {
+            let (c, k) = rest
+                .split_once('.')
+                .ok_or_else(|| format!("core fault wants <c>.<k>: {body}"))?;
+            Ok(FaultKind::DeadCore { chip: idx(c)?, core: idx(k)? })
+        }
+        "col" => {
+            let (addr, rail) = rest.rsplit_once(':').ok_or_else(|| {
+                format!("col fault wants <c>.<k>.<j>:min|max: {body}")
+            })?;
+            let high = match rail {
+                "max" => true,
+                "min" => false,
+                _ => {
+                    return Err(format!("bad rail {rail} (want min|max)"))
+                }
+            };
+            let mut parts = addr.split('.');
+            let (c, k, j) = match (parts.next(), parts.next(),
+                                   parts.next(), parts.next()) {
+                (Some(c), Some(k), Some(j), None) => (c, k, j),
+                _ => {
+                    return Err(format!(
+                        "col fault wants <c>.<k>.<j>:min|max: {body}"
+                    ))
+                }
+            };
+            Ok(FaultKind::StuckColumn {
+                chip: idx(c)?,
+                core: idx(k)?,
+                col: idx(j)?,
+                high,
+            })
+        }
+        _ => Err(format!("unknown fault kind {tag}")),
+    }
+}
+
+impl ChipFleet {
+    /// Apply one fault to the fleet hardware.  Returns the `(model,
+    /// group)` the fault detaches -- the owning replica group, if the
+    /// fault leaves it unable to serve (chip/core loss); stuck-at
+    /// columns return `None` (the group keeps serving, degraded).
+    pub(crate) fn apply_fault_event(&mut self, kind: &FaultKind)
+                                    -> Option<(usize, usize)> {
+        match *kind {
+            FaultKind::ChipLoss { chip } => self.chips[chip].fail(),
+            FaultKind::DeadCore { chip, core } => {
+                self.chips[chip].fail_core(core)
+            }
+            FaultKind::StuckColumn { chip, core, col, high } => {
+                self.chips[chip].stick_column(core, col, high)
+            }
+        }
+        let chip = kind.chip();
+        let owner = self.models.iter().enumerate().find_map(|(mi, m)| {
+            m.groups
+                .iter()
+                .position(|g| g.chips.contains(&chip))
+                .map(|g| (mi, g))
+        });
+        owner.filter(|&(mi, g)| !self.group_health_idx(mi, g).healthy())
+    }
+
+    /// Health of one replica group: the fold of its member chips'
+    /// health (a group is as healthy as its least healthy chip).
+    pub(crate) fn group_health_idx(&self, mi: usize, group: usize)
+                                   -> TargetHealth {
+        let mut h = TargetHealth::default();
+        for &ci in &self.models[mi].groups[group].chips {
+            h.absorb(&self.chips[ci].health());
+        }
+        h
+    }
+
+    /// Health of replica group `group` of a placed model.
+    pub fn group_health(&self, model: &str, group: usize) -> TargetHealth {
+        let mi = self
+            .model_index(model)
+            .unwrap_or_else(|| panic!("model {model} not placed"));
+        self.group_health_idx(mi, group)
+    }
+
+    /// Advance every chip's conductance drift to virtual time `now_ns`
+    /// (see `RramArray::age_to`).  Idempotent for past times; ages the
+    /// whole fleet uniformly, so bit-identical replicas stay
+    /// bit-identical.
+    pub fn age_to(&mut self, now_ns: u64) {
+        for c in &mut self.chips {
+            c.age_to(now_ns);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p = FaultPlan::parse(
+            "chip:1@50%,core:0.3@2000,col:2.1.17:max@75%,col:0.0.4:min@9",
+        )
+        .unwrap();
+        assert_eq!(p.events.len(), 4);
+        assert_eq!(p.events[0].kind, FaultKind::ChipLoss { chip: 1 });
+        assert_eq!(p.events[0].at, FaultTime::Fraction(0.5));
+        assert_eq!(p.events[1].kind,
+                   FaultKind::DeadCore { chip: 0, core: 3 });
+        assert_eq!(p.events[1].at, FaultTime::Ns(2000));
+        assert_eq!(
+            p.events[2].kind,
+            FaultKind::StuckColumn { chip: 2, core: 1, col: 17, high: true }
+        );
+        assert_eq!(
+            p.events[3].kind,
+            FaultKind::StuckColumn { chip: 0, core: 0, col: 4, high: false }
+        );
+        // describe() round-trips the canonical spelling
+        for e in &p.events {
+            let back = FaultPlan::parse(&format!("{}@0", e.kind.describe()))
+                .unwrap();
+            assert_eq!(back.events[0].kind, e.kind);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "", "chip:1", "chip:x@5", "core:1@5", "col:1.2@5",
+            "col:1.2.3:mid@5", "warp:1@5", "chip:1@105%", "chip:1@-5",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn resolve_pins_fractions_and_sorts_by_time() {
+        let p = FaultPlan::parse("chip:0@75%,chip:1@100,chip:2@10%")
+            .unwrap();
+        let r = p.resolve(10_000);
+        assert_eq!(
+            r,
+            vec![
+                (100, FaultKind::ChipLoss { chip: 1 }),
+                (1000, FaultKind::ChipLoss { chip: 2 }),
+                (7500, FaultKind::ChipLoss { chip: 0 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn validate_checks_fleet_shape() {
+        let p = FaultPlan::parse("chip:3@0").unwrap();
+        assert!(p.validate(3, 4).is_err());
+        assert!(p.validate(4, 4).is_ok());
+        let p = FaultPlan::parse("core:0.4@0").unwrap();
+        assert!(p.validate(1, 4).is_err());
+        assert!(p.validate(1, 5).is_ok());
+    }
+}

@@ -44,17 +44,21 @@
 //! execution time (`Response::chip_ns`) does not.
 
 pub mod batcher;
+pub mod fault;
+pub mod repair;
 pub mod replicate;
 pub mod router;
 
 pub use batcher::{coalesce, Batch, BatchPolicy};
+pub use fault::{FaultConfig, FaultKind, FaultPlan, FaultTime};
+pub use repair::RepairReport;
 pub use replicate::{shard_plan, FleetPlacement};
 pub use router::{Payload, Request, Response, ServeReport, Workload,
                  WorkloadKind};
 
 use crate::coordinator::chip::{accumulate_backward, accumulate_forward};
 use crate::coordinator::{DispatchTarget, MappingPlan, NeuRramChip,
-                         PlacementPartials, ReplicaBatch};
+                         PlacementPartials, ReplicaBatch, TargetHealth};
 use crate::core_sim::NeuronConfig;
 use crate::models::ConductanceMatrix;
 use crate::util::rng;
@@ -283,6 +287,16 @@ impl DispatchTarget for GroupTarget<'_> {
         self.chips.first_mut().map(|(c, _)| &mut c.telemetry)
     }
 
+    /// Group health: the fold of the member chips' health (the router
+    /// detaches a group whose fold is unhealthy).
+    fn health(&self) -> TargetHealth {
+        let mut h = TargetHealth::default();
+        for (c, _) in &self.chips {
+            h.absorb(&NeuRramChip::health(c));
+        }
+        h
+    }
+
     fn mvm_layer_batch_multi(
         &mut self,
         layer: &str,
@@ -445,6 +459,15 @@ impl DispatchTarget for ChipFleet {
 
     fn telemetry(&mut self) -> Option<&mut crate::telemetry::Recorder> {
         self.chips.first_mut().map(|c| &mut c.telemetry)
+    }
+
+    /// Whole-fleet health fold (every chip, every model).
+    fn health(&self) -> TargetHealth {
+        let mut h = TargetHealth::default();
+        for c in &self.chips {
+            h.absorb(&NeuRramChip::health(c));
+        }
+        h
     }
 
     fn mvm_layer_batch_multi(

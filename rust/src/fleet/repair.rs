@@ -1,0 +1,221 @@
+//! Online repair of a degraded replica group: clear latched faults,
+//! re-run write-verify programming on every layer the group's chips
+//! host, and (for CNN workloads) re-derive the requantization shifts --
+//! the same `NeuRramChip::reprogram_layer` + `calib` machinery the
+//! single-chip flows use.
+//!
+//! Repair is charged into the VIRTUAL clock: each write-verify pulse
+//! costs [`T_REPAIR_PULSE_NS`] (a delay-line program pulse plus the
+//! verify read) and [`E_REPAIR_PULSE_PJ`], so the serving loop can model
+//! the availability dip of an online repair instead of pretending it is
+//! free.
+//!
+//! Determinism caveat: fleet programming is noise-free precisely so
+//! replica groups stay bit-identical (see `fleet/mod.rs`).  A repaired
+//! group is write-verified, so its conductances carry programming noise
+//! and routing to it becomes observable in the outputs.  Faulted runs
+//! remain bitwise reproducible (same trace + same fault plan + same
+//! seed), but are no longer route-invariant once a repair lands --
+//! which is why the cross-shape determinism property pins the
+//! failover-only path.
+
+use super::ChipFleet;
+use crate::calib::calibrate::calibrate_cnn_shifts;
+use crate::models::{ConductanceMatrix, ModelGraph};
+
+/// Modelled time per write-verify iteration: a 10 ns program pulse (the
+/// delay-line generator's maximum width) plus a ~100 ns verify read of
+/// the programmed cell.
+pub const T_REPAIR_PULSE_NS: f64 = 110.0;
+
+/// Modelled energy per write-verify iteration (~2 V across a cell
+/// conducting tens of uS for the pulse width, plus the verify read).
+pub const E_REPAIR_PULSE_PJ: f64 = 2.0;
+
+/// Cost summary of one group repair.
+#[derive(Clone, Debug, Default)]
+pub struct RepairReport {
+    pub model: String,
+    pub group: usize,
+    /// Distinct layers reprogrammed (each on every group chip hosting
+    /// it).
+    pub layers: usize,
+    /// Total write-verify pulses across all reprogrammed regions.
+    pub pulses: u64,
+    /// Modelled repair time (`pulses * T_REPAIR_PULSE_NS`).
+    pub repair_ns: f64,
+    /// Modelled repair energy (`pulses * E_REPAIR_PULSE_PJ`).
+    pub energy_pj: f64,
+}
+
+impl ChipFleet {
+    /// Repair replica group `group` of `model` by index: clear latched
+    /// faults (chip loss, dead cores, the stuck-column count), then
+    /// write-verify reprogram every hosted layer from the fleet's
+    /// canonical matrices -- restoring conductances corrupted by
+    /// stuck-at faults, drift, or a chip swap.
+    pub(crate) fn reprogram_group(&mut self, mi: usize, group: usize)
+                                  -> Result<RepairReport, String> {
+        let mats: Vec<ConductanceMatrix> = self.models[mi].matrices.clone();
+        let chip_ids = self.models[mi].groups[group].chips.clone();
+        let mut report = RepairReport {
+            model: self.models[mi].name.clone(),
+            group,
+            ..Default::default()
+        };
+        for &ci in &chip_ids {
+            self.chips[ci].clear_faults();
+        }
+        for m in &mats {
+            let mut reprogrammed = false;
+            for &ci in &chip_ids {
+                if self.chips[ci].matrix(&m.layer).is_none() {
+                    continue;
+                }
+                let stats =
+                    self.chips[ci].reprogram_layer(m.clone(), true)?;
+                for s in &stats {
+                    report.pulses += s.total_pulses;
+                }
+                reprogrammed = true;
+            }
+            if reprogrammed {
+                report.layers += 1;
+            }
+        }
+        report.repair_ns = report.pulses as f64 * T_REPAIR_PULSE_NS;
+        report.energy_pj = report.pulses as f64 * E_REPAIR_PULSE_PJ;
+        Ok(report)
+    }
+
+    /// Public repair entry point, by model name.  See
+    /// [`ChipFleet::reprogram_group`]; callers re-deriving CNN shifts
+    /// afterwards use [`ChipFleet::recalibrate_group_cnn`].
+    pub fn repair_group(&mut self, model: &str, group: usize)
+                        -> Result<RepairReport, String> {
+        let mi = self
+            .model_index(model)
+            .ok_or_else(|| format!("model {model} not placed"))?;
+        if group >= self.models[mi].groups.len() {
+            return Err(format!(
+                "model {model} has {} group(s), no group {group}",
+                self.models[mi].groups.len()
+            ));
+        }
+        self.reprogram_group(mi, group)
+    }
+
+    /// Re-derive a CNN workload's requantization shifts against ONE
+    /// repaired replica group (write-verify noise shifted its effective
+    /// weights).  Returns the shifts plus the calibration's modelled
+    /// on-chip time (ns) so callers can charge it alongside the
+    /// reprogramming cost.
+    pub fn recalibrate_group_cnn(
+        &mut self,
+        model: &str,
+        group: usize,
+        graph: &ModelGraph,
+        probe_imgs: &[Vec<f32>],
+    ) -> (Vec<f64>, f64) {
+        let mi = self
+            .model_index(model)
+            .unwrap_or_else(|| panic!("model {model} not placed"));
+        let chip_ids = self.models[mi].groups[group].chips.clone();
+        for &ci in &chip_ids {
+            self.chips[ci].reset_energy();
+        }
+        self.with_group(model, group, |t| {
+            let shifts = calibrate_cnn_shifts(t, graph, probe_imgs);
+            (shifts, t.busy_ns())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::mapping::MappingStrategy;
+    use crate::coordinator::DispatchTarget;
+    use crate::core_sim::NeuronConfig;
+    use crate::fleet::fault::FaultKind;
+    use crate::util::rng::Rng;
+
+    fn matrix(name: &str, rows: usize, cols: usize, seed: u64)
+              -> ConductanceMatrix {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> =
+            (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        ConductanceMatrix::compile(name, &w, None, rows, cols, 7, 40.0, 1.0,
+                                   None)
+    }
+
+    #[test]
+    fn repair_restores_health_and_charges_pulses() {
+        let mut fleet = ChipFleet::new(2, 4, 21);
+        fleet
+            .program_model("m", vec![matrix("fc", 200, 24, 3)], &[1.0],
+                           MappingStrategy::Simple, 2)
+            .unwrap();
+        // kill group 1's chip, then repair the group
+        let hit = fleet
+            .apply_fault_event(&FaultKind::ChipLoss { chip: 1 });
+        assert_eq!(hit, Some((0, 1)));
+        assert!(!fleet.group_health("m", 1).healthy());
+        let rep = fleet.repair_group("m", 1).unwrap();
+        assert!(fleet.group_health("m", 1).healthy());
+        assert_eq!(rep.layers, 1);
+        assert!(rep.pulses > 0, "write-verify must burn pulses");
+        assert_eq!(rep.repair_ns, rep.pulses as f64 * T_REPAIR_PULSE_NS);
+        assert_eq!(rep.energy_pj, rep.pulses as f64 * E_REPAIR_PULSE_PJ);
+        // the repaired group serves again, close to the pristine copy
+        // (write-verify noise: near, not bitwise)
+        let x: Vec<i32> = (0..200).map(|r| (r % 15) as i32 - 7).collect();
+        let y1 = fleet.with_group("m", 1, |t| {
+            t.mvm_layer("fc", &x, &NeuronConfig::default(), 0)
+        });
+        let y0 = fleet.with_group("m", 0, |t| {
+            t.mvm_layer("fc", &x, &NeuronConfig::default(), 0)
+        });
+        assert_eq!(y0.len(), y1.len());
+        let scale = y0.iter().map(|v| v.abs()).fold(1.0f64, f64::max);
+        for (a, b) in y0.iter().zip(&y1) {
+            assert!((a - b).abs() <= 0.25 * scale,
+                    "repaired replica drifted too far: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn stuck_column_is_silent_until_repaired() {
+        let mut fleet = ChipFleet::new(1, 4, 33);
+        fleet
+            .program_model("m", vec![matrix("fc", 100, 16, 5)], &[1.0],
+                           MappingStrategy::Simple, 1)
+            .unwrap();
+        let x: Vec<i32> = (0..100).map(|r| (r % 13) as i32 - 6).collect();
+        let cfg = NeuronConfig::default();
+        let clean = fleet.with_group("m", 0, |t| t.mvm_layer("fc", &x, &cfg, 0));
+        // stuck column: group stays routable but outputs corrupt
+        let hit = fleet.apply_fault_event(&FaultKind::StuckColumn {
+            chip: 0, core: 0, col: 2, high: true,
+        });
+        assert_eq!(hit, None, "stuck columns must not detach the group");
+        let h = fleet.group_health("m", 0);
+        assert!(h.healthy());
+        assert_eq!(h.stuck_columns, 1);
+        let faulty =
+            fleet.with_group("m", 0, |t| t.mvm_layer("fc", &x, &cfg, 0));
+        assert_ne!(clean, faulty);
+        let rep = fleet.repair_group("m", 0).unwrap();
+        assert!(rep.pulses > 0);
+        assert_eq!(fleet.group_health("m", 0).stuck_columns, 0);
+        let repaired =
+            fleet.with_group("m", 0, |t| t.mvm_layer("fc", &x, &cfg, 0));
+        // repair un-sticks the column: the repaired outputs track the
+        // clean ones far better than the faulty ones did
+        let err = |ys: &Vec<f64>| -> f64 {
+            ys.iter().zip(&clean).map(|(a, b)| (a - b).abs()).sum()
+        };
+        assert!(err(&repaired) < err(&faulty),
+                "repair must reduce the corruption");
+    }
+}

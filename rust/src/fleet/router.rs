@@ -14,7 +14,9 @@
 //! any host at any `NEURRAM_THREADS`.
 
 use super::batcher::{coalesce, queue_depth_at, BatchPolicy};
+use super::fault::{FaultConfig, FaultKind};
 use super::ChipFleet;
+use crate::analysis::{fail_on_errors, verify_route, DiagCode, PlanError};
 use crate::coordinator::{FleetReport, Scheduler};
 use crate::telemetry::{Event, EventKind, Trace, CHIP_LANE, ROUTER_CHIP};
 use crate::models::executor::recurrent::{LstmCalib, LstmExecutor};
@@ -114,6 +116,19 @@ pub struct ServeReport {
     pub group_batches: Vec<(String, Vec<usize>)>,
     /// Cross-group overlap bookkeeping (groups of ALL models pooled).
     pub fleet: FleetReport,
+    /// Faults injected from the fault plan during this trace.
+    pub faults_injected: usize,
+    /// Batches killed mid-service by a fault and re-routed to a
+    /// surviving replica group.
+    pub failovers: usize,
+    /// Online repairs run (fault config with `repair` enabled).
+    pub repairs: usize,
+    /// Total modelled repair time charged into the virtual clock (ns).
+    pub repair_ns: f64,
+    /// Mean fraction of replica-group capacity attached over the span
+    /// (1.0 = no degradation; a detached group bleeds availability
+    /// until repaired or the trace ends).
+    pub availability: f64,
 }
 
 struct PendingBatch {
@@ -123,6 +138,32 @@ struct PendingBatch {
     /// Workload queue depth when the batch became ready (pure function
     /// of the trace; stamps the telemetry `Batch` event).
     depth: usize,
+}
+
+/// Per-(model, group) fault bookkeeping of one serve call.
+struct FaultState {
+    /// Group detached (chip/core loss, no repair re-attached it).
+    detached: Vec<Vec<bool>>,
+    /// Virtual time the group detached (meaningful while `detached`).
+    detach_at: Vec<Vec<f64>>,
+    /// Repair downtime accumulated per group (ns).
+    downtime: Vec<Vec<f64>>,
+    repair: bool,
+    faults_injected: usize,
+    repairs: usize,
+    repair_ns: f64,
+}
+
+/// The unroutable-batch error: every replica group of the model is
+/// detached (`E014_GROUP_DETACHED`).
+fn no_route(model: &str, seq: usize) -> String {
+    PlanError::single(
+        DiagCode::E014GroupDetached,
+        model,
+        format!("every replica group of model {model} is detached; \
+                 batch {seq} cannot be routed"),
+    )
+    .to_string()
 }
 
 impl ChipFleet {
@@ -142,6 +183,26 @@ impl ChipFleet {
             .map(|(responses, report, _)| (responses, report))
     }
 
+    /// [`ChipFleet::serve`] under a fault-injection plan: faults fire
+    /// at their virtual timestamps, chip/core losses detach the owning
+    /// replica group, in-flight batches re-route to surviving groups
+    /// (re-executed under the SAME batch seed, so their outputs and
+    /// service times are unchanged), and -- with `faults.repair` set --
+    /// detached groups come back online after a modelled write-verify
+    /// repair.  Every request completes unless EVERY group of its model
+    /// is detached, which fails the serve with an `E014_GROUP_DETACHED`
+    /// diagnostic.
+    pub fn serve_with_faults(
+        &mut self,
+        workloads: &[Workload],
+        requests: &[Request],
+        policy: &BatchPolicy,
+        faults: &FaultConfig,
+    ) -> Result<(Vec<Response>, ServeReport), String> {
+        self.serve_traced_with_faults(workloads, requests, policy, faults)
+            .map(|(responses, report, _)| (responses, report))
+    }
+
     /// [`ChipFleet::serve`] plus the fleet-wide telemetry [`Trace`] of
     /// the run (empty unless [`ChipFleet::enable_telemetry`] was called
     /// first).  After each batch executes, every group chip's recorder
@@ -158,6 +219,21 @@ impl ChipFleet {
         requests: &[Request],
         policy: &BatchPolicy,
     ) -> Result<(Vec<Response>, ServeReport, Trace), String> {
+        self.serve_traced_with_faults(workloads, requests, policy,
+                                      &FaultConfig::default())
+    }
+
+    /// [`ChipFleet::serve_with_faults`] plus the telemetry trace --
+    /// fault injections, failover re-routes and repair windows land on
+    /// the router lane alongside the batch/request spans.
+    pub fn serve_traced_with_faults(
+        &mut self,
+        workloads: &[Workload],
+        requests: &[Request],
+        policy: &BatchPolicy,
+        faults: &FaultConfig,
+    ) -> Result<(Vec<Response>, ServeReport, Trace), String> {
+        faults.plan.validate(self.chips.len(), self.cores_per_chip)?;
         for w in workloads {
             if self.model_index(&w.model).is_none() {
                 return Err(format!(
@@ -167,7 +243,9 @@ impl ChipFleet {
             }
         }
         if requests.is_empty() {
-            return Ok((Vec::new(), ServeReport::default(), Trace::new()));
+            let report =
+                ServeReport { availability: 1.0, ..Default::default() };
+            return Ok((Vec::new(), report, Trace::new()));
         }
         let tracing = self.telemetry_enabled();
         let mut trace = Trace::new();
@@ -222,30 +300,135 @@ impl ChipFleet {
             .map(|m| vec![0.0f64; self.models[m].groups.len()])
             .collect();
 
+        // fault schedule pinned to the arrival span, virtual-time order;
+        // per (model, group) detach bookkeeping for availability
+        let span_arrival =
+            requests.iter().map(|r| r.arrival_ns).max().unwrap_or(0);
+        let schedule = faults.plan.resolve(span_arrival);
+        let mut fault_applied = vec![false; schedule.len()];
+        let mut fstate = FaultState {
+            detached: (0..n_models)
+                .map(|m| vec![false; self.models[m].groups.len()])
+                .collect(),
+            detach_at: (0..n_models)
+                .map(|m| vec![0.0f64; self.models[m].groups.len()])
+                .collect(),
+            downtime: (0..n_models)
+                .map(|m| vec![0.0f64; self.models[m].groups.len()])
+                .collect(),
+            repair: faults.repair,
+            faults_injected: 0,
+            repairs: 0,
+            repair_ns: 0.0,
+        };
+        let mut failovers = 0usize;
+
         let mut responses: Vec<Option<Response>> =
             (0..requests.len()).map(|_| None).collect();
         let mut total_busy = 0.0f64;
         for (seq, pb) in pending.iter().enumerate() {
             let wl = &workloads[pb.wl];
             let mi = self.model_index(&wl.model).expect("validated above");
-            // least-loaded: earliest-free group, lowest index on ties
-            let g = (0..free_at[mi].len())
-                .min_by(|&a, &b| {
-                    free_at[mi][a]
-                        .total_cmp(&free_at[mi][b])
-                        .then(a.cmp(&b))
-                })
-                .expect("placed models have at least one group");
+            // inject every fault due by this batch's ready time
+            for fi in 0..schedule.len() {
+                if fault_applied[fi] || schedule[fi].0 > pb.ready_ns {
+                    continue;
+                }
+                fault_applied[fi] = true;
+                let (t, kind) = schedule[fi].clone();
+                self.inject_fault(t, &kind, &mut free_at, &mut fstate,
+                                  tracing, &mut trace)?;
+            }
+            // least-loaded among ATTACHED groups: earliest-free, lowest
+            // index on ties
+            let mut g = self
+                .pick_group(mi, &free_at[mi], &fstate.detached[mi])
+                .ok_or_else(|| no_route(&wl.model, seq))?;
+            fail_on_errors(verify_route(&wl.model, g,
+                                        fstate.detached[mi][g],
+                                        &self.group_health_idx(mi, g)))
+                .map_err(|e| e.to_string())?;
             let ready = pb.ready_ns as f64;
-            let start = free_at[mi][g].max(ready);
+            let mut start = free_at[mi][g].max(ready);
             // per-batch seed: addressed by trace position, so replica
             // choice and chip history drop out of the outputs
             let batch_seed =
                 rng::stream(self.seed, SERVE_STREAM, seq as u64).next_u64();
             self.reset_group(mi, g, batch_seed);
-            let (outputs, busy) =
+            let (mut outputs, mut busy) =
                 self.execute_batch(wl, mi, g, &pb.requests, requests,
                                    batch_seed)?;
+            // in-flight faults: any unapplied fault on this group's
+            // chips due by the batch's completion kills the batch
+            // (landing mid-window, or before a queued start the
+            // pre-route sweep could not see) -- re-route it to a
+            // surviving group and re-execute under the SAME batch seed
+            // (outputs and busy are route-invariant)
+            loop {
+                let completion = start + busy;
+                let gchips = self.models[mi].groups[g].chips.clone();
+                let mut killed_at: Option<u64> = None;
+                for fi in 0..schedule.len() {
+                    if fault_applied[fi] {
+                        continue;
+                    }
+                    let (t, kind) = schedule[fi].clone();
+                    if t as f64 > completion
+                        || !gchips.contains(&kind.chip())
+                    {
+                        continue;
+                    }
+                    fault_applied[fi] = true;
+                    let hit = self.inject_fault(t, &kind, &mut free_at,
+                                                &mut fstate, tracing,
+                                                &mut trace)?;
+                    if hit == Some((mi, g)) && killed_at.is_none() {
+                        killed_at = Some(t);
+                    }
+                }
+                let Some(t_kill) = killed_at else { break };
+                // the doomed attempt's spans never happened
+                if tracing {
+                    for &ci in &gchips {
+                        self.chips[ci].telemetry.drain();
+                    }
+                }
+                let from = g;
+                let g2 = self
+                    .pick_group(mi, &free_at[mi], &fstate.detached[mi])
+                    .ok_or_else(|| no_route(&wl.model, seq))?;
+                fail_on_errors(verify_route(
+                    &wl.model, g2, fstate.detached[mi][g2],
+                    &self.group_health_idx(mi, g2),
+                ))
+                .map_err(|e| e.to_string())?;
+                failovers += 1;
+                let restart =
+                    free_at[mi][g2].max(ready).max(t_kill as f64);
+                if tracing {
+                    let wlid = trace.intern(&wl.name);
+                    trace.push(Event {
+                        ts_ns: t_kill as f64,
+                        dur_ns: restart - t_kill as f64,
+                        chip: ROUTER_CHIP,
+                        core: CHIP_LANE,
+                        kind: EventKind::Failover {
+                            workload: wlid,
+                            seq: seq as u32,
+                            from_group: from as u32,
+                            to_group: g2 as u32,
+                        },
+                    });
+                }
+                g = g2;
+                start = restart;
+                self.reset_group(mi, g, batch_seed);
+                let (o2, b2) =
+                    self.execute_batch(wl, mi, g, &pb.requests, requests,
+                                       batch_seed)?;
+                outputs = o2;
+                busy = b2;
+            }
             total_busy += busy;
             group_busy[mi][g] += busy;
             group_batches[mi][g] += 1;
@@ -288,6 +471,19 @@ impl ChipFleet {
             }
         }
 
+        // faults the batch loop never reached (late timestamps, idle
+        // groups): inject them so the trace and availability account
+        // for every scheduled fault
+        for fi in 0..schedule.len() {
+            if fault_applied[fi] {
+                continue;
+            }
+            fault_applied[fi] = true;
+            let (t, kind) = schedule[fi].clone();
+            self.inject_fault(t, &kind, &mut free_at, &mut fstate, tracing,
+                              &mut trace)?;
+        }
+
         let responses: Vec<Response> = responses
             .into_iter()
             .map(|r| r.expect("every request rode exactly one batch"))
@@ -321,6 +517,27 @@ impl ChipFleet {
             responses.iter().map(|r| r.latency_ns).collect();
         let all_group_busy: Vec<f64> =
             group_busy.iter().flatten().copied().collect();
+        // availability: attached group-time over total group-time --
+        // repairs cost their repair window, an unrepaired detach bleeds
+        // until the trace ends
+        let total_groups: usize =
+            self.models.iter().map(|m| m.groups.len()).sum();
+        let mut down_total = 0.0f64;
+        for m in 0..n_models {
+            for g in 0..fstate.detached[m].len() {
+                down_total += fstate.downtime[m][g];
+                if fstate.detached[m][g] {
+                    down_total +=
+                        (last_completion - fstate.detach_at[m][g]).max(0.0);
+                }
+            }
+        }
+        let availability = if total_groups == 0 {
+            1.0
+        } else {
+            (1.0 - down_total / (total_groups as f64 * span))
+                .clamp(0.0, 1.0)
+        };
         let report = ServeReport {
             requests: requests.len(),
             batches: pending.len(),
@@ -335,8 +552,92 @@ impl ChipFleet {
                 })
                 .collect(),
             fleet: Scheduler::fleet_report(&all_group_busy, requests.len()),
+            faults_injected: fstate.faults_injected,
+            failovers,
+            repairs: fstate.repairs,
+            repair_ns: fstate.repair_ns,
+            availability,
         };
         Ok((responses, report, trace))
+    }
+
+    /// Least-loaded routing among ATTACHED replica groups:
+    /// earliest-free group, lowest index on ties; `None` when every
+    /// group is detached.
+    fn pick_group(&self, _mi: usize, free_at: &[f64], detached: &[bool])
+                  -> Option<usize> {
+        (0..free_at.len())
+            .filter(|&g| !detached[g])
+            .min_by(|&a, &b| {
+                free_at[a].total_cmp(&free_at[b]).then(a.cmp(&b))
+            })
+    }
+
+    /// Apply one scheduled fault at virtual time `t_ns`: latch the
+    /// hardware fault, stamp the telemetry event, and -- if the owning
+    /// replica group can no longer serve -- either run an online repair
+    /// (pushing the group's free time past the modelled repair window)
+    /// or detach the group for the rest of the trace.  Returns the
+    /// `(model, group)` the fault made unhealthy, if any.
+    fn inject_fault(
+        &mut self,
+        t_ns: u64,
+        kind: &FaultKind,
+        free_at: &mut [Vec<f64>],
+        fstate: &mut FaultState,
+        tracing: bool,
+        trace: &mut Trace,
+    ) -> Result<Option<(usize, usize)>, String> {
+        let hit = self.apply_fault_event(kind);
+        fstate.faults_injected += 1;
+        if tracing {
+            let desc = trace.intern(&kind.describe());
+            trace.push(Event {
+                ts_ns: t_ns as f64,
+                dur_ns: 0.0,
+                chip: ROUTER_CHIP,
+                core: CHIP_LANE,
+                kind: EventKind::FaultInject {
+                    desc,
+                    chip: kind.chip() as u32,
+                },
+            });
+        }
+        if let Some((fm, fg)) = hit {
+            if fstate.repair {
+                let rep = self.reprogram_group(fm, fg)?;
+                // the repair's own Program spans are subsumed by the
+                // aggregate Repair event
+                let chip_ids = self.models[fm].groups[fg].chips.clone();
+                for &ci in &chip_ids {
+                    self.chips[ci].telemetry.drain();
+                }
+                let rs = free_at[fm][fg].max(t_ns as f64);
+                free_at[fm][fg] = rs + rep.repair_ns;
+                fstate.downtime[fm][fg] += rep.repair_ns;
+                fstate.repairs += 1;
+                fstate.repair_ns += rep.repair_ns;
+                if tracing {
+                    let model = trace.intern(&rep.model);
+                    trace.push(Event {
+                        ts_ns: rs,
+                        dur_ns: rep.repair_ns,
+                        chip: ROUTER_CHIP,
+                        core: CHIP_LANE,
+                        kind: EventKind::Repair {
+                            model,
+                            group: fg as u32,
+                            pulses: rep.pulses,
+                            energy_pj: rep.energy_pj,
+                        },
+                    });
+                }
+            } else if !fstate.detached[fm][fg] {
+                fstate.detached[fm][fg] = true;
+                fstate.detach_at[fm][fg] = t_ns as f64;
+            }
+        }
+        Ok(hit)
     }
 
     /// Reset a group's dispatch state + energy counters ahead of one

@@ -80,7 +80,10 @@ fn main() {
                  infer-speech   LSTM voice-command inference (recurrent dataflow)\n\
                  recover-image  RBM Gibbs image recovery (bidirectional dataflow)\n\
                  serve-bench    multi-chip fleet load generator (--chips N\n\
-                                --requests M --mix mnist:cifar:speech)\n\
+                                --requests M --mix mnist:cifar:speech;\n\
+                                --faults chip:1@50% injects faults, --repair\n\
+                                repairs detached groups online, --age NS\n\
+                                pre-ages conductances to virtual time NS)\n\
                  trace-summary  digest a --trace export (slowest layers,\n\
                                 utilization, queueing-vs-service)\n\
                  runtime-check  PJRT artifact execution vs golden vectors\n\

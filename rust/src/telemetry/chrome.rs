@@ -97,6 +97,29 @@ fn describe(trace: &Trace, e: &Event) -> (&'static str, String, Json) {
                 ("wait_ns", Json::Num(wait_ns)),
             ]),
         ),
+        EventKind::FaultInject { desc, chip } => (
+            "fault",
+            format!("fault:{}", trace.name(desc)),
+            obj(vec![("chip", Json::Num(chip as f64))]),
+        ),
+        EventKind::Failover { workload, seq, from_group, to_group } => (
+            "failover",
+            format!("failover:{}", trace.name(workload)),
+            obj(vec![
+                ("seq", Json::Num(seq as f64)),
+                ("from_group", Json::Num(from_group as f64)),
+                ("to_group", Json::Num(to_group as f64)),
+            ]),
+        ),
+        EventKind::Repair { model, group, pulses, energy_pj } => (
+            "repair",
+            format!("repair:{}", trace.name(model)),
+            obj(vec![
+                ("group", Json::Num(group as f64)),
+                ("pulses", Json::Num(pulses as f64)),
+                ("energy_pj", Json::Num(energy_pj)),
+            ]),
+        ),
     }
 }
 

@@ -82,6 +82,15 @@ pub enum EventKind {
     /// One request's lifecycle: span = arrival -> completion, with the
     /// queueing share in `wait_ns`.
     Request { workload: NameId, request: u32, wait_ns: f64 },
+    /// A fault-plan entry firing at its virtual timestamp (router
+    /// event; `desc` interns the fault spec, e.g. `"chip:1"`).
+    FaultInject { desc: NameId, chip: u32 },
+    /// An in-flight batch re-routed off a failed replica group onto a
+    /// surviving one (router event; span = the re-executed batch).
+    Failover { workload: NameId, seq: u32, from_group: u32, to_group: u32 },
+    /// Online repair of a degraded replica group (router event; span =
+    /// the repair window charged into the virtual-time loop).
+    Repair { model: NameId, group: u32, pulses: u64, energy_pj: f64 },
 }
 
 /// One span on the virtual timeline.  `chip`/`core` address the lane
@@ -246,6 +255,19 @@ fn remap(kind: EventKind, map: &[NameId]) -> EventKind {
         EventKind::Request { workload, request, wait_ns } => {
             EventKind::Request {
                 workload: map[workload as usize], request, wait_ns,
+            }
+        }
+        EventKind::FaultInject { desc, chip } => {
+            EventKind::FaultInject { desc: map[desc as usize], chip }
+        }
+        EventKind::Failover { workload, seq, from_group, to_group } => {
+            EventKind::Failover {
+                workload: map[workload as usize], seq, from_group, to_group,
+            }
+        }
+        EventKind::Repair { model, group, pulses, energy_pj } => {
+            EventKind::Repair {
+                model: map[model as usize], group, pulses, energy_pj,
             }
         }
     }

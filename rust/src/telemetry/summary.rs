@@ -43,6 +43,13 @@ pub struct SummaryReport {
     pub wait_us: f64,
     /// Total on-chip service time across requests (us).
     pub service_us: f64,
+    /// Degradation window: fault injections, failover re-routes and
+    /// repair spans observed in the trace.
+    pub faults: u64,
+    pub failovers: u64,
+    pub repairs: u64,
+    /// Total repair time charged into the virtual-time loop (us).
+    pub repair_us: f64,
 }
 
 fn num(j: &Json, k: &str) -> f64 {
@@ -85,6 +92,10 @@ pub fn analyze(doc: &Json, top_n: usize) -> Result<SummaryReport, String> {
     let mut requests = 0u64;
     let mut wait_us = 0.0;
     let mut latency_us = 0.0;
+    let mut faults = 0u64;
+    let mut failovers = 0u64;
+    let mut repairs = 0u64;
+    let mut repair_us = 0.0;
     for e in events {
         if e["ph"].as_str() != Some("X") {
             continue;
@@ -111,6 +122,16 @@ pub fn analyze(doc: &Json, top_n: usize) -> Result<SummaryReport, String> {
                 requests += 1;
                 wait_us += num(&e["args"], "wait_ns") / 1000.0;
                 latency_us += dur;
+            }
+            Some("fault") => {
+                faults += 1;
+            }
+            Some("failover") => {
+                failovers += 1;
+            }
+            Some("repair") => {
+                repairs += 1;
+                repair_us += dur;
             }
             _ => {}
         }
@@ -164,6 +185,10 @@ pub fn analyze(doc: &Json, top_n: usize) -> Result<SummaryReport, String> {
         requests,
         wait_us,
         service_us: (latency_us - wait_us).max(0.0),
+        faults,
+        failovers,
+        repairs,
+        repair_us,
     })
 }
 
@@ -210,6 +235,36 @@ mod tests {
         assert_eq!(rep.requests, 1);
         assert!((rep.wait_us - 4.0).abs() < 1e-12);
         assert!((rep.service_us - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn digests_degradation_windows() {
+        let mut t = Trace::new();
+        let d = t.intern("chip:1");
+        let wl = t.intern("mnist");
+        t.push(Event {
+            ts_ns: 5_000.0, dur_ns: 0.0, chip: ROUTER_CHIP, core: CHIP_LANE,
+            kind: EventKind::FaultInject { desc: d, chip: 1 },
+        });
+        t.push(Event {
+            ts_ns: 5_000.0, dur_ns: 2_000.0, chip: ROUTER_CHIP,
+            core: CHIP_LANE,
+            kind: EventKind::Failover {
+                workload: wl, seq: 3, from_group: 1, to_group: 0,
+            },
+        });
+        t.push(Event {
+            ts_ns: 9_000.0, dur_ns: 12_000.0, chip: ROUTER_CHIP,
+            core: CHIP_LANE,
+            kind: EventKind::Repair {
+                model: wl, group: 1, pulses: 4_000, energy_pj: 8.0e6,
+            },
+        });
+        let rep = analyze(&chrome_trace(&t, &[], &[]), 5).unwrap();
+        assert_eq!(rep.faults, 1);
+        assert_eq!(rep.failovers, 1);
+        assert_eq!(rep.repairs, 1);
+        assert!((rep.repair_us - 12.0).abs() < 1e-12);
     }
 
     #[test]

@@ -66,6 +66,8 @@ impl ChipConfig {
             get_f64(d, "relax_sigma_peak_us", &mut c.device.relax_sigma_peak_us);
             get_f64(d, "read_sigma_us", &mut c.device.read_sigma_us);
             get_f64(d, "pulse_sigma", &mut c.device.pulse_sigma);
+            get_f64(d, "retention_tau_s", &mut c.device.retention_tau_s);
+            get_f64(d, "endurance_cycles", &mut c.device.endurance_cycles);
         }
         if let Some(w) = j.get("write_verify") {
             get_f64(w, "accept_us", &mut c.write_verify.accept_us);
@@ -104,6 +106,10 @@ impl ChipConfig {
         device.insert("g_max_us".into(), Json::Num(self.device.g_max_us));
         device.insert("relax_sigma_peak_us".into(),
                       Json::Num(self.device.relax_sigma_peak_us));
+        device.insert("retention_tau_s".into(),
+                      Json::Num(self.device.retention_tau_s));
+        device.insert("endurance_cycles".into(),
+                      Json::Num(self.device.endurance_cycles));
         let mut wv = BTreeMap::new();
         wv.insert("accept_us".into(), Json::Num(self.write_verify.accept_us));
         wv.insert("iterations".into(),

@@ -6,8 +6,9 @@
 use neurram::coordinator::mapping::MappingStrategy;
 use neurram::coordinator::{DispatchTarget, NeuRramChip};
 use neurram::core_sim::{Activation, NeuronConfig};
-use neurram::fleet::{BatchPolicy, ChipFleet, Payload, Request, Response,
-                     Workload, WorkloadKind};
+use neurram::fleet::{BatchPolicy, ChipFleet, FaultConfig, FaultPlan,
+                     Payload, Request, Response, ServeReport, Workload,
+                     WorkloadKind};
 use neurram::models::graph::{LayerSpec, ModelGraph};
 use neurram::models::ConductanceMatrix;
 use neurram::util::rng::Rng;
@@ -155,6 +156,95 @@ fn prop_fleet_serial_equals_concurrent() {
     let groups: std::collections::BTreeSet<usize> =
         multi_1t.iter().map(|r| r.group).collect();
     assert!(groups.len() > 1, "3 replica groups never shared the load");
+}
+
+/// Serve the standard trace with chip 1 killed halfway through the
+/// arrival span (22.5 us into the 45 us trace).
+fn serve_faulted(chips: usize, threads: usize, repair: bool)
+                 -> (Vec<Response>, ServeReport) {
+    let (mut fleet, workloads) = build_fleet(chips, threads);
+    let policy = BatchPolicy { max_batch: 3, max_wait_ns: 20_000 };
+    let faults = FaultConfig {
+        plan: FaultPlan::parse("chip:1@50%").unwrap(),
+        repair,
+    };
+    fleet
+        .serve_with_faults(&workloads, &trace(), &policy, &faults)
+        .unwrap()
+}
+
+#[test]
+fn prop_failover_preserves_outputs_and_service_times() {
+    // A mid-trace chip loss detaches one replica group; every request
+    // still completes, re-routed to the survivors, and because batch
+    // noise is trace-addressed and re-execution reuses the SAME batch
+    // seed, outputs + per-request service times stay bitwise identical
+    // to a clean single-chip run -- across chip counts (2 vs 3: the
+    // 2-chip fleet degrades to single-group operation) and across
+    // NEURRAM_THREADS (1 vs 4).
+    let base = serve(1, 1);
+    let t_fault = 22_500.0; // 50% of the 45 us arrival span
+    for (chips, threads) in [(2usize, 1usize), (2, 4), (3, 1), (3, 4)] {
+        let (got, rep) = serve_faulted(chips, threads, false);
+        let ctx = format!("{chips} chips @ {threads} threads");
+        assert_eq!(got.len(), base.len(), "{ctx}: none dropped");
+        assert_eq!(rep.faults_injected, 1, "{ctx}");
+        assert!(rep.availability < 1.0,
+                "{ctx}: a detached group must dent availability");
+        for (r, r0) in got.iter().zip(&base) {
+            assert_vec_bits_eq(&r.output, &r0.output,
+                               &format!("{ctx}: request {}", r.request));
+            assert_eq!(r.chip_ns.to_bits(), r0.chip_ns.to_bits(),
+                       "{ctx}: request {} service time", r.request);
+            assert_eq!(r.batch, r0.batch,
+                       "{ctx}: request {} batch assignment", r.request);
+        }
+        // nothing completes on the dead group after the fault fires
+        for r in &got {
+            if r.group == 1 {
+                let arrival = trace()[r.request].arrival_ns as f64;
+                assert!(arrival + r.latency_ns <= t_fault,
+                        "{ctx}: request {} finished on the dead group \
+                         after the fault", r.request);
+            }
+        }
+    }
+    // fixed-shape thread invariance of the full fault bookkeeping
+    let (a, ra) = serve_faulted(3, 1, false);
+    let (b, rb) = serve_faulted(3, 4, false);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.latency_ns.to_bits(), y.latency_ns.to_bits(),
+                   "faulted latency must be thread-invariant");
+        assert_eq!(x.wait_ns.to_bits(), y.wait_ns.to_bits());
+        assert_eq!(x.group, y.group);
+    }
+    assert_eq!(ra.failovers, rb.failovers);
+    assert_eq!(ra.availability.to_bits(), rb.availability.to_bits());
+}
+
+#[test]
+fn online_repair_reattaches_and_charges_the_clock() {
+    let (responses, rep) = serve_faulted(2, 1, true);
+    assert_eq!(responses.len(), 10, "repairing run drops nothing");
+    assert_eq!(rep.faults_injected, 1);
+    assert_eq!(rep.repairs, 1, "chip loss must trigger one repair");
+    assert!(rep.repair_ns > 0.0, "write-verify repair is not free");
+    assert!(rep.availability < 1.0,
+            "the repair window must dent availability");
+}
+
+#[test]
+fn serve_fails_with_e014_when_every_group_is_dead() {
+    let (mut fleet, workloads) = build_fleet(2, 1);
+    let policy = BatchPolicy { max_batch: 3, max_wait_ns: 20_000 };
+    let faults = FaultConfig {
+        plan: FaultPlan::parse("chip:0@0,chip:1@0").unwrap(),
+        repair: false,
+    };
+    let err = fleet
+        .serve_with_faults(&workloads, &trace(), &policy, &faults)
+        .unwrap_err();
+    assert!(err.contains("E014_GROUP_DETACHED"), "{err}");
 }
 
 #[test]

@@ -23,9 +23,10 @@
 //!
 //! `bench-compare <prev-dir> [cur-dir]` ratchets the perf trajectory:
 //! it reads the previous CI run's `BENCH_hotpath.json` /
-//! `BENCH_fleet.json` artifacts from `<prev-dir>` and fails (exit 1) if
-//! the current run's throughput dropped more than 10% on any ratcheted
-//! metric.  A missing previous artifact (first run, expired retention)
+//! `BENCH_fleet.json` / `BENCH_reliability.json` artifacts from
+//! `<prev-dir>` and fails (exit 1) if the current run's throughput (or
+//! fleet availability under the chip-loss plan) dropped more than 10%
+//! on any ratcheted metric.  A missing previous artifact (first run, expired retention)
 //! or a quick/full mode mismatch passes with a notice.
 
 use std::path::{Path, PathBuf};
@@ -250,6 +251,14 @@ const RATCHETS: &[Ratchet] = &[
         file: "BENCH_fleet.json",
         key: "requests_per_s",
         array: true,
+    },
+    // fleet availability under the chip-loss fault plan: higher is
+    // better, so a router/repair regression that lengthens the outage
+    // window fails CI like a throughput drop would
+    Ratchet {
+        file: "BENCH_reliability.json",
+        key: "availability",
+        array: false,
     },
 ];
 
