@@ -113,6 +113,35 @@ fn main() {
     record.nums("policy_requests_per_s", &pol_req_s);
     record.nums("policy_p99_latency_ns", &pol_p99);
 
+    println!("== co-residency: two MNIST tenants sharing 2 chips ==");
+    let mut sf = presets::build_co_resident_fleet(2, PAPER_CORES, seed, true)
+        .expect("co-resident fleet builds");
+    let co_mix = presets::co_resident_mix();
+    let co_trace =
+        presets::request_trace(&sf.workloads, &co_mix, requests, 0, seed)
+            .expect("co-resident trace builds");
+    let (_, co_rep) = sf
+        .fleet
+        .serve(&sf.workloads, &co_trace, &policy)
+        .expect("co-resident serve succeeds");
+    // per-tenant modelled throughput over the shared fleet span
+    let mut tenant_rps = Vec::new();
+    for (name, _) in &co_mix {
+        let n = co_trace.iter().filter(|r| &r.workload == name).count();
+        let rps = n as f64 * 1e9 / co_rep.span_ns;
+        println!("  tenant {name}: {n} request(s), {rps:>9.1} requests/s \
+                  modelled");
+        assert!(rps > 0.0, "tenant {name} served nothing");
+        tenant_rps.push(rps);
+    }
+    println!(
+        "  fleet: {:.1} requests/s total over {} group(s), p99 {:.3} ms",
+        co_rep.requests_per_s,
+        co_rep.fleet.groups,
+        co_rep.p99_latency_ns / 1e6
+    );
+    record.nums("tenant_requests_per_s", &tenant_rps);
+
     RunMeta::capture(*chip_counts.last().unwrap(), seed).stamp(&mut record);
     record
         .write("BENCH_fleet.json")

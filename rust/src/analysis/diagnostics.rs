@@ -51,6 +51,13 @@ pub enum DiagCode {
     /// Routing state references a detached or unhealthy replica group
     /// (fault injection detached it and no repair re-attached it).
     E014GroupDetached,
+    /// Two TENANTS' placements share physical cells on one core (the
+    /// co-resident twin of `E001`: overlap between two independently
+    /// planned models, not within one plan).
+    E015CrossTenantOverlap,
+    /// A `ModelHandle` no longer resolves to the model it was issued
+    /// for (index out of range, or the slot holds a different model).
+    E016DanglingHandle,
     /// Replicas of one layer share a core (legal but serializes the
     /// data parallelism they exist to provide).
     W101ReplicaSharedCore,
@@ -77,6 +84,8 @@ impl DiagCode {
             DiagCode::E012ChipBudget => "E012_CHIP_BUDGET",
             DiagCode::E013InputArity => "E013_INPUT_ARITY",
             DiagCode::E014GroupDetached => "E014_GROUP_DETACHED",
+            DiagCode::E015CrossTenantOverlap => "E015_CROSS_TENANT_OVERLAP",
+            DiagCode::E016DanglingHandle => "E016_DANGLING_HANDLE",
             DiagCode::W101ReplicaSharedCore => "W101_REPLICA_SHARED_CORE",
             DiagCode::W102UnplacedMatrix => "W102_UNPLACED_MATRIX",
         }
@@ -215,6 +224,13 @@ mod tests {
         assert_eq!(DiagCode::E014GroupDetached.as_str(),
                    "E014_GROUP_DETACHED");
         assert_eq!(DiagCode::E014GroupDetached.severity(), Severity::Error);
+        assert_eq!(DiagCode::E015CrossTenantOverlap.as_str(),
+                   "E015_CROSS_TENANT_OVERLAP");
+        assert_eq!(DiagCode::E015CrossTenantOverlap.severity(),
+                   Severity::Error);
+        assert_eq!(DiagCode::E016DanglingHandle.as_str(),
+                   "E016_DANGLING_HANDLE");
+        assert_eq!(DiagCode::E016DanglingHandle.severity(), Severity::Error);
     }
 
     #[test]

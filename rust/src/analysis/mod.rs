@@ -13,6 +13,6 @@ pub mod verify;
 
 pub use diagnostics::{DiagCode, Diagnostic, PlanError, Severity};
 pub use verify::{
-    fail_on_errors, verify_graph, verify_local, verify_model, verify_route,
-    verify_shards,
+    fail_on_errors, verify_co_residency, verify_graph, verify_handle,
+    verify_local, verify_model, verify_route, verify_shards,
 };

@@ -575,6 +575,75 @@ pub fn verify_route(
     diags
 }
 
+/// E015: a NEW tenant's placements must not share physical cells with
+/// the placements already programmed on a chip.  This is the
+/// co-residency twin of the E001 check in [`verify_local`]: E001 guards
+/// one plan against itself, E015 guards two independently planned
+/// models against each other.  `NeuRramChip::program_plan_co_resident`
+/// gates on it before any cell of the new tenant programs.
+pub fn verify_co_residency(
+    existing: &[SegmentPlacement],
+    incoming: &[SegmentPlacement],
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for (i, a) in existing.iter().enumerate() {
+        for (j, b) in incoming.iter().enumerate() {
+            if a.core != b.core || degenerate(a) || degenerate(b) {
+                continue;
+            }
+            let rows_dj = a.phys_rows().end <= b.phys_rows().start
+                || b.phys_rows().end <= a.phys_rows().start;
+            let cols_dj = a.phys_cols().end <= b.phys_cols().start
+                || b.phys_cols().end <= a.phys_cols().start;
+            if !rows_dj && !cols_dj {
+                diags.push(Diagnostic::new(
+                    DiagCode::E015CrossTenantOverlap,
+                    format!("{}[{i}] vs {}[{j}]", a.segment.layer,
+                            b.segment.layer),
+                    format!(
+                        "tenant windows overlap on core {}: pair rows \
+                         {:?}/{:?}, cols {:?}/{:?}",
+                        a.core,
+                        a.phys_rows(),
+                        b.phys_rows(),
+                        a.phys_cols(),
+                        b.phys_cols()
+                    ),
+                ));
+            }
+        }
+    }
+    diags
+}
+
+/// E016: a `ModelHandle` must still resolve to the model it was issued
+/// for.  `models` is the fleet's model-name list in placement order; a
+/// handle dangles when its index is out of range or the slot holds a
+/// different model (e.g. a handle kept across a fleet rebuild).
+pub fn verify_handle(
+    id: usize,
+    name: &str,
+    models: &[&str],
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    match models.get(id) {
+        None => diags.push(Diagnostic::new(
+            DiagCode::E016DanglingHandle,
+            name,
+            format!("handle #{id} for model {name} exceeds the fleet's \
+                     {} model(s)", models.len()),
+        )),
+        Some(&have) if have != name => diags.push(Diagnostic::new(
+            DiagCode::E016DanglingHandle,
+            name,
+            format!("handle #{id} was issued for model {name} but the \
+                     slot now holds {have}"),
+        )),
+        Some(_) => {}
+    }
+    diags
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -939,5 +1008,44 @@ mod tests {
         let d = verify_route("edge", 2, false, &dead);
         assert_eq!(d.len(), 1);
         assert!(d[0].message.contains("dead core"));
+    }
+
+    #[test]
+    fn e015_flags_only_cross_tenant_cell_overlap() {
+        // tenant A holds a 64x64 window at (0, 0) on core 0
+        let a = vec![place("a::fc", 64, 64, 0)];
+        // disjoint columns on the same core: legal co-residency
+        let mut ok = vec![place("b::fc", 64, 64, 0)];
+        ok[0].core_col_off = 64;
+        assert!(verify_co_residency(&a, &ok).is_empty());
+        // a different core never overlaps
+        let other = vec![place("b::fc", 64, 64, 1)];
+        assert!(verify_co_residency(&a, &other).is_empty());
+        // overlapping rows AND columns: E015
+        let mut bad = vec![place("b::fc", 64, 64, 0)];
+        bad[0].core_row_off = 32;
+        let d = verify_co_residency(&a, &bad);
+        assert_eq!(codes(&d), vec![DiagCode::E015CrossTenantOverlap],
+                   "{d:?}");
+        assert!(d[0].span.contains("a::fc"), "{:?}", d[0].span);
+        assert!(d[0].span.contains("b::fc"), "{:?}", d[0].span);
+        assert!(fail_on_errors(d).is_err());
+    }
+
+    #[test]
+    fn e016_flags_dangling_handles() {
+        let models = ["edge", "cifar"];
+        // a live handle resolves silently
+        assert!(verify_handle(1, "cifar", &models).is_empty());
+        // index past the model list
+        let d = verify_handle(2, "ghost", &models);
+        assert_eq!(codes(&d), vec![DiagCode::E016DanglingHandle]);
+        assert!(d[0].message.contains("exceeds"), "{}", d[0].message);
+        // slot reused by a different model
+        let d = verify_handle(0, "cifar", &models);
+        assert_eq!(codes(&d), vec![DiagCode::E016DanglingHandle]);
+        assert!(d[0].message.contains("now holds edge"), "{}",
+                d[0].message);
+        assert!(fail_on_errors(d).is_err());
     }
 }

@@ -14,6 +14,12 @@
 //! `--interval-us 0` (default) is the closed-loop saturation trace:
 //! every request arrives at t = 0, so requests/s measures fleet
 //! capacity and must scale with `--chips` on a replicated mix.
+//! `--arrivals poisson:<rate>` swaps the fixed cadence for a
+//! deterministic open-loop Poisson process at `<rate>` requests/s
+//! (seeded; overrides `--interval-us`), so p50/p99 under overload are
+//! measurable.  `--co-resident` replaces the mix with the multi-tenant
+//! demo: two independent MNIST models -- same layer names, different
+//! weights -- sharing chips via `program_model_co_resident`.
 //! `--quick` is the CI smoke preset (2 chips, 24 requests, width-8
 //! CIFAR).  All serving time is VIRTUAL (modelled chip ns), so the
 //! numbers are bitwise reproducible on any host at any thread count;
@@ -69,11 +75,34 @@ pub fn run(args: &Args) -> Result<()> {
         repair: args.flag("repair"),
     };
     let age_ns = args.u64_or("age", 0)?;
+    let co_resident = args.flag("co-resident");
+    let poisson_rate = match args.get_or("arrivals", "fixed") {
+        "fixed" => None,
+        s => {
+            let rate = s
+                .strip_prefix("poisson:")
+                .and_then(|r| r.parse::<f64>().ok())
+                .filter(|&r| r > 0.0)
+                .ok_or_else(|| anyhow::anyhow!(
+                    "--arrivals takes `fixed` or `poisson:<rate per s>`, \
+                     got {s}"
+                ))?;
+            Some(rate)
+        }
+    };
 
-    let mix = presets::parse_mix(mix_spec).map_err(anyhow::Error::msg)?;
-    let mut sf = presets::build_serving_fleet(chips, PAPER_CORES, &mix,
+    let (mix, mut sf) = if co_resident {
+        let sf = presets::build_co_resident_fleet(chips, PAPER_CORES, seed,
+                                                  quick)
+            .map_err(anyhow::Error::msg)?;
+        (presets::co_resident_mix(), sf)
+    } else {
+        let mix = presets::parse_mix(mix_spec).map_err(anyhow::Error::msg)?;
+        let sf = presets::build_serving_fleet(chips, PAPER_CORES, &mix,
                                               seed, quick)
-        .map_err(anyhow::Error::msg)?;
+            .map_err(anyhow::Error::msg)?;
+        (mix, sf)
+    };
     // --threads n overrides NEURRAM_THREADS on every chip; 0/absent
     // keeps the resolved default (outputs identical either way)
     match args.usize_or("threads", 0)? {
@@ -101,19 +130,27 @@ pub fn run(args: &Args) -> Result<()> {
                   (retention drift applied before serving)");
     }
 
-    let trace = presets::request_trace(&sf.workloads, &mix, requests,
-                                       interval_ns, seed)
+    let mut trace = presets::request_trace(&sf.workloads, &mix, requests,
+                                           interval_ns, seed)
         .map_err(anyhow::Error::msg)?;
+    if let Some(rate) = poisson_rate {
+        presets::poissonize_trace(&mut trace, rate, seed);
+    }
+    let mix_desc = if co_resident {
+        "mnist+mnist2 (co-resident tenants)".to_string()
+    } else {
+        mix_spec.to_string()
+    };
     println!(
-        "serving {requests} request(s) over {} chip(s): mix {mix_spec}, \
+        "serving {requests} request(s) over {} chip(s): mix {mix_desc}, \
          max-batch {}, max-wait {} us, {}",
         chips,
         policy.max_batch,
         policy.max_wait_ns / 1000,
-        if interval_ns == 0 {
-            "closed-loop burst".to_string()
-        } else {
-            format!("open-loop every {} us", interval_ns / 1000)
+        match poisson_rate {
+            Some(rate) => format!("open-loop Poisson at {rate} requests/s"),
+            None if interval_ns == 0 => "closed-loop burst".to_string(),
+            None => format!("open-loop every {} us", interval_ns / 1000),
         },
     );
 

@@ -58,6 +58,26 @@ pub fn run(args: &neurram::util::cli::Args) -> Result<()> {
     println!("imbalance: {:.2}x max-over-mean busy across {} lane(s)",
              rep.imbalance, rep.lanes.len());
 
+    // the per-tenant view only earns its table once more than one
+    // bucket exists (single-tenant traces collapse to one row; traces
+    // without model tags collapse to "untagged")
+    if rep.tenants.len() > 1 {
+        section("per-tenant breakdown");
+        let rows: Vec<Vec<String>> = rep
+            .tenants
+            .iter()
+            .map(|t| {
+                vec![
+                    t.model.clone(),
+                    t.requests.to_string(),
+                    format!("{:.3}", t.wait_us / 1e3),
+                    format!("{:.3}", t.mvm_us / 1e3),
+                ]
+            })
+            .collect();
+        table(&["tenant", "requests", "queueing ms", "mvm busy ms"], &rows);
+    }
+
     if rep.requests > 0 {
         section("latency breakdown");
         let total = rep.wait_us + rep.service_us;

@@ -37,8 +37,11 @@
 //!   `prop_parallel_dispatch_bitwise_equals_serial` across thread
 //!   counts).
 
-use super::mapping::{plan, MappingPlan, MappingStrategy};
-use crate::analysis::{fail_on_errors, verify_local, verify_model, PlanError};
+use super::mapping::{plan, plan_co_resident, MappingPlan, MappingStrategy,
+                     SegmentPlacement};
+use crate::analysis::diagnostics::DiagCode;
+use crate::analysis::{fail_on_errors, verify_co_residency, verify_local,
+                      verify_model, PlanError};
 use crate::core_sim::{Activation, CimCore, MvmDirection, NeuronConfig};
 use crate::device::{DeviceParams, ProgramStats, WriteVerifyConfig};
 use crate::energy::{EnergyCounters, EnergyModel, EnergyParams, MvmCost};
@@ -345,9 +348,116 @@ impl NeuRramChip {
                 cleared[pl.core] = true;
             }
         }
+        let stats = self.program_placements(&p.placements, &matrices,
+                                            write_verify, 0);
+        self.plan = p;
+        self.matrices = matrices;
+        Ok(stats)
+    }
+
+    /// Program an ADDITIONAL tenant's plan beside whatever the chip
+    /// already hosts.  The additive twin of [`NeuRramChip::program_plan`]:
+    /// instead of RESET-sweeping every planned core and replacing the
+    /// plan wholesale, it
+    ///
+    /// 1. verifies the incoming plan locally (same gate as
+    ///    `program_plan`),
+    /// 2. rejects chip-level layer-key collisions (tenants must arrive
+    ///    with qualified `model::layer` keys) and any cell overlap with
+    ///    an existing tenant's windows ([`verify_co_residency`], E015),
+    /// 3. RESET-sweeps only cores NO existing placement touches --
+    ///    resident tenants' conductances (and any post-program
+    ///    calibration they carry) stay untouched,
+    /// 4. programs the new windows in placement order and EXTENDS the
+    ///    merged plan/matrix set.
+    ///
+    /// Telemetry `Program` events number placements after the resident
+    /// ones, matching their indices in the merged plan.
+    pub fn program_plan_co_resident(
+        &mut self,
+        p: MappingPlan,
+        matrices: Vec<ConductanceMatrix>,
+        write_verify: bool,
+    ) -> Result<Vec<ProgramStats>, PlanError> {
+        fail_on_errors(verify_local(&p, &matrices, self.cores.len()))?;
+        for m in &matrices {
+            if self.matrix(&m.layer).is_some() {
+                return Err(PlanError::single(
+                    DiagCode::E008DuplicateLayer,
+                    m.layer.clone(),
+                    format!(
+                        "chip already hosts a region keyed {:?}; tenants \
+                         must program under qualified model::layer keys",
+                        m.layer
+                    ),
+                ));
+            }
+        }
+        fail_on_errors(verify_co_residency(&self.plan.placements,
+                                           &p.placements))?;
+        let mut resident = vec![false; self.cores.len()];
+        for pl in &self.plan.placements {
+            resident[pl.core] = true;
+        }
+        let mut cleared = vec![false; self.cores.len()];
+        for pl in &p.placements {
+            if !resident[pl.core] && !cleared[pl.core] {
+                let core = &mut self.cores[pl.core];
+                core.clear_mapping();
+                core.set_nonidealities(
+                    crate::core_sim::CrossbarNonIdealities {
+                        ir_alpha: self.ir_alpha,
+                        coupling_sigma_v: 0.0,
+                    },
+                );
+                cleared[pl.core] = true;
+            }
+        }
+        let base = self.plan.placements.len();
+        let stats = self.program_placements(&p.placements, &matrices,
+                                            write_verify, base);
+        self.plan.placements.extend(p.placements);
+        self.plan.replicas.extend(p.replicas);
+        self.plan.cores_used = {
+            let mut used = vec![false; self.cores.len()];
+            for pl in &self.plan.placements {
+                used[pl.core] = true;
+            }
+            used.iter().filter(|&&u| u).count()
+        };
+        self.matrices.extend(matrices);
+        Ok(stats)
+    }
+
+    /// Plan + verify + program a new tenant into this chip's free cells
+    /// (planner: [`plan_co_resident`] against the resident placements).
+    pub fn program_model_co_resident(
+        &mut self,
+        matrices: Vec<ConductanceMatrix>,
+        intensity: &[f64],
+        write_verify: bool,
+    ) -> Result<Vec<ProgramStats>, PlanError> {
+        let p = plan_co_resident(&matrices, intensity, self.cores.len(),
+                                 &self.plan.placements)?;
+        fail_on_errors(verify_model(&p, &matrices, self.cores.len()))?;
+        self.program_plan_co_resident(p, matrices, write_verify)
+    }
+
+    /// The shared programming loop behind [`NeuRramChip::program_plan`]
+    /// and [`NeuRramChip::program_plan_co_resident`]: program each
+    /// placement's window in order (which fixes the region order and the
+    /// write-verify RNG draw order).  `placement_base` offsets telemetry
+    /// placement indices so co-resident tenants number after residents.
+    fn program_placements(
+        &mut self,
+        placements: &[SegmentPlacement],
+        matrices: &[ConductanceMatrix],
+        write_verify: bool,
+        placement_base: usize,
+    ) -> Vec<ProgramStats> {
         let record = self.telemetry.is_enabled();
         let mut stats = Vec::new();
-        for (pi, pl) in p.placements.iter().enumerate() {
+        for (pi, pl) in placements.iter().enumerate() {
             let m = matrices
                 .iter()
                 .find(|m| m.layer == pl.segment.layer)
@@ -393,16 +503,14 @@ impl NeuRramChip {
                     pl.core as u32,
                     EventKind::Program {
                         layer,
-                        placement: pi as u32,
+                        placement: (placement_base + pi) as u32,
                         cells,
                         pulses,
                     },
                 );
             }
         }
-        self.plan = p;
-        self.matrices = matrices;
-        Ok(stats)
+        stats
     }
 
     /// Re-program ONE layer's placements in place (all replicas),
@@ -1410,5 +1518,68 @@ mod tests {
         let e = chip.energy_counters();
         assert!(e.macs >= 256 * 16);
         assert!(e.busy_ns > 0.0);
+    }
+
+    #[test]
+    fn co_resident_tenant_leaves_resident_outputs_bitwise_intact() {
+        // tenant A programs first (write-verified, so its conductances
+        // carry programming noise); adding tenant B into the chip's free
+        // cells must not move a single bit of A's outputs, and B must
+        // execute under its own (colliding-before-qualification) name
+        let mut chip = NeuRramChip::with_cores(2, 9);
+        chip.program_model(vec![compiled("edge::fc", 64, 32, 2)], &[1.0],
+                           MappingStrategy::Packed, true)
+            .unwrap();
+        let cfg = NeuronConfig::default();
+        let xa: Vec<i32> = (0..64).map(|i| (i % 15) as i32 - 7).collect();
+        let ya_before = chip.mvm_layer("edge::fc", &xa, &cfg, 0);
+
+        chip.program_model_co_resident(vec![compiled("cifar::fc", 48, 16, 3)],
+                                       &[1.0], false)
+            .unwrap();
+        assert_eq!(chip.matrices.len(), 2);
+        let ya_after = chip.mvm_layer("edge::fc", &xa, &cfg, 0);
+        assert_eq!(ya_before, ya_after,
+                   "resident tenant drifted when a guest programmed");
+        let xb: Vec<i32> = (0..48).map(|i| ((i * 3) % 15) as i32 - 7).collect();
+        let yb = chip.mvm_layer("cifar::fc", &xb, &cfg, 0);
+        assert_eq!(yb.len(), 16);
+        assert!(yb.iter().any(|&v| v != 0.0), "guest tenant degenerate");
+    }
+
+    #[test]
+    fn co_resident_rejects_key_collisions_and_cell_overlap() {
+        use super::super::mapping::Segment;
+        let mut chip = NeuRramChip::with_cores(2, 11);
+        chip.program_model(vec![compiled("fc", 64, 32, 2)], &[1.0],
+                           MappingStrategy::Packed, false)
+            .unwrap();
+        // same chip-level key -> E008 (tenants must qualify their keys)
+        let e = chip
+            .program_model_co_resident(vec![compiled("fc", 8, 8, 4)], &[1.0],
+                                       false)
+            .unwrap_err();
+        assert!(e.has(DiagCode::E008DuplicateLayer), "{e}");
+        // a hand-built plan landing on the resident window -> E015
+        let m = compiled("g::x", 8, 8, 5);
+        let p = MappingPlan {
+            placements: vec![SegmentPlacement {
+                segment: Segment {
+                    layer: "g::x".into(),
+                    row_lo: 0,
+                    row_hi: 8,
+                    col_lo: 0,
+                    col_hi: 8,
+                },
+                core: 0,
+                core_row_off: 0,
+                core_col_off: 0,
+                replica: 0,
+            }],
+            cores_used: 1,
+            replicas: vec![("g::x".into(), 1)],
+        };
+        let e = chip.program_plan_co_resident(p, vec![m], false).unwrap_err();
+        assert!(e.has(DiagCode::E015CrossTenantOverlap), "{e}");
     }
 }

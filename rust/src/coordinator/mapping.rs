@@ -283,6 +283,78 @@ pub fn plan(
     strategy: MappingStrategy,
     num_cores: usize,
 ) -> Result<MappingPlan, PlanError> {
+    let states = vec![CoreState::default(); num_cores];
+    plan_with_states(matrices, intensity, strategy, states, false)
+}
+
+/// Plan a NEW tenant's matrices into the free cells of a chip that
+/// already hosts other tenants' placements (`existing`, chip-local).
+/// Always packs (`MappingStrategy::Packed`): the shelf first-fit is the
+/// only strategy that understands partially-free cores.  Each occupied
+/// core enters the packer as its placements' bounding box -- internal
+/// gaps inside another tenant's footprint are NOT reused, which keeps
+/// the reconstruction conservative: a window granted here can never
+/// overlap a cell any existing tenant programmed (the additive
+/// programming path re-checks via `verify_co_residency` / E015 anyway).
+pub fn plan_co_resident(
+    matrices: &[ConductanceMatrix],
+    intensity: &[f64],
+    num_cores: usize,
+    existing: &[SegmentPlacement],
+) -> Result<MappingPlan, PlanError> {
+    let states = occupied_states(existing, num_cores)?;
+    plan_with_states(matrices, intensity, MappingStrategy::Packed, states,
+                     true)
+}
+
+/// Reconstruct per-core packer states from already-programmed
+/// placements: each core's footprint is the bounding box of its
+/// windows, entered as one closed shelf (rows `[0, row_end)`, columns
+/// committed up to `col_end`).  New content can still sit BESIDE the
+/// box (columns past `col_end`) or BELOW it (rows past `row_end`),
+/// both provably disjoint from every existing window.
+fn occupied_states(
+    existing: &[SegmentPlacement],
+    num_cores: usize,
+) -> Result<Vec<CoreState>, PlanError> {
+    let mut states = vec![CoreState::default(); num_cores];
+    for p in existing {
+        if p.core >= num_cores {
+            return Err(PlanError::single(
+                DiagCode::E003CoreRange,
+                p.segment.layer.clone(),
+                format!("existing placement targets core {} but the chip \
+                         has {} cores", p.core, num_cores),
+            ));
+        }
+        let st = &mut states[p.core];
+        st.row_cursor = st.row_cursor.max(p.phys_rows().end);
+        st.max_col = st.max_col.max(p.phys_cols().end);
+    }
+    for st in &mut states {
+        if st.row_cursor > 0 || st.max_col > 0 {
+            st.shelves.push(Shelf {
+                row_off: 0,
+                rows: st.row_cursor,
+                col_cursor: st.max_col,
+            });
+        }
+    }
+    Ok(states)
+}
+
+/// The planning engine behind [`plan`] and [`plan_co_resident`]:
+/// `states` carries any pre-occupied core footprints and `packed_only`
+/// forces the shelf first-fit even when every segment would fit one
+/// empty core each (the enumeration path assumes empty cores).
+fn plan_with_states(
+    matrices: &[ConductanceMatrix],
+    intensity: &[f64],
+    strategy: MappingStrategy,
+    mut states: Vec<CoreState>,
+    packed_only: bool,
+) -> Result<MappingPlan, PlanError> {
+    let num_cores = states.len();
     if matrices.len() != intensity.len() {
         return Err(PlanError::single(
             DiagCode::E013InputArity,
@@ -300,9 +372,11 @@ pub fn plan(
     }
 
     let mut placements: Vec<SegmentPlacement> = Vec::new();
-    let mut states: Vec<CoreState> = vec![CoreState::default(); num_cores];
 
-    if all_segs.len() <= num_cores || strategy != MappingStrategy::Packed {
+    if !packed_only
+        && (all_segs.len() <= num_cores
+            || strategy != MappingStrategy::Packed)
+    {
         if all_segs.len() > num_cores {
             return Err(PlanError::single(
                 DiagCode::E012ChipBudget,
@@ -655,5 +729,67 @@ mod tests {
         let ms: Vec<ConductanceMatrix> =
             (0..4).map(|i| matrix(&format!("m{i}"), 128, 256)).collect();
         assert!(plan(&ms, &vec![1.0; 4], MappingStrategy::Packed, 2).is_err());
+    }
+
+    #[test]
+    fn co_resident_plan_uses_partially_free_cores() {
+        // tenant 1 occupies rows [0,64) x cols [0,128) of core 0; the
+        // guest's 32x64 window must pack beside it (disjoint columns)
+        // instead of demanding a fresh core -- even with a COLLIDING
+        // layer name, which the planner does not care about
+        let host = plan(&[matrix("fc", 64, 128)], &[1.0],
+                        MappingStrategy::Packed, 2)
+            .unwrap();
+        let guest = plan_co_resident(&[matrix("fc", 32, 64)], &[1.0], 2,
+                                     &host.placements)
+            .unwrap();
+        assert_eq!(guest.placements.len(), 1);
+        let g = &guest.placements[0];
+        assert_eq!(g.core, 0, "guest should share the host's core");
+        assert!(g.core_col_off >= 128 || g.core_row_off >= 64,
+                "guest must sit beside or below the host: {g:?}");
+        for h in &host.placements {
+            if h.core != g.core {
+                continue;
+            }
+            let rows_dj = h.phys_rows().end <= g.phys_rows().start
+                || g.phys_rows().end <= h.phys_rows().start;
+            let cols_dj = h.phys_cols().end <= g.phys_cols().start
+                || g.phys_cols().end <= h.phys_cols().start;
+            assert!(rows_dj || cols_dj, "overlap {h:?} vs {g:?}");
+        }
+    }
+
+    #[test]
+    fn co_resident_plan_overflows_to_next_core_and_errors_when_full() {
+        // tenant 1 fills core 0 completely; the guest lands on core 1,
+        // and a second full-array guest on a 1-core chip cannot fit
+        let host = plan(&[matrix("big", 128, 256)], &[1.0],
+                        MappingStrategy::Packed, 2)
+            .unwrap();
+        let guest = plan_co_resident(&[matrix("g", 64, 64)], &[1.0], 2,
+                                     &host.placements)
+            .unwrap();
+        assert_eq!(guest.placements[0].core, 1);
+
+        let host1 = plan(&[matrix("big", 128, 256)], &[1.0],
+                         MappingStrategy::Packed, 1)
+            .unwrap();
+        let e = plan_co_resident(&[matrix("g", 64, 64)], &[1.0], 1,
+                                 &host1.placements)
+            .unwrap_err();
+        assert!(e.has(DiagCode::E012ChipBudget), "{e}");
+    }
+
+    #[test]
+    fn co_resident_plan_rejects_out_of_range_existing() {
+        let host = plan(&[matrix("fc", 64, 128)], &[1.0],
+                        MappingStrategy::Packed, 4)
+            .unwrap();
+        let mut bad = host.placements.clone();
+        bad[0].core = 7;
+        let e = plan_co_resident(&[matrix("g", 8, 8)], &[1.0], 2, &bad)
+            .unwrap_err();
+        assert!(e.has(DiagCode::E003CoreRange), "{e}");
     }
 }

@@ -239,12 +239,14 @@ fn parse_kind(body: &str) -> Result<FaultKind, String> {
 }
 
 impl ChipFleet {
-    /// Apply one fault to the fleet hardware.  Returns the `(model,
-    /// group)` the fault detaches -- the owning replica group, if the
-    /// fault leaves it unable to serve (chip/core loss); stuck-at
-    /// columns return `None` (the group keeps serving, degraded).
+    /// Apply one fault to the fleet hardware.  Returns EVERY `(model,
+    /// group)` the fault detaches, in model-index order -- on a
+    /// co-resident chip one chip loss takes out each tenant's owning
+    /// group.  Only groups the fault leaves unable to serve (chip/core
+    /// loss) are returned; stuck-at columns return an empty list (the
+    /// groups keep serving, degraded).
     pub(crate) fn apply_fault_event(&mut self, kind: &FaultKind)
-                                    -> Option<(usize, usize)> {
+                                    -> Vec<(usize, usize)> {
         match *kind {
             FaultKind::ChipLoss { chip } => self.chips[chip].fail(),
             FaultKind::DeadCore { chip, core } => {
@@ -255,13 +257,21 @@ impl ChipFleet {
             }
         }
         let chip = kind.chip();
-        let owner = self.models.iter().enumerate().find_map(|(mi, m)| {
-            m.groups
-                .iter()
-                .position(|g| g.chips.contains(&chip))
-                .map(|g| (mi, g))
-        });
-        owner.filter(|&(mi, g)| !self.group_health_idx(mi, g).healthy())
+        let owners: Vec<(usize, usize)> = self
+            .models
+            .iter()
+            .enumerate()
+            .filter_map(|(mi, m)| {
+                m.groups
+                    .iter()
+                    .position(|g| g.chips.contains(&chip))
+                    .map(|g| (mi, g))
+            })
+            .collect();
+        owners
+            .into_iter()
+            .filter(|&(mi, g)| !self.group_health_idx(mi, g).healthy())
+            .collect()
     }
 
     /// Health of one replica group: the fold of its member chips'

@@ -1,0 +1,81 @@
+//! First-class model identity for multi-tenant fleets.
+//!
+//! A [`ModelHandle`] names one programmed model: a stable index into the
+//! fleet's model table plus the model's name.  Chip-level state is keyed
+//! by QUALIFIED layer keys (`model::layer`, built by [`layer_key`]), so
+//! two tenants may reuse the same bare layer names -- model names are
+//! fleet-unique, which makes the qualified keys chip-unique.  The fleet
+//! keeps each model's matrices and global plan under their BARE names
+//! and qualifies only at the chip boundary (programming and dispatch),
+//! so executors, verifiers and shard logic never see the prefix.
+//!
+//! [`split_key`] inverts the qualification; telemetry uses it to
+//! attribute per-core spans back to tenants (a key without a separator
+//! falls into the "untagged" bucket, keeping pre-handle traces
+//! readable).
+
+/// Separator between the model and layer parts of a qualified key.
+/// Bare layer names may not contain it (enforced at `program_model`).
+pub const KEY_SEP: &str = "::";
+
+/// A handle to one programmed model: the stable model index the fleet
+/// issued at `program_model` time, plus the model's (fleet-unique)
+/// name.  `verify_handle` (E016) checks a handle still resolves before
+/// the router trusts it.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ModelHandle {
+    /// Index into the fleet's model table.
+    pub id: usize,
+    /// The model's fleet-unique name.
+    pub name: String,
+}
+
+impl ModelHandle {
+    pub fn new(id: usize, name: impl Into<String>) -> ModelHandle {
+        ModelHandle { id, name: name.into() }
+    }
+
+    /// The qualified chip-level key of one of this model's layers.
+    pub fn key(&self, layer: &str) -> String {
+        layer_key(&self.name, layer)
+    }
+}
+
+impl std::fmt::Display for ModelHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}#{}", self.name, self.id)
+    }
+}
+
+/// Qualify a bare layer name with its owning model's name.
+pub fn layer_key(model: &str, layer: &str) -> String {
+    format!("{model}{KEY_SEP}{layer}")
+}
+
+/// Split a qualified key back into `(model, bare_layer)`.  Keys without
+/// the separator (pre-handle traces, single-chip runs) return `None`
+/// for the model part and the input unchanged as the layer.
+pub fn split_key(key: &str) -> (Option<&str>, &str) {
+    match key.split_once(KEY_SEP) {
+        Some((model, layer)) => (Some(model), layer),
+        None => (None, key),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_round_trip() {
+        let h = ModelHandle::new(2, "cifar");
+        assert_eq!(h.key("conv1"), "cifar::conv1");
+        assert_eq!(split_key("cifar::conv1"), (Some("cifar"), "conv1"));
+        assert_eq!(split_key("conv1"), (None, "conv1"));
+        // only the FIRST separator splits: bare layer names keep any
+        // embedded separators (legacy "cifar.conv1"-style names never
+        // contained one, but a nested qualifier must not re-split)
+        assert_eq!(split_key("a::b::c"), (Some("a"), "b::c"));
+        assert_eq!(h.to_string(), "cifar#2");
+    }
+}

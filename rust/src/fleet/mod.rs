@@ -45,17 +45,20 @@
 
 pub mod batcher;
 pub mod fault;
+pub mod handle;
 pub mod repair;
 pub mod replicate;
 pub mod router;
 
-pub use batcher::{coalesce, Batch, BatchPolicy};
+pub use batcher::{coalesce, poisson_arrivals, Batch, BatchPolicy};
 pub use fault::{FaultConfig, FaultKind, FaultPlan, FaultTime};
+pub use handle::{layer_key, split_key, ModelHandle, KEY_SEP};
 pub use repair::RepairReport;
 pub use replicate::{shard_plan, FleetPlacement};
 pub use router::{Payload, Request, Response, ServeReport, Workload,
                  WorkloadKind};
 
+use crate::analysis::{fail_on_errors, verify_handle, PlanError};
 use crate::coordinator::chip::{accumulate_backward, accumulate_forward};
 use crate::coordinator::{DispatchTarget, MappingPlan, NeuRramChip,
                          PlacementPartials, ReplicaBatch, TargetHealth};
@@ -82,8 +85,14 @@ pub(crate) struct ModelGroup {
     pub chips: Vec<usize>,
     /// Global placement indices hosted per chip, in each chip's local
     /// plan order (local placement `p` of `chips[s]` is global placement
-    /// `placements[s][p]`).
+    /// `placements[s][p - bases[s]]`).
     pub placements: Vec<Vec<usize>>,
+    /// Per-chip offset of THIS model's placements inside the chip's
+    /// merged local plan: a co-resident chip hosts earlier tenants'
+    /// placements first, so this model's run [`bases[s]`,
+    /// `bases[s] + placements[s].len()`).  All zeros on the
+    /// exclusive-chip path.
+    pub bases: Vec<usize>,
 }
 
 impl FleetModel {
@@ -166,8 +175,26 @@ impl ChipFleet {
         self.models.iter().position(|m| m.name == name)
     }
 
-    /// The unique model hosting `layer` (uniqueness enforced at
-    /// programming time, see `replicate`).
+    /// The handle of a placed model (its stable index + name).  This is
+    /// what the router routes by and what `verify_handle` (E016)
+    /// re-validates.
+    pub fn handle(&self, name: &str) -> Option<ModelHandle> {
+        self.model_index(name).map(|i| ModelHandle::new(i, name))
+    }
+
+    /// Re-validate a handle against the current model table: `Err`
+    /// with `E016_DANGLING_HANDLE` when the slot is gone or now holds
+    /// a different model (stale handles must not route).
+    pub fn validate_handle(&self, h: &ModelHandle) -> Result<(), PlanError> {
+        let names: Vec<&str> =
+            self.models.iter().map(|m| m.name.as_str()).collect();
+        fail_on_errors(verify_handle(h.id, &h.name, &names))
+    }
+
+    /// The FIRST model hosting `layer` under its bare name.  Model
+    /// names are fleet-unique but bare layer names need not be (two
+    /// tenants may both have a `fc`); ambiguous lookups resolve in
+    /// programming order -- route by model/handle when it matters.
     pub(crate) fn model_of_layer(&self, layer: &str) -> Option<usize> {
         self.models.iter().position(|m| m.matrix(layer).is_some())
     }
@@ -183,6 +210,22 @@ impl ChipFleet {
             .collect()
     }
 
+    /// Free-CORE inventory per chip: `(chip, free cores)` for every
+    /// chip with at least one core no placement touches.  Each chip's
+    /// merged local plan already counts all resident tenants, so this
+    /// is the co-residency placement currency (the whole-chip
+    /// [`ChipFleet::free_chips`] remains the exclusive-placement one).
+    pub fn free_core_inventory(&self) -> Vec<(usize, usize)> {
+        self.chips
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                let free = self.cores_per_chip - c.plan.cores_used;
+                (free > 0).then_some((i, free))
+            })
+            .collect()
+    }
+
     /// Borrow one replica group as an executor-facing
     /// [`DispatchTarget`].  Split off the chip slice first so `models`
     /// stays borrowed immutably.
@@ -192,7 +235,8 @@ impl ChipFleet {
         group: usize,
     ) -> GroupTarget<'a> {
         let g = &model.groups[group];
-        let mut sel: Vec<(&'a mut NeuRramChip, &'a [usize])> = Vec::new();
+        let mut sel: Vec<(&'a mut NeuRramChip, &'a [usize], usize)> =
+            Vec::new();
         let mut rest: &'a mut [NeuRramChip] = chips;
         let mut base = 0usize;
         for (s, &ci) in g.chips.iter().enumerate() {
@@ -205,7 +249,7 @@ impl ChipFleet {
             let chip = head
                 .last_mut()
                 .expect("split_at_mut(n + 1) yields a non-empty head");
-            sel.push((chip, g.placements[s].as_slice()));
+            sel.push((chip, g.placements[s].as_slice(), g.bases[s]));
             base = ci + 1;
             rest = tail;
         }
@@ -213,6 +257,7 @@ impl ChipFleet {
             chips: sel,
             matrices: &model.matrices,
             plan: &model.plan,
+            model: &model.name,
         }
     }
 
@@ -241,10 +286,15 @@ impl ChipFleet {
 /// folded through the chip engine's own accumulate helpers -- the
 /// cross-chip partial-sum accumulation of a model-parallel split.
 pub struct GroupTarget<'a> {
-    /// (chip, global placement indices of its local plan), group order.
-    chips: Vec<(&'a mut NeuRramChip, &'a [usize])>,
+    /// (chip, global placement indices of this model's slice of the
+    /// chip's local plan, base offset of that slice), group order.
+    chips: Vec<(&'a mut NeuRramChip, &'a [usize], usize)>,
     matrices: &'a [ConductanceMatrix],
     plan: &'a MappingPlan,
+    /// Owning model's name: chips key their regions by the QUALIFIED
+    /// `model::layer` ([`layer_key`]), so dispatch entry points qualify
+    /// the executor's bare layer name before touching a chip.
+    model: &'a str,
 }
 
 impl GroupTarget<'_> {
@@ -264,7 +314,7 @@ impl GroupTarget<'_> {
     pub fn busy_ns(&self) -> f64 {
         self.chips
             .iter()
-            .map(|(c, _)| c.energy_counters().busy_ns)
+            .map(|(c, _, _)| c.energy_counters().busy_ns)
             .sum()
     }
 }
@@ -284,14 +334,14 @@ impl DispatchTarget for GroupTarget<'_> {
     /// into the group's FIRST chip; per-segment spans land on each
     /// executing chip's own recorder regardless.
     fn telemetry(&mut self) -> Option<&mut crate::telemetry::Recorder> {
-        self.chips.first_mut().map(|(c, _)| &mut c.telemetry)
+        self.chips.first_mut().map(|(c, _, _)| &mut c.telemetry)
     }
 
     /// Group health: the fold of the member chips' health (the router
     /// detaches a group whose fold is unhealthy).
     fn health(&self) -> TargetHealth {
         let mut h = TargetHealth::default();
-        for (c, _) in &self.chips {
+        for (c, _, _) in &self.chips {
             h.absorb(&NeuRramChip::health(c));
         }
         h
@@ -314,13 +364,15 @@ impl DispatchTarget for GroupTarget<'_> {
                 "no replica {} of {layer} in this group (dispatch {d})"
             );
         }
+        // the chips key this model's regions by its qualified layer key
+        let key = layer_key(self.model, layer);
         // per chip: the subset of dispatches it hosts, with the global
         // dispatch index remembered so partials can be remapped
         let plan = self.plan;
-        let mut units: Vec<(&mut NeuRramChip, &[usize], Vec<ReplicaBatch>,
-                            Vec<usize>)> = Vec::new();
-        for (chip, gmap) in self.chips.iter_mut() {
-            let gmap = *gmap;
+        let mut units: Vec<(&mut NeuRramChip, &[usize], usize,
+                            Vec<ReplicaBatch>, Vec<usize>)> = Vec::new();
+        for (chip, gmap, cbase) in self.chips.iter_mut() {
+            let (gmap, cbase) = (*gmap, *cbase);
             let ds: Vec<usize> = (0..dispatches.len())
                 .filter(|&d| {
                     hosts_replica(plan, gmap, layer,
@@ -337,10 +389,10 @@ impl DispatchTarget for GroupTarget<'_> {
                     inputs: dispatches[d].inputs.clone(),
                 })
                 .collect();
-            units.push((&mut **chip, gmap, sub, ds));
+            units.push((&mut **chip, gmap, cbase, sub, ds));
         }
         let mut parts = fan_out(units, |chip, sub| {
-            chip.mvm_layer_partials_multi(layer, sub, cfg)
+            chip.mvm_layer_partials_multi(&key, sub, cfg)
         });
         // fold in GLOBAL placement order: bitwise the single-chip fold
         parts.sort_by_key(|r| (r.dispatch, r.placement));
@@ -363,17 +415,19 @@ impl DispatchTarget for GroupTarget<'_> {
             (0..self.chips.len()).any(|pos| self.hosts(pos, layer, replica)),
             "no replica {replica} of {layer} in this group"
         );
+        let key = layer_key(self.model, layer);
         let plan = self.plan;
-        let mut units: Vec<(&mut NeuRramChip, &[usize], Vec<ReplicaBatch>,
-                            Vec<usize>)> = Vec::new();
-        for (chip, gmap) in self.chips.iter_mut() {
-            let gmap = *gmap;
+        let mut units: Vec<(&mut NeuRramChip, &[usize], usize,
+                            Vec<ReplicaBatch>, Vec<usize>)> = Vec::new();
+        for (chip, gmap, cbase) in self.chips.iter_mut() {
+            let (gmap, cbase) = (*gmap, *cbase);
             if hosts_replica(plan, gmap, layer, replica) {
-                units.push((&mut **chip, gmap, Vec::new(), Vec::new()));
+                units.push((&mut **chip, gmap, cbase, Vec::new(),
+                            Vec::new()));
             }
         }
         let mut parts = fan_out(units, |chip, _| {
-            chip.mvm_layer_backward_partials(layer, inputs, cfg,
+            chip.mvm_layer_backward_partials(&key, inputs, cfg,
                                              stoch_amp_v, replica)
         });
         parts.sort_by_key(|r| (r.dispatch, r.placement));
@@ -399,21 +453,24 @@ fn hosts_replica(plan: &MappingPlan, gmap: &[usize], layer: &str,
 /// existing per-chip determinism arguments apply unchanged); a single
 /// involved chip runs on the calling thread.
 fn fan_out<'u, F>(
-    units: Vec<(&'u mut NeuRramChip, &'u [usize], Vec<ReplicaBatch<'u>>,
-                Vec<usize>)>,
+    units: Vec<(&'u mut NeuRramChip, &'u [usize], usize,
+                Vec<ReplicaBatch<'u>>, Vec<usize>)>,
     exec: F,
 ) -> Vec<PlacementPartials>
 where
     F: Fn(&mut NeuRramChip, &[ReplicaBatch]) -> Vec<PlacementPartials>
         + Sync,
 {
+    // a chip reports placement indices into its FULL local plan; this
+    // model's slice starts at `base` on a co-resident chip, so shift
+    // before the gmap lookup into the model's global plan
     fn remap(mut parts: Vec<PlacementPartials>, gmap: &[usize],
-             ds: &[usize]) -> Vec<PlacementPartials> {
+             base: usize, ds: &[usize]) -> Vec<PlacementPartials> {
         for p in &mut parts {
             if !ds.is_empty() {
                 p.dispatch = ds[p.dispatch];
             }
-            p.placement = gmap[p.placement];
+            p.placement = gmap[p.placement - base];
         }
         parts
     }
@@ -421,9 +478,9 @@ where
         std::thread::scope(|s| {
             let handles: Vec<_> = units
                 .into_iter()
-                .map(|(chip, gmap, sub, ds)| {
+                .map(|(chip, gmap, base, sub, ds)| {
                     let exec = &exec;
-                    s.spawn(move || remap(exec(chip, &sub), gmap, &ds))
+                    s.spawn(move || remap(exec(chip, &sub), gmap, base, &ds))
                 })
                 .collect();
             handles
@@ -434,8 +491,8 @@ where
     } else {
         units
             .into_iter()
-            .flat_map(|(chip, gmap, sub, ds)| {
-                remap(exec(chip, &sub), gmap, &ds)
+            .flat_map(|(chip, gmap, base, sub, ds)| {
+                remap(exec(chip, &sub), gmap, base, &ds)
             })
             .collect()
     }

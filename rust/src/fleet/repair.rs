@@ -19,6 +19,7 @@
 //! which is why the cross-shape determinism property pins the
 //! failover-only path.
 
+use super::handle::layer_key;
 use super::ChipFleet;
 use crate::calib::calibrate::calibrate_cnn_shifts;
 use crate::models::{ConductanceMatrix, ModelGraph};
@@ -67,13 +68,17 @@ impl ChipFleet {
             self.chips[ci].clear_faults();
         }
         for m in &mats {
+            // chips key regions by the qualified model::layer, so the
+            // canonical (bare-named) matrix reprograms under its key
+            let key = layer_key(&report.model, &m.layer);
             let mut reprogrammed = false;
             for &ci in &chip_ids {
-                if self.chips[ci].matrix(&m.layer).is_none() {
+                if self.chips[ci].matrix(&key).is_none() {
                     continue;
                 }
-                let stats =
-                    self.chips[ci].reprogram_layer(m.clone(), true)?;
+                let mut qm = m.clone();
+                qm.layer = key.clone();
+                let stats = self.chips[ci].reprogram_layer(qm, true)?;
                 for s in &stats {
                     report.pulses += s.total_pulses;
                 }
@@ -159,7 +164,7 @@ mod tests {
         // kill group 1's chip, then repair the group
         let hit = fleet
             .apply_fault_event(&FaultKind::ChipLoss { chip: 1 });
-        assert_eq!(hit, Some((0, 1)));
+        assert_eq!(hit, vec![(0, 1)]);
         assert!(!fleet.group_health("m", 1).healthy());
         let rep = fleet.repair_group("m", 1).unwrap();
         assert!(fleet.group_health("m", 1).healthy());
@@ -198,7 +203,7 @@ mod tests {
         let hit = fleet.apply_fault_event(&FaultKind::StuckColumn {
             chip: 0, core: 0, col: 2, high: true,
         });
-        assert_eq!(hit, None, "stuck columns must not detach the group");
+        assert!(hit.is_empty(), "stuck columns must not detach the group");
         let h = fleet.group_health("m", 0);
         assert!(h.healthy());
         assert_eq!(h.stuck_columns, 1);

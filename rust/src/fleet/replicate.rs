@@ -16,16 +16,21 @@
 //! outputs, breaking the serving determinism contract (see the module
 //! docs in `fleet/mod.rs`).
 
+use super::handle::{layer_key, ModelHandle, KEY_SEP};
 use super::{ChipFleet, FleetModel, ModelGroup};
 use crate::analysis::{
     fail_on_errors, verify_model, verify_shards, DiagCode, PlanError,
 };
-use crate::coordinator::mapping::{plan, MappingPlan, MappingStrategy};
+use crate::coordinator::mapping::{plan, plan_co_resident, MappingPlan,
+                                  MappingStrategy};
 use crate::models::ConductanceMatrix;
 
 /// Placement summary returned by [`ChipFleet::program_model`].
 #[derive(Clone, Debug)]
 pub struct FleetPlacement {
+    /// Handle to the placed model (stable id + name) -- the currency of
+    /// routing, repair and per-tenant telemetry.
+    pub handle: ModelHandle,
     /// Chips one copy shards over (1 = the model fits a single chip).
     pub chips_per_copy: usize,
     /// Data-parallel copies placed.
@@ -34,6 +39,40 @@ pub struct FleetPlacement {
     pub segments: usize,
     /// Placements merged at nonzero window offsets (Packed cases 3/4).
     pub merged: usize,
+}
+
+/// Clone a chip-local plan + hosted matrix set with every layer key
+/// qualified as `model::layer` -- the chip boundary of the namespacing
+/// scheme (the fleet keeps bare names; chips, whose state several
+/// tenants may share, key regions by qualified names).
+fn qualify_for_chip(
+    model: &str,
+    local: &MappingPlan,
+    matrices: &[ConductanceMatrix],
+) -> (MappingPlan, Vec<ConductanceMatrix>) {
+    let mut qlocal = local.clone();
+    for p in &mut qlocal.placements {
+        p.segment.layer = layer_key(model, &p.segment.layer);
+    }
+    for (l, _) in &mut qlocal.replicas {
+        *l = layer_key(model, l);
+    }
+    // each chip stores only the matrices of layers it hosts (a
+    // 2-of-20-layer shard does not need the other 18); the fleet keeps
+    // the canonical full set and only ever dispatches a layer to its
+    // hosting chips
+    let hosted: Vec<ConductanceMatrix> = matrices
+        .iter()
+        .filter(|m| {
+            local.placements.iter().any(|p| p.segment.layer == m.layer)
+        })
+        .map(|m| {
+            let mut q = m.clone();
+            q.layer = layer_key(model, &m.layer);
+            q
+        })
+        .collect();
+    (qlocal, hosted)
 }
 
 /// Split a global (virtual-core) plan into per-chip shards.  Returns,
@@ -100,9 +139,11 @@ impl ChipFleet {
     /// whole copy).  `max_chips` is a CHIP budget, not a copy count, so
     /// callers reserving chips for a later model cannot be starved by a
     /// copy that shards wider than expected.  At least one copy must
-    /// fit the free chips or an error is returned.  Layer names must be
-    /// unique across the whole fleet so executors can address layers
-    /// unambiguously.
+    /// fit the free chips or an error is returned.  Layer names need
+    /// only be unique WITHIN the model: chips key their regions by the
+    /// qualified `model::layer`, so independent models may reuse bare
+    /// layer names (the returned [`FleetPlacement::handle`] is how
+    /// callers address the model from then on).
     pub fn program_model(
         &mut self,
         name: &str,
@@ -111,34 +152,7 @@ impl ChipFleet {
         strategy: MappingStrategy,
         max_chips: usize,
     ) -> Result<FleetPlacement, PlanError> {
-        if self.model_index(name).is_some() {
-            return Err(PlanError::single(
-                DiagCode::E008DuplicateLayer,
-                name,
-                format!("model {name} already placed"),
-            ));
-        }
-        for (i, m) in matrices.iter().enumerate() {
-            if matrices[..i].iter().any(|e| e.layer == m.layer) {
-                return Err(PlanError::single(
-                    DiagCode::E008DuplicateLayer,
-                    m.layer.clone(),
-                    format!("duplicate layer {} in model {name}", m.layer),
-                ));
-            }
-            if let Some(mi) = self.model_of_layer(&m.layer) {
-                return Err(PlanError::single(
-                    DiagCode::E008DuplicateLayer,
-                    m.layer.clone(),
-                    format!(
-                        "layer {} of model {name} collides with model {} \
-                         -- fleet layer names must be unique (rename the \
-                         layers or bundle the models together)",
-                        m.layer, self.models[mi].name
-                    ),
-                ));
-            }
-        }
+        self.check_model_names(name, &matrices)?;
         let free = self.free_chips();
         if free.is_empty() {
             return Err(PlanError::single(
@@ -186,22 +200,10 @@ impl ChipFleet {
             let mut placements = Vec::with_capacity(shards.len());
             for (s, (local, idxs)) in shards.iter().enumerate() {
                 let chip = &mut self.chips[chip_ids[s]];
-                // each chip stores only the matrices of layers it
-                // hosts (a 2-of-20-layer shard does not need the other
-                // 18); the fleet keeps the canonical full set and only
-                // ever dispatches a layer to its hosting chips
-                let hosted: Vec<ConductanceMatrix> = matrices
-                    .iter()
-                    .filter(|m| {
-                        local
-                            .placements
-                            .iter()
-                            .any(|p| p.segment.layer == m.layer)
-                    })
-                    .cloned()
-                    .collect();
+                let (qlocal, hosted) =
+                    qualify_for_chip(name, local, &matrices);
                 // ideal loads only -- see the module docs
-                chip.program_plan(local.clone(), hosted, false)?;
+                chip.program_plan(qlocal, hosted, false)?;
                 chip.gate_unused();
                 placements.push(idxs.clone());
             }
@@ -211,7 +213,8 @@ impl ChipFleet {
             while placements.len() < chip_ids.len() {
                 placements.push(Vec::new());
             }
-            groups.push(ModelGroup { chips: chip_ids, placements });
+            let bases = vec![0; chip_ids.len()];
+            groups.push(ModelGroup { chips: chip_ids, placements, bases });
         }
         let segments = gplan
             .placements
@@ -219,29 +222,154 @@ impl ChipFleet {
             .filter(|p| p.replica == 0)
             .count();
         let merged = gplan.merged_placements();
+        let handle = ModelHandle::new(self.models.len(), name);
         self.models.push(FleetModel {
             name: name.to_string(),
             matrices,
             plan: gplan,
             groups,
         });
-        Ok(FleetPlacement { chips_per_copy: k, copies, segments, merged })
+        Ok(FleetPlacement { handle, chips_per_copy: k, copies, segments,
+                            merged })
+    }
+
+    /// Co-resident placement: pack `matrices` into the FREE CORES of a
+    /// chip that already hosts other tenants, instead of claiming free
+    /// whole chips.  Chips are tried in ascending index order (free-core
+    /// inventory first, then genuinely free chips); the first chip whose
+    /// leftover cells fit one Packed copy wins.  The guest programs
+    /// additively ([`crate::coordinator::NeuRramChip::
+    /// program_plan_co_resident`]): resident tenants' conductances are
+    /// untouched, so their outputs stay bitwise identical.  One copy,
+    /// one chip -- co-resident guests are the density play; wide
+    /// sharding and data-parallel copies stay on the exclusive path.
+    pub fn program_model_co_resident(
+        &mut self,
+        name: &str,
+        matrices: Vec<ConductanceMatrix>,
+        intensity: &[f64],
+    ) -> Result<FleetPlacement, PlanError> {
+        self.check_model_names(name, &matrices)?;
+        let mut candidates = self.free_core_inventory();
+        candidates.sort_by_key(|&(c, _)| c);
+        let mut fitted: Option<(usize, MappingPlan)> = None;
+        let mut last_err: Option<PlanError> = None;
+        for (ci, _) in candidates {
+            match plan_co_resident(&matrices, intensity,
+                                   self.cores_per_chip,
+                                   &self.chips[ci].plan.placements) {
+                Ok(p) => {
+                    fitted = Some((ci, p));
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let (ci, gplan) = fitted.ok_or_else(|| {
+            let last = last_err.map(|e| e.to_string()).unwrap_or_default();
+            PlanError::single(
+                DiagCode::E012ChipBudget,
+                name,
+                format!("model {name} does not fit any chip's free cores: \
+                         {last}"),
+            )
+        })?;
+        fail_on_errors(verify_model(&gplan, &matrices,
+                                    self.cores_per_chip))?;
+        let base = self.chips[ci].plan.placements.len();
+        let (qlocal, hosted) = qualify_for_chip(name, &gplan, &matrices);
+        self.chips[ci].program_plan_co_resident(qlocal, hosted, false)?;
+        self.chips[ci].gate_unused();
+        let n = gplan.placements.len();
+        let groups = vec![ModelGroup {
+            chips: vec![ci],
+            placements: vec![(0..n).collect()],
+            bases: vec![base],
+        }];
+        let segments =
+            gplan.placements.iter().filter(|p| p.replica == 0).count();
+        let merged = gplan.merged_placements();
+        let handle = ModelHandle::new(self.models.len(), name);
+        self.models.push(FleetModel {
+            name: name.to_string(),
+            matrices,
+            plan: gplan,
+            groups,
+        });
+        Ok(FleetPlacement { handle, chips_per_copy: 1, copies: 1, segments,
+                            merged })
+    }
+
+    /// Shared naming gates of both placement paths: fleet-unique model
+    /// name (qualified keys stay chip-unique), model-unique bare layer
+    /// names, and no `::` inside a bare name (it would make qualified
+    /// keys ambiguous).
+    fn check_model_names(
+        &self,
+        name: &str,
+        matrices: &[ConductanceMatrix],
+    ) -> Result<(), PlanError> {
+        if self.model_index(name).is_some() {
+            return Err(PlanError::single(
+                DiagCode::E008DuplicateLayer,
+                name,
+                format!("model {name} already placed"),
+            ));
+        }
+        if name.contains(KEY_SEP) {
+            return Err(PlanError::single(
+                DiagCode::E008DuplicateLayer,
+                name,
+                format!("model name {name:?} may not contain {KEY_SEP:?} \
+                         (reserved for qualified layer keys)"),
+            ));
+        }
+        for (i, m) in matrices.iter().enumerate() {
+            if matrices[..i].iter().any(|e| e.layer == m.layer) {
+                return Err(PlanError::single(
+                    DiagCode::E008DuplicateLayer,
+                    m.layer.clone(),
+                    format!("duplicate layer {} in model {name}", m.layer),
+                ));
+            }
+            if m.layer.contains(KEY_SEP) {
+                return Err(PlanError::single(
+                    DiagCode::E008DuplicateLayer,
+                    m.layer.clone(),
+                    format!("layer name {:?} may not contain {KEY_SEP:?} \
+                             (reserved for qualified layer keys)",
+                            m.layer),
+                ));
+            }
+        }
+        Ok(())
     }
 
     /// Human label per fleet chip for trace exports: free chips keep
-    /// the bare index, hosting chips gain the model and replica group
-    /// they serve ("chip 2 (mnist/g1)").
+    /// the bare index, hosting chips gain the model(s) and replica
+    /// group(s) they serve -- "chip 2 (mnist/g1)", or
+    /// "chip 2 (mnist/g0+cifar/g0)" when tenants co-reside.
     pub fn chip_labels(&self) -> Vec<String> {
-        let mut labels: Vec<String> =
-            (0..self.chips.len()).map(|c| format!("chip {c}")).collect();
+        let mut tenants: Vec<Vec<String>> =
+            vec![Vec::new(); self.chips.len()];
         for m in &self.models {
             for (g, group) in m.groups.iter().enumerate() {
                 for &c in &group.chips {
-                    labels[c] = format!("chip {c} ({}/g{g})", m.name);
+                    tenants[c].push(format!("{}/g{g}", m.name));
                 }
             }
         }
-        labels
+        tenants
+            .iter()
+            .enumerate()
+            .map(|(c, t)| {
+                if t.is_empty() {
+                    format!("chip {c}")
+                } else {
+                    format!("chip {c} ({})", t.join("+"))
+                }
+            })
+            .collect()
     }
 }
 
@@ -314,17 +442,44 @@ mod tests {
     }
 
     #[test]
-    fn program_model_rejects_layer_collisions() {
+    fn models_with_colliding_layer_names_coexist() {
+        // two independent models both naming their head "fc" place side
+        // by side: chips key regions by the qualified model::layer, so
+        // the bare-name collision is legal and both stay addressable
         let mut fleet = ChipFleet::new(3, 4, 6);
-        fleet
+        let pa = fleet
             .program_model("a", vec![matrix("fc", 64, 16, 3)], &[1.0],
                            MappingStrategy::Simple, 1)
             .unwrap();
-        let err = fleet
+        let pb = fleet
             .program_model("b", vec![matrix("fc", 32, 8, 4)], &[1.0],
                            MappingStrategy::Simple, 1)
+            .unwrap();
+        assert_eq!(pa.handle.id, 0);
+        assert_eq!(pb.handle.id, 1);
+        assert_eq!(pb.handle.key("fc"), "b::fc");
+        assert_eq!(fleet.replica_groups("a"), 1);
+        assert_eq!(fleet.replica_groups("b"), 1);
+        // both heads execute, each against its own weights/shape
+        let x64: Vec<i32> = (0..64).map(|i| (i % 15) as i32 - 7).collect();
+        let x32: Vec<i32> = (0..32).map(|i| (i % 15) as i32 - 7).collect();
+        let cfg = crate::core_sim::NeuronConfig::default();
+        let ya = fleet.with_group("a", 0, |t| {
+            crate::coordinator::DispatchTarget::mvm_layer_batch(
+                t, "fc", &[&x64[..]], &cfg, 0)
+        });
+        let yb = fleet.with_group("b", 0, |t| {
+            crate::coordinator::DispatchTarget::mvm_layer_batch(
+                t, "fc", &[&x32[..]], &cfg, 0)
+        });
+        assert_eq!(ya.0[0].len(), 16);
+        assert_eq!(yb.0[0].len(), 8);
+        // duplicate MODEL names (the new uniqueness currency) still err
+        let err = fleet
+            .program_model("a", vec![matrix("fc2", 8, 8, 5)], &[1.0],
+                           MappingStrategy::Simple, 1)
             .unwrap_err();
-        assert!(err.contains("collides"), "{err}");
+        assert!(err.contains("already placed"), "{err}");
         // and a model that cannot fit the remaining chips errors
         let huge: Vec<ConductanceMatrix> = (0..9)
             .map(|i| matrix(&format!("m{i}"), 128, 256, 10 + i as u64))
@@ -334,5 +489,39 @@ mod tests {
                            MappingStrategy::Simple, 1)
             .unwrap_err();
         assert!(err.contains("does not fit"), "{err}");
+    }
+
+    #[test]
+    fn co_resident_guest_packs_into_free_cores() {
+        // a 1-chip fleet: tenant 1 takes some cores, the guest must go
+        // into the SAME chip's free cores (no free whole chip exists)
+        let mut fleet = ChipFleet::new(1, 4, 9);
+        fleet
+            .program_model("edge", vec![matrix("fc", 64, 32, 3)], &[1.0],
+                           MappingStrategy::Packed, 1)
+            .unwrap();
+        assert!(fleet.free_chips().is_empty());
+        let p = fleet
+            .program_model_co_resident("guest",
+                                       vec![matrix("fc", 48, 16, 4)],
+                                       &[1.0])
+            .unwrap();
+        assert_eq!(p.handle.name, "guest");
+        assert_eq!(p.copies, 1);
+        let inv = fleet.free_core_inventory();
+        assert!(!inv.is_empty(), "guest fits beside, not on fresh cores");
+        // the chip's merged plan carries both tenants' qualified keys
+        let chip = &fleet.chips[0];
+        assert!(chip.matrix("edge::fc").is_some());
+        assert!(chip.matrix("guest::fc").is_some());
+        // and the guest executes through the group view
+        let x: Vec<i32> = (0..48).map(|i| (i % 15) as i32 - 7).collect();
+        let cfg = crate::core_sim::NeuronConfig::default();
+        let y = fleet.with_group("guest", 0, |t| {
+            crate::coordinator::DispatchTarget::mvm_layer_batch(
+                t, "fc", &[&x[..]], &cfg, 0)
+        });
+        assert_eq!(y.0[0].len(), 16);
+        assert!(y.0[0].iter().any(|&v| v != 0.0));
     }
 }

@@ -236,10 +236,18 @@ impl ChipFleet {
         faults.plan.validate(self.chips.len(), self.cores_per_chip)?;
         for w in workloads {
             if self.model_index(&w.model).is_none() {
-                return Err(format!(
-                    "workload {} references unplaced model {}",
-                    w.name, w.model
-                ));
+                // the serving twin of `verify_handle`: the workload's
+                // route no longer resolves to a placed model
+                return Err(PlanError::single(
+                    DiagCode::E016DanglingHandle,
+                    w.name.clone(),
+                    format!(
+                        "workload {} routes to model {} but no such model \
+                         is placed",
+                        w.name, w.model
+                    ),
+                )
+                .to_string());
             }
         }
         if requests.is_empty() {
@@ -379,10 +387,10 @@ impl ChipFleet {
                         continue;
                     }
                     fault_applied[fi] = true;
-                    let hit = self.inject_fault(t, &kind, &mut free_at,
-                                                &mut fstate, tracing,
-                                                &mut trace)?;
-                    if hit == Some((mi, g)) && killed_at.is_none() {
+                    let hits = self.inject_fault(t, &kind, &mut free_at,
+                                                 &mut fstate, tracing,
+                                                 &mut trace)?;
+                    if hits.contains(&(mi, g)) && killed_at.is_none() {
                         killed_at = Some(t);
                     }
                 }
@@ -444,6 +452,7 @@ impl ChipFleet {
                                  ci as u32);
                 }
                 let wlid = trace.intern(&wl.name);
+                let mid = trace.intern(&wl.model);
                 trace.push(Event {
                     ts_ns: start,
                     dur_ns: busy,
@@ -451,6 +460,7 @@ impl ChipFleet {
                     core: CHIP_LANE,
                     kind: EventKind::Batch {
                         workload: wlid,
+                        model: mid,
                         requests: pb.requests.len() as u32,
                         seq: seq as u32,
                         depth: pb.depth as u32,
@@ -492,7 +502,14 @@ impl ChipFleet {
             // request-lifecycle spans in request-index order (arrival ->
             // completion, queueing share in the args)
             for r in &responses {
-                let wlid = trace.intern(&requests[r.request].workload);
+                let wname = &requests[r.request].workload;
+                let wlid = trace.intern(wname);
+                let model = workloads
+                    .iter()
+                    .find(|w| w.name == *wname)
+                    .map(|w| w.model.as_str())
+                    .expect("validated above");
+                let mid = trace.intern(model);
                 trace.push(Event {
                     ts_ns: requests[r.request].arrival_ns as f64,
                     dur_ns: r.latency_ns,
@@ -500,6 +517,7 @@ impl ChipFleet {
                     core: CHIP_LANE,
                     kind: EventKind::Request {
                         workload: wlid,
+                        model: mid,
                         request: r.request as u32,
                         wait_ns: r.wait_ns,
                     },
@@ -574,11 +592,13 @@ impl ChipFleet {
     }
 
     /// Apply one scheduled fault at virtual time `t_ns`: latch the
-    /// hardware fault, stamp the telemetry event, and -- if the owning
-    /// replica group can no longer serve -- either run an online repair
-    /// (pushing the group's free time past the modelled repair window)
-    /// or detach the group for the rest of the trace.  Returns the
-    /// `(model, group)` the fault made unhealthy, if any.
+    /// hardware fault, stamp the telemetry event, and -- for every
+    /// owning replica group that can no longer serve -- either run an
+    /// online repair (pushing the group's free time past the modelled
+    /// repair window) or detach the group for the rest of the trace.
+    /// Returns every `(model, group)` the fault made unhealthy; with
+    /// co-resident tenants one chip loss can detach SEVERAL models'
+    /// groups at once.
     fn inject_fault(
         &mut self,
         t_ns: u64,
@@ -587,8 +607,8 @@ impl ChipFleet {
         fstate: &mut FaultState,
         tracing: bool,
         trace: &mut Trace,
-    ) -> Result<Option<(usize, usize)>, String> {
-        let hit = self.apply_fault_event(kind);
+    ) -> Result<Vec<(usize, usize)>, String> {
+        let hits = self.apply_fault_event(kind);
         fstate.faults_injected += 1;
         if tracing {
             let desc = trace.intern(&kind.describe());
@@ -603,7 +623,7 @@ impl ChipFleet {
                 },
             });
         }
-        if let Some((fm, fg)) = hit {
+        for &(fm, fg) in &hits {
             if fstate.repair {
                 let rep = self.reprogram_group(fm, fg)?;
                 // the repair's own Program spans are subsumed by the
@@ -637,7 +657,7 @@ impl ChipFleet {
                 fstate.detach_at[fm][fg] = t_ns as f64;
             }
         }
-        Ok(hit)
+        Ok(hits)
     }
 
     /// Reset a group's dispatch state + energy counters ahead of one
@@ -803,9 +823,9 @@ pub mod presets {
 
     /// Program a fleet of `n_chips` paper-geometry chips for `mix`:
     /// the small workloads (mnist + speech + rbm) bundle onto one chip
-    /// set and CIFAR (whose layer names collide with MNIST's, and whose
-    /// Packed plan wants a whole chip) gets its own; each bundle then
-    /// replicates data-parallel over its chip share.  Weights are
+    /// set and CIFAR (whose Packed plan wants a whole chip) gets its
+    /// own; each bundle then replicates data-parallel over its chip
+    /// share.  Weights are
     /// random-init and MNIST's requantization shifts are calibrated
     /// through the fleet's own `DispatchTarget` surface -- this is a
     /// LOAD generator, measuring latency/throughput, not accuracy
@@ -905,14 +925,10 @@ pub mod presets {
             }
         }
         if has_cifar {
-            let mut graph = cifar_resnet(if quick { 8 } else { 16 }, 3);
-            // fleet layer names must be unique and the ResNet's
-            // conv1../fc names collide with MNIST's; the CNN executor
-            // only addresses layers through the graph, so a prefix
-            // renames both sides consistently
-            for l in &mut graph.layers {
-                l.name = format!("cifar.{}", l.name);
-            }
+            // the ResNet's conv1../fc names collide with MNIST's, which
+            // is fine: chips key regions by model::layer, so each model
+            // owns its own namespace
+            let graph = cifar_resnet(if quick { 8 } else { 16 }, 3);
             let mats = compile_random(&graph, seed + 5);
             let intens = intensities(&graph);
             let p = fleet
@@ -928,6 +944,75 @@ pub mod presets {
             });
         }
         Ok(ServingFleet { fleet, workloads, placements })
+    }
+
+    /// The `--co-resident` demo mix: two independent MNIST tenants.
+    pub fn co_resident_mix() -> Vec<(String, usize)> {
+        vec![("mnist".to_string(), 1), ("mnist2".to_string(), 1)]
+    }
+
+    /// Program TWO independent MNIST CNN models onto one fleet, the
+    /// second co-resident in the free cores left by the first: same
+    /// graph, same (colliding) layer names, different random weights.
+    /// Exercises the multi-tenant path end to end -- qualified
+    /// `model::layer` chip keys, `plan_co_resident` packing, handle
+    /// routing -- with per-model shifts calibrated through each
+    /// tenant's own replica-group `DispatchTarget`.  Replication
+    /// intensities are clamped to 1.0 so the host model never eats the
+    /// free cores the guest needs.
+    pub fn build_co_resident_fleet(
+        n_chips: usize,
+        cores_per_chip: usize,
+        seed: u64,
+        quick: bool,
+    ) -> Result<ServingFleet, String> {
+        let graph = mnist_cnn7(8);
+        let intens: Vec<f64> =
+            intensities(&graph).iter().map(|v| v.min(1.0)).collect();
+        let mut fleet = ChipFleet::new(n_chips, cores_per_chip, seed);
+        let mut placements = Vec::new();
+        let p1 = fleet
+            .program_model("mnist", compile_random(&graph, seed + 1),
+                           &intens, MappingStrategy::Packed, n_chips)
+            .map_err(|e| e.to_string())?;
+        placements.push(("mnist".to_string(), p1));
+        let p2 = fleet
+            .program_model_co_resident("mnist2",
+                                       compile_random(&graph, seed + 21),
+                                       &intens)
+            .map_err(|e| e.to_string())?;
+        placements.push(("mnist2".to_string(), p2));
+        let (probe, _) =
+            datasets::digits28(if quick { 1 } else { 2 }, seed + 4, 0.15);
+        let mut workloads = Vec::new();
+        for model in ["mnist", "mnist2"] {
+            let shifts = fleet.with_group(model, 0, |t| {
+                calibrate_cnn_shifts(t, &graph, &probe)
+            });
+            workloads.push(Workload {
+                name: model.to_string(),
+                model: model.to_string(),
+                kind: WorkloadKind::Cnn { graph: graph.clone(), shifts },
+            });
+        }
+        Ok(ServingFleet { fleet, workloads, placements })
+    }
+
+    /// Swap a trace's fixed arrival cadence for deterministic Poisson
+    /// arrivals at `rate_per_s` (see
+    /// [`crate::fleet::batcher::poisson_arrivals`]).  Inter-arrival
+    /// order is preserved: the generator's timestamps are strictly
+    /// increasing, so request `i` still arrives before request `i+1`.
+    pub fn poissonize_trace(
+        requests: &mut [Request],
+        rate_per_s: f64,
+        seed: u64,
+    ) {
+        let ts = crate::fleet::batcher::poisson_arrivals(
+            seed, rate_per_s, requests.len());
+        for (r, t) in requests.iter_mut().zip(ts) {
+            r.arrival_ns = t;
+        }
     }
 
     /// Deterministic request trace: `n` requests assigned to workloads

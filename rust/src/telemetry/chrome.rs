@@ -80,19 +80,21 @@ fn describe(trace: &Trace, e: &Event) -> (&'static str, String, Json) {
                 ("makespan_ns", Json::Num(makespan_ns)),
             ]),
         ),
-        EventKind::Batch { workload, requests, seq, depth } => (
+        EventKind::Batch { workload, model, requests, seq, depth } => (
             "batch",
             format!("batch:{}", trace.name(workload)),
             obj(vec![
+                ("model", Json::Str(trace.name(model).to_string())),
                 ("requests", Json::Num(requests as f64)),
                 ("seq", Json::Num(seq as f64)),
                 ("queue_depth", Json::Num(depth as f64)),
             ]),
         ),
-        EventKind::Request { workload, request, wait_ns } => (
+        EventKind::Request { workload, model, request, wait_ns } => (
             "request",
             format!("request:{}", trace.name(workload)),
             obj(vec![
+                ("model", Json::Str(trace.name(model).to_string())),
                 ("request", Json::Num(request as f64)),
                 ("wait_ns", Json::Num(wait_ns)),
             ]),
@@ -230,13 +232,14 @@ mod tests {
                  });
         let mut t = Trace::from_recorder(&mut r);
         let wl = t.intern("mnist");
+        let md = t.intern("edge");
         t.push(Event {
             ts_ns: 0.0,
             dur_ns: 3000.0,
             chip: ROUTER_CHIP,
             core: CHIP_LANE,
-            kind: EventKind::Batch { workload: wl, requests: 3, seq: 0,
-                                     depth: 3 },
+            kind: EventKind::Batch { workload: wl, model: md, requests: 3,
+                                     seq: 0, depth: 3 },
         });
         let j = chrome_trace(&t, &[], &[("seed", Json::Num(7.0))]);
         let evs = j["traceEvents"].as_arr().unwrap();
@@ -256,6 +259,7 @@ mod tests {
         assert_eq!(xs[1]["pid"].as_f64(), Some(0.0));
         assert_eq!(xs[1]["tid"].as_f64(), Some(0.0));
         assert_eq!(xs[1]["args"]["queue_depth"].as_f64(), Some(3.0));
+        assert_eq!(xs[1]["args"]["model"].as_str(), Some("edge"));
         assert_eq!(j["metadata"]["seed"].as_f64(), Some(7.0));
     }
 

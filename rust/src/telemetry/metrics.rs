@@ -233,17 +233,18 @@ mod tests {
                  });
         let mut t = Trace::from_recorder(&mut r);
         let wl = t.intern("mnist");
+        let md = t.intern("edge");
         t.push(Event {
             ts_ns: 0.0, dur_ns: 300.0, chip: ROUTER_CHIP, core: CHIP_LANE,
-            kind: EventKind::Batch { workload: wl, requests: 2, seq: 0,
-                                     depth: 2 },
+            kind: EventKind::Batch { workload: wl, model: md, requests: 2,
+                                     seq: 0, depth: 2 },
         });
         for i in 0..2 {
             t.push(Event {
                 ts_ns: 0.0, dur_ns: 400.0 + i as f64, chip: ROUTER_CHIP,
                 core: CHIP_LANE,
-                kind: EventKind::Request { workload: wl, request: i,
-                                           wait_ns: 100.0 },
+                kind: EventKind::Request { workload: wl, model: md,
+                                           request: i, wait_ns: 100.0 },
             });
         }
         t

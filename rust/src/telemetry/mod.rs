@@ -76,12 +76,18 @@ pub enum EventKind {
     /// One scheduler round (replica round-robin over a batch).
     Schedule { layer: NameId, replicas: u32, items: u32, makespan_ns: f64 },
     /// One coalesced batch served by a replica group (router event;
-    /// `depth` is the workload's queue depth at the batch's ready
-    /// time).
-    Batch { workload: NameId, requests: u32, seq: u32, depth: u32 },
+    /// `model` is the fleet model the workload routes to, `depth` the
+    /// workload's queue depth at the batch's ready time).
+    Batch {
+        workload: NameId,
+        model: NameId,
+        requests: u32,
+        seq: u32,
+        depth: u32,
+    },
     /// One request's lifecycle: span = arrival -> completion, with the
-    /// queueing share in `wait_ns`.
-    Request { workload: NameId, request: u32, wait_ns: f64 },
+    /// queueing share in `wait_ns` and the serving tenant in `model`.
+    Request { workload: NameId, model: NameId, request: u32, wait_ns: f64 },
     /// A fault-plan entry firing at its virtual timestamp (router
     /// event; `desc` interns the fault spec, e.g. `"chip:1"`).
     FaultInject { desc: NameId, chip: u32 },
@@ -247,14 +253,18 @@ fn remap(kind: EventKind, map: &[NameId]) -> EventKind {
                 layer: map[layer as usize], replicas, items, makespan_ns,
             }
         }
-        EventKind::Batch { workload, requests, seq, depth } => {
+        EventKind::Batch { workload, model, requests, seq, depth } => {
             EventKind::Batch {
-                workload: map[workload as usize], requests, seq, depth,
+                workload: map[workload as usize],
+                model: map[model as usize],
+                requests, seq, depth,
             }
         }
-        EventKind::Request { workload, request, wait_ns } => {
+        EventKind::Request { workload, model, request, wait_ns } => {
             EventKind::Request {
-                workload: map[workload as usize], request, wait_ns,
+                workload: map[workload as usize],
+                model: map[model as usize],
+                request, wait_ns,
             }
         }
         EventKind::FaultInject { desc, chip } => {

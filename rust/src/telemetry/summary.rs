@@ -27,6 +27,18 @@ pub struct LaneRow {
     pub utilization: f64,
 }
 
+/// One tenant's share of the trace: requests routed to its model,
+/// their queueing time, and the MVM busy time of its qualified
+/// (`model::layer`) spans.  Traces predating model tags fall into the
+/// `"untagged"` bucket instead of erroring.
+#[derive(Clone, Debug)]
+pub struct TenantRow {
+    pub model: String,
+    pub requests: u64,
+    pub wait_us: f64,
+    pub mvm_us: f64,
+}
+
 /// The digested trace.
 #[derive(Debug, Default)]
 pub struct SummaryReport {
@@ -36,6 +48,9 @@ pub struct SummaryReport {
     pub slowest_layers: Vec<LayerRow>,
     /// Core lanes by busy time, descending.
     pub lanes: Vec<LaneRow>,
+    /// Per-tenant request/queueing/MVM shares (model name order; the
+    /// `"untagged"` bucket absorbs spans without a model tag).
+    pub tenants: Vec<TenantRow>,
     /// Max-over-mean lane busy time (1.0 = perfectly balanced).
     pub imbalance: f64,
     pub requests: u64,
@@ -86,6 +101,8 @@ pub fn analyze(doc: &Json, top_n: usize) -> Result<SummaryReport, String> {
 
     let mut layer_us: BTreeMap<String, (f64, u64)> = BTreeMap::new();
     let mut lane_us: BTreeMap<(i64, i64), f64> = BTreeMap::new();
+    // per tenant: (requests, wait_us, mvm_us)
+    let mut tenant_agg: BTreeMap<String, (u64, f64, f64)> = BTreeMap::new();
     let mut t_lo = f64::INFINITY;
     let mut t_hi = f64::NEG_INFINITY;
     let mut n_x = 0usize;
@@ -111,6 +128,13 @@ pub fn analyze(doc: &Json, top_n: usize) -> Result<SummaryReport, String> {
                     .unwrap_or("?")
                     .trim_start_matches("mvm:")
                     .to_string();
+                // fleet chips key regions `model::layer`; bare names
+                // (single-chip traces, older exports) stay untagged
+                let (tenant, _) = crate::fleet::split_key(&name);
+                let tslot = tenant_agg
+                    .entry(tenant.unwrap_or("untagged").to_string())
+                    .or_insert((0, 0.0, 0.0));
+                tslot.2 += dur;
                 let slot = layer_us.entry(name).or_insert((0.0, 0));
                 slot.0 += dur;
                 slot.1 += 1;
@@ -120,8 +144,18 @@ pub fn analyze(doc: &Json, top_n: usize) -> Result<SummaryReport, String> {
             }
             Some("request") => {
                 requests += 1;
-                wait_us += num(&e["args"], "wait_ns") / 1000.0;
+                let wait = num(&e["args"], "wait_ns") / 1000.0;
+                wait_us += wait;
                 latency_us += dur;
+                let model = match e["args"]["model"].as_str() {
+                    Some(m) if !m.is_empty() => m,
+                    _ => "untagged",
+                };
+                let tslot = tenant_agg
+                    .entry(model.to_string())
+                    .or_insert((0, 0.0, 0.0));
+                tslot.0 += 1;
+                tslot.1 += wait;
             }
             Some("fault") => {
                 faults += 1;
@@ -176,11 +210,19 @@ pub fn analyze(doc: &Json, top_n: usize) -> Result<SummaryReport, String> {
         if mean > 0.0 { lanes[0].busy_us / mean } else { 0.0 }
     };
 
+    let tenants: Vec<TenantRow> = tenant_agg
+        .into_iter()
+        .map(|(model, (requests, wait_us, mvm_us))| TenantRow {
+            model, requests, wait_us, mvm_us,
+        })
+        .collect();
+
     Ok(SummaryReport {
         events: n_x,
         span_us,
         slowest_layers: slowest,
         lanes,
+        tenants,
         imbalance,
         requests,
         wait_us,
@@ -214,10 +256,11 @@ mod tests {
                  });
         let mut t = Trace::from_recorder(&mut r);
         let wl = t.intern("mnist");
+        let md = t.intern("edge");
         t.push(Event {
             ts_ns: 0.0, dur_ns: 10_000.0, chip: ROUTER_CHIP,
             core: CHIP_LANE,
-            kind: EventKind::Request { workload: wl, request: 0,
+            kind: EventKind::Request { workload: wl, model: md, request: 0,
                                        wait_ns: 4000.0 },
         });
         chrome_trace(&t, &[], &[])
@@ -265,6 +308,37 @@ mod tests {
         assert_eq!(rep.failovers, 1);
         assert_eq!(rep.repairs, 1);
         assert!((rep.repair_us - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_tenant_breakdown_buckets_untagged_spans() {
+        let rep = analyze(&doc(), 10).unwrap();
+        // bare mvm layer names land in the untagged bucket; the
+        // request carries its model tag
+        assert_eq!(rep.tenants.len(), 2);
+        let edge = rep.tenants.iter().find(|t| t.model == "edge").unwrap();
+        assert_eq!(edge.requests, 1);
+        assert!((edge.wait_us - 4.0).abs() < 1e-12);
+        assert_eq!(edge.mvm_us, 0.0);
+        let un = rep.tenants.iter().find(|t| t.model == "untagged").unwrap();
+        assert_eq!(un.requests, 0);
+        assert!((un.mvm_us - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn qualified_mvm_spans_attribute_to_their_tenant() {
+        let mut r = Recorder::new();
+        r.enable();
+        let l = r.intern("m1::fc");
+        r.record(0.0, 3000.0, 0,
+                 EventKind::MvmSegment {
+                     layer: l, replica: 0, backward: false, items: 1,
+                 });
+        let t = Trace::from_recorder(&mut r);
+        let rep = analyze(&chrome_trace(&t, &[], &[]), 5).unwrap();
+        assert_eq!(rep.tenants.len(), 1);
+        assert_eq!(rep.tenants[0].model, "m1");
+        assert!((rep.tenants[0].mvm_us - 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -248,6 +248,150 @@ fn serve_fails_with_e014_when_every_group_is_dead() {
 }
 
 #[test]
+fn prop_coresident_execution_matches_isolated() {
+    // Multi-tenant acceptance property: a tenant's outputs on a SHARED
+    // chip are bitwise the outputs it produces with the chip to
+    // itself, across chip counts (1 vs 3) and thread counts (1 vs 4).
+    // The guest reuses the host's bare layer name -- chips key regions
+    // by model::layer, so the two never collide.
+    let cfg = NeuronConfig::default();
+    let inputs: Vec<Vec<i32>> = (0..3)
+        .map(|i| (0..64).map(|r| ((r * 5 + i) % 15) as i32 - 7).collect())
+        .collect();
+    let run = |fleet: &mut ChipFleet, model: &str, width: usize| {
+        let xs: Vec<Vec<i32>> =
+            inputs.iter().map(|v| v[..width].to_vec()).collect();
+        let refs: Vec<&[i32]> = xs.iter().map(|v| v.as_slice()).collect();
+        fleet.with_group(model, 0, |t| {
+            DispatchTarget::mvm_layer_batch(t, "fc", &refs, &cfg, 0).0
+        })
+    };
+    let mut base: Option<Vec<Vec<f64>>> = None;
+    for chips in [1usize, 3] {
+        for threads in [1usize, 4] {
+            let mk = || {
+                let mut f = ChipFleet::new(chips, 4, 21);
+                f.set_threads(threads);
+                f.program_model("m", vec![matrix("fc", 64, 16, 3)], &[1.0],
+                                MappingStrategy::Packed, 1)
+                    .unwrap();
+                f
+            };
+            let ctx = format!("{chips} chips @ {threads} threads");
+            let mut alone = mk();
+            let ya = run(&mut alone, "m", 64);
+            let mut shared = mk();
+            shared
+                .program_model_co_resident(
+                    "n", vec![matrix("fc", 48, 12, 9)], &[1.0])
+                .unwrap();
+            let ys = run(&mut shared, "m", 64);
+            for (a, s) in ya.iter().zip(&ys) {
+                assert_vec_bits_eq(a, s, &ctx);
+            }
+            // the guest serves its own (differently shaped) fc
+            let yg = run(&mut shared, "n", 48);
+            assert_eq!(yg[0].len(), 12, "{ctx}: guest output width");
+            // and the host's outputs are shape/thread-invariant
+            match &base {
+                None => base = Some(ya),
+                Some(b) => {
+                    for (a, s) in ya.iter().zip(b) {
+                        assert_vec_bits_eq(a, s, &format!("{ctx} vs base"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn shared_chip_loss_detaches_both_tenants() {
+    // Two tenants co-resident on ONE chip: losing it must hit BOTH
+    // models' replica groups.  With repair enabled the router runs one
+    // repair per detached group -- two repairs from a single fault is
+    // the observable multi-tenant signature.
+    let mut fleet = ChipFleet::new(1, 4, 21);
+    fleet
+        .program_model("a", vec![matrix("head", 64, 10, 3)], &[1.0],
+                       MappingStrategy::Packed, 1)
+        .unwrap();
+    fleet
+        .program_model_co_resident("b", vec![matrix("head", 64, 10, 8)],
+                                   &[1.0])
+        .unwrap();
+    let wl = |name: &str| Workload {
+        name: name.into(),
+        model: name.into(),
+        kind: WorkloadKind::Cnn { graph: head_graph(), shifts: vec![0.0] },
+    };
+    let workloads = vec![wl("a"), wl("b")];
+    let mut rng = Rng::new(17);
+    let reqs: Vec<Request> = (0..8)
+        .map(|i| Request {
+            workload: if i % 2 == 0 { "a" } else { "b" }.into(),
+            arrival_ns: i as u64 * 5_000,
+            payload: Payload::Image(
+                (0..64).map(|_| rng.below(8) as i32).collect()),
+        })
+        .collect();
+    let policy = BatchPolicy { max_batch: 2, max_wait_ns: 10_000 };
+    let faults = FaultConfig {
+        plan: FaultPlan::parse("chip:0@50%").unwrap(),
+        repair: true,
+    };
+    let (responses, rep) = fleet
+        .serve_with_faults(&workloads, &reqs, &policy, &faults)
+        .unwrap();
+    assert_eq!(responses.len(), 8, "repairing run drops nothing");
+    assert_eq!(rep.faults_injected, 1);
+    assert_eq!(rep.repairs, 2,
+               "one shared-chip loss must repair BOTH tenants' groups");
+    assert!(rep.availability < 1.0);
+    // without repair, the single shared chip leaves no surviving group
+    let mut fleet2 = ChipFleet::new(1, 4, 21);
+    fleet2
+        .program_model("a", vec![matrix("head", 64, 10, 3)], &[1.0],
+                       MappingStrategy::Packed, 1)
+        .unwrap();
+    fleet2
+        .program_model_co_resident("b", vec![matrix("head", 64, 10, 8)],
+                                   &[1.0])
+        .unwrap();
+    let err = fleet2
+        .serve_with_faults(&workloads, &reqs, &policy,
+                           &FaultConfig {
+                               plan: FaultPlan::parse("chip:0@0").unwrap(),
+                               repair: false,
+                           })
+        .unwrap_err();
+    assert!(err.contains("E014_GROUP_DETACHED"), "{err}");
+}
+
+#[test]
+fn handles_resolve_and_stale_handles_fail_e016() {
+    let (fleet, _) = build_fleet(1, 1);
+    let h = fleet.handle("bundle").unwrap();
+    assert_eq!(h.id, 0);
+    assert_eq!(h.key("head"), "bundle::head");
+    assert!(fleet.validate_handle(&h).is_ok());
+    let stale = neurram::fleet::ModelHandle::new(3, "bundle");
+    let err = fleet.validate_handle(&stale).unwrap_err().to_string();
+    assert!(err.contains("E016_DANGLING_HANDLE"), "{err}");
+    let renamed = neurram::fleet::ModelHandle::new(0, "other");
+    assert!(fleet.validate_handle(&renamed).is_err());
+}
+
+#[test]
+fn serve_rejects_dangling_model_with_e016() {
+    let (mut fleet, mut workloads) = build_fleet(1, 1);
+    workloads[0].model = "ghost".into();
+    let policy = BatchPolicy { max_batch: 3, max_wait_ns: 20_000 };
+    let err = fleet.serve(&workloads, &trace(), &policy).unwrap_err();
+    assert!(err.contains("E016_DANGLING_HANDLE"), "{err}");
+}
+
+#[test]
 fn fleet_shard_execution_matches_single_chip_bitwise() {
     // Model-parallel contract: a layer sharded over 2 chips (2x4-core)
     // must produce BITWISE the outputs and per-item latencies of one

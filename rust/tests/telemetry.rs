@@ -145,7 +145,7 @@ fn batch_spans_are_chip_count_invariant() {
         t.events
             .iter()
             .filter_map(|e| match e.kind {
-                EventKind::Batch { workload, requests, seq, depth } => {
+                EventKind::Batch { workload, requests, seq, depth, .. } => {
                     Some((seq, t.name(workload).to_string(), requests,
                           depth, e.dur_ns.to_bits()))
                 }

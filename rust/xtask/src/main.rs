@@ -252,6 +252,14 @@ const RATCHETS: &[Ratchet] = &[
         key: "requests_per_s",
         array: true,
     },
+    // per-tenant throughput of the co-residency mix: a packing or
+    // routing regression that starves one tenant of a shared chip
+    // fails CI even if the fleet total holds up
+    Ratchet {
+        file: "BENCH_fleet.json",
+        key: "tenant_requests_per_s",
+        array: true,
+    },
     // fleet availability under the chip-loss fault plan: higher is
     // better, so a router/repair regression that lengthens the outage
     // window fails CI like a throughput drop would
