@@ -15,7 +15,8 @@
 
 use neurram::coordinator::mapping::MappingStrategy;
 use neurram::coordinator::{NeuRramChip, PAPER_CORES};
-use neurram::core_sim::{neuron, CimCore, Crossbar, MvmDirection, NeuronConfig};
+use neurram::core_sim::{kernel, neuron, CimCore, Crossbar, KernelTier,
+                        MvmDirection, NeuronConfig};
 use neurram::device::DeviceParams;
 use neurram::io::npz::Tensor;
 use neurram::models::ConductanceMatrix;
@@ -79,6 +80,44 @@ fn main() {
              settle_speedup);
     record.num("settle_batch_speedup_b32", settle_speedup);
     record.num("settle_batch_b32_median_ns", r_batch.median_ns);
+
+    section("L3: settle-kernel tiers (batch 32, 128x256; scalar = oracle)");
+    println!("  host simd (AVX2): {}; auto-detected tier: {:?}",
+             kernel::simd_supported(), kernel::detect());
+    let tiers = [KernelTier::Scalar, KernelTier::Portable, KernelTier::Simd];
+    let mut tier_wall = Vec::new();
+    let mut tier_items = Vec::new();
+    let mut out_ref = vec![0.0f32; batch * cols];
+    xb.settle_batch_tier(&xs_b, batch, &mut out_ref, KernelTier::Scalar);
+    for &tier in &tiers {
+        let r = bench(&format!("settle_batch b32 [{}]", tier.name()),
+                      budget(400), || {
+            xb.settle_batch_tier(black_box(&xs_b), batch, &mut out_b, tier);
+            black_box(&out_b);
+        });
+        // every tier must reproduce the scalar oracle bit for bit
+        xb.settle_batch_tier(&xs_b, batch, &mut out_b, tier);
+        for (i, (a, b)) in out_ref.iter().zip(&out_b).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(),
+                       "tier {} diverged from scalar at index {i}",
+                       tier.name());
+        }
+        tier_wall.push(r.median_ns);
+        tier_items.push(batch as f64 * 1e9 / r.median_ns);
+    }
+    let simd_speedup = tier_wall[0] / tier_wall[2];
+    println!("  tier speedups vs scalar: {:.2}x portable, {:.2}x simd \
+              (acceptance target >= 1.5x simd on AVX2 hosts)",
+             tier_wall[0] / tier_wall[1], simd_speedup);
+    record.nums("kernel_tier_items_per_s", &tier_items);
+    record.num("settle_simd_speedup", simd_speedup);
+    if kernel::simd_supported() {
+        assert!(
+            simd_speedup >= 1.5,
+            "simd settle tier is {simd_speedup:.2}x the scalar oracle \
+             (acceptance target >= 1.5x on AVX2 hosts)"
+        );
+    }
 
     section("L3: neuron ADC conversion (256 conversions)");
     let cfg = NeuronConfig::default();

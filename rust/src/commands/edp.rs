@@ -15,9 +15,11 @@ use neurram::util::cli::Args;
 use neurram::util::rng::Rng;
 
 /// Run the 1024x1024 workload at a precision point; returns the cost.
-/// `threads = 0` keeps the chip's resolved default (`NEURRAM_THREADS`).
+/// `threads = 0` keeps the chip's resolved default (`NEURRAM_THREADS`);
+/// `kernel = None` keeps the `NEURRAM_KERNEL`-resolved settle tier.
 pub fn edp_point(in_bits: u32, out_bits: u32, mvms: usize, seed: u64,
-                 threads: usize) -> MvmCost {
+                 threads: usize,
+                 kernel: Option<neurram::core_sim::KernelTier>) -> MvmCost {
     let mut rng = Rng::new(seed);
     let rows = 1024usize;
     let cols = 1024usize;
@@ -28,6 +30,9 @@ pub fn edp_point(in_bits: u32, out_bits: u32, mvms: usize, seed: u64,
     let mut chip = NeuRramChip::with_cores(PAPER_CORES, seed + 1);
     if threads > 0 {
         chip.threads = threads;
+    }
+    if let Some(tier) = kernel {
+        chip.set_kernel(tier);
     }
     chip.program_model(vec![m], &[1.0], MappingStrategy::Simple, false)
         .unwrap();
@@ -60,10 +65,17 @@ pub fn run(args: &Args) -> Result<()> {
     let mvms = args.usize_or("mvms", 4)?;
     // --threads n overrides NEURRAM_THREADS / available_parallelism
     let threads = args.usize_or("threads", 0)?;
+    // --kernel tier overrides NEURRAM_KERNEL (bitwise-interchangeable
+    // settle tiers, see core_sim::kernel)
+    let kernel = match args.get("kernel") {
+        Some(name) => Some(neurram::core_sim::kernel::parse_cli(name)
+            .map_err(anyhow::Error::msg)?),
+        None => None,
+    };
     println!("Fig. 1d sweep: 1024x1024 MVM x{mvms}, voltage-mode, 48 cores\n");
     let mut rows = Vec::new();
     for (ib, ob) in [(1u32, 3u32), (2, 4), (4, 6), (6, 8)] {
-        let c = edp_point(ib, ob, mvms, 7, threads);
+        let c = edp_point(ib, ob, mvms, 7, threads, kernel);
         rows.push(vec![
             format!("{ib}b/{ob}b"),
             format!("{:.1}", c.energy_pj / 1000.0),

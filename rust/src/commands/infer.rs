@@ -52,6 +52,12 @@ pub fn run_mnist(args: &Args) -> Result<()> {
         0 => {}
         n => chip.threads = n,
     }
+    // --kernel tier overrides NEURRAM_KERNEL (scalar|portable|simd|auto;
+    // all tiers bitwise identical, see core_sim::kernel)
+    if let Some(name) = args.get("kernel") {
+        chip.set_kernel(neurram::core_sim::kernel::parse_cli(name)
+            .map_err(anyhow::Error::msg)?);
+    }
     if trace_path.is_some() || metrics_path.is_some() {
         chip.telemetry.enable();
     }

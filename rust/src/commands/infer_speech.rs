@@ -39,6 +39,12 @@ pub fn run(args: &Args) -> Result<()> {
         0 => {}
         n => chip.threads = n,
     }
+    // --kernel tier overrides NEURRAM_KERNEL (bitwise-interchangeable
+    // settle tiers, see core_sim::kernel)
+    if let Some(name) = args.get("kernel") {
+        chip.set_kernel(neurram::core_sim::kernel::parse_cli(name)
+            .map_err(anyhow::Error::msg)?);
+    }
     let trace_path = args.get("trace");
     let metrics_path = args.get("metrics");
     if trace_path.is_some() || metrics_path.is_some() {

@@ -109,6 +109,12 @@ pub fn run(args: &Args) -> Result<()> {
         0 => {}
         n => sf.fleet.set_threads(n),
     }
+    // --kernel tier overrides NEURRAM_KERNEL on every chip (serving
+    // outputs are identical at any tier, see core_sim::kernel)
+    if let Some(name) = args.get("kernel") {
+        sf.fleet.set_kernel(neurram::core_sim::kernel::parse_cli(name)
+            .map_err(anyhow::Error::msg)?);
+    }
     if trace_path.is_some() || metrics_path.is_some() {
         sf.fleet.enable_telemetry();
     }

@@ -42,7 +42,8 @@ use super::mapping::{plan, plan_co_resident, MappingPlan, MappingStrategy,
 use crate::analysis::diagnostics::DiagCode;
 use crate::analysis::{fail_on_errors, verify_co_residency, verify_local,
                       verify_model, PlanError};
-use crate::core_sim::{Activation, CimCore, MvmDirection, NeuronConfig};
+use crate::core_sim::{Activation, CimCore, KernelTier, MvmDirection,
+                      NeuronConfig};
 use crate::device::{DeviceParams, ProgramStats, WriteVerifyConfig};
 use crate::energy::{EnergyCounters, EnergyModel, EnergyParams, MvmCost};
 use crate::models::ConductanceMatrix;
@@ -285,6 +286,16 @@ impl NeuRramChip {
 
     pub fn matrix(&self, layer: &str) -> Option<&ConductanceMatrix> {
         self.matrices.iter().find(|m| m.layer == layer)
+    }
+
+    /// Set every core's settle-kernel tier (the CLI `--kernel` mirror of
+    /// the `NEURRAM_KERNEL` env knob; cores resolve the env default at
+    /// construction).  All tiers produce bitwise-identical MVMs
+    /// (`core_sim::kernel`), so this only changes wall-clock speed.
+    pub fn set_kernel(&mut self, tier: KernelTier) {
+        for c in &mut self.cores {
+            c.kernel = tier;
+        }
     }
 
     /// Map + program a set of compiled matrices.  `write_verify = false`

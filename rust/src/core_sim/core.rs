@@ -26,6 +26,7 @@
 //! around region 0 at offset (0, 0).
 
 use super::crossbar::{Crossbar, CrossbarNonIdealities};
+use super::kernel::{self, KernelTier};
 use super::neuron::{convert, Activation, NeuronConfig};
 use super::tnsa::{Dataflow, Tnsa};
 use crate::device::{DeviceParams, RramArray, WriteVerify, WriteVerifyConfig};
@@ -117,6 +118,12 @@ pub struct CimCore {
     failed: bool,
     pub g_max_us: f64,
     pub v_read: f64,
+    /// Settle-kernel tier for this core's batched MVMs, resolved from
+    /// `NEURRAM_KERNEL` at construction and overridable per chip/fleet
+    /// (`--kernel`, `NeuRramChip::set_kernel`) -- the same knob shape as
+    /// `NEURRAM_THREADS`.  All tiers are bitwise identical
+    /// (`core_sim::kernel`), so this trades wall-clock only.
+    pub kernel: KernelTier,
 }
 
 impl CimCore {
@@ -142,6 +149,7 @@ impl CimCore {
             failed: false,
             g_max_us: g_max,
             v_read: 0.5,
+            kernel: kernel::resolve(),
         }
     }
 
@@ -716,7 +724,7 @@ impl CimCore {
         {
             let xb = self.regions[region].xbar(dir);
             xb.settle_batch_with_scratch(xs, batch, &mut dv, &mut xt,
-                                         &mut mask);
+                                         &mut mask, self.kernel);
         }
         self.settle_xt_scratch = xt;
         self.settle_mask_scratch = mask;

@@ -19,6 +19,7 @@
 //! window's column loads.  Merged regions therefore settle bitwise as
 //! if each sat alone on a core.
 
+use crate::core_sim::kernel::{self, KernelTier};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -140,10 +141,27 @@ impl Crossbar {
     /// is **bitwise identical** to a `settle_int` call on that item
     /// (pinned by `prop_settle_batch_bitwise_equals_settle_int` in
     /// `rust/tests/properties.rs`).
+    ///
+    /// Runs under the `NEURRAM_KERNEL`-resolved settle-kernel tier; use
+    /// [`Crossbar::settle_batch_tier`] to pin one explicitly.  Tiers are
+    /// bitwise interchangeable (see `core_sim::kernel`).
     pub fn settle_batch(&self, xs: &[i32], batch: usize, out: &mut [f32]) {
+        self.settle_batch_tier(xs, batch, out, kernel::resolve());
+    }
+
+    /// [`Crossbar::settle_batch`] under an explicit [`KernelTier`]
+    /// (benches and the tier-equality tests A/B the implementations
+    /// through this; results are bitwise identical across tiers).
+    pub fn settle_batch_tier(
+        &self,
+        xs: &[i32],
+        batch: usize,
+        out: &mut [f32],
+        tier: KernelTier,
+    ) {
         let mut xt = Vec::new();
         let mut row_any = Vec::new();
-        self.settle_batch_with_scratch(xs, batch, out, &mut xt, &mut row_any);
+        self.settle_batch_with_scratch(xs, batch, out, &mut xt, &mut row_any, tier);
     }
 
     /// [`Crossbar::settle_batch`] with caller-owned transpose/mask
@@ -169,6 +187,19 @@ impl Crossbar {
     /// reach -0.0 under round-to-nearest addition -- hence `a + (+-0.0)
     /// == a` bit-for-bit (pinned, with dense zero runs, by
     /// `prop_settle_batch_bitwise_equals_settle_int`).
+    ///
+    /// The block contraction itself is delegated to the selected
+    /// [`KernelTier`]'s kernel (`core_sim::kernel`).  The tiers extend
+    /// the interleaving argument above one step further: because every
+    /// (item, column) pair owns an independent accumulator, the
+    /// vectorized tiers may carry a column group's accumulators in
+    /// registers/SIMD lanes across the whole row walk and process many
+    /// columns per instruction -- neither changes any per-(item, column)
+    /// op sequence, so all tiers produce identical bytes (pinned by
+    /// `prop_settle_kernel_tiers_bitwise_equal`).  The one reordering
+    /// that WOULD change bits -- fusing `a + x*g` into an FMA, which
+    /// rounds once instead of twice -- is explicitly forbidden in the
+    /// kernel module.
     pub fn settle_batch_with_scratch(
         &self,
         xs: &[i32],
@@ -176,11 +207,14 @@ impl Crossbar {
         out: &mut [f32],
         xt: &mut Vec<f32>,
         row_any: &mut Vec<bool>,
+        tier: KernelTier,
     ) {
         assert_eq!(xs.len(), batch * self.rows, "input matrix shape");
         assert_eq!(out.len(), batch * self.cols, "output matrix shape");
         const CHUNK: usize = 8;
         const COL_BLOCK: usize = 64;
+        // one indirect-call resolution per settle, not per block
+        let block = kernel::block_fn(tier);
         out.fill(0.0);
         xt.clear();
         xt.resize(CHUNK * self.rows, 0.0);
@@ -199,20 +233,10 @@ impl Crossbar {
             }
             for j0 in (0..self.cols).step_by(COL_BLOCK) {
                 let j1 = (j0 + COL_BLOCK).min(self.cols);
-                for r in 0..self.rows {
-                    if !row_any[r] {
-                        continue;
-                    }
-                    let row = &self.g_diff[r * self.cols + j0..r * self.cols + j1];
-                    for k in 0..clen {
-                        let xf = xt[r * CHUNK + k];
-                        let acc = &mut out
-                            [(c0 + k) * self.cols + j0..(c0 + k) * self.cols + j1];
-                        for (a, g) in acc.iter_mut().zip(row) {
-                            *a += xf * g;
-                        }
-                    }
-                }
+                block(
+                    &self.g_diff, self.cols, j0, j1, xt.as_slice(),
+                    CHUNK, clen, row_any.as_slice(), out, c0,
+                );
             }
         }
         for b in 0..batch {
@@ -357,6 +381,24 @@ mod tests {
             for j in 0..3 {
                 assert_eq!(out[b * 3 + j].to_bits(), dv[j].to_bits(),
                            "item {b} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn settle_batch_tiers_bitwise_equal_small() {
+        // the full random-shape sweep lives in rust/tests/properties.rs;
+        // this pins the plumbing on a 3-item batch
+        let (xb, _, _) = simple_xbar();
+        let xs = [2i32, -1, 0, 3, -3, 1];
+        let mut base = vec![0.0f32; 9];
+        xb.settle_batch_tier(&xs, 3, &mut base, KernelTier::Scalar);
+        for tier in [KernelTier::Portable, KernelTier::Simd] {
+            let mut out = vec![0.0f32; 9];
+            xb.settle_batch_tier(&xs, 3, &mut out, tier);
+            for j in 0..9 {
+                assert_eq!(base[j].to_bits(), out[j].to_bits(),
+                           "{tier:?} col {j}");
             }
         }
     }

@@ -1,0 +1,515 @@
+//! Settle-kernel tiers: the vectorized inner loops of
+//! [`crate::core_sim::Crossbar::settle_batch_with_scratch`] and the one
+//! place in the crate allowed to touch CPU feature detection.
+//!
+//! Every MVM in the system -- CNN, LSTM, RBM, the whole serving fleet --
+//! bottoms out in the settle accumulation `acc[j] += x * g[j]`, so this
+//! module provides three implementations of the same column-block
+//! contraction:
+//!
+//! * [`KernelTier::Scalar`] -- the original row-outer loop, accumulating
+//!   through memory.  This is the **bitwise oracle**; `settle_int` and
+//!   the pre-kernel `settle_batch` used exactly this op order.
+//! * [`KernelTier::Portable`] -- fixed-width `[f32; 8]` lane arrays with
+//!   the item's accumulator registers carried across rows.  Plain
+//!   indexed loops over fixed-size arrays are the shape LLVM's
+//!   autovectorizer reliably lowers to SIMD on any target.
+//! * [`KernelTier::Simd`] -- stable `core::arch::x86_64` AVX2
+//!   intrinsics behind runtime `is_x86_feature_detected!`, four 8-lane
+//!   accumulators (32 columns) in flight per pass.
+//!
+//! ## Why every tier is bitwise identical
+//!
+//! Within a column block, **each output column owns an independent f32
+//! accumulator**: no lane ever combines with another lane, so
+//! vectorizing ACROSS columns never reassociates any per-(item, column)
+//! sum.  All three tiers perform, for every (item, column) pair, the
+//! identical op sequence `acc = acc + (x_r as f32) * g[r][j]` with rows
+//! `r` ascending -- the Portable/Simd tiers merely (a) hoist the
+//! accumulator from memory into a register/lane for the duration of the
+//! row walk (loads and stores do not round) and (b) process 8/32
+//! columns per pass (IEEE ops are lane-wise).  Skipping a row the
+//! chunk's `row_any` mask marks all-zero is neutral too: the scalar
+//! tier skips the same rows.  The remaining hazard would be
+//! **fused multiply-add**: fusing `a + x*g` rounds once where the
+//! oracle rounds twice, so the Simd tier uses `_mm256_mul_ps` +
+//! `_mm256_add_ps` and must NEVER use `_mm256_fmadd_ps`; rustc does not
+//! contract `a + x * g` on its own (no fast-math), which keeps the
+//! Scalar/Portable tiers fusion-free as well.
+//! `prop_settle_kernel_tiers_bitwise_equal` (rust/tests/properties.rs)
+//! pins all of this, including non-multiple-of-8 column counts,
+//! zero-heavy inputs and the IR-drop normalization branch.
+//!
+//! ## Selection
+//!
+//! One tier is resolved per core from the `NEURRAM_KERNEL` env knob
+//! (mirrored as `--kernel` on the CLI commands), the same pattern as
+//! `NEURRAM_THREADS` / `--threads` in `util::threads`:
+//!
+//! * unset / `auto` / unrecognized -> [`detect`]: `simd` where AVX2 is
+//!   available, else `portable`
+//! * `scalar` | `portable`        -> always honored
+//! * `simd`                       -> honored where AVX2 is available,
+//!                                   clamped to `portable` otherwise
+//!                                   (non-x86 hosts fall back cleanly)
+//!
+//! Because every tier produces identical bytes, the knob trades
+//! wall-clock only -- `scalar` stays available as the oracle for
+//! A/B-ing the vector paths in CI.
+
+/// Environment variable naming the settle-kernel tier.
+pub const KERNEL_ENV: &str = "NEURRAM_KERNEL";
+
+/// Columns per portable lane group / AVX register.
+const LANES: usize = 8;
+
+/// One settle-kernel implementation tier.  All tiers are bitwise
+/// identical (see the module docs); they differ only in speed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Row-outer memory accumulation: the bitwise oracle.
+    Scalar,
+    /// `[f32; 8]` lane arrays, autovectorized; runs on any target.
+    Portable,
+    /// AVX2 intrinsics (runtime-detected, x86_64 only; FMA forbidden).
+    Simd,
+}
+
+impl KernelTier {
+    /// Stable lowercase name (the `NEURRAM_KERNEL` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Portable => "portable",
+            KernelTier::Simd => "simd",
+        }
+    }
+}
+
+/// Is the AVX2 path available on this host?  (`false` on non-x86_64
+/// targets; runtime-detected -- and cached by std -- on x86_64.)
+pub fn simd_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Best tier this host supports.
+pub fn detect() -> KernelTier {
+    if simd_supported() {
+        KernelTier::Simd
+    } else {
+        KernelTier::Portable
+    }
+}
+
+/// Clamp a requested tier to what the host can run: `Simd` degrades to
+/// `Portable` off x86_64/AVX2; everything else is always runnable.
+pub fn clamp(tier: KernelTier) -> KernelTier {
+    match tier {
+        KernelTier::Simd if !simd_supported() => KernelTier::Portable,
+        t => t,
+    }
+}
+
+/// Parse a tier name (`--kernel` / `NEURRAM_KERNEL` spelling,
+/// case-insensitive).  `auto` resolves to [`detect`]; `simd` is clamped
+/// to the host.  Unknown names are `None` so the CLI can reject them
+/// loudly while the env path falls back to auto-detection.
+pub fn from_name(name: &str) -> Option<KernelTier> {
+    match name.trim().to_ascii_lowercase().as_str() {
+        "scalar" => Some(KernelTier::Scalar),
+        "portable" => Some(KernelTier::Portable),
+        "simd" => Some(clamp(KernelTier::Simd)),
+        "auto" => Some(detect()),
+        _ => None,
+    }
+}
+
+/// Strict parse for the `--kernel` CLI flag: unknown names are an error
+/// (the env path falls back to auto-detection instead -- a typo on the
+/// command line should fail loudly, not silently change tiers).
+pub fn parse_cli(name: &str) -> Result<KernelTier, String> {
+    from_name(name).ok_or_else(|| {
+        format!("--kernel {name}: expected scalar|portable|simd|auto")
+    })
+}
+
+/// Resolve a tier from an optional env value: absent or unrecognized
+/// falls back to [`detect`] (the same forgiving contract as
+/// `NEURRAM_THREADS`; the CLI flag is strict instead).
+pub fn resolve_from(value: Option<&str>) -> KernelTier {
+    value.and_then(from_name).unwrap_or_else(detect)
+}
+
+/// Resolve the effective tier from `NEURRAM_KERNEL`.
+pub fn resolve() -> KernelTier {
+    resolve_from(std::env::var(KERNEL_ENV).ok().as_deref())
+}
+
+/// The settle block contraction: for chunk items `k in 0..clen` and
+/// columns `j in j0..j1`, accumulate
+/// `out[(c0+k)*cols + j] += xt[r*chunk + k] * g[r*cols + j]` over rows
+/// `r` ascending, skipping rows whose `row_any[r]` is false (no item of
+/// the chunk drives them).  `g` is the full row-major conductance
+/// matrix, `out` the full row-major `[batch x cols]` accumulator.
+pub type BlockFn = fn(
+    g: &[f32],
+    cols: usize,
+    j0: usize,
+    j1: usize,
+    xt: &[f32],
+    chunk: usize,
+    clen: usize,
+    row_any: &[bool],
+    out: &mut [f32],
+    c0: usize,
+);
+
+/// The block kernel of a tier, clamped to the host -- resolve this ONCE
+/// per settle call and reuse it across the (chunk x column-block) loop;
+/// the returned `Simd` entry is only handed out after feature detection
+/// succeeded.
+pub fn block_fn(tier: KernelTier) -> BlockFn {
+    match clamp(tier) {
+        KernelTier::Scalar => scalar_block,
+        KernelTier::Portable => portable_block,
+        // clamp() only returns Simd when simd_supported() is true, so
+        // the unsafe target_feature call inside is sound
+        KernelTier::Simd => simd_block,
+    }
+}
+
+/// Scalar oracle: row-outer, accumulating through `out` directly.  This
+/// is, verbatim, the loop nest `settle_batch_with_scratch` ran before
+/// the kernel tiers existed.
+fn scalar_block(
+    g: &[f32],
+    cols: usize,
+    j0: usize,
+    j1: usize,
+    xt: &[f32],
+    chunk: usize,
+    clen: usize,
+    row_any: &[bool],
+    out: &mut [f32],
+    c0: usize,
+) {
+    for (r, &any) in row_any.iter().enumerate() {
+        if !any {
+            continue;
+        }
+        let row = &g[r * cols + j0..r * cols + j1];
+        for k in 0..clen {
+            let xf = xt[r * chunk + k];
+            let acc =
+                &mut out[(c0 + k) * cols + j0..(c0 + k) * cols + j1];
+            for (a, gv) in acc.iter_mut().zip(row) {
+                *a += xf * gv;
+            }
+        }
+    }
+}
+
+/// Portable lane kernel: item-outer, carrying each 8-column accumulator
+/// group in a `[f32; 8]` register file across the whole row walk (the
+/// scalar tier re-loads and re-stores `out` once per row; this loads
+/// once and stores once per column group).  Two groups run per pass for
+/// instruction-level parallelism; fixed-size arrays with plain indexed
+/// lane loops are the form the autovectorizer reliably lowers.
+fn portable_block(
+    g: &[f32],
+    cols: usize,
+    j0: usize,
+    j1: usize,
+    xt: &[f32],
+    chunk: usize,
+    clen: usize,
+    row_any: &[bool],
+    out: &mut [f32],
+    c0: usize,
+) {
+    let rows = row_any.len();
+    for k in 0..clen {
+        let base = (c0 + k) * cols;
+        let mut j = j0;
+        // two 8-lane groups (16 columns) in flight
+        while j + 2 * LANES <= j1 {
+            let mut acc0 = [0.0f32; LANES];
+            let mut acc1 = [0.0f32; LANES];
+            acc0.copy_from_slice(&out[base + j..base + j + LANES]);
+            acc1.copy_from_slice(
+                &out[base + j + LANES..base + j + 2 * LANES]);
+            for r in 0..rows {
+                if !row_any[r] {
+                    continue;
+                }
+                let xf = xt[r * chunk + k];
+                let gr = &g[r * cols + j..r * cols + j + 2 * LANES];
+                for l in 0..LANES {
+                    // mul then add, never fused (see module docs)
+                    acc0[l] += xf * gr[l];
+                    acc1[l] += xf * gr[LANES + l];
+                }
+            }
+            out[base + j..base + j + LANES].copy_from_slice(&acc0);
+            out[base + j + LANES..base + j + 2 * LANES]
+                .copy_from_slice(&acc1);
+            j += 2 * LANES;
+        }
+        // one 8-lane group
+        while j + LANES <= j1 {
+            let mut acc = [0.0f32; LANES];
+            acc.copy_from_slice(&out[base + j..base + j + LANES]);
+            for r in 0..rows {
+                if !row_any[r] {
+                    continue;
+                }
+                let xf = xt[r * chunk + k];
+                let gr = &g[r * cols + j..r * cols + j + LANES];
+                for l in 0..LANES {
+                    acc[l] += xf * gr[l];
+                }
+            }
+            out[base + j..base + j + LANES].copy_from_slice(&acc);
+            j += LANES;
+        }
+        // scalar tail: columns past the last full lane group
+        while j < j1 {
+            let mut a = out[base + j];
+            for r in 0..rows {
+                if !row_any[r] {
+                    continue;
+                }
+                a += xt[r * chunk + k] * g[r * cols + j];
+            }
+            out[base + j] = a;
+            j += 1;
+        }
+    }
+}
+
+/// Safe AVX2 entry: only reachable through [`block_fn`], which clamps
+/// the tier to the host first, so the target-feature call is sound.
+/// Off x86_64 this degrades to the portable kernel (defence in depth;
+/// [`clamp`] already prevents the tier from being selected there).
+fn simd_block(
+    g: &[f32],
+    cols: usize,
+    j0: usize,
+    j1: usize,
+    xt: &[f32],
+    chunk: usize,
+    clen: usize,
+    row_any: &[bool],
+    out: &mut [f32],
+    c0: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        debug_assert!(simd_supported());
+        unsafe {
+            avx2_block(g, cols, j0, j1, xt, chunk, clen, row_any, out, c0)
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        portable_block(g, cols, j0, j1, xt, chunk, clen, row_any, out, c0)
+    }
+}
+
+/// AVX2 column-lane kernel: item-outer with four 256-bit accumulators
+/// (32 columns) carried across the row walk, then one, then a scalar
+/// tail.  `loadu`/`storeu` because neither `g_diff` nor `out` is
+/// alignment-guaranteed.
+///
+/// FMA IS FORBIDDEN HERE: `_mm256_fmadd_ps` rounds `a + x*g` once where
+/// the scalar oracle rounds the product and the sum separately, which
+/// would break the bitwise tier contract.  Only `_mm256_mul_ps` +
+/// `_mm256_add_ps` (lane-wise IEEE single rounding each, identical to
+/// the scalar ops) are used.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available (`simd_supported()`); slice
+/// bounds are respected by construction (every pointer offset below
+/// stays inside the checked `[j0, j1)` / `[0, clen)` windows).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn avx2_block(
+    g: &[f32],
+    cols: usize,
+    j0: usize,
+    j1: usize,
+    xt: &[f32],
+    chunk: usize,
+    clen: usize,
+    row_any: &[bool],
+    out: &mut [f32],
+    c0: usize,
+) {
+    use core::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps,
+        _mm256_storeu_ps,
+    };
+    let rows = row_any.len();
+    debug_assert!(j1 <= cols && (c0 + clen) * cols <= out.len());
+    debug_assert!(rows * cols <= g.len() && rows * chunk <= xt.len());
+    let gp = g.as_ptr();
+    for k in 0..clen {
+        let op = out.as_mut_ptr().add((c0 + k) * cols);
+        let mut j = j0;
+        while j + 4 * LANES <= j1 {
+            let mut a0 = _mm256_loadu_ps(op.add(j));
+            let mut a1 = _mm256_loadu_ps(op.add(j + LANES));
+            let mut a2 = _mm256_loadu_ps(op.add(j + 2 * LANES));
+            let mut a3 = _mm256_loadu_ps(op.add(j + 3 * LANES));
+            for r in 0..rows {
+                if !row_any[r] {
+                    continue;
+                }
+                let xv = _mm256_set1_ps(xt[r * chunk + k]);
+                let rp = gp.add(r * cols + j);
+                a0 = _mm256_add_ps(
+                    a0, _mm256_mul_ps(xv, _mm256_loadu_ps(rp)));
+                a1 = _mm256_add_ps(
+                    a1, _mm256_mul_ps(xv, _mm256_loadu_ps(rp.add(LANES))));
+                a2 = _mm256_add_ps(
+                    a2,
+                    _mm256_mul_ps(xv, _mm256_loadu_ps(rp.add(2 * LANES))));
+                a3 = _mm256_add_ps(
+                    a3,
+                    _mm256_mul_ps(xv, _mm256_loadu_ps(rp.add(3 * LANES))));
+            }
+            _mm256_storeu_ps(op.add(j), a0);
+            _mm256_storeu_ps(op.add(j + LANES), a1);
+            _mm256_storeu_ps(op.add(j + 2 * LANES), a2);
+            _mm256_storeu_ps(op.add(j + 3 * LANES), a3);
+            j += 4 * LANES;
+        }
+        while j + LANES <= j1 {
+            let mut acc = _mm256_loadu_ps(op.add(j));
+            for r in 0..rows {
+                if !row_any[r] {
+                    continue;
+                }
+                let xv = _mm256_set1_ps(xt[r * chunk + k]);
+                let gv = _mm256_loadu_ps(gp.add(r * cols + j));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, gv));
+            }
+            _mm256_storeu_ps(op.add(j), acc);
+            j += LANES;
+        }
+        while j < j1 {
+            let mut a = *op.add(j);
+            for r in 0..rows {
+                if !row_any[r] {
+                    continue;
+                }
+                a += xt[r * chunk + k] * *gp.add(r * cols + j);
+            }
+            *op.add(j) = a;
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for t in [KernelTier::Scalar, KernelTier::Portable] {
+            assert_eq!(from_name(t.name()), Some(t));
+        }
+        // simd parses to itself where supported, portable otherwise
+        assert_eq!(from_name("simd"), Some(clamp(KernelTier::Simd)));
+        assert_eq!(from_name("SIMD"), Some(clamp(KernelTier::Simd)));
+        assert_eq!(from_name(" Scalar "), Some(KernelTier::Scalar));
+        assert_eq!(from_name("fast"), None);
+    }
+
+    #[test]
+    fn resolve_from_respects_explicit_tiers() {
+        assert_eq!(resolve_from(Some("scalar")), KernelTier::Scalar);
+        assert_eq!(resolve_from(Some("portable")), KernelTier::Portable);
+        assert_eq!(resolve_from(Some("simd")), clamp(KernelTier::Simd));
+    }
+
+    #[test]
+    fn resolve_from_falls_back_to_detection() {
+        // absent, "auto" and garbage all take the detected default
+        // (simd on AVX2 hosts, portable elsewhere -- never scalar, the
+        // oracle must be asked for explicitly)
+        for v in [None, Some("auto"), Some("not-a-tier"), Some("")] {
+            let t = resolve_from(v);
+            assert_eq!(t, detect(), "{v:?}");
+            assert_ne!(t, KernelTier::Scalar, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn simd_clamps_cleanly_off_avx2_hosts() {
+        // the clamp is exactly the support predicate: Simd survives iff
+        // the host can run it, and degrades to Portable (not Scalar)
+        let clamped = clamp(KernelTier::Simd);
+        if simd_supported() {
+            assert_eq!(clamped, KernelTier::Simd);
+        } else {
+            assert_eq!(clamped, KernelTier::Portable);
+        }
+        assert_eq!(clamp(KernelTier::Scalar), KernelTier::Scalar);
+        assert_eq!(clamp(KernelTier::Portable), KernelTier::Portable);
+        #[cfg(not(target_arch = "x86_64"))]
+        assert!(!simd_supported(), "simd must be unavailable off x86_64");
+    }
+
+    /// Direct block-kernel equality on a shape that exercises the
+    /// 32-column pass, the 8-column pass and the scalar tail at once
+    /// (the full settle path is pinned by the property test in
+    /// rust/tests/properties.rs).
+    #[test]
+    fn block_kernels_bitwise_equal() {
+        let (rows, cols) = (7usize, 43usize);
+        let chunk = 8usize;
+        let clen = 5usize;
+        let c0 = 0usize;
+        let mut g = vec![0.0f32; rows * cols];
+        for (i, v) in g.iter_mut().enumerate() {
+            *v = ((i * 2654435761) % 1000) as f32 / 7.0 - 70.0;
+        }
+        let mut xt = vec![0.0f32; rows * chunk];
+        let mut row_any = vec![false; rows];
+        for r in 0..rows {
+            for k in 0..clen {
+                let x = ((r * 31 + k * 17) % 15) as i32 - 7;
+                // leave rows 2 and 5 all-zero to drive the skip path
+                let x = if r == 2 || r == 5 { 0 } else { x };
+                xt[r * chunk + k] = x as f32;
+                row_any[r] |= x != 0;
+            }
+        }
+        let mut run = |f: BlockFn| {
+            let mut out = vec![0.0f32; clen * cols];
+            // two column blocks, like the settle loop's step_by
+            f(&g, cols, 0, 40, &xt, chunk, clen, &row_any, &mut out, c0);
+            f(&g, cols, 40, cols, &xt, chunk, clen, &row_any, &mut out,
+              c0);
+            out
+        };
+        let base = run(scalar_block);
+        assert!(base.iter().any(|&v| v != 0.0), "degenerate fixture");
+        for (name, f) in [("portable", portable_block as BlockFn),
+                          ("simd", block_fn(KernelTier::Simd))] {
+            let got = run(f);
+            for (i, (a, b)) in base.iter().zip(&got).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{name} idx {i}");
+            }
+        }
+    }
+}

@@ -5,11 +5,13 @@
 pub mod core;
 pub mod crossbar;
 pub mod current_mode;
+pub mod kernel;
 pub mod neuron;
 pub mod periphery;
 pub mod tnsa;
 
 pub use core::{CimCore, CoreRegion, CoreStats, MvmDirection};
 pub use crossbar::{Crossbar, CrossbarNonIdealities};
+pub use kernel::KernelTier;
 pub use neuron::{Activation, AdcCycles, NeuronConfig};
 pub use tnsa::Tnsa;

@@ -139,6 +139,15 @@ impl ChipFleet {
         }
     }
 
+    /// Set every chip's settle-kernel tier (the CLI `--kernel` mirror;
+    /// see `core_sim::kernel`).  Tiers are bitwise interchangeable, so
+    /// serving outputs are identical at any setting.
+    pub fn set_kernel(&mut self, tier: crate::core_sim::KernelTier) {
+        for c in &mut self.chips {
+            c.set_kernel(tier);
+        }
+    }
+
     /// Turn span recording on for every chip.  Do this BEFORE
     /// programming/serving; the serving loop drains each chip's
     /// recorder into the fleet trace after every batch.

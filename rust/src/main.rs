@@ -93,7 +93,10 @@ fn main() {
                  --trace t.json / --metrics m.json on serve-bench and infer-*\n\
                  export a Chrome trace / metrics snapshot of the run\n\
                  --threads n sets the dispatch worker threads (default: \
-                 NEURRAM_THREADS or all cores; 1 = serial; outputs identical)"
+                 NEURRAM_THREADS or all cores; 1 = serial; outputs identical)\n\
+                 --kernel scalar|portable|simd|auto sets the settle-kernel\n\
+                 tier (default: NEURRAM_KERNEL or auto-detect; all tiers\n\
+                 produce bitwise-identical outputs)"
             );
             std::process::exit(2);
         }

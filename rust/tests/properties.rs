@@ -6,7 +6,8 @@ use neurram::coordinator::{NeuRramChip, Scheduler, PAPER_CORES};
 use neurram::core_sim::neuron::{convert, NeuronConfig};
 use neurram::core_sim::tnsa::Tnsa;
 use neurram::core_sim::{
-    Activation, CimCore, Crossbar, CrossbarNonIdealities, MvmDirection,
+    kernel, Activation, CimCore, Crossbar, CrossbarNonIdealities,
+    KernelTier, MvmDirection,
 };
 use neurram::device::DeviceParams;
 use neurram::models::quant::calibrate_shift;
@@ -273,6 +274,84 @@ fn prop_settle_batch_bitwise_equals_settle_int() {
             }
         }
     }
+}
+
+#[test]
+fn prop_settle_kernel_tiers_bitwise_equal() {
+    // Scalar is the oracle; Portable and Simd must reproduce it bit for
+    // bit on every shape -- non-multiple-of-8 column counts (lane tails),
+    // zero-heavy rows (whole-row skip + neutral zero-adds), negative
+    // inputs, and the ir_alpha > 0 normalization branch.  On non-AVX2
+    // hosts the Simd tier clamps to Portable, so the sweep still
+    // exercises every reachable path.
+    let mut rng = Rng::new(47);
+    for round in 0..16 {
+        let rows = 1 + rng.below(128);
+        // odd rounds force a ragged column count so the 32/8-lane passes
+        // AND the scalar tail all run; even rounds may be lane-aligned
+        let cols = 1 + rng.below(256);
+        let cols = if round % 2 == 1 { cols | 1 } else { cols };
+        let batch = 1 + rng.below(9);
+        let (gp, gn) = random_conductances(&mut rng, rows * cols);
+        let mut xb =
+            Crossbar::from_conductances(&gp, &gn, rows, cols, 40.0, 0.5);
+        if round % 3 == 2 {
+            xb.nonideal.ir_alpha = 0.3;
+        }
+        let zero_p = if round % 2 == 0 { 0.6 } else { 1.0 / 15.0 };
+        let xs: Vec<i32> = (0..batch * rows)
+            .map(|_| {
+                if rng.uniform() < zero_p {
+                    0
+                } else {
+                    rng.below(15) as i32 - 7
+                }
+            })
+            .collect();
+        let mut base = vec![0.0f32; batch * cols];
+        xb.settle_batch_tier(&xs, batch, &mut base, KernelTier::Scalar);
+        for tier in [KernelTier::Portable, KernelTier::Simd] {
+            let mut out = vec![0.0f32; batch * cols];
+            xb.settle_batch_tier(&xs, batch, &mut out, tier);
+            for (i, (a, b)) in base.iter().zip(&out).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "round {round} tier {tier:?} index {i} ({rows}x{cols} \
+                     batch {batch})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_kernel_tier_selection_is_env_shaped() {
+    // `resolve_from` is the pure core of the NEURRAM_KERNEL resolution
+    // (tests must not mutate process env: other tests run in parallel).
+    // Explicit names are honored, simd clamps to what the host can run,
+    // and absence/garbage falls back to auto-detection -- so a non-x86
+    // host degrades cleanly instead of erroring or going scalar-slow.
+    assert_eq!(kernel::resolve_from(Some("scalar")), KernelTier::Scalar);
+    assert_eq!(kernel::resolve_from(Some("Portable")),
+               KernelTier::Portable);
+    let simd = kernel::resolve_from(Some("simd"));
+    if kernel::simd_supported() {
+        assert_eq!(simd, KernelTier::Simd);
+    } else {
+        assert_eq!(simd, KernelTier::Portable, "clean non-x86 fallback");
+    }
+    for missing in [None, Some("auto"), Some("typo-tier")] {
+        let t = kernel::resolve_from(missing);
+        assert_eq!(t, kernel::detect(), "{missing:?}");
+        assert_ne!(t, KernelTier::Scalar,
+                   "auto-detection never picks the slow oracle");
+    }
+    // a fresh core starts on the resolved tier and the chip-level
+    // setter (the --kernel plumbing) overrides every core
+    let mut chip = NeuRramChip::with_cores(2, 7);
+    chip.set_kernel(KernelTier::Scalar);
+    assert!(chip.cores.iter().all(|c| c.kernel == KernelTier::Scalar));
 }
 
 #[test]

@@ -15,6 +15,10 @@
 //! * `println` -- `println!`/`eprintln!` in library code; printing
 //!   belongs to the CLI layer (`commands/`, `main.rs`) and the bench
 //!   harness (`util/`), library modules return data.
+//! * `arch-simd` -- `is_x86_feature_detected!` / `#[target_feature]` /
+//!   `core::arch` outside `core_sim/kernel.rs`; feature detection and
+//!   arch intrinsics outside the proven-bitwise settle kernel are a
+//!   portability/determinism hazard.
 //!
 //! A hit is waived by a comment on the offending line or in the comment
 //! block immediately above it: `// lint-allow(<rule>): <reason>` -- the
@@ -89,6 +93,20 @@ const RULES: &[Rule] = &[
         allowed_dirs: &["rust/src/commands/", "rust/src/util/"],
         why: "library modules return data; printing belongs to the CLI \
               layer (commands/, main.rs) and util's bench/json writers",
+    },
+    Rule {
+        name: "arch-simd",
+        matcher: |code| {
+            code.contains("core::arch")
+                || code.contains("std::arch")
+                || code.contains("target_feature")
+                || code.contains("is_x86_feature_detected")
+        },
+        allowed_paths: &["core_sim/kernel.rs"],
+        allowed_dirs: &[],
+        why: "feature detection and arch intrinsics outside the \
+              proven-bitwise settle kernel (core_sim/kernel.rs) are a \
+              portability/determinism hazard",
     },
 ];
 
@@ -246,6 +264,21 @@ const RATCHETS: &[Ratchet] = &[
         file: "BENCH_hotpath.json",
         key: "chip_batch32_items_per_s_best",
         array: false,
+    },
+    // simd-vs-scalar settle speedup: a kernel or codegen change that
+    // erodes the vector win fails CI even while absolute numbers drift
+    // with runner hardware (missing in pre-kernel records: passes)
+    Ratchet {
+        file: "BENCH_hotpath.json",
+        key: "settle_simd_speedup",
+        array: false,
+    },
+    // per-tier settle throughput [scalar, portable, simd]: ratcheting
+    // all three keeps the oracle honest too, not just the fast path
+    Ratchet {
+        file: "BENCH_hotpath.json",
+        key: "kernel_tier_items_per_s",
+        array: true,
     },
     Ratchet {
         file: "BENCH_fleet.json",
@@ -534,6 +567,29 @@ mod tests {
     }
 
     #[test]
+    fn arch_simd_rule_confines_intrinsics_to_kernel() {
+        // each pattern fires on its own line outside the kernel module
+        let src = "use core::arch::x86_64::_mm256_add_ps;\n\
+                   let ok = std::arch::is_aarch64_feature_detected!(\"neon\");\n\
+                   #[target_feature(enable = \"avx2\")]\n\
+                   if is_x86_feature_detected!(\"avx2\") {}\n";
+        assert_eq!(rules_of(&scan_source("rust/src/core_sim/crossbar.rs",
+                                         src)),
+                   vec!["arch-simd"; 4]);
+        // ...but the settle-kernel module owns them
+        assert!(scan_source("rust/src/core_sim/kernel.rs", src).is_empty());
+        // waiver syntax works as for every other rule
+        let waived =
+            "// lint-allow(arch-simd): cpuid probe for diagnostics only\n\
+             if is_x86_feature_detected!(\"avx2\") {}\n";
+        assert!(scan_source("rust/src/util/host.rs", waived).is_empty());
+        // doc-comment mentions never fire
+        let comment = "// never fuse via core::arch fmadd here\n";
+        assert!(scan_source("rust/src/core_sim/crossbar.rs", comment)
+            .is_empty());
+    }
+
+    #[test]
     fn sort_without_partial_cmp_is_fine() {
         let src = "v.sort_by(|a, b| a.total_cmp(b));\n\
                    w.sort_unstable_by(|a, b| a.cmp(b));\n";
@@ -626,6 +682,29 @@ mod tests {
             "BENCH_fleet.json", "requests_per_s", true, PREV, &cur);
         assert_eq!(bad, 1, "only element [1] dropped");
         assert!(lines.iter().any(|l| l.contains("REGRESSION")), "{lines:?}");
+    }
+
+    #[test]
+    fn kernel_ratchet_keys_compare() {
+        let prev = "{\n  \"mode\": \"quick\",\n  \
+                    \"settle_simd_speedup\": 2.4,\n  \
+                    \"kernel_tier_items_per_s\": [\n    100,\n    200,\n    \
+                    300\n  ]\n}\n";
+        let cur = prev.replace("2.4", "1.9").replace("300", "240");
+        let (_, bad) = compare_record(
+            "BENCH_hotpath.json", "settle_simd_speedup", false, prev, &cur);
+        assert_eq!(bad, 1, "simd speedup 2.4 -> 1.9 trips");
+        let (_, bad) = compare_record(
+            "BENCH_hotpath.json", "kernel_tier_items_per_s", true, prev,
+            &cur);
+        assert_eq!(bad, 1, "simd tier throughput dropped 20%");
+        // pre-kernel records lack the keys entirely: the first ratcheted
+        // run must pass, same as every other first-run case
+        let old = "{\n  \"mode\": \"quick\"\n}\n";
+        let (lines, bad) = compare_record(
+            "BENCH_hotpath.json", "settle_simd_speedup", false, old, &cur);
+        assert_eq!(bad, 0);
+        assert!(lines[0].contains("absent"), "{lines:?}");
     }
 
     #[test]
